@@ -1,0 +1,162 @@
+//! Bench P: the compute hot paths across all three layers.
+//!
+//! * L3 native kernels: sparse dot / axpy, the scaled-vector Pegasos step,
+//!   and the Push-Vector mixing round;
+//! * L3↔L1/L2 bridge: per-GADGET-iteration cost of the native backend vs
+//!   the PJRT artifact at (batch=1, steps=1) and the scan-fused
+//!   (batch=8, steps=4) variant — quantifying dispatch amortization;
+//! * end-to-end: one GADGET iteration (local step + gossip) per node.
+//!
+//! Results are recorded in EXPERIMENTS.md §Perf (before/after per
+//! optimization).
+
+use gadget::coordinator::backend::{LocalBackend, NativeBackend, StepContext};
+use gadget::data::synthetic::{generate, DatasetSpec};
+use gadget::gossip::PushVector;
+use gadget::harness::{bench, print_header};
+use gadget::linalg;
+use gadget::rng::Rng;
+use gadget::runtime::{ArtifactRegistry, XlaBackend};
+use gadget::topology::stochastic::WeightScheme;
+use gadget::topology::{Graph, TopologyKind, TransitionMatrix};
+
+fn spec(d: usize, nnz: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: format!("hot-{d}"),
+        train_size: 4096,
+        test_size: 64,
+        features: d,
+        nnz_per_row: nnz,
+        noise: 0.05,
+        positive_rate: 0.5,
+        lambda: 1e-4,
+    }
+}
+
+fn main() {
+    // ---- L3 micro-kernels -------------------------------------------------
+    print_header("L3 micro-kernels");
+    let mut r = Rng::new(1);
+    let a: Vec<f64> = (0..47236).map(|_| r.normal()).collect();
+    let b_: Vec<f64> = (0..47236).map(|_| r.normal()).collect();
+    let res = bench("dense dot d=47236", 10, 200, || {
+        std::hint::black_box(linalg::dot(&a, &b_));
+    });
+    println!("{}   ({:.2} GFLOP/s)", res.summary(), 2.0 * 47236.0 / res.median_secs / 1e9);
+
+    let ds = generate(&spec(47236, 76), 3, 0.25).train;
+    let mut w = vec![0.0f64; 47236];
+    let mut i = 0usize;
+    let res = bench("sparse dot+axpy nnz=76", 10, 2000, || {
+        let (x, y) = ds.sample(i % ds.len());
+        let s = x.dot_dense(&w);
+        x.axpy_into(0.01 * y * s, &mut w);
+        i += 1;
+    });
+    println!("{}", res.summary());
+
+    // pegasos local step (native backend), sparse high-dim
+    print_header("native Pegasos step (batch=8)");
+    for (d, nnz) in [(256usize, 0usize), (8315, 60), (47236, 76)] {
+        let shard = generate(&spec(d, nnz), 5, 0.05).train;
+        let mut rng = Rng::new(2);
+        let mut wv = vec![0.0f64; d];
+        let mut t = 1usize;
+        let mut backend_native = NativeBackend::default();
+        let res = bench(&format!("native step d={d} nnz={nnz}"), 5, 300, || {
+            let mut ctx = StepContext {
+                shard: &shard,
+                t,
+                lambda: 1e-4,
+                batch_size: 8,
+                local_steps: 1,
+                project: true,
+                rng: &mut rng,
+            };
+            backend_native.local_step(&mut ctx, &mut wv).unwrap();
+            t += 1;
+        });
+        println!("{}", res.summary());
+    }
+
+    // ---- Push-Vector mixing round ----------------------------------------
+    print_header("gossip mixing (m=10, k-regular)");
+    let g = Graph::generate(TopologyKind::KRegular, 10, 1);
+    let tm = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+    for d in [256usize, 8315, 47236] {
+        let vectors: Vec<Vec<f64>> = (0..10)
+            .map(|i| {
+                let mut r = Rng::new(i as u64);
+                (0..d).map(|_| r.normal()).collect()
+            })
+            .collect();
+        let mut pv = PushVector::new(&vectors);
+        let res = bench(&format!("push-vector round d={d}"), 3, 50, || {
+            pv.round(&tm);
+        });
+        println!("{}", res.summary());
+    }
+
+    // ---- XLA artifact dispatch vs native ----------------------------------
+    print_header("backend comparison: one GADGET iteration of local compute");
+    match ArtifactRegistry::load(gadget::runtime::artifacts_dir()) {
+        Err(e) => println!("(xla artifacts unavailable: {e})"),
+        Ok(reg) => {
+            let shard = generate(&spec(784, 150), 7, 0.05).train;
+            // native at (1,1) and (8,4)
+            for (bsz, steps) in [(1usize, 1usize), (8, 4)] {
+                let mut rng = Rng::new(3);
+                let mut wv = vec![0.0f64; 784];
+                let mut t = 1usize;
+                let mut backend_native = NativeBackend::default();
+                let res = bench(&format!("native  b={bsz} s={steps} d=784"), 5, 200, || {
+                    let mut ctx = StepContext {
+                        shard: &shard,
+                        t,
+                        lambda: 1e-4,
+                        batch_size: bsz,
+                        local_steps: steps,
+                        project: true,
+                        rng: &mut rng,
+                    };
+                    backend_native.local_step(&mut ctx, &mut wv).unwrap();
+                    t += 1;
+                });
+                println!("{}", res.summary());
+            }
+            for (bsz, steps) in [(1usize, 1usize), (8, 4), (8, 16)] {
+                match XlaBackend::from_registry(&reg, 784, bsz, steps) {
+                    Err(e) => println!("(no artifact b={bsz} s={steps}: {e})"),
+                    Ok(mut xla) => {
+                        let mut rng = Rng::new(3);
+                        let mut wv = vec![0.0f64; 784];
+                        let mut t = 1usize;
+                        let res =
+                            bench(&format!("xla/pjrt b={bsz} s={steps} d=784"), 5, 100, || {
+                                let mut ctx = StepContext {
+                                    shard: &shard,
+                                    t,
+                                    lambda: 1e-4,
+                                    batch_size: bsz,
+                                    local_steps: steps,
+                                    project: true,
+                                    rng: &mut rng,
+                                };
+                                xla.local_step(&mut ctx, &mut wv).unwrap();
+                                t += 1;
+                            });
+                        println!(
+                            "{}   ({:.1} µs/sub-step)",
+                            res.summary(),
+                            res.median_secs * 1e6 / steps as f64
+                        );
+                    }
+                }
+            }
+            println!(
+                "\nnote: fused (8x4) amortizes PJRT dispatch over 4 steps — the\n\
+                 L2 scan-fusion lever recorded in EXPERIMENTS.md §Perf."
+            );
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Bench A1: Push-Sum convergence vs theory.
+//!
+//! 1. rounds-to-γ across topology families vs the spectral prediction
+//!    `τ(γ) = ln(m/γ)/(1 − λ₂)` (paper §3: Push-Sum converges in
+//!    `O(τ_mix log 1/γ)`);
+//! 2. linearity of rounds in `log(1/γ)`;
+//! 3. deterministic `Bᵀ` engine vs the randomized half-mass engine;
+//! 4. wall-clock cost of a Push-Vector round as d grows (the L3 mixing
+//!    hot path — see EXPERIMENTS.md §Perf).
+
+use gadget::gossip::{PushSum, PushVector, RandomizedGossip};
+use gadget::harness::{bench, print_header};
+use gadget::rng::Rng;
+use gadget::topology::stochastic::WeightScheme;
+use gadget::topology::{mixing_time, second_eigenvalue, Graph, TopologyKind, TransitionMatrix};
+
+fn main() {
+    let m = 24;
+    let mut rng = Rng::new(7);
+    let x: Vec<f64> = (0..m).map(|_| rng.normal() * 5.0).collect();
+
+    println!("== (1) measured vs predicted rounds-to-gamma, m = {m} ==");
+    println!(
+        "{:<14} {:>8} {:>10} {:>10} {:>10}",
+        "topology", "lambda2", "predicted", "det", "randomized"
+    );
+    for kind in [
+        TopologyKind::Complete,
+        TopologyKind::KRegular,
+        TopologyKind::SmallWorld,
+        TopologyKind::Torus,
+        TopologyKind::Ring,
+    ] {
+        let g = Graph::generate(kind, m, 1);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let gamma = 1e-4;
+        let predicted = mixing_time(&b, gamma);
+        let mut ps = PushSum::new(&x);
+        let det = ps.run_to_gamma(&b, gamma, 1_000_000);
+        let vectors: Vec<Vec<f64>> = x.iter().map(|&v| vec![v]).collect();
+        let mut rg = RandomizedGossip::new(&vectors, 7);
+        let rnd = rg.run_to_gamma(&g, gamma, 1_000_000);
+        println!(
+            "{:<14} {:>8.4} {:>10} {:>10} {:>10}",
+            kind.to_string(),
+            second_eigenvalue(&b, 300),
+            predicted,
+            det,
+            rnd
+        );
+    }
+
+    println!("\n== (2) rounds vs log(1/gamma) on the ring (expected: linear) ==");
+    let g = Graph::ring(m);
+    let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+    for gamma in [1e-2, 1e-3, 1e-4, 1e-5, 1e-6] {
+        let mut ps = PushSum::new(&x);
+        let rounds = ps.run_to_gamma(&b, gamma, 1_000_000);
+        println!("  gamma {gamma:>8.0e}: {rounds:>6} rounds");
+    }
+
+    println!("\n== (3) Push-Vector round cost vs dimension (L3 hot path) ==");
+    print_header("push-vector rounds");
+    let g = Graph::generate(TopologyKind::KRegular, 10, 1);
+    let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+    for d in [256usize, 1024, 8192, 47236] {
+        let vectors: Vec<Vec<f64>> = (0..10)
+            .map(|i| {
+                let mut r = Rng::new(i as u64);
+                (0..d).map(|_| r.normal()).collect()
+            })
+            .collect();
+        let mut pv = PushVector::new(&vectors);
+        let res = bench(&format!("round d={d} m=10"), 3, 30, || {
+            pv.round(&b);
+        });
+        println!(
+            "{}   ({:.1} MB/s mixed)",
+            res.summary(),
+            10.0 * d as f64 * 8.0 / res.median_secs / 1e6
+        );
+    }
+}

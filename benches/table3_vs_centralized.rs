@@ -1,0 +1,58 @@
+//! Bench: regenerates paper Table 3 (GADGET vs centralized Pegasos) at the
+//! bench scale and prints the paper-format rows plus timing statistics.
+//!
+//! Scale via env: `GADGET_BENCH_SCALE` (default 0.05), `GADGET_BENCH_TRIALS`
+//! (default 3). The absolute numbers are testbed-specific; the *shape*
+//! (accuracy parity, centralized model-build-time advantage) is asserted in
+//! the summary at the bottom.
+
+use gadget::experiments::{table3, ExperimentOpts};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let opts = ExperimentOpts {
+        scale: env_f64("GADGET_BENCH_SCALE", 0.05),
+        nodes: 10,
+        trials: env_f64("GADGET_BENCH_TRIALS", 3.0) as usize,
+        seed: 17,
+        out_dir: "results".into(),
+        only: vec![],
+        max_iterations: 1_000,
+    };
+    println!(
+        "Table 3 bench: scale={} nodes={} trials={}",
+        opts.scale, opts.nodes, opts.trials
+    );
+    let rows = table3::run(&opts).expect("table3 run");
+    print!("\n{}", table3::render(&rows).render());
+
+    // shape assertions (paper qualitative claims)
+    let mut parity = 0usize;
+    for r in &rows {
+        if (r.gadget_acc - r.pegasos_acc).abs() < 10.0 {
+            parity += 1;
+        }
+    }
+    println!(
+        "\nshape: {}/{} datasets within 10 accuracy points of centralized \
+         (paper: all comparable)",
+        parity,
+        rows.len()
+    );
+    let faster_centralized =
+        rows.iter().filter(|r| r.pegasos_secs <= r.gadget_secs).count();
+    println!(
+        "shape: centralized model-build faster on {}/{} datasets \
+         (paper: centralized usually faster when load time excluded)",
+        faster_centralized,
+        rows.len()
+    );
+    gadget::experiments::write_output(
+        std::path::Path::new("results/bench_table3.csv"),
+        &table3::render(&rows).to_csv(),
+    )
+    .unwrap();
+}

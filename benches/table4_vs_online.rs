@@ -1,0 +1,52 @@
+//! Bench: regenerates paper Table 4 (GADGET vs SVM-Perf vs SVM-SGD run
+//! per-node) and checks the qualitative shape: GADGET accuracy comparable
+//! to SVM-SGD, SVM-Perf slow on the large sparse corpora.
+
+use gadget::experiments::{table4, ExperimentOpts};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let opts = ExperimentOpts {
+        scale: env_f64("GADGET_BENCH_SCALE", 0.05),
+        nodes: 10,
+        trials: env_f64("GADGET_BENCH_TRIALS", 2.0) as usize,
+        seed: 17,
+        out_dir: "results".into(),
+        only: vec![],
+        max_iterations: 1_000,
+    };
+    println!(
+        "Table 4 bench: scale={} nodes={} trials={}",
+        opts.scale, opts.nodes, opts.trials
+    );
+    let rows = table4::run(&opts).expect("table4 run");
+    print!("\n{}", table4::render(&rows).render());
+
+    let comparable = rows
+        .iter()
+        .filter(|r| (r.gadget.2 - r.svm_sgd.2).abs() < 12.0)
+        .count();
+    println!(
+        "\nshape: GADGET within 12 points of SVM-SGD on {}/{} datasets \
+         (paper: comparable or better)",
+        comparable,
+        rows.len()
+    );
+    // SVM-Perf total time over the big sparse sets vs GADGET (paper: Perf
+    // substantially slower on CCAT/webspam-like data)
+    for r in rows.iter().filter(|r| r.dataset.contains("ccat")) {
+        println!(
+            "shape: on {}, SVM-Perf {:.3}s vs GADGET {:.3}s per node \
+             (paper: Perf much slower)",
+            r.dataset, r.svm_perf.0, r.gadget.0
+        );
+    }
+    gadget::experiments::write_output(
+        std::path::Path::new("results/bench_table4.csv"),
+        &table4::render(&rows).to_csv(),
+    )
+    .unwrap();
+}

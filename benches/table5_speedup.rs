@@ -1,0 +1,49 @@
+//! Bench: regenerates paper Table 5 — timing *including* data loading,
+//! speed-up factor `T_dist / T_central`, with the Gisette stand-in.
+//!
+//! Paper shape: GADGET wins (speed-up < 1) when instances ≫ features
+//! (USPS, Adult, MNIST); loses on dense high-dimensional data (Gisette).
+
+use gadget::experiments::{table5, ExperimentOpts};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let opts = ExperimentOpts {
+        scale: env_f64("GADGET_BENCH_SCALE", 0.05),
+        nodes: 10,
+        trials: env_f64("GADGET_BENCH_TRIALS", 2.0) as usize,
+        seed: 17,
+        out_dir: "results".into(),
+        only: vec![],
+        max_iterations: 1_000,
+    };
+    println!(
+        "Table 5 bench: scale={} nodes={} trials={} (times include loading)",
+        opts.scale, opts.nodes, opts.trials
+    );
+    let rows = table5::run(&opts).expect("table5 run");
+    print!("\n{}", table5::render(&rows).render());
+
+    let wins = rows.iter().filter(|r| r.speedup < 1.0).count();
+    println!(
+        "\nshape: GADGET faster (speedup < 1) on {}/{} datasets once load \
+         time counts (paper: 4/7)",
+        wins,
+        rows.len()
+    );
+    if let Some(g) = rows.iter().find(|r| r.core.dataset.contains("gisette")) {
+        println!(
+            "shape: gisette speedup {:.2} (paper: 2.86 — distributed loses \
+             on dense high-d data)",
+            g.speedup
+        );
+    }
+    gadget::experiments::write_output(
+        std::path::Path::new("results/bench_table5.csv"),
+        &table5::render(&rows).to_csv(),
+    )
+    .unwrap();
+}

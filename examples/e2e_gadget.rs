@@ -1,0 +1,124 @@
+//! End-to-end system driver — proves all layers compose on a real small
+//! workload, and logs the loss curve (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Phase A — full-size workload on the native path: the Reuters-21578
+//! stand-in at paper scale (7 770 train docs × 8 315 features, k = 10
+//! nodes), trained to ε-convergence with the objective/error trace
+//! written to `results/e2e_trace.csv`, and compared against centralized
+//! Pegasos on the pooled corpus.
+//!
+//! Phase B — the three-layer stack: the same coordinator with the local
+//! step executed by the **AOT-compiled JAX/Pallas artifact on PJRT**
+//! (L1 Pallas kernel → L2 scan-fused model → L3 rust gossip runtime) on
+//! the MNIST stand-in (d = 784 artifact), verified against the native
+//! backend.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_gadget
+//! ```
+
+use gadget::config::{Backend, ExperimentConfig};
+use gadget::coordinator::GadgetRunner;
+use gadget::metrics;
+use gadget::solver::{Pegasos, PegasosParams, Solver};
+use gadget::util::Stopwatch;
+
+fn main() -> gadget::Result<()> {
+    // ---------- Phase A: paper-scale workload, native backend ------------
+    println!("=== Phase A: synthetic-reuters at paper scale, 10 nodes ===");
+    let cfg = ExperimentConfig::builder()
+        .dataset("synthetic-reuters")
+        .scale(1.0) // full 7 770 × 8 315
+        .nodes(10)
+        .epsilon(1e-3)
+        .max_iterations(2_000)
+        .trials(1)
+        .seed(2024)
+        .snapshot_every(50)
+        .build()?;
+    let runner = GadgetRunner::new(cfg)?;
+    println!(
+        "workload: {} train / {} test docs, d = {}, nnz/doc ≈ {:.0}, lambda = {:.2e}",
+        runner.train_data().len(),
+        runner.test_data().len(),
+        runner.train_data().dim,
+        runner.train_data().total_nnz() as f64 / runner.train_data().len() as f64,
+        runner.lambda()
+    );
+    let report = runner.run()?;
+    let trial = &report.trials[0];
+    println!("\nloss curve (objective vs wall-time):");
+    for p in trial
+        .trace
+        .points
+        .iter()
+        .step_by((trial.trace.points.len() / 12).max(1))
+    {
+        println!(
+            "  t={:>7.3}s  iter={:>5}  objective={:.5}  test-err={:.4}",
+            p.time_secs, p.step, p.objective, p.test_error
+        );
+    }
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/e2e_trace.csv", trial.trace.to_csv())?;
+    println!("  (full trace -> results/e2e_trace.csv)");
+
+    // centralized reference
+    let sw = Stopwatch::new();
+    let mut peg = Pegasos::new(PegasosParams {
+        lambda: runner.lambda(),
+        iterations: 2 * runner.train_data().len(),
+        batch_size: 1,
+        project: true,
+        seed: 2024,
+    });
+    let central = peg.fit(runner.train_data());
+    let central_secs = sw.secs();
+    let central_acc = metrics::accuracy(&central.w, runner.test_data());
+    println!("\nGADGET   : acc {:.2}%  time {:.2}s  ({} iters, eps {:.5})",
+        100.0 * report.test_accuracy, report.train_secs, trial.iterations, trial.epsilon_final);
+    println!("Pegasos  : acc {:.2}%  time {:.2}s  (centralized)",
+        100.0 * central_acc, central_secs);
+    println!("gossip   : {:.1} MB, {} messages", trial.gossip.bytes as f64 / 1e6, trial.gossip.messages);
+
+    // ---------- Phase B: the three-layer stack over PJRT -----------------
+    println!("\n=== Phase B: L1 Pallas -> L2 JAX -> L3 rust over PJRT ===");
+    let mk = |backend: Backend| -> gadget::Result<ExperimentConfig> {
+        ExperimentConfig::builder()
+            .dataset("synthetic-mnist")
+            .scale(0.02) // 1 200 images, d = 784 (exact artifact dim)
+            .nodes(4)
+            .batch_size(8)
+            .local_steps(4) // the scan-fused artifact variant
+            .max_iterations(150)
+            .trials(1)
+            .seed(99)
+            .backend(backend)
+            .build()
+    };
+    match GadgetRunner::new(mk(Backend::Xla)?) {
+        Ok(xla_runner) => match xla_runner.run() {
+            Ok(xla_report) => {
+                let nat_report = GadgetRunner::new(mk(Backend::Native)?)?.run()?;
+                println!(
+                    "xla backend   : acc {:.2}%  time {:.3}s",
+                    100.0 * xla_report.test_accuracy,
+                    xla_report.train_secs
+                );
+                println!(
+                    "native backend: acc {:.2}%  time {:.3}s",
+                    100.0 * nat_report.test_accuracy,
+                    nat_report.train_secs
+                );
+                let diff = (xla_report.test_accuracy - nat_report.test_accuracy).abs();
+                println!(
+                    "accuracy agreement: |Δ| = {:.3}% — the layers compose.",
+                    100.0 * diff
+                );
+            }
+            Err(e) => println!("xla run failed: {e:#}"),
+        },
+        Err(e) => println!("skipping Phase B (artifacts missing?): {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Sensor-network deployment scenario — the paper's §1 motivation for
+//! fully-decentralized, asynchronous learning.
+//!
+//! A fleet of battery-powered sensors (USPS-like dense 256-dim readings)
+//! learns a shared detector without any central server:
+//!
+//! 1. **Topology matters**: the same GADGET run over complete / small-world /
+//!    torus / ring overlays — accuracy is topology-robust, communication
+//!    cost is not (Push-Sum needs ~τ_mix rounds per iteration).
+//! 2. **No global clock**: the asynchronous engine (one thread per sensor,
+//!    channel messages, no round barrier) reaches the same consensus.
+//!
+//! ```bash
+//! cargo run --release --example sensor_network
+//! ```
+
+use gadget::config::ExperimentConfig;
+use gadget::coordinator::{AsyncGossipEngine, AsyncParams, GadgetRunner};
+use gadget::data::partition;
+use gadget::data::synthetic::{generate, spec_by_name};
+use gadget::metrics;
+use gadget::topology::{Graph, TopologyKind};
+use gadget::util::table::TextTable;
+
+fn main() -> gadget::Result<()> {
+    let nodes = 16;
+
+    // -- part 1: synchronous GADGET across overlay families ---------------
+    println!("== topology sweep: 16 sensors, synchronous cycle engine ==\n");
+    let mut table = TextTable::new(&["Overlay", "acc%", "iterations", "gossip MB", "time (s)"]);
+    for topo in [
+        TopologyKind::Complete,
+        TopologyKind::SmallWorld,
+        TopologyKind::Torus,
+        TopologyKind::Ring,
+    ] {
+        let cfg = ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(0.25)
+            .nodes(nodes)
+            .topology(topo)
+            .trials(1)
+            .max_iterations(500)
+            .seed(3)
+            .build()?;
+        let report = GadgetRunner::new(cfg)?.run()?;
+        let g = report.trials[0].gossip;
+        table.row(vec![
+            topo.to_string(),
+            format!("{:.2}", 100.0 * report.test_accuracy),
+            format!("{:.0}", report.iterations),
+            format!("{:.2}", g.bytes as f64 / 1e6),
+            format!("{:.3}", report.train_secs),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // -- part 2: the asynchronous engine -----------------------------------
+    println!("== asynchronous engine: one thread per sensor, no round barrier ==\n");
+    let spec = spec_by_name("usps").unwrap();
+    let split = generate(&spec, 3 ^ 0xda7a, 0.25);
+    let shards = partition::horizontal_split(&split.train, nodes, 3);
+    let graph = Graph::generate(TopologyKind::SmallWorld, nodes, 3);
+    let engine = AsyncGossipEngine::new(AsyncParams {
+        lambda: spec.lambda,
+        batch_size: 4,
+        cycles: 500,
+        cooldown: 100,
+        local_steps: 1,
+        project: true,
+        seed: 3,
+        max_lag: 4,
+    });
+    let weights = engine.run(shards, &graph)?;
+    let accs: Vec<f64> =
+        weights.iter().map(|w| 100.0 * metrics::accuracy(w, &split.test)).collect();
+    let (mean, std) = gadget::util::timer::mean_std(&accs);
+    println!("per-sensor accuracy: {mean:.2}% (±{std:.2}) across {nodes} sensors");
+    println!(
+        "min {:.2}%, max {:.2}% — consensus without a clock.",
+        accs.iter().cloned().fold(f64::INFINITY, f64::min),
+        accs.iter().cloned().fold(0.0, f64::max)
+    );
+    Ok(())
+}

@@ -1,0 +1,131 @@
+"""AOT lowering: JAX/Pallas model -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out-dir ../artifacts \
+        --dims 64,256,784,1024 --variants 1x1,8x4
+
+emits ``pegasos_steps_d{d}_b{b}_s{s}.hlo.txt`` per (dim, batch, steps)
+combination, ``objective_eval_d{d}_n{n}.hlo.txt`` evaluators, and
+``manifest.json`` for the rust artifact registry
+(``rust/src/runtime/artifacts.rs``).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pegasos_steps(d, batch, steps, use_pallas=True):
+    """Lowers the fused-steps update for one shape variant."""
+    f32 = jnp.float32
+    fn = functools.partial(model.pegasos_steps, use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((d,), f32),
+        jax.ShapeDtypeStruct((steps, batch, d), f32),
+        jax.ShapeDtypeStruct((steps, batch), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_objective_eval(d, n, use_pallas=True):
+    """Lowers the objective/error evaluator for one shape variant."""
+    f32 = jnp.float32
+    fn = functools.partial(model.objective_eval, use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((d,), f32),
+        jax.ShapeDtypeStruct((n, d), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def build(out_dir, dims, variants, eval_n, use_pallas=True, quiet=False):
+    """Emits every artifact + the manifest. Returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for d in dims:
+        for batch, steps in variants:
+            name = f"pegasos_steps_d{d}_b{batch}_s{steps}.hlo.txt"
+            text = lower_pegasos_steps(d, batch, steps, use_pallas)
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(text)
+            entries.append(
+                {"kernel": "pegasos_steps", "d": d, "batch": batch,
+                 "steps": steps, "path": name}
+            )
+            if not quiet:
+                print(f"  wrote {name} ({len(text)} chars)")
+        name = f"objective_eval_d{d}_n{eval_n}.hlo.txt"
+        text = lower_objective_eval(d, eval_n, use_pallas)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entries.append(
+            {"kernel": "objective_eval", "d": d, "batch": eval_n,
+             "steps": 1, "path": name}
+        )
+        if not quiet:
+            print(f"  wrote {name} ({len(text)} chars)")
+    manifest = {"artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not quiet:
+        print(f"  wrote manifest.json ({len(entries)} artifacts)")
+    return manifest
+
+
+def parse_variants(text):
+    """``"1x1,8x4"`` -> ``[(1, 1), (8, 4)]`` (batch x steps)."""
+    out = []
+    for tok in text.split(","):
+        b, s = tok.strip().split("x")
+        out.append((int(b), int(s)))
+    return out
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--dims", default="64,256,784,1024",
+                   help="comma-separated padded feature dims")
+    p.add_argument("--variants", default="1x1,8x4,8x16",
+                   help="batchxsteps combos, e.g. 1x1,8x4")
+    p.add_argument("--eval-n", type=int, default=256,
+                   help="eval-block rows for objective_eval artifacts")
+    p.add_argument("--no-pallas", action="store_true",
+                   help="lower the pure-jnp reference path instead "
+                        "(A/B comparison for EXPERIMENTS.md)")
+    args = p.parse_args()
+    dims = [int(x) for x in args.dims.split(",")]
+    variants = parse_variants(args.variants)
+    print(f"AOT: dims={dims} variants={variants} -> {args.out_dir}")
+    build(args.out_dir, dims, variants, args.eval_n,
+          use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

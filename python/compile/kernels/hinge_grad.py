@@ -1,0 +1,115 @@
+"""Layer-1 Pallas kernels: the Pegasos compute hot-spot.
+
+Two kernels cover one sub-gradient step (see DESIGN.md
+§Hardware-Adaptation for the TPU mapping):
+
+* ``margins_pallas``  — the margin pass ``m = y * (X @ w)``: a tiled
+  matvec with the output block revisited across d-tiles (the VMEM
+  accumulator pattern; on real TPU the (BB,BD)x(BD,) products run on the
+  MXU and the accumulator stays resident in VMEM).
+* ``hinge_grad_pallas`` — the sub-gradient pass ``g = X^T c`` with
+  ``c = mask * y / b``: the transposed tiling, accumulating per-d-tile
+  partials across b-tiles. The same X tiles stream HBM->VMEM once per
+  pass; the O(b) mask arithmetic between the passes is left to XLA.
+
+Both kernels run under ``interpret=True`` — mandatory for CPU-PJRT
+execution (real TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot run). Correctness versus ``ref.py`` is pytest-enforced, including
+a hypothesis sweep over shapes/dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: Upper bound for feature-tile width (fits 4 MiB VMEM comfortably with
+#: BB <= 128: 128*512*4 B = 256 KiB per X tile plus accumulators).
+MAX_BLOCK_D = 512
+#: Upper bound for batch-tile height.
+MAX_BLOCK_B = 128
+
+
+def _tile(n, cap):
+    """Largest divisor of ``n`` that is <= cap (tiles must divide evenly)."""
+    t = min(n, cap)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def margins_pallas(X, w, y, block_d=None, block_b=None):
+    """Per-sample margins ``y * (X @ w)`` as a tiled Pallas matvec."""
+    b, d = X.shape
+    bd = block_d or _tile(d, MAX_BLOCK_D)
+    bb = block_b or _tile(b, MAX_BLOCK_B)
+    nb, nd = b // bb, d // bd
+
+    def kernel(x_ref, w_ref, y_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += x_ref[...] @ w_ref[...]
+
+        @pl.when(pl.program_id(1) == nd - 1)
+        def _finish():
+            o_ref[...] = y_ref[...] * o_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nd),
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda ib, id_: (ib, id_)),
+            pl.BlockSpec((bd,), lambda ib, id_: (id_,)),
+            pl.BlockSpec((bb,), lambda ib, id_: (ib,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda ib, id_: (ib,)),
+        out_shape=jax.ShapeDtypeStruct((b,), X.dtype),
+        interpret=True,
+    )(X, w, y)
+
+
+def hinge_grad_pallas(X, w, y, block_d=None, block_b=None):
+    """Violator-averaged sub-gradient ``(1/b) X^T (mask * y)``.
+
+    The margin pass supplies the mask; the O(b) coefficient arithmetic in
+    between is plain jnp (XLA fuses it), and the heavy ``X^T c``
+    accumulation is the second Pallas kernel.
+    """
+    b, d = X.shape
+    bd = block_d or _tile(d, MAX_BLOCK_D)
+    bb = block_b or _tile(b, MAX_BLOCK_B)
+    nb, nd = b // bb, d // bd
+
+    m = margins_pallas(X, w, y, block_d=bd, block_b=bb)
+    coeff = jnp.where(m < 1.0, y, jnp.zeros_like(y)) / b
+
+    def kernel(x_ref, c_ref, g_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            g_ref[...] = jnp.zeros_like(g_ref)
+
+        g_ref[...] += x_ref[...].T @ c_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(nd, nb),
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda id_, ib: (ib, id_)),
+            pl.BlockSpec((bb,), lambda id_, ib: (ib,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda id_, ib: (id_,)),
+        out_shape=jax.ShapeDtypeStruct((d,), X.dtype),
+        interpret=True,
+    )(X, coeff)
+
+
+def pegasos_step_pallas(w, X, y, t_eff, lam):
+    """One Pegasos step with the Pallas sub-gradient (kernel-backed
+    counterpart of ``ref.pegasos_step``)."""
+    alpha = 1.0 / (lam * t_eff)
+    g = hinge_grad_pallas(X, w, y)
+    w = (1.0 - lam * alpha) * w + alpha * g
+    return ref.project_ball(w, lam)

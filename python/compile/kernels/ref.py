@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracle for the Pallas kernels and the L2 model.
+
+Everything here is the mathematical ground truth the Pallas implementations
+are tested against (``python/tests/test_kernel.py``) and the rust native
+backend mirrors in f64. Shapes:
+
+    w  : (d,)      weight vector
+    X  : (b, d)    mini-batch rows (dense, zero-padded)
+    y  : (b,)      labels in {-1, +1}
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def margins(X, w, y):
+    """Per-sample functional margins ``y_i * <X_i, w>``."""
+    return y * (X @ w)
+
+
+def hinge_grad(X, w, y):
+    """Violator-averaged hinge sub-gradient ``(1/b) X^T (mask * y)``.
+
+    ``mask_i = 1 if y_i <X_i, w> < 1`` (the set M+ of Algorithm 2 /
+    A_t+ of Pegasos).
+    """
+    m = margins(X, w, y)
+    coeff = jnp.where(m < 1.0, y, 0.0) / X.shape[0]
+    return X.T @ coeff
+
+
+def project_ball(w, lam):
+    """Projection onto the ball of radius ``1/sqrt(lam)`` (Pegasos step)."""
+    radius = 1.0 / jnp.sqrt(lam)
+    norm = jnp.linalg.norm(w)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(norm, 1e-30))
+    return w * scale
+
+
+def pegasos_step(w, X, y, t_eff, lam):
+    """One mini-batch Pegasos step at effective step count ``t_eff``.
+
+    ``w <- (1 - lam*alpha) w + alpha * g``, ``alpha = 1/(lam * t_eff)``,
+    then projection — Algorithm 2 steps (a)-(f) with the mini-batch reading
+    documented in DESIGN.md.
+    """
+    alpha = 1.0 / (lam * t_eff)
+    g = hinge_grad(X, w, y)
+    w = (1.0 - lam * alpha) * w + alpha * g
+    return project_ball(w, lam)
+
+
+def pegasos_steps(w, xs, ys, t0, lam):
+    """``S`` scan-fused steps; ``xs: (S, b, d)``, ``ys: (S, b)``.
+
+    ``t_eff = t0 + s + 1`` for scan index ``s`` — matching the rust
+    coordinator's global iteration accounting.
+    """
+
+    def body(carry, inp):
+        w, s = carry
+        X, y = inp
+        w = pegasos_step(w, X, y, t0 + s + 1.0, lam)
+        return (w, s + 1.0), None
+
+    (w, _), _ = lax.scan(body, (w, 0.0), (xs, ys))
+    return w
+
+
+def objective(w, X, y, lam):
+    """Primal objective (paper Eq. 1) over a data block."""
+    losses = jnp.maximum(0.0, 1.0 - margins(X, w, y))
+    return 0.5 * lam * jnp.dot(w, w) + jnp.mean(losses)
+
+
+def zero_one_error(w, X, y):
+    """Fraction misclassified (score 0 counts as +1, as in the rust side)."""
+    pred = jnp.where(X @ w >= 0.0, 1.0, -1.0)
+    return jnp.mean(jnp.where(pred != y, 1.0, 0.0))

@@ -1,0 +1,69 @@
+"""Layer-2 JAX model: the scan-fused multi-step Pegasos update and the
+objective evaluator, built on the Layer-1 Pallas kernels.
+
+These are the functions ``aot.py`` lowers to HLO text for the rust
+runtime; their calling conventions are the contract with
+``rust/src/runtime/xla_backend.rs``:
+
+    pegasos_steps(w: f32[d], xs: f32[S,B,d], ys: f32[S,B],
+                  t0: f32[1], lam: f32[1]) -> (f32[d],)
+    objective_eval(w: f32[d], X: f32[N,d], y: f32[N],
+                   lam: f32[1]) -> (f32[1], f32[1])   # (objective, 0/1 err)
+
+Scan fusion is the L2 perf lever: ``S`` local steps lower into ONE
+executable so the PJRT dispatch cost is paid once per GADGET iteration
+instead of once per step (see EXPERIMENTS.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import hinge_grad, ref
+
+
+def pegasos_steps(w, xs, ys, t0, lam, use_pallas=True):
+    """``S`` fused mini-batch Pegasos steps.
+
+    Args:
+        w:   (d,) current weight vector.
+        xs:  (S, B, d) pre-sampled dense mini-batches.
+        ys:  (S, B) labels.
+        t0:  (1,) global step offset; step ``s`` uses
+             ``alpha = 1/(lam * (t0 + s + 1))``.
+        lam: (1,) regularization.
+        use_pallas: route the sub-gradient through the Pallas kernels
+            (False = pure-jnp reference path, used for A/B lowering).
+
+    Returns a 1-tuple ``(w',)`` — the AOT convention.
+    """
+    t0s = jnp.reshape(t0, ())
+    lams = jnp.reshape(lam, ())
+    step = hinge_grad.pegasos_step_pallas if use_pallas else ref.pegasos_step
+
+    def body(carry, inp):
+        w, s = carry
+        X, y = inp
+        w = step(w, X, y, t0s + s + 1.0, lams)
+        return (w, s + 1.0), None
+
+    (w, _), _ = lax.scan(body, (w, 0.0), (xs, ys))
+    return (w,)
+
+
+def objective_eval(w, X, y, lam, use_pallas=True):
+    """Primal objective (Eq. 1) and 0/1 error over a data block.
+
+    Returns ``(objective: f32[1], error: f32[1])``.
+    """
+    lams = jnp.reshape(lam, ())
+    if use_pallas:
+        m = hinge_grad.margins_pallas(X, w, y)
+    else:
+        m = ref.margins(X, w, y)
+    losses = jnp.maximum(0.0, 1.0 - m)
+    obj = 0.5 * lams * jnp.dot(w, w) + jnp.mean(losses)
+    scores = m * y  # recover raw scores: margins = y*score, y^2 = 1
+    pred = jnp.where(scores >= 0.0, 1.0, -1.0)
+    err = jnp.mean(jnp.where(pred != y, 1.0, 0.0))
+    return (jnp.reshape(obj, (1,)), jnp.reshape(err, (1,)))

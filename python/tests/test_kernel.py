@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the compute layer — the rust
+runtime executes exactly what these tests validate (the same functions,
+lowered to HLO text by aot.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hinge_grad, ref
+
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", True)  # the hypothesis sweep covers f64
+
+
+def make_problem(b, d, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(b, d)), dtype=dtype)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=(b,)), dtype=dtype)
+    w = jnp.asarray(rng.normal(size=(d,)), dtype=dtype)
+    return X, y, w
+
+
+@pytest.mark.parametrize("b,d", [(1, 64), (8, 64), (128, 512), (7, 96), (33, 130)])
+def test_margins_matches_ref(b, d):
+    X, y, w = make_problem(b, d, seed=b * 1000 + d)
+    got = hinge_grad.margins_pallas(X, w, y)
+    want = ref.margins(X, w, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,d", [(1, 64), (8, 64), (128, 512), (7, 96), (33, 130)])
+def test_hinge_grad_matches_ref(b, d):
+    X, y, w = make_problem(b, d, seed=b * 7 + d)
+    got = hinge_grad.hinge_grad_pallas(X, w, y)
+    want = ref.hinge_grad(X, w, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_gradient_zero_when_no_violators():
+    # margins >> 1 for every sample -> empty violator set -> zero gradient
+    X, y, _ = make_problem(16, 32, seed=3)
+    w_big = 100.0 * (X * y[:, None]).mean(axis=0)  # points along every y_i x_i
+    m = ref.margins(X, w_big, y)
+    if not bool(jnp.all(m >= 1.0)):
+        w_big = w_big * (2.0 / jnp.min(m))  # rescale to clear the margin
+    got = hinge_grad.hinge_grad_pallas(X, w_big, y)
+    np.testing.assert_allclose(got, jnp.zeros_like(got), atol=1e-6)
+
+
+def test_gradient_at_zero_weight_is_class_mean():
+    # w = 0: every sample violates; g = (1/b) X^T y
+    X, y, _ = make_problem(32, 64, seed=4)
+    w0 = jnp.zeros(64, dtype=jnp.float32)
+    got = hinge_grad.hinge_grad_pallas(X, w0, y)
+    want = X.T @ y / 32.0
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("t_eff", [1.0, 2.0, 100.0])
+def test_pegasos_step_matches_ref(t_eff):
+    X, y, w = make_problem(16, 128, seed=int(t_eff))
+    lam = 1e-2
+    got = hinge_grad.pegasos_step_pallas(w, X, y, t_eff, lam)
+    want = ref.pegasos_step(w, X, y, t_eff, lam)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_step_projection_bounds_norm():
+    X, y, w = make_problem(8, 64, seed=9)
+    lam = 1e-2
+    w2 = hinge_grad.pegasos_step_pallas(w, X, y, 1.0, lam)
+    assert float(jnp.linalg.norm(w2)) <= 1.0 / np.sqrt(lam) * (1 + 1e-5)
+
+
+def test_explicit_block_sizes():
+    X, y, w = make_problem(32, 256, seed=11)
+    for bd, bb in [(64, 8), (256, 32), (128, 16)]:
+        got = hinge_grad.hinge_grad_pallas(X, w, y, block_d=bd, block_b=bb)
+        want = ref.hinge_grad(X, w, y)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"block ({bb},{bd})")
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=96),
+    d=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+)
+def test_hypothesis_shape_dtype_sweep(b, d, seed, dtype):
+    """Property: Pallas == ref for arbitrary shapes and both float dtypes."""
+    X, y, w = make_problem(b, d, seed=seed, dtype=dtype)
+    got_m = hinge_grad.margins_pallas(X, w, y)
+    np.testing.assert_allclose(got_m, ref.margins(X, w, y), rtol=1e-4, atol=1e-4)
+    got_g = hinge_grad.hinge_grad_pallas(X, w, y)
+    np.testing.assert_allclose(got_g, ref.hinge_grad(X, w, y), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=32),
+    d=st.integers(min_value=2, max_value=128),
+    t=st.floats(min_value=1.0, max_value=1e4),
+    lam_exp=st.integers(min_value=-5, max_value=-1),
+)
+def test_hypothesis_step_invariants(b, d, t, lam_exp):
+    """Property: one step keeps w finite and inside the Pegasos ball."""
+    lam = 10.0 ** lam_exp
+    X, y, w = make_problem(b, d, seed=int(t) % 1000)
+    w2 = hinge_grad.pegasos_step_pallas(w, X, y, t, lam)
+    assert bool(jnp.all(jnp.isfinite(w2)))
+    assert float(jnp.linalg.norm(w2)) <= 1.0 / np.sqrt(lam) * (1 + 1e-4)

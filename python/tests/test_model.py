@@ -1,0 +1,89 @@
+"""L2 correctness: the scan-fused model vs sequential reference steps,
+objective evaluation, and learning sanity on a planted problem."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_batches(s, b, d, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(s, b, d)), dtype=jnp.float32)
+    ys = jnp.asarray(rng.choice([-1.0, 1.0], size=(s, b)), dtype=jnp.float32)
+    w = jnp.zeros((d,), dtype=jnp.float32)
+    return w, xs, ys
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("s,b,d", [(1, 1, 64), (4, 8, 64), (8, 2, 128)])
+def test_fused_steps_equal_sequential(use_pallas, s, b, d):
+    w, xs, ys = make_batches(s, b, d, seed=s * 100 + b)
+    lam = jnp.asarray([1e-2], dtype=jnp.float32)
+    t0 = jnp.asarray([5.0], dtype=jnp.float32)
+    (got,) = model.pegasos_steps(w, xs, ys, t0, lam, use_pallas=use_pallas)
+    # sequential reference
+    want = w
+    for i in range(s):
+        want = ref.pegasos_step(want, xs[i], ys[i], 5.0 + i + 1.0, 1e-2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_and_ref_paths_agree():
+    w, xs, ys = make_batches(6, 4, 96, seed=7)
+    lam = jnp.asarray([1e-3], dtype=jnp.float32)
+    t0 = jnp.asarray([0.0], dtype=jnp.float32)
+    (a,) = model.pegasos_steps(w, xs, ys, t0, lam, use_pallas=True)
+    (b,) = model.pegasos_steps(w, xs, ys, t0, lam, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_objective_eval_matches_ref():
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(64, 32)), dtype=jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=(64,)), dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32,)), dtype=jnp.float32)
+    lam = jnp.asarray([1e-2], dtype=jnp.float32)
+    obj, err = model.objective_eval(w, X, y, lam)
+    np.testing.assert_allclose(obj[0], ref.objective(w, X, y, 1e-2), rtol=1e-5)
+    np.testing.assert_allclose(err[0], ref.zero_one_error(w, X, y), rtol=1e-6)
+
+
+def test_learning_on_planted_problem():
+    # Gaussian mixture: x = z + y * mu. 50 fused steps must beat chance.
+    rng = np.random.default_rng(11)
+    d, s, b = 64, 50, 8
+    mu = rng.normal(size=(d,))
+    mu /= np.linalg.norm(mu)
+    ys_np = rng.choice([-1.0, 1.0], size=(s, b))
+    xs_np = rng.normal(size=(s, b, d)) * 0.3 + ys_np[:, :, None] * mu[None, None, :]
+    w = jnp.zeros((d,), dtype=jnp.float32)
+    lam = jnp.asarray([1e-2], dtype=jnp.float32)
+    t0 = jnp.asarray([0.0], dtype=jnp.float32)
+    (w_out,) = model.pegasos_steps(
+        w,
+        jnp.asarray(xs_np, dtype=jnp.float32),
+        jnp.asarray(ys_np, dtype=jnp.float32),
+        t0,
+        lam,
+    )
+    # fresh eval data
+    y_te = rng.choice([-1.0, 1.0], size=(256,))
+    X_te = rng.normal(size=(256, d)) * 0.3 + y_te[:, None] * mu[None, :]
+    err = ref.zero_one_error(
+        w_out, jnp.asarray(X_te, dtype=jnp.float32), jnp.asarray(y_te, dtype=jnp.float32)
+    )
+    assert float(err) < 0.1, f"error {err}"
+
+
+def test_t0_offset_changes_trajectory():
+    w, xs, ys = make_batches(3, 2, 32, seed=5)
+    lam = jnp.asarray([1e-2], dtype=jnp.float32)
+    (a,) = model.pegasos_steps(w, xs, ys, jnp.asarray([0.0], jnp.float32), lam)
+    (b,) = model.pegasos_steps(w, xs, ys, jnp.asarray([100.0], jnp.float32), lam)
+    assert not np.allclose(np.asarray(a), np.asarray(b))

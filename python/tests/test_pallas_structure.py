@@ -1,0 +1,89 @@
+"""L1 structural checks: tiling plans, VMEM budget estimates, and the
+pallas-vs-reference lowering equivalence (the two AOT paths must produce
+numerically identical computations)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels import hinge_grad
+
+jax.config.update("jax_platform_name", "cpu")
+
+#: VMEM budget per the DESIGN.md §Hardware-Adaptation plan (bytes).
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def tile_plan(b, d):
+    bd = hinge_grad._tile(d, hinge_grad.MAX_BLOCK_D)
+    bb = hinge_grad._tile(b, hinge_grad.MAX_BLOCK_B)
+    return bb, bd
+
+
+@pytest.mark.parametrize("n,cap,want", [
+    (512, 512, 512),   # exact fit
+    (784, 512, 392),   # largest divisor <= cap
+    (47236, 512, 482), # 47236 = 2^2 * 7^2 * 241
+    (1, 512, 1),
+    (7, 4, 1),         # prime larger than cap -> 1
+])
+def test_tile_divisor_selection(n, cap, want):
+    got = hinge_grad._tile(n, cap)
+    assert n % got == 0
+    assert got <= cap
+    assert got == want
+
+
+@pytest.mark.parametrize("b,d", [(1, 64), (8, 256), (128, 784), (64, 1024), (32, 8192)])
+def test_vmem_plan_within_budget(b, d):
+    """X tile + w tile + margin accumulator + grad accumulator, f32."""
+    bb, bd = tile_plan(b, d)
+    x_tile = bb * bd * 4
+    w_tile = bd * 4
+    acc_m = bb * 4
+    acc_g = bd * 4
+    total = x_tile + w_tile + acc_m + acc_g
+    assert total <= VMEM_BUDGET, f"VMEM plan {total} bytes for (b={b}, d={d})"
+
+
+def test_grid_covers_input_exactly():
+    b, d = 24, 300
+    bb, bd = tile_plan(b, d)
+    assert (b // bb) * bb == b
+    assert (d // bd) * bd == d
+
+
+def test_pallas_and_ref_lowerings_agree_numerically():
+    """Execute both AOT variants (pallas and --no-pallas) via jax.jit and
+    compare outputs — the artifact pair ships the same math."""
+    import functools
+    from compile import model
+
+    d, bsz, s = 64, 4, 3
+    rng = np.random.default_rng(5)
+    w = jnp.zeros((d,), jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(s, bsz, d)), jnp.float32)
+    ys = jnp.asarray(rng.choice([-1.0, 1.0], size=(s, bsz)), jnp.float32)
+    t0 = jnp.asarray([0.0], jnp.float32)
+    lam = jnp.asarray([1e-2], jnp.float32)
+    (a,) = jax.jit(functools.partial(model.pegasos_steps, use_pallas=True))(w, xs, ys, t0, lam)
+    (b,) = jax.jit(functools.partial(model.pegasos_steps, use_pallas=False))(w, xs, ys, t0, lam)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_no_pallas_artifact_text_differs_but_shapes_match():
+    with_pallas = aot.lower_pegasos_steps(64, 1, 1, use_pallas=True)
+    without = aot.lower_pegasos_steps(64, 1, 1, use_pallas=False)
+    for text in (with_pallas, without):
+        assert "HloModule" in text
+        assert "f32[64]" in text
+
+
+def test_hlo_has_no_custom_calls():
+    """interpret=True must lower to plain HLO ops — a Mosaic custom-call
+    would be unexecutable on the CPU PJRT client (the gotcha in
+    /opt/xla-example/README.md)."""
+    text = aot.lower_pegasos_steps(64, 8, 4, use_pallas=True)
+    assert "custom-call" not in text, "Mosaic custom-call leaked into the artifact"

@@ -1,0 +1,143 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `gadget <subcommand> [--key value]... [--flag]...`.
+//! Every subcommand documents itself via `gadget help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand word (empty for none).
+    pub command: String,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Boolean switches — needed to disambiguate `--flag positional` from
+/// `--option value` without a full schema.
+pub const KNOWN_FLAGS: &[&str] = &["help", "verbose", "artifacts", "quiet", "csv"];
+
+impl Args {
+    /// Parses an argument vector (without `argv[0]`).
+    pub fn parse(argv: &[String]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bad argument '--'".into());
+                }
+                // --key=value | --known-flag | --key value | trailing --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Typed option with default.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--dataset",
+            "usps",
+            "--nodes=4",
+            "--verbose",
+            "extra",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("usps"));
+        assert_eq!(a.get("nodes"), Some("4"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_options_with_defaults() {
+        let a = Args::parse(&sv(&["x", "--n", "7"])).unwrap();
+        assert_eq!(a.get_parsed("n", 1usize).unwrap(), 7);
+        assert_eq!(a.get_parsed("missing", 5usize).unwrap(), 5);
+        assert!(Args::parse(&sv(&["x", "--n", "abc"]))
+            .unwrap()
+            .get_parsed("n", 1usize)
+            .is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(&sv(&["x", "--only", "usps, adult"])).unwrap();
+        assert_eq!(a.get_list("only"), vec!["usps", "adult"]);
+        assert!(a.get_list("none").is_empty());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&sv(&["--help"])).unwrap();
+        assert_eq!(a.command, "");
+        assert!(a.has_flag("help"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--seed -3" — the next token starts with '-' but not '--'
+        let a = Args::parse(&sv(&["x", "--label", "-3"])).unwrap();
+        assert_eq!(a.get("label"), Some("-3"));
+    }
+}

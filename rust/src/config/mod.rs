@@ -1,0 +1,389 @@
+//! Configuration system: experiment configs as TOML files or builder calls.
+//!
+//! The offline environment has no `serde`/`toml`, so [`toml`] implements the
+//! subset the configs need (tables, string/number/bool scalars, comments)
+//! and [`ExperimentConfig`] maps the parsed tree onto typed fields with
+//! defaults and validation. Every CLI subcommand and example goes through
+//! this type, so a config file fully determines a run (together with the
+//! seed it is the reproducibility unit recorded in EXPERIMENTS.md).
+
+pub mod toml;
+
+use crate::topology::stochastic::WeightScheme;
+use crate::topology::TopologyKind;
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// Compute backend for the local Pegasos step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust sparse path (default; fastest for the paper's sparse data).
+    Native,
+    /// AOT-compiled JAX/Pallas artifact executed via PJRT
+    /// (`artifacts/*.hlo.txt`) — the three-layer stack's L1/L2.
+    Xla,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(Self::Native),
+            "xla" | "pjrt" => Ok(Self::Xla),
+            other => Err(format!("unknown backend {other:?}")),
+        }
+    }
+}
+
+/// Full description of a GADGET run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset name (`synthetic-*` from `data::synthetic::paper_specs`) or a
+    /// LIBSVM `path:` prefixed file path.
+    pub dataset: String,
+    /// Sample-count scale factor for synthetic corpora, in (0, 1].
+    pub scale: f64,
+    /// Number of network nodes `m` (paper: k = 10).
+    pub nodes: usize,
+    /// Overlay topology (paper's Peersim setup gossips over the complete
+    /// overlay).
+    pub topology: TopologyKind,
+    /// Doubly-stochastic weight scheme for `B`.
+    pub weights: WeightScheme,
+    /// Regularization λ. `None` ⇒ take the dataset spec's Table-2 value.
+    pub lambda: Option<f64>,
+    /// ε-convergence threshold on `‖ŵ^(t+1) − ŵ^(t)‖` (paper: 0.001).
+    pub epsilon: f64,
+    /// Hard cap on GADGET iterations.
+    pub max_iterations: usize,
+    /// Local mini-batch size per node per iteration.
+    pub batch_size: usize,
+    /// Local Pegasos steps fused per GADGET iteration (the L2 scan depth
+    /// when the XLA backend runs; 1 = the paper's exact algorithm).
+    pub local_steps: usize,
+    /// Push-Sum rounds per GADGET iteration. `0` ⇒ derive from the spectral
+    /// mixing-time estimate `τ(γ)`.
+    pub gossip_rounds: usize,
+    /// Relative-error target γ used when deriving rounds.
+    pub gamma: f64,
+    /// Project local update onto the `1/√λ` ball (Algorithm 2 step (f)).
+    pub project_local: bool,
+    /// Project the consensus vector too (step (h)).
+    pub project_consensus: bool,
+    /// Number of independent trials (paper: 5).
+    pub trials: usize,
+    /// Root RNG seed.
+    pub seed: u64,
+    /// Compute backend for the local step.
+    pub backend: Backend,
+    /// Snapshot cadence in GADGET iterations for the figure traces
+    /// (0 = no traces).
+    pub snapshot_every: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "synthetic-reuters".into(),
+            scale: 1.0,
+            nodes: 10,
+            topology: TopologyKind::Complete,
+            weights: WeightScheme::MetropolisHastings,
+            lambda: None,
+            epsilon: 1e-3,
+            max_iterations: 2_000,
+            batch_size: 1,
+            local_steps: 1,
+            gossip_rounds: 0,
+            gamma: 0.01,
+            project_local: true,
+            project_consensus: true,
+            trials: 5,
+            seed: 1,
+            backend: Backend::Native,
+            snapshot_every: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Starts a builder.
+    pub fn builder() -> ConfigBuilder {
+        ConfigBuilder { cfg: Self::default() }
+    }
+
+    /// Validates invariants shared by every consumer.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            bail!("config: nodes must be ≥ 1");
+        }
+        if !(self.scale > 0.0 && self.scale <= 1.0) {
+            bail!("config: scale must be in (0, 1]");
+        }
+        if self.epsilon <= 0.0 {
+            bail!("config: epsilon must be positive");
+        }
+        if let Some(l) = self.lambda {
+            if l <= 0.0 {
+                bail!("config: lambda must be positive");
+            }
+        }
+        if self.batch_size == 0 || self.local_steps == 0 {
+            bail!("config: batch_size and local_steps must be ≥ 1");
+        }
+        if !(self.gamma > 0.0 && self.gamma < 1.0) {
+            bail!("config: gamma must be in (0, 1)");
+        }
+        if self.trials == 0 {
+            bail!("config: trials must be ≥ 1");
+        }
+        if self.max_iterations == 0 {
+            bail!("config: max_iterations must be ≥ 1");
+        }
+        Ok(())
+    }
+
+    /// Loads from a TOML file (see `configs/*.toml` for examples).
+    pub fn from_toml_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parses from TOML text. Unknown keys are rejected — configs are part
+    /// of the experiment record and typos must not silently no-op.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let mut cfg = Self::default();
+        for (key, value) in doc.iter() {
+            let k = key.as_str();
+            match k {
+                "dataset" => cfg.dataset = value.as_str_or(k)?,
+                "scale" => cfg.scale = value.as_f64_or(k)?,
+                "nodes" => cfg.nodes = value.as_usize_or(k)?,
+                "topology" => {
+                    cfg.topology = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                "weights" => {
+                    cfg.weights = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                "lambda" => cfg.lambda = Some(value.as_f64_or(k)?),
+                "epsilon" => cfg.epsilon = value.as_f64_or(k)?,
+                "max_iterations" => cfg.max_iterations = value.as_usize_or(k)?,
+                "batch_size" => cfg.batch_size = value.as_usize_or(k)?,
+                "local_steps" => cfg.local_steps = value.as_usize_or(k)?,
+                "gossip_rounds" => cfg.gossip_rounds = value.as_usize_or(k)?,
+                "gamma" => cfg.gamma = value.as_f64_or(k)?,
+                "project_local" => cfg.project_local = value.as_bool_or(k)?,
+                "project_consensus" => cfg.project_consensus = value.as_bool_or(k)?,
+                "trials" => cfg.trials = value.as_usize_or(k)?,
+                "seed" => cfg.seed = value.as_usize_or(k)? as u64,
+                "backend" => {
+                    cfg.backend = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                "snapshot_every" => cfg.snapshot_every = value.as_usize_or(k)?,
+                other => bail!("config: unknown key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Fluent builder over [`ExperimentConfig`].
+#[derive(Clone, Debug)]
+pub struct ConfigBuilder {
+    cfg: ExperimentConfig,
+}
+
+impl ConfigBuilder {
+    /// Sets the dataset name / path.
+    pub fn dataset(mut self, name: impl Into<String>) -> Self {
+        self.cfg.dataset = name.into();
+        self
+    }
+
+    /// Sets the synthetic scale factor.
+    pub fn scale(mut self, s: f64) -> Self {
+        self.cfg.scale = s;
+        self
+    }
+
+    /// Sets the node count.
+    pub fn nodes(mut self, m: usize) -> Self {
+        self.cfg.nodes = m;
+        self
+    }
+
+    /// Sets the overlay topology.
+    pub fn topology(mut self, t: TopologyKind) -> Self {
+        self.cfg.topology = t;
+        self
+    }
+
+    /// Sets λ explicitly.
+    pub fn lambda(mut self, l: f64) -> Self {
+        self.cfg.lambda = Some(l);
+        self
+    }
+
+    /// Sets the ε-convergence threshold.
+    pub fn epsilon(mut self, e: f64) -> Self {
+        self.cfg.epsilon = e;
+        self
+    }
+
+    /// Sets the iteration cap.
+    pub fn max_iterations(mut self, t: usize) -> Self {
+        self.cfg.max_iterations = t;
+        self
+    }
+
+    /// Sets the local batch size.
+    pub fn batch_size(mut self, b: usize) -> Self {
+        self.cfg.batch_size = b;
+        self
+    }
+
+    /// Sets fused local steps per iteration.
+    pub fn local_steps(mut self, s: usize) -> Self {
+        self.cfg.local_steps = s;
+        self
+    }
+
+    /// Sets fixed gossip rounds per iteration (0 = derive from τ_mix).
+    pub fn gossip_rounds(mut self, r: usize) -> Self {
+        self.cfg.gossip_rounds = r;
+        self
+    }
+
+    /// Sets the number of trials.
+    pub fn trials(mut self, t: usize) -> Self {
+        self.cfg.trials = t;
+        self
+    }
+
+    /// Sets the root seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    /// Sets the compute backend.
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    /// Sets snapshot cadence for traces.
+    pub fn snapshot_every(mut self, n: usize) -> Self {
+        self.cfg.snapshot_every = n;
+        self
+    }
+
+    /// Validates and returns the config.
+    pub fn build(self) -> Result<ExperimentConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_valid() {
+        let cfg = ExperimentConfig::builder().build().unwrap();
+        assert_eq!(cfg.nodes, 10);
+        assert_eq!(cfg.trials, 5);
+    }
+
+    #[test]
+    fn toml_roundtrip_of_all_keys() {
+        let text = r#"
+# paper Table 3 setup
+dataset = "synthetic-adult"
+scale = 0.25
+nodes = 10
+topology = "ring"
+weights = "max-degree"
+lambda = 3.07e-5
+epsilon = 0.001
+max_iterations = 500
+batch_size = 4
+local_steps = 2
+gossip_rounds = 7
+gamma = 0.05
+project_local = true
+project_consensus = false
+trials = 3
+seed = 99
+backend = "native"
+snapshot_every = 10
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.dataset, "synthetic-adult");
+        assert_eq!(cfg.scale, 0.25);
+        assert_eq!(cfg.topology, TopologyKind::Ring);
+        assert_eq!(cfg.weights, WeightScheme::MaxDegree);
+        assert_eq!(cfg.lambda, Some(3.07e-5));
+        assert_eq!(cfg.max_iterations, 500);
+        assert_eq!(cfg.batch_size, 4);
+        assert_eq!(cfg.local_steps, 2);
+        assert_eq!(cfg.gossip_rounds, 7);
+        assert!(!cfg.project_consensus);
+        assert_eq!(cfg.trials, 3);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.snapshot_every, 10);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_toml("typo_key = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ExperimentConfig::from_toml("nodes = 0").is_err());
+        assert!(ExperimentConfig::from_toml("scale = 2.0").is_err());
+        assert!(ExperimentConfig::from_toml("epsilon = 0").is_err());
+        assert!(ExperimentConfig::from_toml("gamma = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml("lambda = -1").is_err());
+    }
+
+    #[test]
+    fn builder_setters_apply() {
+        let cfg = ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .nodes(4)
+            .lambda(1e-3)
+            .epsilon(0.01)
+            .max_iterations(100)
+            .batch_size(2)
+            .trials(1)
+            .seed(7)
+            .backend(Backend::Native)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.dataset, "synthetic-usps");
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.lambda, Some(1e-3));
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
+        assert!("tpu".parse::<Backend>().is_err());
+    }
+}

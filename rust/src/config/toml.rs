@@ -1,0 +1,163 @@
+//! Minimal TOML-subset parser for config files.
+//!
+//! Supported: `key = value` lines with string / integer / float / bool
+//! values, `#` comments, blank lines, and flat `[section]` headers (keys in
+//! a section are exposed as `section.key`). This covers every config file
+//! the project ships; anything fancier is rejected loudly.
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Any numeric literal (integers included).
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+}
+
+impl Value {
+    /// String accessor with a field-name-bearing error.
+    pub fn as_str_or(&self, key: &str) -> anyhow::Result<String> {
+        match self {
+            Value::Str(s) => Ok(s.clone()),
+            other => anyhow::bail!("config key {key:?}: expected string, got {other:?}"),
+        }
+    }
+
+    /// Float accessor.
+    pub fn as_f64_or(&self, key: &str) -> anyhow::Result<f64> {
+        match self {
+            Value::Num(x) => Ok(*x),
+            other => anyhow::bail!("config key {key:?}: expected number, got {other:?}"),
+        }
+    }
+
+    /// Unsigned-integer accessor (rejects negatives and fractions).
+    pub fn as_usize_or(&self, key: &str) -> anyhow::Result<usize> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Ok(*x as usize),
+            other => anyhow::bail!("config key {key:?}: expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    /// Bool accessor.
+    pub fn as_bool_or(&self, key: &str) -> anyhow::Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => anyhow::bail!("config key {key:?}: expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Parses TOML-subset text into ordered `(key, value)` pairs.
+/// Keys inside `[section]` blocks come out as `"section.key"`.
+pub fn parse(text: &str) -> Result<Vec<(String, Value)>, String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(format!("line {}: bad section", ln + 1))?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(format!("line {}: empty section name", ln + 1));
+            }
+            continue;
+        }
+        let (key, value) =
+            line.split_once('=').ok_or(format!("line {}: expected key = value", ln + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", ln + 1));
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let value = parse_value(value.trim()).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        out.push((full_key, value));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = 1e-4\nf = 1_000").unwrap();
+        assert_eq!(doc[0], ("a".into(), Value::Num(1.0)));
+        assert_eq!(doc[1], ("b".into(), Value::Num(2.5)));
+        assert_eq!(doc[2], ("c".into(), Value::Str("hi".into())));
+        assert_eq!(doc[3], ("d".into(), Value::Bool(true)));
+        assert_eq!(doc[4], ("e".into(), Value::Num(1e-4)));
+        assert_eq!(doc[5], ("f".into(), Value::Num(1000.0)));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = parse("# top\n\na = 1  # trailing\ns = \"a # not comment\"\n").unwrap();
+        assert_eq!(doc.len(), 2);
+        assert_eq!(doc[1].1, Value::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let doc = parse("[net]\nnodes = 10\n[data]\nname = \"x\"").unwrap();
+        assert_eq!(doc[0].0, "net.nodes");
+        assert_eq!(doc[1].0, "data.name");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        assert!(parse("a").unwrap_err().contains("line 1"));
+        assert!(parse("a = 1\nb = @").unwrap_err().contains("line 2"));
+        assert!(parse("[x\n").unwrap_err().contains("bad section"));
+        assert!(parse("= 3").unwrap_err().contains("empty key"));
+    }
+
+    #[test]
+    fn accessor_type_errors() {
+        let v = Value::Num(1.5);
+        assert!(v.as_usize_or("k").is_err());
+        assert!(v.as_str_or("k").is_err());
+        assert!(v.as_bool_or("k").is_err());
+        assert!(Value::Num(3.0).as_usize_or("k").is_ok());
+        assert!(Value::Num(-1.0).as_usize_or("k").is_err());
+    }
+}

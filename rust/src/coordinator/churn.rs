@@ -1,0 +1,328 @@
+//! Node churn: failures and re-joins during training — the paper's §5
+//! "resilience to node failures" and §1's claim that distributed systems
+//! "are often subject to abrupt changes in topology due to nodes joining
+//! or leaving".
+//!
+//! Model: a failed node freezes (keeps its shard and weight vector but
+//! neither steps nor gossips); the overlay for each iteration is the
+//! subgraph induced by the alive set, with the doubly-stochastic `B`
+//! rebuilt on membership changes. A recovering node rejoins with its stale
+//! vector, which the shard-weighted Push-Vector consensus re-absorbs —
+//! no coordinator, no state transfer, exactly the gossip robustness story.
+
+use super::backend::{LocalBackend, NativeBackend, StepContext};
+use super::node::NodeState;
+use crate::config::ExperimentConfig;
+use crate::data::partition;
+use crate::gossip::PushVector;
+use crate::metrics;
+use crate::rng::Rng;
+use crate::topology::stochastic::WeightScheme;
+use crate::topology::{Graph, TransitionMatrix};
+use crate::Result;
+
+/// What happens to a node at a given iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// Node stops stepping and gossiping.
+    Fail,
+    /// Node rejoins with its stale weight vector.
+    Recover,
+}
+
+/// One scheduled membership change.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnEvent {
+    /// GADGET iteration at which the event applies (1-based).
+    pub at_iter: usize,
+    /// Node id.
+    pub node: usize,
+    /// Fail or recover.
+    pub kind: ChurnKind,
+}
+
+/// A deterministic churn schedule.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnSchedule {
+    /// Events sorted by iteration (enforced in [`ChurnSchedule::new`]).
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    /// Builds a schedule, sorting events by iteration.
+    pub fn new(mut events: Vec<ChurnEvent>) -> Self {
+        events.sort_by_key(|e| e.at_iter);
+        Self { events }
+    }
+
+    /// Random transient churn: each alive node fails with `p_fail` per
+    /// iteration and each failed node recovers with `p_recover`,
+    /// pre-materialized over `iters` iterations for `m` nodes so runs are
+    /// reproducible. Node 0 never fails (keeps the alive set non-empty).
+    pub fn random(m: usize, iters: usize, p_fail: f64, p_recover: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xc4u64);
+        let mut alive = vec![true; m];
+        let mut events = Vec::new();
+        for t in 1..=iters {
+            for node in 1..m {
+                if alive[node] {
+                    if rng.flip(p_fail) {
+                        alive[node] = false;
+                        events.push(ChurnEvent { at_iter: t, node, kind: ChurnKind::Fail });
+                    }
+                } else if rng.flip(p_recover) {
+                    alive[node] = true;
+                    events.push(ChurnEvent { at_iter: t, node, kind: ChurnKind::Recover });
+                }
+            }
+        }
+        Self { events }
+    }
+}
+
+/// Report of a churn run.
+#[derive(Clone, Debug)]
+pub struct ChurnReport {
+    /// Mean accuracy over *alive* nodes at stop.
+    pub test_accuracy: f64,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Minimum alive-node count observed.
+    pub min_alive: usize,
+    /// Number of applied membership changes.
+    pub events_applied: usize,
+    /// Final consensus disagreement: max over alive nodes of
+    /// `‖wᵢ − w̄‖/‖w̄‖`.
+    pub disagreement: f64,
+}
+
+/// Runs GADGET under a churn schedule (cycle engine, native backend).
+pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Result<ChurnReport> {
+    cfg.validate()?;
+    let (train, test, spec_lambda) = super::gadget::load_dataset(cfg)?;
+    let lambda = cfg
+        .lambda
+        .or(spec_lambda)
+        .ok_or_else(|| anyhow::anyhow!("churn: lambda required"))?;
+    let m = cfg.nodes;
+    anyhow::ensure!(m <= train.len(), "more nodes than samples");
+    let d = train.dim;
+
+    let full_graph = Graph::generate(cfg.topology, m, cfg.seed ^ 0x6772_6170_6800);
+    let train_shards = partition::horizontal_split(&train, m, cfg.seed);
+    let test_shards = partition::horizontal_split(&test, m, cfg.seed ^ 0x7e57);
+    let root = Rng::new(cfg.seed);
+    let mut nodes: Vec<NodeState> = train_shards
+        .into_iter()
+        .zip(test_shards)
+        .enumerate()
+        .map(|(i, (tr, te))| NodeState::new(i, tr, te, d, root.substream(i as u64)))
+        .collect();
+
+    let mut alive = vec![true; m];
+    let mut backend = NativeBackend::default();
+    let radius = 1.0 / lambda.sqrt();
+    let mut next_event = 0usize;
+    let mut events_applied = 0usize;
+    let mut min_alive = m;
+    let mut iterations = 0usize;
+    // rebuilt on membership change
+    let mut membership_dirty = true;
+    let mut alive_ids: Vec<usize> = Vec::new();
+    let mut b: Option<TransitionMatrix> = None;
+    let mut rounds = 1usize;
+
+    for t in 1..=cfg.max_iterations {
+        iterations = t;
+        // apply due events
+        while next_event < schedule.events.len() && schedule.events[next_event].at_iter <= t {
+            let e = schedule.events[next_event];
+            next_event += 1;
+            if e.node < m {
+                let want = e.kind == ChurnKind::Recover;
+                if alive[e.node] != want {
+                    alive[e.node] = want;
+                    events_applied += 1;
+                    membership_dirty = true;
+                }
+            }
+        }
+        if membership_dirty {
+            alive_ids = (0..m).filter(|&i| alive[i]).collect();
+            min_alive = min_alive.min(alive_ids.len());
+            if alive_ids.len() >= 2 {
+                // induced subgraph on the alive set
+                let index_of =
+                    |id: usize| alive_ids.iter().position(|&x| x == id).unwrap();
+                let mut edges = Vec::new();
+                for &i in &alive_ids {
+                    for &j in &full_graph.adj[i] {
+                        if alive[j] && i < j {
+                            edges.push((index_of(i), index_of(j)));
+                        }
+                    }
+                }
+                let sub = Graph::from_edges(alive_ids.len(), &edges);
+                let tm = TransitionMatrix::from_graph(&sub, WeightScheme::MetropolisHastings);
+                rounds = if cfg.gossip_rounds > 0 {
+                    cfg.gossip_rounds
+                } else {
+                    crate::topology::mixing_time(&tm, cfg.gamma).min(10_000)
+                };
+                b = Some(tm);
+            } else {
+                b = None;
+            }
+            membership_dirty = false;
+        }
+
+        // local steps on alive nodes
+        for &i in &alive_ids {
+            let node = &mut nodes[i];
+            let mut ctx = StepContext {
+                shard: &node.shard,
+                t,
+                lambda,
+                batch_size: cfg.batch_size,
+                local_steps: cfg.local_steps,
+                project: cfg.project_local,
+                rng: &mut node.rng,
+            };
+            backend.local_step(&mut ctx, &mut node.w)?;
+        }
+        // gossip among alive nodes (disconnected components mix internally)
+        if let Some(tm) = &b {
+            let vectors: Vec<Vec<f64>> = alive_ids.iter().map(|&i| nodes[i].w.clone()).collect();
+            let weights: Vec<f64> =
+                alive_ids.iter().map(|&i| nodes[i].n_local() as f64).collect();
+            let mut pv = PushVector::new_weighted(&vectors, &weights);
+            pv.run_rounds(tm, rounds);
+            for (slot, &i) in alive_ids.iter().enumerate() {
+                pv.estimate_into(slot, &mut nodes[i].w);
+                if cfg.project_consensus {
+                    crate::linalg::project_to_ball(&mut nodes[i].w, radius);
+                }
+            }
+        }
+        // ε-convergence over alive nodes only
+        let mut all = true;
+        for &i in &alive_ids {
+            all &= nodes[i].check_convergence(cfg.epsilon);
+        }
+        if all && next_event >= schedule.events.len() {
+            break;
+        }
+    }
+
+    // evaluate alive nodes
+    let accs: Vec<f64> = alive_ids
+        .iter()
+        .map(|&i| {
+            let n = &nodes[i];
+            metrics::accuracy(&n.w, if n.test_shard.is_empty() { &test } else { &n.test_shard })
+        })
+        .collect();
+    let test_accuracy = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+    // disagreement among alive nodes
+    let mut mean_w = vec![0.0; d];
+    for &i in &alive_ids {
+        crate::linalg::add_assign(&nodes[i].w, &mut mean_w);
+    }
+    crate::linalg::scale_assign(1.0 / alive_ids.len().max(1) as f64, &mut mean_w);
+    let scale = crate::linalg::l2_norm(&mean_w).max(1e-12);
+    let disagreement = alive_ids
+        .iter()
+        .map(|&i| {
+            let mut diff = 0.0;
+            for k in 0..d {
+                let x = nodes[i].w[k] - mean_w[k];
+                diff += x * x;
+            }
+            diff.sqrt() / scale
+        })
+        .fold(0.0f64, f64::max);
+
+    Ok(ChurnReport {
+        test_accuracy,
+        iterations,
+        min_alive,
+        events_applied,
+        disagreement,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(0.05)
+            .nodes(6)
+            .trials(1)
+            .max_iterations(400)
+            .seed(3)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn empty_schedule_matches_failure_free_learning() {
+        let report = run_with_churn(&cfg(), &ChurnSchedule::default()).unwrap();
+        assert_eq!(report.min_alive, 6);
+        assert_eq!(report.events_applied, 0);
+        assert!(report.test_accuracy > 0.7, "accuracy {}", report.test_accuracy);
+    }
+
+    #[test]
+    fn survives_transient_random_churn() {
+        let schedule = ChurnSchedule::random(6, 400, 0.01, 0.05, 9);
+        assert!(!schedule.events.is_empty());
+        let report = run_with_churn(&cfg(), &schedule).unwrap();
+        assert!(report.events_applied > 0);
+        assert!(report.min_alive >= 1);
+        assert!(
+            report.test_accuracy > 0.65,
+            "accuracy under churn {}",
+            report.test_accuracy
+        );
+    }
+
+    #[test]
+    fn survives_permanent_loss_of_half_the_nodes() {
+        let events = (3..6)
+            .map(|node| ChurnEvent { at_iter: 50, node, kind: ChurnKind::Fail })
+            .collect();
+        let report = run_with_churn(&cfg(), &ChurnSchedule::new(events)).unwrap();
+        assert_eq!(report.min_alive, 3);
+        assert!(report.test_accuracy > 0.65, "accuracy {}", report.test_accuracy);
+    }
+
+    #[test]
+    fn recovered_node_rejoins_consensus() {
+        let events = vec![
+            ChurnEvent { at_iter: 20, node: 2, kind: ChurnKind::Fail },
+            ChurnEvent { at_iter: 200, node: 2, kind: ChurnKind::Recover },
+        ];
+        let report = run_with_churn(&cfg(), &ChurnSchedule::new(events)).unwrap();
+        assert_eq!(report.events_applied, 2);
+        // after rejoining, the stale node is re-absorbed: final disagreement
+        // among alive nodes is small
+        assert!(report.disagreement < 0.5, "disagreement {}", report.disagreement);
+        assert!(report.test_accuracy > 0.65);
+    }
+
+    #[test]
+    fn random_schedule_is_deterministic() {
+        let a = ChurnSchedule::random(8, 100, 0.05, 0.1, 7);
+        let b = ChurnSchedule::random(8, 100, 0.05, 0.1, 7);
+        assert_eq!(a.events.len(), b.events.len());
+        let c = ChurnSchedule::random(8, 100, 0.05, 0.1, 8);
+        assert!(a.events.len() != c.events.len() || !a
+            .events
+            .iter()
+            .zip(&c.events)
+            .all(|(x, y)| x.at_iter == y.at_iter && x.node == y.node));
+    }
+}

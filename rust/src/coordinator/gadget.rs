@@ -1,0 +1,456 @@
+//! The GADGET SVM runner — Algorithm 2 of the paper, cycle-driven
+//! (Peersim-equivalent) execution.
+//!
+//! Per iteration `t` every node `i`:
+//! 1. **local step** (backend): mini-batch Pegasos sub-gradient update on
+//!    the local shard, `w̃ᵢ ← (1 − λαₜ)ŵᵢ + αₜ·L̂ᵢ`, optional projection
+//!    (steps (a)–(f));
+//! 2. **gossip** (Push-Vector over the doubly-stochastic `B`): replaces
+//!    `w̃ᵢ` with the shard-weighted network average estimate
+//!    `PS(nᵢ·w̃ᵢ, B)` (step (g));
+//! 3. optional consensus projection (step (h));
+//! 4. **ε-convergence**: stop when every node's weight vector moved less
+//!    than ε since the previous iteration (the paper's anytime criterion).
+//!
+//! The runner executes `trials` independent repetitions and aggregates
+//! accuracy/time with the paper's `sqrt(Var(Nodes) + Var(Trials))` rule.
+
+use super::backend::{LocalBackend, NativeBackend, StepContext};
+use super::node::NodeState;
+use crate::config::{Backend, ExperimentConfig};
+use crate::data::synthetic::{generate, spec_by_name};
+use crate::data::{partition, Dataset};
+use crate::gossip::{GossipStats, PushVector};
+use crate::metrics::{self, node_trial_std, Trace, TracePoint};
+use crate::rng::Rng;
+use crate::topology::{mixing_time, Graph, TransitionMatrix};
+use crate::util::Stopwatch;
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// Result of one GADGET trial.
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    /// GADGET iterations executed (≤ `max_iterations`).
+    pub iterations: usize,
+    /// Model-construction wall time (excludes data loading, as in Table 3).
+    pub train_secs: f64,
+    /// Per-node test accuracy on the node's local test shard.
+    pub node_accuracy: Vec<f64>,
+    /// Per-node primal objective (Eq. 1) of the node's model on the full
+    /// training set.
+    pub node_objective: Vec<f64>,
+    /// Max `‖ŵᵢ^(T) − ŵᵢ^(T−1)‖` at stop — the paper's "epsilon at
+    /// convergence".
+    pub epsilon_final: f64,
+    /// Node-averaged weight vector at stop (the network consensus model).
+    pub consensus_w: Vec<f64>,
+    /// Gossip communication totals.
+    pub gossip: GossipStats,
+    /// Convergence trace (non-empty when `snapshot_every > 0`).
+    pub trace: Trace,
+}
+
+/// Aggregated multi-trial report (one Table-3 row).
+#[derive(Clone, Debug)]
+pub struct GadgetReport {
+    /// Dataset name.
+    pub dataset: String,
+    /// λ used.
+    pub lambda: f64,
+    /// Seconds spent materializing the dataset (Table 5 accounting).
+    pub load_secs: f64,
+    /// Mean test accuracy over nodes and trials.
+    pub test_accuracy: f64,
+    /// `sqrt(Var(Nodes) + Var(Trials))` for accuracy.
+    pub test_accuracy_std: f64,
+    /// Mean training time across trials.
+    pub train_secs: f64,
+    /// Std of training time across trials.
+    pub train_secs_std: f64,
+    /// Mean primal objective over nodes and trials.
+    pub objective: f64,
+    /// Mean ε at convergence across trials.
+    pub epsilon_final: f64,
+    /// Mean iterations across trials.
+    pub iterations: f64,
+    /// Per-trial details.
+    pub trials: Vec<TrialResult>,
+}
+
+/// The GADGET coordinator entry point.
+pub struct GadgetRunner {
+    cfg: ExperimentConfig,
+    lambda: f64,
+    train: Dataset,
+    test: Dataset,
+    load_secs: f64,
+}
+
+/// Result of [`run_on_datasets`]: one GADGET training on explicit data.
+#[derive(Clone, Debug)]
+pub struct DatasetRunReport {
+    /// Mean node accuracy on the test set.
+    pub test_accuracy: f64,
+    /// The consensus (node-averaged) weight vector of the first trial.
+    pub consensus_w: Vec<f64>,
+    /// Mean iterations across trials.
+    pub iterations: f64,
+    /// Mean train seconds.
+    pub train_secs: f64,
+}
+
+/// Runs GADGET on explicit train/test datasets (bypassing the config's
+/// dataset loader) — the entry point the multiclass reduction and the
+/// feature-mapped (RFF) paths use.
+pub fn run_on_datasets(
+    base: &ExperimentConfig,
+    train: Dataset,
+    test: Dataset,
+    lambda: f64,
+) -> Result<DatasetRunReport> {
+    base.validate()?;
+    anyhow::ensure!(lambda > 0.0, "run_on_datasets: lambda must be positive");
+    anyhow::ensure!(base.nodes <= train.len(), "more nodes than training samples");
+    let runner = GadgetRunner {
+        cfg: base.clone(),
+        lambda,
+        train,
+        test,
+        load_secs: 0.0,
+    };
+    let report = runner.run()?;
+    Ok(DatasetRunReport {
+        test_accuracy: report.test_accuracy,
+        consensus_w: report.trials[0].consensus_w.clone(),
+        iterations: report.iterations,
+        train_secs: report.train_secs,
+    })
+}
+
+impl GadgetRunner {
+    /// Loads the dataset (timed — Table 5 includes it) and validates config.
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let sw = Stopwatch::new();
+        let (train, test, spec_lambda) = load_dataset(&cfg)?;
+        let load_secs = sw.secs();
+        let lambda = cfg.lambda.or(spec_lambda).context(
+            "config: lambda not set and dataset has no Table-2 default (pass lambda = ...)",
+        )?;
+        if cfg.nodes > train.len() {
+            bail!("config: more nodes than training samples");
+        }
+        Ok(Self { cfg, lambda, train, test, load_secs })
+    }
+
+    /// Accessor: the loaded training set.
+    pub fn train_data(&self) -> &Dataset {
+        &self.train
+    }
+
+    /// Accessor: the loaded test set.
+    pub fn test_data(&self) -> &Dataset {
+        &self.test
+    }
+
+    /// Accessor: the effective λ.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Runs all configured trials with the configured backend.
+    pub fn run(&self) -> Result<GadgetReport> {
+        let mut backend: Box<dyn LocalBackend> = match self.cfg.backend {
+            Backend::Native => Box::new(NativeBackend::default()),
+            Backend::Xla => Box::new(crate::runtime::XlaBackend::from_default_artifacts(
+                self.train.dim,
+                self.cfg.batch_size,
+                self.cfg.local_steps,
+                self.lambda,
+            )?),
+        };
+        self.run_with_backend(backend.as_mut())
+    }
+
+    /// Runs all trials with an explicit backend (tests / benches inject
+    /// their own).
+    pub fn run_with_backend(&self, backend: &mut dyn LocalBackend) -> Result<GadgetReport> {
+        let mut trials = Vec::with_capacity(self.cfg.trials);
+        for trial in 0..self.cfg.trials {
+            let seed = self.cfg.seed.wrapping_add(trial as u64 * 0x1000_0001);
+            trials.push(self.run_trial(seed, backend)?);
+        }
+        // Paper aggregation.
+        let acc_matrix: Vec<Vec<f64>> =
+            trials.iter().map(|t| t.node_accuracy.clone()).collect();
+        let (acc_mean, acc_std) = node_trial_std(&acc_matrix);
+        let obj_matrix: Vec<Vec<f64>> =
+            trials.iter().map(|t| t.node_objective.clone()).collect();
+        let (obj_mean, _) = node_trial_std(&obj_matrix);
+        let times: Vec<f64> = trials.iter().map(|t| t.train_secs).collect();
+        let (t_mean, t_std) = crate::util::timer::mean_std(&times);
+        let eps_mean =
+            trials.iter().map(|t| t.epsilon_final).sum::<f64>() / trials.len() as f64;
+        let iter_mean =
+            trials.iter().map(|t| t.iterations as f64).sum::<f64>() / trials.len() as f64;
+        Ok(GadgetReport {
+            dataset: self.cfg.dataset.clone(),
+            lambda: self.lambda,
+            load_secs: self.load_secs,
+            test_accuracy: acc_mean,
+            test_accuracy_std: acc_std,
+            train_secs: t_mean,
+            train_secs_std: t_std,
+            objective: obj_mean,
+            epsilon_final: eps_mean,
+            iterations: iter_mean,
+            trials,
+        })
+    }
+
+    /// One full GADGET trial.
+    fn run_trial(&self, seed: u64, backend: &mut dyn LocalBackend) -> Result<TrialResult> {
+        let cfg = &self.cfg;
+        let m = cfg.nodes;
+        let d = self.train.dim;
+
+        // --- network setup -------------------------------------------------
+        let graph = Graph::generate(cfg.topology, m, seed ^ GRAPH_SEED);
+        let b = TransitionMatrix::from_graph(&graph, cfg.weights);
+        let rounds = if cfg.gossip_rounds > 0 {
+            cfg.gossip_rounds
+        } else {
+            mixing_time(&b, cfg.gamma).min(10_000)
+        };
+
+        // --- data distribution ---------------------------------------------
+        let train_shards = partition::horizontal_split(&self.train, m, seed);
+        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57);
+        let root = Rng::new(seed);
+        let mut nodes: Vec<NodeState> = train_shards
+            .into_iter()
+            .zip(test_shards)
+            .enumerate()
+            .map(|(i, (tr, te))| NodeState::new(i, tr, te, d, root.substream(i as u64)))
+            .collect();
+        let shard_sizes: Vec<f64> = nodes.iter().map(|n| n.n_local() as f64).collect();
+
+        // --- the GADGET loop -----------------------------------------------
+        let sw = Stopwatch::new();
+        let mut gossip_total = GossipStats::default();
+        let mut trace = Trace::new(format!("gadget-{}", cfg.dataset));
+        let radius = 1.0 / self.lambda.sqrt();
+        let mut iterations = 0usize;
+        // One Push-Vector state reused across iterations (reset_weighted is
+        // allocation-free; constructing it fresh allocates 4 m×d buffers
+        // per iteration — EXPERIMENTS.md §Perf).
+        let mut pv =
+            PushVector::new_weighted(&vec![vec![0.0; d]; m], &shard_sizes);
+
+        for t in 1..=cfg.max_iterations {
+            iterations = t;
+            // (a)–(f): local sub-gradient step at every node.
+            for node in nodes.iter_mut() {
+                let mut ctx = StepContext {
+                    shard: &node.shard,
+                    t,
+                    lambda: self.lambda,
+                    batch_size: cfg.batch_size,
+                    local_steps: cfg.local_steps,
+                    project: cfg.project_local,
+                    rng: &mut node.rng,
+                };
+                backend.local_step(&mut ctx, &mut node.w)?;
+            }
+            // (g): Push-Vector consensus on the shard-weighted vectors.
+            pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
+            pv.run_rounds(&b, rounds);
+            gossip_total.merge(pv.stats());
+            for node in nodes.iter_mut() {
+                pv.estimate_into(node.id, &mut node.w);
+                // (h): optional consensus projection.
+                if cfg.project_consensus {
+                    crate::linalg::project_to_ball(&mut node.w, radius);
+                }
+            }
+            // ε-convergence across all nodes.
+            let mut all = true;
+            for node in nodes.iter_mut() {
+                all &= node.check_convergence(cfg.epsilon);
+            }
+            // anytime snapshot for the figures.
+            if cfg.snapshot_every > 0 && (t % cfg.snapshot_every == 0 || all) {
+                let w_avg = average_w(&nodes);
+                trace.push(TracePoint {
+                    time_secs: sw.secs(),
+                    step: t,
+                    objective: metrics::objective(&w_avg, &self.train, self.lambda),
+                    test_error: metrics::zero_one_error(&w_avg, &self.test),
+                });
+            }
+            if all {
+                break;
+            }
+        }
+        let train_secs = sw.secs();
+
+        // --- evaluation ------------------------------------------------------
+        let node_accuracy: Vec<f64> = nodes
+            .iter()
+            .map(|n| metrics::accuracy(&n.w, if n.test_shard.is_empty() { &self.test } else { &n.test_shard }))
+            .collect();
+        let node_objective: Vec<f64> =
+            nodes.iter().map(|n| metrics::objective(&n.w, &self.train, self.lambda)).collect();
+        let epsilon_final =
+            nodes.iter().map(|n| n.last_delta).fold(0.0f64, f64::max);
+
+        Ok(TrialResult {
+            iterations,
+            train_secs,
+            node_accuracy,
+            node_objective,
+            epsilon_final,
+            consensus_w: average_w(&nodes),
+            gossip: gossip_total,
+            trace,
+        })
+    }
+}
+
+fn average_w(nodes: &[NodeState]) -> Vec<f64> {
+    let d = nodes[0].w.len();
+    let mut avg = vec![0.0; d];
+    for n in nodes {
+        crate::linalg::add_assign(&n.w, &mut avg);
+    }
+    crate::linalg::scale_assign(1.0 / nodes.len() as f64, &mut avg);
+    avg
+}
+
+/// Dataset loading shared by the runner and the experiment harness:
+/// `synthetic-*` names hit the Table-2 generators; `path:<file>` reads
+/// LIBSVM (splitting 2:1 when no test file is given).
+pub(crate) fn load_dataset(
+    cfg: &ExperimentConfig,
+) -> Result<(Dataset, Dataset, Option<f64>)> {
+    if let Some(path) = cfg.dataset.strip_prefix("path:") {
+        let ds = crate::data::libsvm::read_libsvm(path, 0)?;
+        let (train, test) = partition::train_test_split(&ds, 2.0 / 3.0, cfg.seed);
+        return Ok((train, test, None));
+    }
+    let spec = spec_by_name(&cfg.dataset)
+        .with_context(|| format!("unknown dataset {:?} (try synthetic-adult, …)", cfg.dataset))?;
+    let split = generate(&spec, cfg.seed ^ 0xda7a, cfg.scale);
+    Ok((split.train, split.test, Some(spec.lambda)))
+}
+
+/// Seed-mixing label for graph construction (avoids colliding with the
+/// partition seeds).
+const GRAPH_SEED: u64 = 0x6772_6170_6800; // "graph"
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(0.05)
+            .nodes(4)
+            .max_iterations(200)
+            .epsilon(5e-3)
+            .trials(2)
+            .seed(3)
+            .snapshot_every(25)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn gadget_learns_and_converges() {
+        let runner = GadgetRunner::new(small_cfg()).unwrap();
+        let report = runner.run().unwrap();
+        assert!(report.test_accuracy > 0.80, "accuracy {}", report.test_accuracy);
+        assert!(report.iterations > 1.0);
+        assert!(report.train_secs > 0.0);
+        assert_eq!(report.trials.len(), 2);
+    }
+
+    #[test]
+    fn nodes_reach_consensus() {
+        // After convergence all node vectors must be ε-close to each other.
+        let runner = GadgetRunner::new(small_cfg()).unwrap();
+        let report = runner.run().unwrap();
+        let t = &report.trials[0];
+        // node objectives on the shared train set nearly identical
+        let min = t.node_objective.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = t.node_objective.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max - min < 0.05 * max.max(1e-9), "objectives spread: {min}..{max}");
+    }
+
+    #[test]
+    fn distributed_tracks_centralized_pegasos() {
+        let runner = GadgetRunner::new(small_cfg()).unwrap();
+        let report = runner.run().unwrap();
+        // centralized Pegasos on the same data, same iteration budget
+        let mut peg = crate::solver::Pegasos::new(crate::solver::PegasosParams {
+            lambda: runner.lambda(),
+            iterations: 10_000,
+            batch_size: 1,
+            project: true,
+            seed: 3,
+        });
+        let m = crate::solver::Solver::fit(&mut peg, runner.train_data());
+        let central = crate::metrics::accuracy(&m.w, runner.test_data());
+        assert!(
+            (report.test_accuracy - central).abs() < 0.1,
+            "gadget {} vs pegasos {central}",
+            report.test_accuracy
+        );
+    }
+
+    #[test]
+    fn traces_are_recorded_and_monotone_in_time() {
+        let runner = GadgetRunner::new(small_cfg()).unwrap();
+        let report = runner.run().unwrap();
+        let trace = &report.trials[0].trace;
+        assert!(!trace.points.is_empty());
+        for w in trace.points.windows(2) {
+            assert!(w[1].time_secs >= w[0].time_secs);
+            assert!(w[1].step > w[0].step);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = GadgetRunner::new(small_cfg()).unwrap().run().unwrap();
+        let b = GadgetRunner::new(small_cfg()).unwrap().run().unwrap();
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn gossip_stats_accumulate() {
+        let runner = GadgetRunner::new(small_cfg()).unwrap();
+        let report = runner.run().unwrap();
+        let g = report.trials[0].gossip;
+        assert!(g.rounds > 0);
+        assert!(g.messages > 0);
+        assert!(g.bytes > g.messages); // vector payloads
+    }
+
+    #[test]
+    fn rejects_more_nodes_than_samples() {
+        let cfg = ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(0.005)
+            .nodes(64)
+            .build()
+            .unwrap();
+        // 0.005·7329 ≈ 36 samples ⇒ max(32) ⇒ 36 ≥ 36? borderline; force tiny
+        let cfg2 = ExperimentConfig { nodes: 5000, ..cfg };
+        assert!(GadgetRunner::new(cfg2).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! The GADGET coordinator — the paper's system contribution (Algorithm 2).
+//!
+//! * [`backend`] — the local-learner abstraction: one trait, two
+//!   implementations (native rust sparse path; PJRT-executed JAX/Pallas
+//!   artifact in [`crate::runtime`]).
+//! * [`node`] — per-site state: shard, weight vector, RNG stream,
+//!   convergence bookkeeping.
+//! * [`gadget`] — the cycle-driven runner: local sub-gradient step →
+//!   Push-Vector consensus → projection → ε-convergence test, with anytime
+//!   snapshots for the figures.
+//! * [`engine`] — the asynchronous message-passing engine (threads +
+//!   channels): the same protocol executed without a global round barrier,
+//!   demonstrating the "completely asynchronous" property claimed in §1.
+
+pub mod backend;
+pub mod churn;
+pub mod engine;
+pub mod gadget;
+pub mod multiclass;
+pub mod node;
+
+pub use backend::{LocalBackend, NativeBackend, StepContext};
+pub use churn::{run_with_churn, ChurnEvent, ChurnKind, ChurnReport, ChurnSchedule};
+pub use engine::{AsyncGossipEngine, AsyncParams};
+pub use gadget::{run_on_datasets, DatasetRunReport, GadgetReport, GadgetRunner, TrialResult};
+pub use multiclass::{MulticlassGadget, MulticlassReport};
+pub use node::NodeState;

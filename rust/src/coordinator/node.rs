@@ -1,0 +1,90 @@
+//! Per-site state for the GADGET network.
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// State owned by one network site `Sᵢ`.
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    /// Node id in `[0, m)`.
+    pub id: usize,
+    /// Local training shard `Mᵢ` (nᵢ × d).
+    pub shard: Dataset,
+    /// Local test shard (the paper splits the test set across nodes too).
+    pub test_shard: Dataset,
+    /// Current weight vector `ŵᵢ^(t)`.
+    pub w: Vec<f64>,
+    /// Weight vector after the previous iteration's consensus — the
+    /// ε-convergence test compares against this.
+    pub w_prev: Vec<f64>,
+    /// Node-local RNG stream (independent across nodes).
+    pub rng: Rng,
+    /// Most recent `‖w − w_prev‖₂` observed at the convergence check.
+    pub last_delta: f64,
+    /// Whether this node currently satisfies the ε test.
+    pub converged: bool,
+}
+
+impl NodeState {
+    /// Initializes a node with zero weights.
+    pub fn new(id: usize, shard: Dataset, test_shard: Dataset, dim: usize, rng: Rng) -> Self {
+        Self {
+            id,
+            shard,
+            test_shard,
+            w: vec![0.0; dim],
+            w_prev: vec![0.0; dim],
+            rng,
+            last_delta: f64::INFINITY,
+            converged: false,
+        }
+    }
+
+    /// Shard size `nᵢ`.
+    pub fn n_local(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Runs the ε-convergence test against the previous consensus vector,
+    /// then rolls `w_prev` forward.
+    pub fn check_convergence(&mut self, epsilon: f64) -> bool {
+        let mut d = 0.0;
+        for (a, b) in self.w.iter().zip(&self.w_prev) {
+            let x = a - b;
+            d += x * x;
+        }
+        self.last_delta = d.sqrt();
+        self.converged = self.last_delta < epsilon;
+        self.w_prev.copy_from_slice(&self.w);
+        self.converged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SparseVec;
+
+    fn tiny_ds() -> Dataset {
+        Dataset::new("t", 2, vec![SparseVec::new(vec![0], vec![1.0])], vec![1])
+    }
+
+    #[test]
+    fn convergence_threshold_behaviour() {
+        let mut n = NodeState::new(0, tiny_ds(), tiny_ds(), 2, Rng::new(0));
+        n.w = vec![0.1, 0.0];
+        assert!(!n.check_convergence(0.05)); // delta 0.1 ≥ ε
+        assert!((n.last_delta - 0.1).abs() < 1e-12);
+        // unchanged since last check ⇒ converged
+        assert!(n.check_convergence(0.05));
+        assert_eq!(n.last_delta, 0.0);
+    }
+
+    #[test]
+    fn w_prev_rolls_forward() {
+        let mut n = NodeState::new(0, tiny_ds(), tiny_ds(), 2, Rng::new(0));
+        n.w = vec![1.0, 2.0];
+        n.check_convergence(1e-3);
+        assert_eq!(n.w_prev, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! LIBSVM / SVMlight text format I/O.
+//!
+//! Format: one sample per line, `label idx:val idx:val ...` with 1-based
+//! indices (the convention of the files on the paper's dataset page).
+//! Reading shifts to 0-based internal indices; writing shifts back.
+//!
+//! This is the escape hatch that lets the *real* paper corpora (Adult,
+//! rcv1/CCAT, MNIST, ...) replace the synthetic stand-ins: download the
+//! LIBSVM copies and point the config's `dataset.path` at them.
+
+use super::Dataset;
+use crate::linalg::SparseVec;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Parses one LIBSVM line into `(label, sparse row)`.
+///
+/// Accepts labels `+1/1/-1` (or `0`, mapped to `-1` for 0/1-labelled files)
+/// and `#`-prefixed trailing comments.
+pub fn parse_line(line: &str) -> Result<(i8, SparseVec)> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    let mut it = line.split_ascii_whitespace();
+    let label_tok = it.next().context("empty LIBSVM line")?;
+    let label_val: f64 = label_tok.parse().with_context(|| format!("bad label {label_tok:?}"))?;
+    let label: i8 = if label_val > 0.0 { 1 } else { -1 };
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for tok in it {
+        let (i, v) = tok.split_once(':').with_context(|| format!("bad feature {tok:?}"))?;
+        let i: u32 = i.parse().with_context(|| format!("bad index {i:?}"))?;
+        if i == 0 {
+            bail!("LIBSVM indices are 1-based; got 0");
+        }
+        let v: f32 = v.parse().with_context(|| format!("bad value {v:?}"))?;
+        if let Some(&last) = indices.last() {
+            if i - 1 <= last {
+                bail!("indices must strictly increase (got {i} after {})", last + 1);
+            }
+        }
+        indices.push(i - 1);
+        values.push(v);
+    }
+    Ok((label, SparseVec::new(indices, values)))
+}
+
+/// Reads a LIBSVM file. `dim` forces the feature dimension (pass 0 to infer
+/// the max index seen — note that inferring can differ between train/test
+/// splits, so prefer passing the known dimension).
+pub fn read_libsvm(path: impl AsRef<Path>, dim: usize) -> Result<Dataset> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    let mut max_dim = 0usize;
+    for (ln, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() || line.trim_start().starts_with('#') {
+            continue;
+        }
+        let (y, row) =
+            parse_line(&line).with_context(|| format!("{}:{}", path.display(), ln + 1))?;
+        max_dim = max_dim.max(row.min_dim());
+        rows.push(row);
+        labels.push(y);
+    }
+    let dim = if dim == 0 { max_dim } else { dim };
+    if max_dim > dim {
+        bail!("file has feature index {max_dim} > declared dim {dim}");
+    }
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("libsvm").to_string();
+    Ok(Dataset::new(name, dim, rows, labels))
+}
+
+/// Writes a dataset in LIBSVM format (1-based indices).
+pub fn write_libsvm(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(file);
+    for (row, &y) in ds.rows.iter().zip(&ds.labels) {
+        write!(w, "{}", if y > 0 { "+1" } else { "-1" })?;
+        for (&i, &v) in row.indices.iter().zip(&row.values) {
+            write!(w, " {}:{}", i + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let (y, row) = parse_line("+1 1:0.5 3:2 # comment").unwrap();
+        assert_eq!(y, 1);
+        assert_eq!(row.indices, vec![0, 2]);
+        assert_eq!(row.values, vec![0.5, 2.0]);
+    }
+
+    #[test]
+    fn parse_zero_label_maps_negative() {
+        let (y, _) = parse_line("0 1:1").unwrap();
+        assert_eq!(y, -1);
+    }
+
+    #[test]
+    fn parse_rejects_zero_index() {
+        assert!(parse_line("+1 0:1").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unsorted() {
+        assert!(parse_line("+1 3:1 2:1").is_err());
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("toy.libsvm");
+        let ds = Dataset::new(
+            "toy",
+            4,
+            vec![
+                SparseVec::new(vec![0, 3], vec![1.0, -0.5]),
+                SparseVec::new(vec![1], vec![2.0]),
+            ],
+            vec![1, -1],
+        );
+        write_libsvm(&ds, &p).unwrap();
+        let back = read_libsvm(&p, 4).unwrap();
+        assert_eq!(back.dim, 4);
+        assert_eq!(back.rows, ds.rows);
+        assert_eq!(back.labels, ds.labels);
+    }
+
+    #[test]
+    fn infer_dim_and_overflow_check() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("t.libsvm");
+        std::fs::write(&p, "+1 5:1.0\n-1 2:3\n").unwrap();
+        let ds = read_libsvm(&p, 0).unwrap();
+        assert_eq!(ds.dim, 5);
+        assert!(read_libsvm(&p, 3).is_err());
+    }
+
+    #[test]
+    fn skips_blank_and_comment_lines() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("t.libsvm");
+        std::fs::write(&p, "\n# header\n+1 1:1\n\n").unwrap();
+        assert_eq!(read_libsvm(&p, 0).unwrap().len(), 1);
+    }
+}

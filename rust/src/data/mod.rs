@@ -1,0 +1,152 @@
+//! Data substrate: sample storage, LIBSVM I/O, synthetic stand-ins for the
+//! paper's corpora, and horizontal partitioning.
+//!
+//! The paper evaluates on Adult, CCAT (RCV1), MNIST-binary, Reuters-21578,
+//! USPS, Webspam and Gisette. Those corpora are not redistributable inside
+//! this environment, so [`synthetic`] provides seeded generators matched on
+//! the public shape statistics (N, d, sparsity, class balance) with a
+//! planted linear separator — see DESIGN.md §Substitutions. Real copies in
+//! LIBSVM format drop in through [`libsvm::read_libsvm`].
+
+pub mod libsvm;
+pub mod partition;
+pub mod rff;
+pub mod synthetic;
+
+use crate::linalg::SparseVec;
+
+/// A labelled binary-classification dataset with sparse rows.
+///
+/// Labels are `±1`. Rows share a fixed feature dimension `dim`; every row's
+/// indices are `< dim`.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    /// Human-readable name (used in reports).
+    pub name: String,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Feature vectors.
+    pub rows: Vec<SparseVec>,
+    /// Labels in {-1, +1}, aligned with `rows`.
+    pub labels: Vec<i8>,
+}
+
+impl Dataset {
+    /// Creates a dataset, validating row dimensions and labels.
+    pub fn new(name: impl Into<String>, dim: usize, rows: Vec<SparseVec>, labels: Vec<i8>) -> Self {
+        assert_eq!(rows.len(), labels.len(), "Dataset: rows/labels mismatch");
+        for r in &rows {
+            assert!(r.min_dim() <= dim, "Dataset: row exceeds dim");
+        }
+        for &y in &labels {
+            assert!(y == 1 || y == -1, "Dataset: labels must be ±1");
+        }
+        Self { name: name.into(), dim, rows, labels }
+    }
+
+    /// Number of samples.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the dataset holds no samples.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total stored non-zeros across all rows.
+    pub fn total_nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.nnz()).sum()
+    }
+
+    /// Fraction of non-zero entries, `nnz / (N·d)`.
+    pub fn density(&self) -> f64 {
+        if self.rows.is_empty() || self.dim == 0 {
+            return 0.0;
+        }
+        self.total_nnz() as f64 / (self.len() as f64 * self.dim as f64)
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        if self.labels.is_empty() {
+            return 0.0;
+        }
+        self.labels.iter().filter(|&&y| y > 0).count() as f64 / self.labels.len() as f64
+    }
+
+    /// Materializes rows `idx` into a dense row-major `(idx.len() × d)` f32
+    /// buffer plus the matching label vector — the marshalling format of the
+    /// XLA backend (`runtime::literals`). `d ≥ self.dim` zero-pads columns.
+    pub fn dense_batch(&self, idx: &[usize], d: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(d >= self.dim, "dense_batch: pad dim smaller than data dim");
+        let mut x = vec![0.0f32; idx.len() * d];
+        let mut y = Vec::with_capacity(idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            let row = &self.rows[i];
+            let base = r * d;
+            for (&j, &v) in row.indices.iter().zip(&row.values) {
+                x[base + j as usize] = v;
+            }
+            y.push(self.labels[i] as f32);
+        }
+        (x, y)
+    }
+
+    /// Borrowing view of one sample.
+    #[inline]
+    pub fn sample(&self, i: usize) -> (&SparseVec, f64) {
+        (&self.rows[i], self.labels[i] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "toy",
+            3,
+            vec![
+                SparseVec::new(vec![0, 2], vec![1.0, -1.0]),
+                SparseVec::new(vec![1], vec![2.0]),
+            ],
+            vec![1, -1],
+        )
+    }
+
+    #[test]
+    fn stats() {
+        let ds = toy();
+        assert_eq!(ds.len(), 2);
+        assert!(!ds.is_empty());
+        assert_eq!(ds.total_nnz(), 3);
+        assert!((ds.density() - 0.5).abs() < 1e-12);
+        assert!((ds.positive_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_batch_pads() {
+        let ds = toy();
+        let (x, y) = ds.dense_batch(&[1, 0], 4);
+        assert_eq!(x.len(), 8);
+        assert_eq!(&x[0..4], &[0.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&x[4..8], &[1.0, 0.0, -1.0, 0.0]);
+        assert_eq!(y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn bad_label_panics() {
+        Dataset::new("bad", 1, vec![SparseVec::default()], vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row exceeds dim")]
+    fn row_dim_checked() {
+        Dataset::new("bad", 1, vec![SparseVec::new(vec![5], vec![1.0])], vec![1]);
+    }
+}

@@ -1,0 +1,110 @@
+//! Horizontal partitioning: splitting a dataset over the `m` network sites.
+//!
+//! The paper's setting (§3): `M = M₁ ∪ M₂ ∪ … ∪ M_m`, each site holding the
+//! same feature space ("horizontal" = row-wise split) with approximately
+//! equal shard sizes. The partitioner shuffles with a seeded RNG and deals
+//! rows round-robin so shard sizes differ by at most one.
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// Splits `ds` into `m` shards of near-equal size after a seeded shuffle.
+///
+/// # Panics
+/// Panics if `m == 0` or `m > ds.len()`.
+pub fn horizontal_split(ds: &Dataset, m: usize, seed: u64) -> Vec<Dataset> {
+    assert!(m > 0, "horizontal_split: m must be positive");
+    assert!(m <= ds.len(), "horizontal_split: more shards than samples");
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut order);
+
+    let mut shards: Vec<(Vec<_>, Vec<_>)> = (0..m).map(|_| (Vec::new(), Vec::new())).collect();
+    for (pos, &i) in order.iter().enumerate() {
+        let s = pos % m;
+        shards[s].0.push(ds.rows[i].clone());
+        shards[s].1.push(ds.labels[i]);
+    }
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(s, (rows, labels))| {
+            Dataset::new(format!("{}-shard{}", ds.name, s), ds.dim, rows, labels)
+        })
+        .collect()
+}
+
+/// Splits into train/test with the given train fraction (seeded shuffle).
+pub fn train_test_split(ds: &Dataset, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..=1.0).contains(&train_frac), "train_frac out of range");
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Rng::new(seed ^ 0xdead_beef);
+    rng.shuffle(&mut order);
+    let n_train = (ds.len() as f64 * train_frac).round() as usize;
+    let take = |idx: &[usize], tag: &str| {
+        Dataset::new(
+            format!("{}-{}", ds.name, tag),
+            ds.dim,
+            idx.iter().map(|&i| ds.rows[i].clone()).collect(),
+            idx.iter().map(|&i| ds.labels[i]).collect(),
+        )
+    };
+    (take(&order[..n_train], "train"), take(&order[n_train..], "test"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SparseVec;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new(
+            "t",
+            2,
+            (0..n).map(|i| SparseVec::new(vec![0], vec![i as f32])).collect(),
+            (0..n).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect(),
+        )
+    }
+
+    #[test]
+    fn shard_sizes_balanced() {
+        let shards = horizontal_split(&ds(10), 3, 0);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4));
+    }
+
+    #[test]
+    fn shards_preserve_all_samples() {
+        let base = ds(17);
+        let shards = horizontal_split(&base, 4, 42);
+        let mut seen: Vec<f32> =
+            shards.iter().flat_map(|s| s.rows.iter().map(|r| r.values[0])).collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want: Vec<f32> = (0..17).map(|i| i as f32).collect();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn split_is_seeded() {
+        let base = ds(20);
+        let a = horizontal_split(&base, 4, 1);
+        let b = horizontal_split(&base, 4, 1);
+        let c = horizontal_split(&base, 4, 2);
+        assert_eq!(a[0].rows, b[0].rows);
+        assert_ne!(a[0].rows, c[0].rows);
+    }
+
+    #[test]
+    fn train_test_sizes() {
+        let (tr, te) = train_test_split(&ds(10), 0.7, 0);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "more shards than samples")]
+    fn too_many_shards_panics() {
+        horizontal_split(&ds(2), 3, 0);
+    }
+}

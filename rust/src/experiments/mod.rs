@@ -1,0 +1,109 @@
+//! Experiment harness: one driver per table / figure of the paper's
+//! evaluation section (see DESIGN.md per-experiment index).
+//!
+//! * [`table3`] — GADGET vs centralized Pegasos (model-build time, accuracy).
+//! * [`table4`] — GADGET vs SVM-Perf vs SVM-SGD run per-node.
+//! * [`table5`] — Table 3 including data-loading time + speed-up factor,
+//!   with the Gisette stand-in added.
+//! * [`figures`] — objective & 0/1-error vs wall-time traces (Figs 4.1–4.3).
+//! * [`ablation`] — beyond-paper studies: Push-Sum rounds-to-γ vs topology
+//!   (validating the `O(τ_mix log 1/γ)` claim) and the Theorem-2
+//!   sub-optimality bound check against the DCD optimum.
+//!
+//! Every driver prints the paper's rows as an aligned table and writes
+//! CSV/JSON under `results/`.
+
+pub mod ablation;
+pub mod figures;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Common options for experiment drivers.
+#[derive(Clone, Debug)]
+pub struct ExperimentOpts {
+    /// Sample-count scale for the synthetic corpora (1.0 = paper size;
+    /// the default keeps a full table run in minutes on one core).
+    pub scale: f64,
+    /// Nodes in the network (paper: 10).
+    pub nodes: usize,
+    /// Trials per dataset (paper: 5).
+    pub trials: usize,
+    /// Root seed.
+    pub seed: u64,
+    /// Output directory for CSV/JSON.
+    pub out_dir: PathBuf,
+    /// Restrict to these dataset names (empty = all).
+    pub only: Vec<String>,
+    /// Iteration cap per trial.
+    pub max_iterations: usize,
+}
+
+impl Default for ExperimentOpts {
+    fn default() -> Self {
+        Self {
+            scale: 0.05,
+            nodes: 10,
+            trials: 5,
+            seed: 17,
+            out_dir: PathBuf::from("results"),
+            only: Vec::new(),
+            max_iterations: 1_500,
+        }
+    }
+}
+
+impl ExperimentOpts {
+    /// True when `name` passes the `only` filter.
+    pub fn selected(&self, name: &str) -> bool {
+        self.only.is_empty()
+            || self.only.iter().any(|o| {
+                let o = o.strip_prefix("synthetic-").unwrap_or(o);
+                let n = name.strip_prefix("synthetic-").unwrap_or(name);
+                o == n
+            })
+    }
+
+    /// Ensures the output directory exists and returns a file path in it.
+    pub fn out_file(&self, name: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        Ok(self.out_dir.join(name))
+    }
+}
+
+/// Writes text to a file, creating parents.
+pub fn write_output(path: &Path, text: &str) -> Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_filter() {
+        let mut o = ExperimentOpts::default();
+        assert!(o.selected("synthetic-usps"));
+        o.only = vec!["usps".into()];
+        assert!(o.selected("synthetic-usps"));
+        assert!(o.selected("usps"));
+        assert!(!o.selected("synthetic-adult"));
+        o.only = vec!["synthetic-adult".into()];
+        assert!(o.selected("adult"));
+    }
+
+    #[test]
+    fn out_file_creates_dir() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let o = ExperimentOpts { out_dir: tmp.path().join("r"), ..Default::default() };
+        let p = o.out_file("x.csv").unwrap();
+        assert!(p.parent().unwrap().is_dir());
+    }
+}

@@ -1,0 +1,168 @@
+//! Table 5 (Appendix B): GADGET vs centralized Pegasos *including data
+//! loading time*, plus the speed-up factor
+//! `Speed-up = T_distributed / T_centralized` (paper Eq. 25) and the
+//! Gisette dataset.
+//!
+//! Accounting: the distributed side loads shards in parallel across nodes,
+//! so its load time is `load(full)/m + partition`; the centralized side
+//! pays the full load. This reproduces the paper's qualitative claim that
+//! GADGET wins when instances ≫ features and loses on dense
+//! high-dimensional data (Gisette).
+
+use super::table3::{centralized_iterations, Table3Row};
+use super::ExperimentOpts;
+use crate::config::ExperimentConfig;
+use crate::coordinator::GadgetRunner;
+use crate::data::synthetic::paper_specs;
+use crate::metrics;
+use crate::solver::{Pegasos, PegasosParams, Solver};
+use crate::util::table::{pm, TextTable};
+use crate::util::timer::mean_std;
+use crate::util::{Json, Stopwatch};
+use crate::Result;
+
+/// One Table-5 row.
+#[derive(Clone, Debug)]
+pub struct Table5Row {
+    /// The timing/accuracy core (times here *include* loading).
+    pub core: Table3Row,
+    /// `T_gadget / T_pegasos` (− < 1 ⇒ distributed faster).
+    pub speedup: f64,
+}
+
+/// Runs Table 5 over all (selected) datasets, Gisette included.
+pub fn run(opts: &ExperimentOpts) -> Result<Vec<Table5Row>> {
+    let mut rows = Vec::new();
+    for spec in paper_specs() {
+        if !opts.selected(&spec.name) {
+            continue;
+        }
+        let cfg = ExperimentConfig::builder()
+            .dataset(&spec.name)
+            .scale(opts.scale)
+            .nodes(opts.nodes)
+            .trials(opts.trials)
+            .seed(opts.seed)
+            .max_iterations(opts.max_iterations)
+            .build()?;
+        rows.push(run_dataset(&cfg)?);
+    }
+    Ok(rows)
+}
+
+/// Runs one dataset with load-time accounting.
+pub fn run_dataset(cfg: &ExperimentConfig) -> Result<Table5Row> {
+    let runner = GadgetRunner::new(cfg.clone())?;
+    let report = runner.run()?;
+    // Distributed: each node loads its shard concurrently → full-load/m,
+    // plus the training time.
+    let dist_load = report.load_secs / cfg.nodes as f64;
+    let gadget_total = dist_load + report.train_secs;
+
+    // Centralized: full load + fit.
+    let train = runner.train_data();
+    let test = runner.test_data();
+    let iters = centralized_iterations(train.len());
+    let mut secs = Vec::new();
+    let mut accs = Vec::new();
+    for trial in 0..cfg.trials {
+        let mut peg = Pegasos::new(PegasosParams {
+            lambda: runner.lambda(),
+            iterations: iters,
+            batch_size: 1,
+            project: true,
+            seed: cfg.seed.wrapping_add(trial as u64 * 31),
+        });
+        let sw = Stopwatch::new();
+        let model = peg.fit(train);
+        secs.push(report.load_secs + sw.secs());
+        accs.push(100.0 * metrics::accuracy(&model.w, test));
+    }
+    let (pt, pt_std) = mean_std(&secs);
+    let (pa, pa_std) = mean_std(&accs);
+
+    let core = Table3Row {
+        dataset: cfg.dataset.clone(),
+        gadget_secs: gadget_total,
+        gadget_secs_std: report.train_secs_std,
+        gadget_acc: 100.0 * report.test_accuracy,
+        gadget_acc_std: 100.0 * report.test_accuracy_std,
+        pegasos_secs: pt,
+        pegasos_secs_std: pt_std,
+        pegasos_acc: pa,
+        pegasos_acc_std: pa_std,
+        epsilon_final: report.epsilon_final,
+        load_secs: report.load_secs,
+    };
+    let speedup = if pt > 0.0 { gadget_total / pt } else { f64::NAN };
+    Ok(Table5Row { core, speedup })
+}
+
+/// Renders the paper's Table-5 layout.
+pub fn render(rows: &[Table5Row]) -> TextTable {
+    let mut t = TextTable::new(&[
+        "Dataset",
+        "GADGET Time (s)",
+        "GADGET Acc (%)",
+        "Pegasos Time (s)",
+        "Pegasos Acc (%)",
+        "Speedup",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.core.dataset.clone(),
+            pm(r.core.gadget_secs, r.core.gadget_secs_std, 3),
+            pm(r.core.gadget_acc, r.core.gadget_acc_std, 2),
+            pm(r.core.pegasos_secs, r.core.pegasos_secs_std, 3),
+            pm(r.core.pegasos_acc, r.core.pegasos_acc_std, 2),
+            format!("{:.2}", r.speedup),
+        ]);
+    }
+    t
+}
+
+/// JSON report.
+pub fn to_json(rows: &[Table5Row]) -> Json {
+    Json::obj(vec![(
+        "table5",
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("dataset", Json::Str(r.core.dataset.clone())),
+                        ("gadget_secs", Json::Num(r.core.gadget_secs)),
+                        ("gadget_acc", Json::Num(r.core.gadget_acc)),
+                        ("pegasos_secs", Json::Num(r.core.pegasos_secs)),
+                        ("pegasos_acc", Json::Num(r.core.pegasos_acc)),
+                        ("speedup", Json::Num(r.speedup)),
+                        ("load_secs", Json::Num(r.core.load_secs)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn includes_gisette_and_computes_speedup() {
+        let opts = ExperimentOpts {
+            scale: 0.02,
+            nodes: 3,
+            trials: 1,
+            seed: 4,
+            only: vec!["gisette".into()],
+            max_iterations: 40,
+            ..Default::default()
+        };
+        let rows = run(&opts).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].core.dataset.contains("gisette"));
+        assert!(rows[0].speedup.is_finite() && rows[0].speedup > 0.0);
+        let text = render(&rows).render();
+        assert!(text.contains("Speedup"));
+    }
+}

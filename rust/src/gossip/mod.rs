@@ -1,0 +1,47 @@
+//! Gossip consensus protocols: Push-Sum (Algorithm 1 of the paper) and its
+//! vector extension Push-Vector (Kempe et al., FOCS 2003).
+//!
+//! Two execution engines are provided:
+//!
+//! * [`pushsum`] / [`pushvector`] — *deterministic* synchronous engines that
+//!   move mass by `Bᵀ` each round ("Push-Sum deterministically simulates a
+//!   random walk across G", paper §3). These are what the GADGET runner
+//!   uses: exact, reproducible, and the object Theorem 1's ε₁/ε₂ bounds are
+//!   stated about.
+//! * [`randomized`] — the classical randomized engine where each node picks
+//!   a single random neighbor per round and ships half its mass
+//!   (`α_{t,i,j} = ½`). Used by the mixing benches to show both engines
+//!   converge at the `O(τ_mix log 1/γ)` rate.
+//!
+//! Invariant maintained by every engine: **mass conservation** — the total
+//! sum `Σᵢ sᵢ` and total weight `Σᵢ wᵢ` never change, which is exactly why
+//! `sᵢ/wᵢ → (Σ s₀)/(Σ w₀) =` the true average at every node.
+
+pub mod pushsum;
+pub mod pushvector;
+pub mod randomized;
+
+pub use pushsum::PushSum;
+pub use pushvector::PushVector;
+pub use randomized::RandomizedGossip;
+
+/// Communication accounting shared by the engines: one "message" is one
+/// (sum, weight) or (vector, weight) payload sent over one edge.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GossipStats {
+    /// Rounds executed.
+    pub rounds: usize,
+    /// Messages sent (edge traversals).
+    pub messages: usize,
+    /// Payload bytes (8 bytes per f64 shipped, including the weight).
+    pub bytes: usize,
+}
+
+impl GossipStats {
+    /// Accumulates another stats block.
+    pub fn merge(&mut self, other: GossipStats) {
+        self.rounds += other.rounds;
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+    }
+}

@@ -1,0 +1,195 @@
+//! Scalar Push-Sum over a doubly-stochastic `B` (Algorithm 1 of the paper).
+//!
+//! Node `i` holds `(s_i, w_i)`, initialized to `(x_i, 1)`. Each round every
+//! node ships shares `(b_{ij}·s_i, b_{ij}·w_i)` to each neighbor `j`
+//! (including the self share `b_{ii}`), then sums what it received. The
+//! estimate at node `i` after round `t` is `s_i/w_i → (Σx)/m`.
+
+use super::GossipStats;
+use crate::topology::TransitionMatrix;
+
+/// Synchronous deterministic Push-Sum state.
+#[derive(Clone, Debug)]
+pub struct PushSum {
+    sums: Vec<f64>,
+    weights: Vec<f64>,
+    // double-buffering scratch, reused across rounds (no hot-loop alloc)
+    sums_next: Vec<f64>,
+    weights_next: Vec<f64>,
+    stats: GossipStats,
+}
+
+impl PushSum {
+    /// Initializes with node values `x` (weight 1 per node).
+    pub fn new(x: &[f64]) -> Self {
+        Self {
+            sums: x.to_vec(),
+            weights: vec![1.0; x.len()],
+            sums_next: vec![0.0; x.len()],
+            weights_next: vec![0.0; x.len()],
+            stats: GossipStats::default(),
+        }
+    }
+
+    /// Number of nodes.
+    pub fn m(&self) -> usize {
+        self.sums.len()
+    }
+
+    /// One synchronous round: `s ← Bᵀ s`, `w ← Bᵀ w`.
+    pub fn round(&mut self, b: &TransitionMatrix) {
+        assert_eq!(b.m, self.m(), "PushSum: matrix size mismatch");
+        b.transpose_apply(&self.sums, &mut self.sums_next);
+        b.transpose_apply(&self.weights, &mut self.weights_next);
+        std::mem::swap(&mut self.sums, &mut self.sums_next);
+        std::mem::swap(&mut self.weights, &mut self.weights_next);
+        self.stats.rounds += 1;
+        // Every nonzero b_ij with i≠j is one message.
+        let msgs = count_offdiag(b);
+        self.stats.messages += msgs;
+        self.stats.bytes += msgs * 16; // (s, w) pair
+    }
+
+    /// Current estimate `s_i / w_i` at node `i`.
+    pub fn estimate(&self, i: usize) -> f64 {
+        self.sums[i] / self.weights[i]
+    }
+
+    /// All per-node estimates.
+    pub fn estimates(&self) -> Vec<f64> {
+        (0..self.m()).map(|i| self.estimate(i)).collect()
+    }
+
+    /// Total mass `Σ s_i` (conserved across rounds).
+    pub fn total_sum(&self) -> f64 {
+        self.sums.iter().sum()
+    }
+
+    /// Total weight `Σ w_i` (conserved; equals `m`).
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    /// Maximum relative error of the node estimates vs the true average,
+    /// with the paper's `‖M‖`-relative convention: `|est_i − μ| / scale`
+    /// where `scale = max(|μ|, 1e-12)`.
+    pub fn max_rel_error(&self) -> f64 {
+        let mu = self.total_sum() / self.total_weight();
+        let scale = mu.abs().max(1e-12);
+        (0..self.m())
+            .map(|i| (self.estimate(i) - mu).abs() / scale)
+            .fold(0.0, f64::max)
+    }
+
+    /// Runs until the max relative error drops below `gamma` or `max_rounds`
+    /// is hit; returns the rounds executed in this call.
+    pub fn run_to_gamma(&mut self, b: &TransitionMatrix, gamma: f64, max_rounds: usize) -> usize {
+        let start = self.stats.rounds;
+        while self.max_rel_error() > gamma && self.stats.rounds - start < max_rounds {
+            self.round(b);
+        }
+        self.stats.rounds - start
+    }
+
+    /// Communication stats so far.
+    pub fn stats(&self) -> GossipStats {
+        self.stats
+    }
+}
+
+pub(crate) fn count_offdiag(b: &TransitionMatrix) -> usize {
+    let mut c = 0;
+    for i in 0..b.m {
+        for j in 0..b.m {
+            if i != j && b.get(i, j) != 0.0 {
+                c += 1;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::stochastic::WeightScheme;
+    use crate::topology::Graph;
+
+    fn mh(g: &Graph) -> TransitionMatrix {
+        TransitionMatrix::from_graph(g, WeightScheme::MetropolisHastings)
+    }
+
+    #[test]
+    fn converges_to_average_on_ring() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = mh(&Graph::ring(6));
+        let mut ps = PushSum::new(&x);
+        let rounds = ps.run_to_gamma(&b, 1e-9, 10_000);
+        assert!(rounds > 0);
+        for i in 0..6 {
+            assert!((ps.estimate(i) - 3.5).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn mass_is_conserved_every_round() {
+        let x = vec![10.0, -4.0, 7.0, 0.5];
+        let b = mh(&Graph::torus(4));
+        let mut ps = PushSum::new(&x);
+        for _ in 0..50 {
+            ps.round(&b);
+            assert!((ps.total_sum() - 13.5).abs() < 1e-10);
+            assert!((ps.total_weight() - 4.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn complete_graph_converges_in_one_round() {
+        let x = vec![0.0, 8.0, 0.0, 0.0];
+        let b = mh(&Graph::complete(4));
+        let mut ps = PushSum::new(&x);
+        ps.round(&b);
+        for i in 0..4 {
+            assert!((ps.estimate(i) - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rounds_scale_with_log_inv_gamma() {
+        // On a fixed topology, rounds-to-γ must grow ≈ linearly in log(1/γ).
+        let x: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let b = mh(&Graph::ring(12));
+        let mut r = Vec::new();
+        for gamma in [1e-2, 1e-4, 1e-6] {
+            let mut ps = PushSum::new(&x);
+            r.push(ps.run_to_gamma(&b, gamma, 100_000) as f64);
+        }
+        let d1 = r[1] - r[0];
+        let d2 = r[2] - r[1];
+        assert!(d1 > 0.0 && d2 > 0.0);
+        assert!((d2 / d1 - 1.0).abs() < 0.5, "not linear in log(1/γ): {r:?}");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let b = mh(&Graph::ring(4));
+        let mut ps = PushSum::new(&[1.0, 2.0, 3.0, 4.0]);
+        ps.round(&b);
+        ps.round(&b);
+        let s = ps.stats();
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.messages, 2 * 8); // ring of 4: 8 directed edges
+        assert_eq!(s.bytes, 2 * 8 * 16);
+    }
+
+    #[test]
+    fn negative_and_zero_values() {
+        let x = vec![-5.0, 5.0, 0.0];
+        let b = mh(&Graph::complete(3));
+        let mut ps = PushSum::new(&x);
+        ps.run_to_gamma(&b, 1e-10, 1000);
+        for i in 0..3 {
+            assert!(ps.estimate(i).abs() < 1e-8);
+        }
+    }
+}

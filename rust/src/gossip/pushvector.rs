@@ -1,0 +1,317 @@
+//! Push-Vector: the vector-valued Push-Sum extension (Kempe et al. §3) that
+//! GADGET uses at step (g) of Algorithm 2 to average weight vectors.
+//!
+//! Node `i` holds `(v_i ∈ ℝᵈ, w_i)`. Rounds move both by `Bᵀ`; the estimate
+//! `v_i / w_i` converges to the network average of the initial vectors.
+//! To realize the shard-weighted average `Σ nᵢ·w̃ᵢ / Σ nᵢ` of Theorem 1,
+//! initialize with `v_i = nᵢ·w̃ᵢ` and `w_i = nᵢ` (see
+//! [`PushVector::new_weighted`]).
+//!
+//! The state is stored as one contiguous `m×d` row-major buffer; the mixing
+//! round is the d-wide generalization of [`super::pushsum`]'s `Bᵀ`-apply and
+//! is the dominant L3 cost at large d — see EXPERIMENTS.md §Perf for the
+//! blocking notes.
+
+use super::pushsum::count_offdiag;
+use super::GossipStats;
+use crate::topology::TransitionMatrix;
+
+/// Synchronous deterministic Push-Vector state.
+#[derive(Clone, Debug)]
+pub struct PushVector {
+    m: usize,
+    d: usize,
+    /// Row-major `m×d`: node i's mass vector at `v[i*d..(i+1)*d]`.
+    v: Vec<f64>,
+    w: Vec<f64>,
+    v_next: Vec<f64>,
+    w_next: Vec<f64>,
+    stats: GossipStats,
+}
+
+impl PushVector {
+    /// Uniform initialization: node `i` starts with `vectors[i]`, weight 1.
+    /// The consensus limit is the plain average of the vectors.
+    pub fn new(vectors: &[Vec<f64>]) -> Self {
+        Self::new_weighted(vectors, &vec![1.0; vectors.len()])
+    }
+
+    /// Weighted initialization: node `i` starts with `weights[i] · vectors[i]`
+    /// and Push-Sum weight `weights[i]`; the consensus limit is the
+    /// weights-weighted average `Σ aᵢvᵢ / Σ aᵢ` (Theorem 1's `Σnᵢŵᵢ/N`).
+    pub fn new_weighted(vectors: &[Vec<f64>], weights: &[f64]) -> Self {
+        let m = vectors.len();
+        assert!(m > 0, "PushVector: need at least one node");
+        assert_eq!(weights.len(), m, "PushVector: weights length mismatch");
+        let d = vectors[0].len();
+        let mut v = Vec::with_capacity(m * d);
+        for (vec_i, &a) in vectors.iter().zip(weights) {
+            assert_eq!(vec_i.len(), d, "PushVector: ragged vectors");
+            assert!(a > 0.0, "PushVector: weights must be positive");
+            v.extend(vec_i.iter().map(|&x| a * x));
+        }
+        Self {
+            m,
+            d,
+            v,
+            w: weights.to_vec(),
+            v_next: vec![0.0; m * d],
+            w_next: vec![0.0; m],
+            stats: GossipStats::default(),
+        }
+    }
+
+    /// Re-initializes the state in place from node weight slices — the
+    /// allocation-free path the GADGET runner uses every iteration (a fresh
+    /// `new_weighted` allocates 4 `m×d` buffers per call; at CCAT scale
+    /// that is ~15 MB of allocation per iteration — see EXPERIMENTS.md
+    /// §Perf).
+    ///
+    /// # Panics
+    /// Panics on shape mismatch with the constructed state.
+    pub fn reset_weighted<'a>(
+        &mut self,
+        vectors: impl ExactSizeIterator<Item = &'a [f64]>,
+        weights: &[f64],
+    ) {
+        assert_eq!(vectors.len(), self.m, "reset: node count mismatch");
+        assert_eq!(weights.len(), self.m, "reset: weights length mismatch");
+        for (i, vec_i) in vectors.enumerate() {
+            assert_eq!(vec_i.len(), self.d, "reset: vector dim mismatch");
+            let a = weights[i];
+            assert!(a > 0.0, "reset: weights must be positive");
+            let dst = &mut self.v[i * self.d..(i + 1) * self.d];
+            for (o, &x) in dst.iter_mut().zip(vec_i) {
+                *o = a * x;
+            }
+            self.w[i] = a;
+        }
+        self.stats = GossipStats::default();
+    }
+
+    /// Node count.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Vector dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// One synchronous round: `V ← Bᵀ V`, `w ← Bᵀ w`.
+    ///
+    /// Written as a j-major accumulation over B's rows so the inner loop is
+    /// a dense axpy over the d-vector — auto-vectorizes and touches each
+    /// cache line once per (i,j) pair with b_ij ≠ 0.
+    pub fn round(&mut self, b: &TransitionMatrix) {
+        assert_eq!(b.m, self.m, "PushVector: matrix size mismatch");
+        // Rank-1 fast path: uniform B (complete graph + MH) averages in one
+        // mean + broadcast — O(2m·d) instead of O(m²·d).
+        if let Some(u) = b.uniform_value() {
+            let (head, tail) = self.v_next.split_at_mut(self.d);
+            head.fill(0.0);
+            for i in 0..self.m {
+                let src = &self.v[i * self.d..(i + 1) * self.d];
+                for (o, &s) in head.iter_mut().zip(src) {
+                    *o += u * s;
+                }
+            }
+            for chunk in tail.chunks_mut(self.d) {
+                chunk.copy_from_slice(head);
+            }
+            let w_mean: f64 = self.w.iter().sum::<f64>() * u;
+            self.w_next.iter_mut().for_each(|x| *x = w_mean);
+            std::mem::swap(&mut self.v, &mut self.v_next);
+            std::mem::swap(&mut self.w, &mut self.w_next);
+            self.stats.rounds += 1;
+            let msgs = self.m * (self.m - 1);
+            self.stats.messages += msgs;
+            self.stats.bytes += msgs * 8 * (self.d + 1);
+            return;
+        }
+        self.v_next.fill(0.0);
+        self.w_next.fill(0.0);
+        for i in 0..self.m {
+            let row = b.row(i);
+            let src = &self.v[i * self.d..(i + 1) * self.d];
+            for j in 0..self.m {
+                let bij = row[j];
+                if bij == 0.0 {
+                    continue;
+                }
+                let dst = &mut self.v_next[j * self.d..(j + 1) * self.d];
+                for k in 0..self.d {
+                    dst[k] += bij * src[k];
+                }
+                self.w_next[j] += bij * self.w[i];
+            }
+        }
+        std::mem::swap(&mut self.v, &mut self.v_next);
+        std::mem::swap(&mut self.w, &mut self.w_next);
+        self.stats.rounds += 1;
+        let msgs = count_offdiag(b);
+        self.stats.messages += msgs;
+        self.stats.bytes += msgs * 8 * (self.d + 1);
+    }
+
+    /// Writes node `i`'s current estimate `v_i / w_i` into `out`.
+    pub fn estimate_into(&self, i: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.d);
+        let inv = 1.0 / self.w[i];
+        let src = &self.v[i * self.d..(i + 1) * self.d];
+        for (o, &s) in out.iter_mut().zip(src) {
+            *o = s * inv;
+        }
+    }
+
+    /// Node `i`'s estimate as a fresh vector.
+    pub fn estimate(&self, i: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        self.estimate_into(i, &mut out);
+        out
+    }
+
+    /// The exact consensus target `Σ v₀ / Σ w₀` (conserved mass ratio).
+    pub fn target(&self) -> Vec<f64> {
+        let total_w: f64 = self.w.iter().sum();
+        let mut t = vec![0.0; self.d];
+        for i in 0..self.m {
+            let src = &self.v[i * self.d..(i + 1) * self.d];
+            for (tk, &sk) in t.iter_mut().zip(src) {
+                *tk += sk;
+            }
+        }
+        for tk in t.iter_mut() {
+            *tk /= total_w;
+        }
+        t
+    }
+
+    /// Max over nodes of `‖est_i − target‖₂ / max(‖target‖₂, 1e-12)`.
+    pub fn max_rel_error(&self) -> f64 {
+        let t = self.target();
+        let scale = crate::linalg::l2_norm(&t).max(1e-12);
+        let mut worst = 0.0f64;
+        let mut est = vec![0.0; self.d];
+        for i in 0..self.m {
+            self.estimate_into(i, &mut est);
+            let mut diff = 0.0;
+            for k in 0..self.d {
+                let e = est[k] - t[k];
+                diff += e * e;
+            }
+            worst = worst.max(diff.sqrt() / scale);
+        }
+        worst
+    }
+
+    /// Runs rounds until max relative error ≤ `gamma` (or `max_rounds`);
+    /// returns rounds executed in this call.
+    pub fn run_to_gamma(&mut self, b: &TransitionMatrix, gamma: f64, max_rounds: usize) -> usize {
+        let start = self.stats.rounds;
+        while self.max_rel_error() > gamma && self.stats.rounds - start < max_rounds {
+            self.round(b);
+        }
+        self.stats.rounds - start
+    }
+
+    /// Runs exactly `rounds` rounds.
+    pub fn run_rounds(&mut self, b: &TransitionMatrix, rounds: usize) {
+        for _ in 0..rounds {
+            self.round(b);
+        }
+    }
+
+    /// Communication stats so far.
+    pub fn stats(&self) -> GossipStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::stochastic::WeightScheme;
+    use crate::topology::Graph;
+
+    fn mh(g: &Graph) -> TransitionMatrix {
+        TransitionMatrix::from_graph(g, WeightScheme::MetropolisHastings)
+    }
+
+    #[test]
+    fn converges_to_uniform_average() {
+        let vectors = vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![2.0, 2.0], vec![1.0, 1.0]];
+        let b = mh(&Graph::ring(4));
+        let mut pv = PushVector::new(&vectors);
+        pv.run_to_gamma(&b, 1e-10, 10_000);
+        for i in 0..4 {
+            let e = pv.estimate(i);
+            assert!((e[0] - 1.0).abs() < 1e-8);
+            assert!((e[1] - 1.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn weighted_average_matches_shard_sizes() {
+        // Theorem 1 target: Σ nᵢ ŵᵢ / N.
+        let vectors = vec![vec![1.0], vec![4.0]];
+        let weights = vec![3.0, 1.0]; // n₁=3, n₂=1 ⇒ target (3·1+1·4)/4 = 1.75
+        let b = mh(&Graph::complete(2));
+        let mut pv = PushVector::new_weighted(&vectors, &weights);
+        pv.run_to_gamma(&b, 1e-12, 1000);
+        assert!((pv.estimate(0)[0] - 1.75).abs() < 1e-9);
+        assert!((pv.estimate(1)[0] - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mass_conservation_target_is_invariant() {
+        let vectors = vec![vec![1.0, -2.0], vec![3.0, 5.0], vec![-1.0, 0.5]];
+        let b = mh(&Graph::ring(3));
+        let mut pv = PushVector::new(&vectors);
+        let t0 = pv.target();
+        for _ in 0..25 {
+            pv.round(&b);
+            let t = pv.target();
+            for k in 0..2 {
+                assert!((t[k] - t0[k]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn error_is_monotone_decreasing_on_average() {
+        let vectors: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64, (8 - i) as f64]).collect();
+        let b = mh(&Graph::torus(8));
+        let mut pv = PushVector::new(&vectors);
+        let e0 = pv.max_rel_error();
+        pv.run_rounds(&b, 10);
+        let e10 = pv.max_rel_error();
+        pv.run_rounds(&b, 10);
+        let e20 = pv.max_rel_error();
+        assert!(e10 < e0 && e20 < e10, "{e0} {e10} {e20}");
+    }
+
+    #[test]
+    fn stats_count_vector_bytes() {
+        let b = mh(&Graph::ring(3));
+        let mut pv = PushVector::new(&[vec![0.0; 5], vec![0.0; 5], vec![0.0; 5]]);
+        pv.round(&b);
+        let s = pv.stats();
+        assert_eq!(s.rounds, 1);
+        assert_eq!(s.messages, 6); // C3: 6 directed edges
+        assert_eq!(s.bytes, 6 * 8 * 6); // (d+1)=6 f64s per message
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged vectors")]
+    fn ragged_input_panics() {
+        PushVector::new(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must be positive")]
+    fn zero_weight_panics() {
+        PushVector::new_weighted(&[vec![1.0]], &[0.0]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Randomized uniform-gossip engine: the classical Push-Sum execution where
+//! each node, once per round, picks a single neighbor at random and ships
+//! half of its (vector, weight) mass, keeping the other half
+//! (`α_{t,i,i} = α_{t,i,j} = ½` in Algorithm 1's share notation).
+//!
+//! This matches the paper's description "each node contacts a neighbor at
+//! random and exchanges information" and the Peersim cycle-driven protocol.
+//! The deterministic `Bᵀ` engine in [`super::pushvector`] is the expectation
+//! of this process; the mixing benches (`benches/pushsum_mixing.rs`) verify
+//! both hit the `O(τ_mix log 1/γ)` rate.
+
+use super::GossipStats;
+use crate::rng::Rng;
+use crate::topology::Graph;
+
+/// Randomized Push-Vector gossip over a graph.
+#[derive(Clone, Debug)]
+pub struct RandomizedGossip {
+    m: usize,
+    d: usize,
+    v: Vec<f64>,
+    w: Vec<f64>,
+    inbox_v: Vec<f64>,
+    inbox_w: Vec<f64>,
+    rng: Rng,
+    stats: GossipStats,
+    /// Per-message loss probability (lossy links, paper §1). Lost messages
+    /// destroy mass, so estimates acquire bias ∝ drop rate — measured by
+    /// `tests::message_loss_biases_estimates` and the mixing bench.
+    drop_prob: f64,
+    /// Messages lost so far.
+    pub dropped: usize,
+}
+
+impl RandomizedGossip {
+    /// Initializes node `i` with `vectors[i]` and weight 1.
+    pub fn new(vectors: &[Vec<f64>], seed: u64) -> Self {
+        let m = vectors.len();
+        assert!(m > 0, "RandomizedGossip: need at least one node");
+        let d = vectors[0].len();
+        let mut v = Vec::with_capacity(m * d);
+        for vec_i in vectors {
+            assert_eq!(vec_i.len(), d, "RandomizedGossip: ragged vectors");
+            v.extend_from_slice(vec_i);
+        }
+        Self {
+            m,
+            d,
+            v,
+            w: vec![1.0; m],
+            inbox_v: vec![0.0; m * d],
+            inbox_w: vec![0.0; m],
+            rng: Rng::new(seed),
+            stats: GossipStats::default(),
+            drop_prob: 0.0,
+            dropped: 0,
+        }
+    }
+
+    /// Enables lossy links: each message is dropped with probability `p`.
+    pub fn with_drop_prob(mut self, p: f64) -> Self {
+        assert!((0.0..1.0).contains(&p), "drop_prob must be in [0,1)");
+        self.drop_prob = p;
+        self
+    }
+
+    /// One round: every node halves its mass, sends one half to a uniformly
+    /// random neighbor, keeps the other half, then everyone ingests.
+    pub fn round(&mut self, g: &Graph) {
+        assert_eq!(g.n, self.m, "RandomizedGossip: graph size mismatch");
+        self.inbox_v.fill(0.0);
+        self.inbox_w.fill(0.0);
+        for i in 0..self.m {
+            let nbrs = &g.adj[i];
+            let (keep, send_to) = if nbrs.is_empty() {
+                (1.0, i)
+            } else {
+                (0.5, nbrs[self.rng.below(nbrs.len())])
+            };
+            let share = 1.0 - keep;
+            let src = i * self.d;
+            // keep-half into own inbox
+            for k in 0..self.d {
+                self.inbox_v[src + k] += keep * self.v[src + k];
+            }
+            self.inbox_w[i] += keep * self.w[i];
+            // send-half to the chosen neighbor (may be lost on the link)
+            if share > 0.0 {
+                self.stats.messages += 1;
+                self.stats.bytes += 8 * (self.d + 1);
+                if self.drop_prob > 0.0 && self.rng.flip(self.drop_prob) {
+                    self.dropped += 1; // mass destroyed: the bias source
+                } else {
+                    let dst = send_to * self.d;
+                    for k in 0..self.d {
+                        self.inbox_v[dst + k] += share * self.v[src + k];
+                    }
+                    self.inbox_w[send_to] += share * self.w[i];
+                }
+            }
+        }
+        std::mem::swap(&mut self.v, &mut self.inbox_v);
+        std::mem::swap(&mut self.w, &mut self.inbox_w);
+        self.stats.rounds += 1;
+    }
+
+    /// Node `i`'s current estimate `v_i / w_i`.
+    pub fn estimate(&self, i: usize) -> Vec<f64> {
+        let inv = 1.0 / self.w[i];
+        self.v[i * self.d..(i + 1) * self.d].iter().map(|&x| x * inv).collect()
+    }
+
+    /// True average (conserved).
+    pub fn target(&self) -> Vec<f64> {
+        let total_w: f64 = self.w.iter().sum();
+        let mut t = vec![0.0; self.d];
+        for i in 0..self.m {
+            for k in 0..self.d {
+                t[k] += self.v[i * self.d + k];
+            }
+        }
+        for tk in t.iter_mut() {
+            *tk /= total_w;
+        }
+        t
+    }
+
+    /// Max relative estimate error across nodes (see `PushVector`).
+    pub fn max_rel_error(&self) -> f64 {
+        let t = self.target();
+        let scale = crate::linalg::l2_norm(&t).max(1e-12);
+        (0..self.m)
+            .map(|i| {
+                let e = self.estimate(i);
+                let mut diff = 0.0;
+                for k in 0..self.d {
+                    let x = e[k] - t[k];
+                    diff += x * x;
+                }
+                diff.sqrt() / scale
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Runs until error ≤ gamma or max_rounds; returns rounds executed.
+    pub fn run_to_gamma(&mut self, g: &Graph, gamma: f64, max_rounds: usize) -> usize {
+        let start = self.stats.rounds;
+        while self.max_rel_error() > gamma && self.stats.rounds - start < max_rounds {
+            self.round(g);
+        }
+        self.stats.rounds - start
+    }
+
+    /// Communication stats.
+    pub fn stats(&self) -> GossipStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_complete_graph() {
+        let vectors: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64]).collect();
+        let g = Graph::complete(8);
+        let mut rg = RandomizedGossip::new(&vectors, 42);
+        let rounds = rg.run_to_gamma(&g, 1e-6, 10_000);
+        assert!(rounds < 10_000, "did not converge");
+        for i in 0..8 {
+            assert!((rg.estimate(i)[0] - 3.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mass_conserved_under_randomized_rounds() {
+        let vectors = vec![vec![2.0, 1.0], vec![0.0, -1.0], vec![4.0, 3.0]];
+        let g = Graph::ring(3);
+        let mut rg = RandomizedGossip::new(&vectors, 7);
+        let t0 = rg.target();
+        for _ in 0..40 {
+            rg.round(&g);
+            let t = rg.target();
+            assert!((t[0] - t0[0]).abs() < 1e-12);
+            assert!((t[1] - t0[1]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let vectors = vec![vec![1.0], vec![5.0], vec![9.0], vec![2.0]];
+        let g = Graph::ring(4);
+        let mut a = RandomizedGossip::new(&vectors, 3);
+        let mut b = RandomizedGossip::new(&vectors, 3);
+        for _ in 0..20 {
+            a.round(&g);
+            b.round(&g);
+        }
+        assert_eq!(a.estimate(0), b.estimate(0));
+    }
+
+    #[test]
+    fn message_count_is_one_per_node_per_round() {
+        let g = Graph::ring(5);
+        let mut rg = RandomizedGossip::new(&vec![vec![0.0]; 5], 1);
+        rg.round(&g);
+        rg.round(&g);
+        assert_eq!(rg.stats().messages, 10);
+    }
+
+    #[test]
+    fn message_loss_biases_estimates() {
+        // With lossy links mass is destroyed; estimates still converge to a
+        // common value but it is no longer the exact average. Both facts
+        // are the claim here: consensus survives, unbiasedness does not.
+        let vectors: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 + 1.0]).collect();
+        let g = Graph::complete(8);
+        let true_avg = 4.5;
+
+        let mut lossless = RandomizedGossip::new(&vectors, 3);
+        for _ in 0..400 {
+            lossless.round(&g);
+        }
+        assert_eq!(lossless.dropped, 0);
+        let err_lossless = (lossless.estimate(0)[0] - true_avg).abs();
+        assert!(err_lossless < 1e-6, "lossless error {err_lossless}");
+
+        let mut lossy = RandomizedGossip::new(&vectors, 3).with_drop_prob(0.2);
+        for _ in 0..400 {
+            lossy.round(&g);
+        }
+        assert!(lossy.dropped > 0);
+        // nodes still agree with each other…
+        let e0 = lossy.estimate(0)[0];
+        for i in 1..8 {
+            assert!((lossy.estimate(i)[0] - e0).abs() < 0.2 * e0.abs().max(1.0));
+        }
+        // …but mass is gone: the (v, w) totals no longer describe the true
+        // average; the target stays finite and inside the value range.
+        let t = lossy.target();
+        assert!(t[0].is_finite() && t[0] > 0.0 && t[0] < 9.0);
+    }
+
+    #[test]
+    fn single_isolated_node_is_stable() {
+        let g = Graph::from_edges(1, &[]);
+        let mut rg = RandomizedGossip::new(&[vec![3.0]], 0);
+        rg.round(&g);
+        assert_eq!(rg.estimate(0), vec![3.0]);
+        assert_eq!(rg.stats().messages, 0);
+    }
+}

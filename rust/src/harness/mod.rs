@@ -1,0 +1,143 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `benches/*.rs` binaries (declared with
+//! `harness = false`); each uses the [`bench()`](fn@bench) helper for
+//! warmup + repeated timing with mean/std/median reporting, and prints
+//! paper-table rows via [`crate::util::TextTable`].
+
+use crate::util::timer::{mean_std, median};
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Mean seconds per iteration.
+    pub mean_secs: f64,
+    /// Sample std of per-iteration seconds.
+    pub std_secs: f64,
+    /// Median seconds per iteration.
+    pub median_secs: f64,
+    /// Fastest iteration.
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    /// `ops = items/iteration` → throughput in items/second (by median).
+    pub fn throughput(&self, ops_per_iter: f64) -> f64 {
+        ops_per_iter / self.median_secs.max(1e-12)
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            format_secs(self.median_secs),
+            format_secs(self.mean_secs),
+            format!("±{}", format_secs(self.std_secs)),
+            self.iters
+        )
+    }
+}
+
+/// Formats seconds with an adaptive unit.
+pub fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Runs `f` for `warmup` untimed and `iters` timed repetitions.
+///
+/// The closure should return a value whose drop is trivial; use
+/// [`std::hint::black_box`] inside to defeat DCE.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0, "bench: need at least one iteration");
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let (mean_secs, std_secs) = mean_std(&samples);
+    let median_secs = median(&samples);
+    let min_secs = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult { name: name.to_string(), iters, mean_secs, std_secs, median_secs, min_secs }
+}
+
+/// Times a single long-running case (end-to-end benches where one run is
+/// already seconds).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Prints the standard bench header matching [`BenchResult::summary`].
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<40} {:>12} {:>12} {:>12}",
+        "case", "median", "mean", "std"
+    );
+    println!("{}", "-".repeat(80));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut count = 0usize;
+        let r = bench("noop", 2, 10, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(count, 12); // warmup + timed
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.min_secs <= r.median_secs);
+    }
+
+    #[test]
+    fn format_units() {
+        assert!(format_secs(2.5).ends_with('s'));
+        assert!(format_secs(2.5e-3).ends_with("ms"));
+        assert!(format_secs(2.5e-6).ends_with("µs"));
+        assert!(format_secs(2.5e-10).ends_with("ns"));
+    }
+
+    #[test]
+    fn throughput_uses_median() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_secs: 1.0,
+            std_secs: 0.0,
+            median_secs: 0.5,
+            min_secs: 0.4,
+        };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

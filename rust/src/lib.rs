@@ -1,0 +1,63 @@
+//! # GADGET SVM
+//!
+//! A gossip-based sub-gradient solver for linear Support Vector Machines,
+//! reproducing *GADGET SVM: A Gossip-bAseD sub-GradiEnT Solver for Linear
+//! SVMs* (Dutta & Nataraj, 2018).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * [`coordinator`] — the paper's contribution: the GADGET algorithm
+//!   (Algorithm 2), a cycle-driven gossip engine (Peersim-equivalent) and an
+//!   asynchronous tokio engine, node state management and ε-convergence.
+//! * [`gossip`] — the Push-Sum / Push-Vector consensus protocols
+//!   (Kempe et al. 2003, Algorithm 1 of the paper).
+//! * [`topology`] — overlay graphs and doubly-stochastic transition
+//!   matrices `B`, with spectral mixing-time estimates.
+//! * [`data`] — sample storage (dense + sparse), LIBSVM I/O, synthetic
+//!   stand-ins for the paper's corpora, horizontal partitioning.
+//! * [`solver`] — native baselines: centralized Pegasos, SVM-SGD,
+//!   a cutting-plane SVM-Perf equivalent, and a dual coordinate-descent
+//!   reference optimizer.
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and runs them from the hot path.
+//! * [`experiments`] — drivers regenerating every table and figure of the
+//!   paper's evaluation section.
+//!
+//! Python (JAX + Pallas) exists only on the compile path (`make artifacts`);
+//! it is never on the training path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gadget::config::ExperimentConfig;
+//! use gadget::coordinator::GadgetRunner;
+//!
+//! let cfg = ExperimentConfig::builder()
+//!     .dataset("synthetic-reuters")
+//!     .nodes(10)
+//!     .lambda(1.29e-4)
+//!     .epsilon(1e-3)
+//!     .build()
+//!     .unwrap();
+//! let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+//! println!("accuracy = {:.2}%", 100.0 * report.test_accuracy);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod gossip;
+pub mod harness;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod topology;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

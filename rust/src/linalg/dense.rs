@@ -1,0 +1,195 @@
+//! Dense `f64` slice kernels.
+//!
+//! These are the only operations on the GADGET per-cycle hot path (the
+//! sub-gradient update Eq. 10 and the Push-Vector mixing step), so they are
+//! written to auto-vectorize: plain indexed loops over equal-length slices
+//! with the bounds hoisted by a single `assert_eq!`.
+
+/// Dot product `xᵀy`.
+///
+/// # Panics
+/// Panics if `x.len() != y.len()`.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    // Four-way unrolled accumulation: breaks the serial FP dependence chain
+    // so LLVM emits vector FMAs (see EXPERIMENTS.md §Perf).
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = 4 * i;
+        s0 += x[j] * y[j];
+        s1 += x[j + 1] * y[j + 1];
+        s2 += x[j + 2] * y[j + 2];
+        s3 += x[j + 3] * y[j + 3];
+    }
+    let mut tail = 0.0;
+    for j in 4 * chunks..n {
+        tail += x[j] * y[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `y ← y + a·x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y ← a·y`.
+#[inline]
+pub fn scale_assign(a: f64, y: &mut [f64]) {
+    for v in y.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Returns `a·x` as a fresh vector (off the hot path).
+#[inline]
+pub fn scale(a: f64, x: &[f64]) -> Vec<f64> {
+    x.iter().map(|v| a * v).collect()
+}
+
+/// `y ← y + x`.
+#[inline]
+pub fn add_assign(x: &[f64], y: &mut [f64]) {
+    axpy(1.0, x, y);
+}
+
+/// `y ← y − x`.
+#[inline]
+pub fn sub_assign(x: &[f64], y: &mut [f64]) {
+    axpy(-1.0, x, y);
+}
+
+/// Squared Euclidean norm `‖x‖₂²`.
+#[inline]
+pub fn l2_norm_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm `‖x‖₂`.
+#[inline]
+pub fn l2_norm(x: &[f64]) -> f64 {
+    l2_norm_sq(x).sqrt()
+}
+
+/// `‖x‖₁`.
+#[inline]
+pub fn l1_norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// `max_i |x_i − y_i|` — used by the ε-convergence test.
+#[inline]
+pub fn linf_dist(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "linf_dist: length mismatch");
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Projects `w` onto the Euclidean ball of radius `r` (in place); returns
+/// the scaling factor applied (1.0 when already inside).
+///
+/// This is steps (f)/(h) of Algorithm 2: `w ← min{1, r/‖w‖}·w`, which bounds
+/// the maximum sub-gradient exactly as in Pegasos
+/// (Shalev-Shwartz et al. 2007) with `r = 1/√λ`.
+#[inline]
+pub fn project_to_ball(w: &mut [f64], r: f64) -> f64 {
+    let norm = l2_norm(w);
+    if norm > r && norm > 0.0 {
+        let f = r / norm;
+        scale_assign(f, w);
+        f
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn dot_empty() {
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_unroll_tail() {
+        // length 7 exercises both the unrolled body and the tail loop
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let y = [1.0; 7];
+        assert_eq!(dot(&x, &y), 28.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn dot_mismatch_panics() {
+        dot(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(l2_norm_sq(&[3.0, 4.0]), 25.0);
+        assert_eq!(l1_norm(&[-3.0, 4.0]), 7.0);
+    }
+
+    #[test]
+    fn linf() {
+        assert_eq!(linf_dist(&[1.0, 5.0], &[2.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn projection_shrinks_outside() {
+        let mut w = vec![3.0, 4.0]; // norm 5
+        let f = project_to_ball(&mut w, 1.0);
+        assert!((l2_norm(&w) - 1.0).abs() < 1e-12);
+        assert!((f - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projection_identity_inside() {
+        let mut w = vec![0.3, 0.4];
+        let f = project_to_ball(&mut w, 1.0);
+        assert_eq!(f, 1.0);
+        assert_eq!(w, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn projection_zero_vector() {
+        let mut w = vec![0.0, 0.0];
+        assert_eq!(project_to_ball(&mut w, 1.0), 1.0);
+    }
+
+    #[test]
+    fn scale_and_add() {
+        let mut y = vec![1.0, 2.0];
+        scale_assign(0.5, &mut y);
+        assert_eq!(y, vec![0.5, 1.0]);
+        add_assign(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![1.5, 2.0]);
+        sub_assign(&[0.5, 1.0], &mut y);
+        assert_eq!(y, vec![1.0, 1.0]);
+        assert_eq!(scale(2.0, &y), vec![2.0, 2.0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense and sparse linear-algebra primitives for the native hot path.
+//!
+//! Everything the GADGET coordinator and the baseline solvers need is a
+//! handful of level-1 BLAS-style operations over `f64` slices plus
+//! sparse-dense products over LIBSVM-style index/value pairs. They are kept
+//! here — allocation-free and `#[inline]`-friendly — so the per-cycle hot
+//! loop never allocates (see DESIGN.md §Perf).
+
+pub mod dense;
+pub mod sparse;
+
+pub use dense::{
+    add_assign, axpy, dot, l1_norm, l2_norm, l2_norm_sq, linf_dist, project_to_ball, scale,
+    scale_assign, sub_assign,
+};
+pub use sparse::SparseVec;

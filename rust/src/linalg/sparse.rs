@@ -1,0 +1,150 @@
+//! Sparse vectors in LIBSVM style: sorted `(index, value)` pairs.
+//!
+//! The paper's text corpora (CCAT at 47k features, Reuters at 8.3k) are
+//! 99.8%+ sparse; the per-sample work in every solver is `⟨w, x⟩` and
+//! `w ← w + a·x`, both of which must cost `O(nnz)` — these two operations
+//! are the single hottest code in the native backend (see flamegraph notes
+//! in EXPERIMENTS.md §Perf).
+
+/// A sparse feature vector with strictly increasing indices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    /// Strictly increasing feature indices (0-based).
+    pub indices: Vec<u32>,
+    /// Values aligned with `indices`.
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Builds from parallel slices, validating sortedness.
+    ///
+    /// # Panics
+    /// Panics if lengths differ or indices are not strictly increasing.
+    pub fn new(indices: Vec<u32>, values: Vec<f32>) -> Self {
+        assert_eq!(indices.len(), values.len(), "SparseVec: length mismatch");
+        for w in indices.windows(2) {
+            assert!(w[0] < w[1], "SparseVec: indices must strictly increase");
+        }
+        Self { indices, values }
+    }
+
+    /// Builds from a dense slice, dropping exact zeros.
+    pub fn from_dense(x: &[f64]) -> Self {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in x.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v as f32);
+            }
+        }
+        Self { indices, values }
+    }
+
+    /// Number of stored (non-zero) entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Smallest dense dimension that can hold this vector.
+    #[inline]
+    pub fn min_dim(&self) -> usize {
+        self.indices.last().map_or(0, |&i| i as usize + 1)
+    }
+
+    /// Sparse–dense dot product `⟨self, w⟩`. Out-of-range indices panic.
+    #[inline]
+    pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            s += w[i as usize] * v as f64;
+        }
+        s
+    }
+
+    /// `w ← w + a·self` (scatter-add).
+    #[inline]
+    pub fn axpy_into(&self, a: f64, w: &mut [f64]) {
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            w[i as usize] += a * v as f64;
+        }
+    }
+
+    /// Squared Euclidean norm.
+    #[inline]
+    pub fn l2_norm_sq(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Materializes into a dense vector of dimension `d`.
+    ///
+    /// # Panics
+    /// Panics if `d < self.min_dim()`.
+    pub fn to_dense(&self, d: usize) -> Vec<f64> {
+        assert!(d >= self.min_dim(), "to_dense: dimension too small");
+        let mut out = vec![0.0; d];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v as f64;
+        }
+        out
+    }
+
+    /// Scales all values in place.
+    pub fn scale(&mut self, a: f32) {
+        for v in &mut self.values {
+            *v *= a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_dense() {
+        let d = vec![0.0, 1.5, 0.0, -2.0];
+        let s = SparseVec::from_dense(&d);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.min_dim(), 4);
+        assert_eq!(s.to_dense(4), d);
+        assert_eq!(s.to_dense(6)[4..], [0.0, 0.0]);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let s = SparseVec::new(vec![1, 3], vec![2.0, -1.0]);
+        let mut w = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(s.dot_dense(&w), 2.0 * 2.0 - 4.0);
+        s.axpy_into(0.5, &mut w);
+        assert_eq!(w, vec![1.0, 3.0, 3.0, 3.5]);
+    }
+
+    #[test]
+    fn norm() {
+        let s = SparseVec::new(vec![0, 2], vec![3.0, 4.0]);
+        assert_eq!(s.l2_norm_sq(), 25.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increase")]
+    fn unsorted_panics() {
+        SparseVec::new(vec![3, 1], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_vector() {
+        let s = SparseVec::default();
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.min_dim(), 0);
+        assert_eq!(s.dot_dense(&[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn scale_in_place() {
+        let mut s = SparseVec::new(vec![0], vec![2.0]);
+        s.scale(2.5);
+        assert_eq!(s.values, vec![5.0]);
+    }
+}

@@ -1,0 +1,359 @@
+//! `gadget` — the GADGET SVM command-line launcher.
+//!
+//! Subcommands:
+//!   train        run GADGET on one dataset, print the report
+//!   baseline     run a centralized/per-node baseline solver
+//!   experiment   regenerate a paper table/figure (table3|table4|table5|figures|mixing|bound|rounds)
+//!   inspect      dataset/topology/artifact diagnostics
+//!   help         this text
+//!
+//! Examples:
+//!   gadget train --dataset synthetic-usps --scale 0.1 --nodes 10
+//!   gadget train --config configs/reuters.toml
+//!   gadget experiment table3 --scale 0.05 --out results
+//!   gadget experiment figures --only usps,reuters
+//!   gadget inspect --dataset synthetic-ccat --scale 0.01
+
+use gadget::cli::Args;
+use gadget::config::ExperimentConfig;
+use gadget::coordinator::GadgetRunner;
+use gadget::experiments::{self, ExperimentOpts};
+use gadget::solver::Solver;
+use gadget::util::Stopwatch;
+use gadget::Result;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv).map_err(|e| anyhow::anyhow!(e))?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "baseline" => cmd_baseline(&args),
+        "experiment" => cmd_experiment(&args),
+        "inspect" => cmd_inspect(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?} (try `gadget help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "gadget — Gossip-bAseD sub-GradiEnT solver for linear SVMs\n\
+         \n\
+         USAGE: gadget <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS\n\
+         \x20 train        run GADGET (options: --config FILE | --dataset NAME --scale F\n\
+         \x20              --nodes N --lambda F --epsilon F --max-iterations N --trials N\n\
+         \x20              --topology complete|ring|torus|k-regular|small-world\n\
+         \x20              --backend native|xla --batch-size N --local-steps N --seed N)\n\
+         \x20 baseline     run a solver centrally (--solver pegasos|svm-sgd|svm-perf|dcd,\n\
+         \x20              same dataset options)\n\
+         \x20 experiment   regenerate paper artifacts: table3 | table4 | table5 | figures |\n\
+         \x20              mixing | bound | rounds | topology | churn  (--scale F --nodes N --trials N\n\
+         \x20              --only a,b,... --out DIR --max-iterations N)\n\
+         \x20 inspect      print dataset statistics / topology spectra / artifact registry\n\
+         \n\
+         Datasets: synthetic-adult, synthetic-ccat, synthetic-mnist, synthetic-reuters,\n\
+         \x20        synthetic-usps, synthetic-webspam, synthetic-gisette, path:<libsvm file>\n"
+    );
+}
+
+/// Builds an ExperimentConfig from CLI options (or a --config TOML base).
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    cfg.scale = args.get_parsed("scale", cfg.scale).map_err(err)?;
+    cfg.nodes = args.get_parsed("nodes", cfg.nodes).map_err(err)?;
+    cfg.epsilon = args.get_parsed("epsilon", cfg.epsilon).map_err(err)?;
+    cfg.max_iterations = args.get_parsed("max-iterations", cfg.max_iterations).map_err(err)?;
+    cfg.batch_size = args.get_parsed("batch-size", cfg.batch_size).map_err(err)?;
+    cfg.local_steps = args.get_parsed("local-steps", cfg.local_steps).map_err(err)?;
+    cfg.gossip_rounds = args.get_parsed("gossip-rounds", cfg.gossip_rounds).map_err(err)?;
+    cfg.trials = args.get_parsed("trials", cfg.trials).map_err(err)?;
+    cfg.seed = args.get_parsed("seed", cfg.seed).map_err(err)?;
+    cfg.snapshot_every = args.get_parsed("snapshot-every", cfg.snapshot_every).map_err(err)?;
+    if let Some(l) = args.get("lambda") {
+        cfg.lambda = Some(l.parse().map_err(|e| anyhow::anyhow!("--lambda: {e}"))?);
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = t.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn err(e: String) -> anyhow::Error {
+    anyhow::anyhow!(e)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    println!(
+        "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} trials={}",
+        cfg.dataset, cfg.scale, cfg.nodes, cfg.topology, cfg.backend, cfg.trials
+    );
+    let runner = GadgetRunner::new(cfg)?;
+    println!(
+        "data: {} train / {} test samples, d={}, lambda={:.3e}",
+        runner.train_data().len(),
+        runner.test_data().len(),
+        runner.train_data().dim,
+        runner.lambda(),
+    );
+    let report = runner.run()?;
+    println!("\n== GADGET report ==");
+    println!(
+        "test accuracy   : {:.2}% (±{:.2})",
+        100.0 * report.test_accuracy,
+        100.0 * report.test_accuracy_std
+    );
+    println!("train time      : {:.3}s (±{:.3})", report.train_secs, report.train_secs_std);
+    println!("primal objective: {:.6}", report.objective);
+    println!("iterations      : {:.1} (mean over trials)", report.iterations);
+    println!("eps@convergence : {:.6}", report.epsilon_final);
+    let g = report.trials[0].gossip;
+    println!(
+        "gossip (trial 0): {} rounds, {} messages, {:.2} MB",
+        g.rounds,
+        g.messages,
+        g.bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let which = args.get("solver").unwrap_or("pegasos").to_string();
+    let runner = GadgetRunner::new(cfg.clone())?;
+    let lambda = runner.lambda();
+    let train = runner.train_data();
+    let test = runner.test_data();
+    let mut solver: Box<dyn Solver> = match which.as_str() {
+        "pegasos" => Box::new(gadget::solver::Pegasos::new(gadget::solver::PegasosParams {
+            lambda,
+            iterations: experiments::table3::centralized_iterations(train.len()),
+            batch_size: cfg.batch_size,
+            project: true,
+            seed: cfg.seed,
+        })),
+        "svm-sgd" => Box::new(gadget::solver::SvmSgd::new(gadget::solver::SvmSgdParams {
+            lambda,
+            epochs: 10,
+            seed: cfg.seed,
+        })),
+        "svm-perf" => Box::new(gadget::solver::SvmPerf::new(gadget::solver::SvmPerfParams {
+            lambda,
+            ..Default::default()
+        })),
+        "dcd" => {
+            Box::new(gadget::solver::DualCoordinateDescent::new(lambda, 200, 1e-8, cfg.seed))
+        }
+        other => anyhow::bail!("unknown solver {other:?}"),
+    };
+    let sw = Stopwatch::new();
+    let model = solver.fit(train);
+    let secs = sw.secs();
+    println!("== {} on {} ==", solver.name(), cfg.dataset);
+    println!("train time      : {secs:.3}s");
+    println!("test accuracy   : {:.2}%", 100.0 * gadget::metrics::accuracy(&model.w, test));
+    println!(
+        "primal objective: {:.6}",
+        gadget::metrics::objective(&model.w, train, lambda)
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("table3");
+    let opts = ExperimentOpts {
+        scale: args.get_parsed("scale", 0.05).map_err(err)?,
+        nodes: args.get_parsed("nodes", 10).map_err(err)?,
+        trials: args.get_parsed("trials", 5).map_err(err)?,
+        seed: args.get_parsed("seed", 17u64).map_err(err)?,
+        out_dir: args.get("out").unwrap_or("results").into(),
+        only: args.get_list("only"),
+        max_iterations: args.get_parsed("max-iterations", 1_500).map_err(err)?,
+    };
+    match which {
+        "table3" => {
+            let rows = experiments::table3::run(&opts)?;
+            let table = experiments::table3::render(&rows);
+            println!("\nTable 3 — GADGET vs centralized Pegasos (model-build time only)\n");
+            print!("{}", table.render());
+            experiments::write_output(&opts.out_file("table3.csv")?, &table.to_csv())?;
+            experiments::write_output(
+                &opts.out_file("table3.json")?,
+                &experiments::table3::to_json(&rows).to_pretty(),
+            )?;
+        }
+        "table4" => {
+            let rows = experiments::table4::run(&opts)?;
+            let table = experiments::table4::render(&rows);
+            println!("\nTable 4 — GADGET vs SVM-Perf vs SVM-SGD (per-node)\n");
+            print!("{}", table.render());
+            experiments::write_output(&opts.out_file("table4.csv")?, &table.to_csv())?;
+            experiments::write_output(
+                &opts.out_file("table4.json")?,
+                &experiments::table4::to_json(&rows).to_pretty(),
+            )?;
+        }
+        "table5" => {
+            let rows = experiments::table5::run(&opts)?;
+            let table = experiments::table5::render(&rows);
+            println!("\nTable 5 — including data-loading time; Speedup = T_dist / T_central\n");
+            print!("{}", table.render());
+            experiments::write_output(&opts.out_file("table5.csv")?, &table.to_csv())?;
+            experiments::write_output(
+                &opts.out_file("table5.json")?,
+                &experiments::table5::to_json(&rows).to_pretty(),
+            )?;
+        }
+        "figures" => {
+            let series = experiments::figures::run(&opts)?;
+            for s in &series {
+                println!("\n{}", experiments::figures::ascii_plot(s, 76, 14));
+                let name = s.dataset.replace("synthetic-", "");
+                experiments::write_output(
+                    &opts.out_file(&format!("figure_{name}.csv"))?,
+                    &experiments::figures::to_csv(s),
+                )?;
+            }
+        }
+        "mixing" => {
+            let m = args.get_parsed("m", 24usize).map_err(err)?;
+            let gamma = args.get_parsed("gamma", 1e-3).map_err(err)?;
+            let rows = experiments::ablation::pushsum_topology(m, gamma, opts.seed)?;
+            println!("\nPush-Sum mixing: measured vs spectral prediction (γ = {gamma})\n");
+            print!("{}", experiments::ablation::render_mixing(&rows).render());
+        }
+        "bound" => {
+            let cfg = ExperimentConfig::builder()
+                .dataset(args.get("dataset").unwrap_or("synthetic-usps"))
+                .scale(opts.scale)
+                .nodes(opts.nodes.min(6))
+                .seed(opts.seed)
+                .build()?;
+            let rows = experiments::ablation::bound_check(&cfg, &[50, 200, 800])?;
+            println!("\nTheorem 2 sub-optimality bound check\n");
+            print!("{}", experiments::ablation::render_bound(&rows).render());
+        }
+        "topology" => {
+            let cfg = ExperimentConfig::builder()
+                .dataset(args.get("dataset").unwrap_or("synthetic-usps"))
+                .scale(opts.scale)
+                .nodes(args.get_parsed("m", 16usize).map_err(err)?)
+                .max_iterations(opts.max_iterations.min(500))
+                .seed(opts.seed)
+                .build()?;
+            let rows = experiments::ablation::topology_impact(&cfg)?;
+            println!("\nNetwork-structure impact (paper §5 future work)\n");
+            print!("{}", experiments::ablation::render_topology(&rows).render());
+        }
+        "churn" => {
+            let cfg = ExperimentConfig::builder()
+                .dataset(args.get("dataset").unwrap_or("synthetic-usps"))
+                .scale(opts.scale)
+                .nodes(opts.nodes)
+                .max_iterations(opts.max_iterations.min(600))
+                .seed(opts.seed)
+                .build()?;
+            let rows =
+                experiments::ablation::churn_resilience(&cfg, &[0.0, 0.005, 0.02, 0.05])?;
+            println!("\nNode-failure resilience (paper §5 future work)\n");
+            print!("{}", experiments::ablation::render_churn(&rows).render());
+        }
+        "rounds" => {
+            let cfg = ExperimentConfig::builder()
+                .dataset(args.get("dataset").unwrap_or("synthetic-usps"))
+                .scale(opts.scale)
+                .nodes(opts.nodes)
+                .trials(1)
+                .max_iterations(opts.max_iterations.min(300))
+                .seed(opts.seed)
+                .build()?;
+            let rows = experiments::ablation::gossip_rounds_sweep(&cfg, &[1, 2, 4, 8, 16])?;
+            println!("\nGossip rounds per iteration sweep\n");
+            print!("{}", experiments::ablation::render_sweep(&rows).render());
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (table3|table4|table5|figures|mixing|bound|rounds|topology|churn)"
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if args.has_flag("artifacts") || args.get("dataset").is_none() {
+        match gadget::runtime::ArtifactRegistry::load(gadget::runtime::artifacts_dir()) {
+            Ok(reg) => {
+                println!(
+                    "artifact registry ({}):",
+                    gadget::runtime::artifacts_dir().display()
+                );
+                for e in reg.entries() {
+                    println!(
+                        "  {} d={} batch={} steps={} -> {}",
+                        e.kernel,
+                        e.d,
+                        e.batch,
+                        e.steps,
+                        e.path.display()
+                    );
+                }
+                reg.check_files()?;
+                println!("all artifact files present");
+            }
+            Err(e) => println!("no artifacts: {e}"),
+        }
+        if args.get("dataset").is_none() {
+            return Ok(());
+        }
+    }
+    let cfg = config_from_args(args)?;
+    let runner = GadgetRunner::new(cfg.clone())?;
+    let ds = runner.train_data();
+    println!("dataset {}:", ds.name);
+    println!("  train samples : {}", ds.len());
+    println!("  test samples  : {}", runner.test_data().len());
+    println!("  features      : {}", ds.dim);
+    println!("  density       : {:.4}%", 100.0 * ds.density());
+    println!("  positive rate : {:.3}", ds.positive_rate());
+    println!("  lambda        : {:.3e}", runner.lambda());
+    let g = gadget::topology::Graph::generate(cfg.topology, cfg.nodes, cfg.seed);
+    let b = gadget::topology::TransitionMatrix::from_graph(
+        &g,
+        gadget::topology::stochastic::WeightScheme::MetropolisHastings,
+    );
+    println!("topology {} (m={}):", cfg.topology, cfg.nodes);
+    println!("  edges    : {}", g.edge_count());
+    println!("  diameter : {}", g.diameter());
+    println!("  lambda2  : {:.4}", gadget::topology::second_eigenvalue(&b, 300));
+    println!(
+        "  tau(gamma={}) : {} rounds",
+        cfg.gamma,
+        gadget::topology::mixing_time(&b, cfg.gamma)
+    );
+    Ok(())
+}

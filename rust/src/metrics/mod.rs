@@ -1,0 +1,349 @@
+//! Evaluation metrics and the paper's aggregation conventions.
+//!
+//! * primal objective (paper Eq. 1), hinge loss, 0/1 error, accuracy;
+//! * per-node aggregation with the Table-3 standard-deviation rule
+//!   `σ = sqrt(Var(Nodes) + Var(Trials))`;
+//! * trace recording for the figures (objective / error vs wall-time).
+
+use crate::data::Dataset;
+
+/// Average hinge loss `(1/N) Σ max{0, 1 − y⟨w,x⟩}`.
+pub fn hinge_loss(w: &[f64], ds: &Dataset) -> f64 {
+    assert!(!ds.is_empty(), "hinge_loss: empty dataset");
+    let mut s = 0.0;
+    for i in 0..ds.len() {
+        let (x, y) = ds.sample(i);
+        s += (1.0 - y * x.dot_dense(w)).max(0.0);
+    }
+    s / ds.len() as f64
+}
+
+/// Primal SVM objective (paper Eq. 1): `(λ/2)‖w‖² + hinge_loss`.
+pub fn objective(w: &[f64], ds: &Dataset, lambda: f64) -> f64 {
+    0.5 * lambda * crate::linalg::l2_norm_sq(w) + hinge_loss(w, ds)
+}
+
+/// Fraction of misclassified samples (`sign(⟨w,x⟩) ≠ y`); zero scores count
+/// as positive predictions, matching `LinearModel::predict`.
+pub fn zero_one_error(w: &[f64], ds: &Dataset) -> f64 {
+    assert!(!ds.is_empty(), "zero_one_error: empty dataset");
+    let mut wrong = 0usize;
+    for i in 0..ds.len() {
+        let (x, y) = ds.sample(i);
+        let pred = if x.dot_dense(w) >= 0.0 { 1.0 } else { -1.0 };
+        if pred != y {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / ds.len() as f64
+}
+
+/// `1 − zero_one_error`.
+pub fn accuracy(w: &[f64], ds: &Dataset) -> f64 {
+    1.0 - zero_one_error(w, ds)
+}
+
+/// The paper's Table-3 deviation rule: per-metric variance across nodes and
+/// across trials combined as `sqrt(Var(Nodes) + Var(Trials))`.
+///
+/// `values[trial][node]` — returns `(grand_mean, combined_std)`.
+pub fn node_trial_std(values: &[Vec<f64>]) -> (f64, f64) {
+    assert!(!values.is_empty(), "node_trial_std: no trials");
+    let trials = values.len();
+    let nodes = values[0].len();
+    assert!(values.iter().all(|t| t.len() == nodes), "ragged trials");
+    // trial means
+    let trial_means: Vec<f64> =
+        values.iter().map(|t| t.iter().sum::<f64>() / nodes as f64).collect();
+    let grand = trial_means.iter().sum::<f64>() / trials as f64;
+    // Var(Trials): variance of trial means
+    let var_trials = if trials > 1 {
+        trial_means.iter().map(|m| (m - grand).powi(2)).sum::<f64>() / (trials - 1) as f64
+    } else {
+        0.0
+    };
+    // Var(Nodes): mean within-trial variance across nodes
+    let var_nodes = if nodes > 1 {
+        values
+            .iter()
+            .zip(&trial_means)
+            .map(|(t, m)| t.iter().map(|v| (v - m).powi(2)).sum::<f64>() / (nodes - 1) as f64)
+            .sum::<f64>()
+            / trials as f64
+    } else {
+        0.0
+    };
+    (grand, (var_nodes + var_trials).sqrt())
+}
+
+/// Binary classification report beyond accuracy: the skewed paper corpora
+/// (reuters at 9% positives, mnist at 10%) make accuracy alone misleading,
+/// so the experiment harness can report the full confusion breakdown.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BinaryReport {
+    /// True positives.
+    pub tp: usize,
+    /// False positives.
+    pub fp: usize,
+    /// True negatives.
+    pub tn: usize,
+    /// False negatives.
+    pub fn_: usize,
+}
+
+impl BinaryReport {
+    /// Computes the confusion counts of `sign(⟨w,x⟩)` on `ds`.
+    pub fn compute(w: &[f64], ds: &Dataset) -> Self {
+        let mut r = Self::default();
+        for i in 0..ds.len() {
+            let (x, y) = ds.sample(i);
+            let pred = x.dot_dense(w) >= 0.0;
+            match (pred, y > 0.0) {
+                (true, true) => r.tp += 1,
+                (true, false) => r.fp += 1,
+                (false, false) => r.tn += 1,
+                (false, true) => r.fn_ += 1,
+            }
+        }
+        r
+    }
+
+    /// `tp / (tp + fp)`; 0 when undefined.
+    pub fn precision(&self) -> f64 {
+        let d = self.tp + self.fp;
+        if d == 0 {
+            0.0
+        } else {
+            self.tp as f64 / d as f64
+        }
+    }
+
+    /// `tp / (tp + fn)`; 0 when undefined.
+    pub fn recall(&self) -> f64 {
+        let d = self.tp + self.fn_;
+        if d == 0 {
+            0.0
+        } else {
+            self.tp as f64 / d as f64
+        }
+    }
+
+    /// Harmonic mean of precision and recall; 0 when undefined.
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    /// Overall accuracy.
+    pub fn accuracy(&self) -> f64 {
+        let total = self.tp + self.fp + self.tn + self.fn_;
+        if total == 0 {
+            0.0
+        } else {
+            (self.tp + self.tn) as f64 / total as f64
+        }
+    }
+}
+
+/// Area under the ROC curve of the raw scores `⟨w, x⟩` (rank statistic via
+/// the Mann–Whitney U; ties get half credit).
+pub fn auc(w: &[f64], ds: &Dataset) -> f64 {
+    let mut scored: Vec<(f64, bool)> = (0..ds.len())
+        .map(|i| {
+            let (x, y) = ds.sample(i);
+            (x.dot_dense(w), y > 0.0)
+        })
+        .collect();
+    let pos = scored.iter().filter(|(_, y)| *y).count();
+    let neg = scored.len() - pos;
+    if pos == 0 || neg == 0 {
+        return 0.5;
+    }
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // average ranks with tie handling
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0usize;
+    while i < scored.len() {
+        let mut j = i;
+        while j + 1 < scored.len() && scored[j + 1].0 == scored[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for item in scored.iter().take(j + 1).skip(i) {
+            if item.1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum_pos - pos as f64 * (pos as f64 + 1.0) / 2.0) / (pos as f64 * neg as f64)
+}
+
+/// One point of a convergence trace (figures 4.1–4.3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Seconds of training wall-time when the snapshot was taken.
+    pub time_secs: f64,
+    /// GADGET iteration (or solver step) index.
+    pub step: usize,
+    /// Primal objective (Eq. 1) on the training data.
+    pub objective: f64,
+    /// Zero-one error on the test data.
+    pub test_error: f64,
+}
+
+/// A named convergence trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Series label (e.g. "gadget-node-avg", "pegasos").
+    pub label: String,
+    /// Chronological points.
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    /// Creates an empty trace.
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    /// Appends a point.
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    /// Renders as CSV (`label,time_secs,step,objective,test_error`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label,time_secs,step,objective,test_error\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.6},{},{:.8},{:.6}\n",
+                self.label, p.time_secs, p.step, p.objective, p.test_error
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SparseVec;
+
+    fn toy() -> Dataset {
+        // 2 samples in R²: x0=(1,0) y=+1, x1=(0,1) y=−1
+        Dataset::new(
+            "toy",
+            2,
+            vec![SparseVec::new(vec![0], vec![1.0]), SparseVec::new(vec![1], vec![1.0])],
+            vec![1, -1],
+        )
+    }
+
+    #[test]
+    fn hinge_and_objective_by_hand() {
+        let ds = toy();
+        let w = vec![2.0, -2.0];
+        // margins: +1·2 = 2 (loss 0), −1·(−2)=2 (loss 0)
+        assert_eq!(hinge_loss(&w, &ds), 0.0);
+        let lambda = 0.5;
+        // obj = 0.25·(4+4) = 2
+        assert!((objective(&w, &ds, lambda) - 2.0).abs() < 1e-12);
+        // w = 0: hinge = 1 each
+        assert_eq!(hinge_loss(&[0.0, 0.0], &ds), 1.0);
+    }
+
+    #[test]
+    fn zero_one_and_accuracy() {
+        let ds = toy();
+        assert_eq!(zero_one_error(&[1.0, -1.0], &ds), 0.0);
+        assert_eq!(zero_one_error(&[-1.0, 1.0], &ds), 1.0);
+        // w = 0: score 0 ⇒ predict +1 ⇒ one of two wrong
+        assert_eq!(zero_one_error(&[0.0, 0.0], &ds), 0.5);
+        assert_eq!(accuracy(&[1.0, -1.0], &ds), 1.0);
+    }
+
+    #[test]
+    fn node_trial_std_hand_example() {
+        // 2 trials × 2 nodes
+        let values = vec![vec![1.0, 3.0], vec![2.0, 4.0]];
+        // trial means: 2, 3 ⇒ grand 2.5, Var(Trials) = 0.5
+        // within-trial vars: 2, 2 ⇒ Var(Nodes) = 2
+        let (mean, std) = node_trial_std(&values);
+        assert!((mean - 2.5).abs() < 1e-12);
+        assert!((std - 2.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_trial_std_single_trial_single_node() {
+        let (mean, std) = node_trial_std(&[vec![7.0]]);
+        assert_eq!((mean, std), (7.0, 0.0));
+    }
+
+    #[test]
+    fn binary_report_by_hand() {
+        let ds = Dataset::new(
+            "t",
+            1,
+            vec![
+                SparseVec::new(vec![0], vec![1.0]),  // score +1, y +1 -> tp
+                SparseVec::new(vec![0], vec![1.0]),  // score +1, y -1 -> fp
+                SparseVec::new(vec![0], vec![-1.0]), // score -1, y -1 -> tn
+                SparseVec::new(vec![0], vec![-1.0]), // score -1, y +1 -> fn
+            ],
+            vec![1, -1, -1, 1],
+        );
+        let r = BinaryReport::compute(&[1.0], &ds);
+        assert_eq!((r.tp, r.fp, r.tn, r.fn_), (1, 1, 1, 1));
+        assert!((r.precision() - 0.5).abs() < 1e-12);
+        assert!((r.recall() - 0.5).abs() < 1e-12);
+        assert!((r.f1() - 0.5).abs() < 1e-12);
+        assert!((r.accuracy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_report_degenerate_cases() {
+        let r = BinaryReport::default();
+        assert_eq!(r.precision(), 0.0);
+        assert_eq!(r.recall(), 0.0);
+        assert_eq!(r.f1(), 0.0);
+        assert_eq!(r.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        // perfectly-ranked scores
+        let ds = Dataset::new(
+            "t",
+            1,
+            (0..8).map(|i| SparseVec::new(vec![0], vec![i as f32])).collect(),
+            vec![-1, -1, -1, -1, 1, 1, 1, 1],
+        );
+        assert!((auc(&[1.0], &ds) - 1.0).abs() < 1e-12);
+        assert!((auc(&[-1.0], &ds) - 0.0).abs() < 1e-12);
+        // all scores tied ⇒ 0.5
+        let tied = Dataset::new(
+            "t",
+            1,
+            (0..6).map(|_| SparseVec::new(vec![0], vec![1.0])).collect(),
+            vec![1, -1, 1, -1, 1, -1],
+        );
+        assert!((auc(&[1.0], &tied) - 0.5).abs() < 1e-12);
+        // single-class ⇒ 0.5 by convention
+        let one = Dataset::new("t", 1, vec![SparseVec::new(vec![0], vec![1.0])], vec![1]);
+        assert_eq!(auc(&[1.0], &one), 0.5);
+    }
+
+    #[test]
+    fn trace_csv_shape() {
+        let mut t = Trace::new("test");
+        t.push(TracePoint { time_secs: 0.5, step: 10, objective: 1.25, test_error: 0.1 });
+        let csv = t.to_csv();
+        assert!(csv.starts_with("label,"));
+        assert!(csv.contains("test,0.500000,10,1.25000000,0.100000"));
+    }
+}

@@ -1,0 +1,249 @@
+//! Deterministic random-number substrate.
+//!
+//! The build environment is offline (no `rand` crate), and determinism is a
+//! first-class requirement anyway: every experiment in EXPERIMENTS.md must
+//! regenerate bit-identically from `(config, seed)`. This module provides
+//! the xoshiro256++ generator (Blackman & Vigna 2019) seeded through
+//! SplitMix64, plus the distributions the system needs: uniform ranges,
+//! standard normal (Box–Muller with spare caching), Fisher–Yates shuffling,
+//! and Floyd's algorithm for sorted k-subsets.
+
+mod xoshiro;
+
+pub use xoshiro::Xoshiro256pp;
+
+/// The project-wide RNG: xoshiro256++ behind a small distribution API.
+///
+/// Streams: `Rng::new(seed)` gives the root stream; [`Rng::substream`]
+/// derives statistically independent child streams (used to give every
+/// network node its own RNG, matching the paper's independent local
+/// sampling).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    core: Xoshiro256pp,
+    /// Cached second Box–Muller variate.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Creates a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        Self { core: Xoshiro256pp::new(seed), spare_normal: None }
+    }
+
+    /// Derives an independent child stream. Mixing the label through
+    /// SplitMix64 keeps children of the same parent decorrelated.
+    pub fn substream(&self, label: u64) -> Self {
+        let mixed = xoshiro::splitmix64_once(
+            self.core.state_fingerprint() ^ label.wrapping_mul(0x9e3779b97f4a7c15),
+        );
+        Self::new(mixed)
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.core.next_u64()
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53-bit resolution).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's rejection method (unbiased).
+    ///
+    /// # Panics
+    /// Panics if `n == 0`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::below: empty range");
+        let n = n as u64;
+        // Lemire 2019: multiply-shift with rejection on the low word.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let threshold = n.wrapping_neg() % n;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "Rng::range: empty range");
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn flip(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller (polar form), caching the spare.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sorted random k-subset of `[0, n)` by Floyd's algorithm — O(k log k),
+    /// independent of `n`. Used by the sparse-row generators where
+    /// `k ≪ n` (76 of 47236 for the CCAT stand-in).
+    pub fn sorted_subset(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n, "sorted_subset: k > n");
+        let mut set = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.below(j + 1) as u32;
+            if !set.insert(t) {
+                set.insert(j as u32);
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Samples one element of a slice uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        let mut c = Rng::new(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn substreams_are_decorrelated() {
+        let root = Rng::new(7);
+        let mut s0 = root.substream(0);
+        let mut s1 = root.substream(1);
+        let v0: Vec<u64> = (0..4).map(|_| s0.next_u64()).collect();
+        let v1: Vec<u64> = (0..4).map(|_| s1.next_u64()).collect();
+        assert_ne!(v0, v1);
+        // same label ⇒ same stream
+        let mut s0b = root.substream(0);
+        assert_eq!(v0[0], s0b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_with_sane_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_covers_range_uniformly() {
+        let mut r = Rng::new(11);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sorted_subset_properties() {
+        let mut r = Rng::new(13);
+        for _ in 0..50 {
+            let s = r.sorted_subset(1000, 20);
+            assert_eq!(s.len(), 20);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < 1000));
+        }
+        // edge cases
+        assert!(r.sorted_subset(5, 0).is_empty());
+        assert_eq!(r.sorted_subset(5, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn range_and_choose() {
+        let mut r = Rng::new(17);
+        for _ in 0..100 {
+            let v = r.range(10, 13);
+            assert!((10..13).contains(&v));
+        }
+        let xs = [1, 2, 3];
+        assert!(xs.contains(r.choose(&xs)));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty range")]
+    fn below_zero_panics() {
+        Rng::new(0).below(0);
+    }
+}

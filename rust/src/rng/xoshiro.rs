@@ -1,0 +1,91 @@
+//! xoshiro256++ core (Blackman & Vigna, 2019) with SplitMix64 seeding —
+//! the reference construction recommended by the authors for seeding.
+
+/// One SplitMix64 step: mixes a 64-bit value.
+#[inline]
+pub fn splitmix64_once(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seeds all 256 bits through a SplitMix64 chain (never all-zero).
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for si in &mut s {
+            x = x.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            *si = z ^ (z >> 31);
+        }
+        if s == [0; 4] {
+            s[0] = 1; // cannot happen via splitmix, but keep the invariant explicit
+        }
+        Self { s }
+    }
+
+    /// Next 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// A stable fingerprint of the current state (for substream derivation).
+    #[inline]
+    pub fn state_fingerprint(&self) -> u64 {
+        splitmix64_once(self.s[0] ^ self.s[1].rotate_left(16))
+            ^ splitmix64_once(self.s[2] ^ self.s[3].rotate_left(32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nonzero_state_from_any_seed() {
+        for seed in [0u64, 1, u64::MAX] {
+            let mut g = Xoshiro256pp::new(seed);
+            // must produce varied output, not get stuck
+            let a = g.next_u64();
+            let b = g.next_u64();
+            assert_ne!(a, b);
+        }
+    }
+
+    #[test]
+    fn reference_vector_xoshiro256pp() {
+        // Reference: seeding state directly with s = [1,2,3,4] must produce
+        // the published first outputs of xoshiro256++.
+        let mut g = Xoshiro256pp { s: [1, 2, 3, 4] };
+        let got: Vec<u64> = (0..3).map(|_| g.next_u64()).collect();
+        assert_eq!(got, vec![41943041, 58720359, 3588806011781223]);
+    }
+
+    #[test]
+    fn splitmix_reference() {
+        // SplitMix64 of 0 (first output) per Vigna's reference code.
+        assert_eq!(splitmix64_once(0), 0xe220a8397b1dcdaf);
+    }
+}

@@ -1,0 +1,183 @@
+//! Artifact registry: `artifacts/manifest.json` maps logical kernels to
+//! shape-specialized HLO files.
+//!
+//! HLO is shape-monomorphic, so `aot.py` emits one artifact per
+//! `(d, batch, steps)` variant. The registry picks, for a requested data
+//! dimension, the variant with the smallest `d_pad ≥ d` (the backend
+//! zero-pads features — margins and sub-gradients are unaffected because
+//! padded coordinates are identically zero in both `X` and `w`).
+
+use crate::util::Json;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// One manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Logical kernel name (`pegasos_steps`, `objective_eval`).
+    pub kernel: String,
+    /// Padded feature dimension the HLO was lowered for.
+    pub d: usize,
+    /// Mini-batch size per step.
+    pub batch: usize,
+    /// Fused scan steps.
+    pub steps: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub path: PathBuf,
+}
+
+/// The parsed registry.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    entries: Vec<ArtifactEntry>,
+    base: PathBuf,
+}
+
+impl ArtifactRegistry {
+    /// Loads `manifest.json` from the artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!(
+                "read {} — artifacts missing; run `make artifacts` first",
+                manifest.display()
+            )
+        })?;
+        Self::from_json(&text, dir)
+    }
+
+    /// Parses manifest JSON (exposed for tests).
+    pub fn from_json(text: &str, base: impl Into<PathBuf>) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let arr = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: missing `artifacts` array")?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let field = |k: &str| {
+                e.get(k).with_context(|| format!("manifest entry {i}: missing {k:?}"))
+            };
+            entries.push(ArtifactEntry {
+                kernel: field("kernel")?.as_str().context("kernel must be a string")?.to_string(),
+                d: field("d")?.as_usize().context("d must be a number")?,
+                batch: field("batch")?.as_usize().context("batch must be a number")?,
+                steps: field("steps")?.as_usize().context("steps must be a number")?,
+                path: PathBuf::from(
+                    field("path")?.as_str().context("path must be a string")?,
+                ),
+            });
+        }
+        Ok(Self { entries, base: base.into() })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Selects the best variant: matching kernel/batch/steps with the
+    /// smallest `d ≥ data_dim`.
+    pub fn select(
+        &self,
+        kernel: &str,
+        data_dim: usize,
+        batch: usize,
+        steps: usize,
+    ) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kernel == kernel && e.batch == batch && e.steps == steps && e.d >= data_dim
+            })
+            .min_by_key(|e| e.d)
+            .with_context(|| {
+                let have: Vec<String> = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.kernel == kernel)
+                    .map(|e| format!("(d={}, b={}, s={})", e.d, e.batch, e.steps))
+                    .collect();
+                format!(
+                    "no artifact for kernel {kernel:?} with d ≥ {data_dim}, batch {batch}, \
+                     steps {steps}; available: [{}] — re-run `make artifacts` with matching \
+                     variants (python/compile/aot.py --help)",
+                    have.join(", ")
+                )
+            })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn resolve(&self, e: &ArtifactEntry) -> PathBuf {
+        self.base.join(&e.path)
+    }
+
+    /// Verifies every listed file exists.
+    pub fn check_files(&self) -> Result<()> {
+        for e in &self.entries {
+            let p = self.resolve(e);
+            if !p.is_file() {
+                bail!("manifest lists missing file {}", p.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "artifacts": [
+            {"kernel": "pegasos_steps", "d": 64, "batch": 1, "steps": 1, "path": "a64.hlo.txt"},
+            {"kernel": "pegasos_steps", "d": 256, "batch": 1, "steps": 1, "path": "a256.hlo.txt"},
+            {"kernel": "pegasos_steps", "d": 256, "batch": 8, "steps": 4, "path": "b256.hlo.txt"},
+            {"kernel": "objective_eval", "d": 256, "batch": 128, "steps": 1, "path": "e256.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let r = ArtifactRegistry::from_json(MANIFEST, "/tmp/x").unwrap();
+        assert_eq!(r.entries().len(), 4);
+        assert_eq!(r.entries()[0].kernel, "pegasos_steps");
+    }
+
+    #[test]
+    fn selects_smallest_adequate_dim() {
+        let r = ArtifactRegistry::from_json(MANIFEST, "/tmp/x").unwrap();
+        assert_eq!(r.select("pegasos_steps", 60, 1, 1).unwrap().d, 64);
+        assert_eq!(r.select("pegasos_steps", 64, 1, 1).unwrap().d, 64);
+        assert_eq!(r.select("pegasos_steps", 65, 1, 1).unwrap().d, 256);
+    }
+
+    #[test]
+    fn missing_variant_is_helpful_error() {
+        let r = ArtifactRegistry::from_json(MANIFEST, "/tmp/x").unwrap();
+        let err = r.select("pegasos_steps", 1000, 1, 1).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        assert!(err.contains("d ≥ 1000"), "{err}");
+    }
+
+    #[test]
+    fn batch_steps_must_match_exactly() {
+        let r = ArtifactRegistry::from_json(MANIFEST, "/tmp/x").unwrap();
+        assert!(r.select("pegasos_steps", 10, 8, 4).is_ok());
+        assert!(r.select("pegasos_steps", 10, 8, 2).is_err());
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(ArtifactRegistry::from_json("{}", "/tmp").is_err());
+        assert!(ArtifactRegistry::from_json(r#"{"artifacts": [{"kernel": "x"}]}"#, "/tmp").is_err());
+    }
+
+    #[test]
+    fn check_files_flags_missing() {
+        let r = ArtifactRegistry::from_json(MANIFEST, "/nonexistent-dir").unwrap();
+        assert!(r.check_files().is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! PJRT runtime bridge: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, emitted by `python/compile/aot.py`) and runs
+//! them from the rust hot path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto` —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! * [`artifacts`] — the manifest-driven registry: shape variants keyed by
+//!   `(d, batch, steps)`, selected by smallest padding.
+//! * [`pjrt`] — the executable wrapper: compile-once, execute with f32
+//!   literals, unwrap the 1-tuple convention.
+//! * [`xla_backend`] — [`crate::coordinator::LocalBackend`] implemented on
+//!   top: samples batches with the node RNG (identically to the native
+//!   backend), marshals dense blocks, executes `pegasos_steps`.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod xla_backend;
+
+pub use artifacts::{ArtifactEntry, ArtifactRegistry};
+pub use pjrt::PjrtExecutable;
+pub use xla_backend::XlaBackend;
+
+/// Default artifact directory, overridable with `GADGET_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("GADGET_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

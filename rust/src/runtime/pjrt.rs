@@ -1,0 +1,135 @@
+//! PJRT executable wrapper: HLO text → compiled executable → f32 execution.
+//!
+//! Ownership model: each `PjrtExecutable` owns its *own* PJRT CPU client.
+//! The xla crate's handles are `Rc`-based (not thread-safe); by keeping the
+//! whole client→executable→buffer family inside one struct that is used
+//! exclusively through `&mut self`, the non-atomic refcounts are never
+//! touched from two threads concurrently, and the struct can be moved
+//! across threads safely (hence the manual `Send`). CPU client creation is
+//! a few milliseconds — negligible against artifact compilation.
+
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// A compiled XLA program with an f32 calling convention.
+pub struct PjrtExecutable {
+    /// Keep the client alive for the executable's lifetime (field order
+    /// matters: `exe` drops before `client`).
+    exe: xla::PjRtLoadedExecutable,
+    _client: xla::PjRtClient,
+    /// Human-readable origin (artifact path) for error messages.
+    origin: String,
+}
+
+// SAFETY: every Rc in the client/executable family is owned by this struct
+// and only reachable through `&mut self` / `self` — no concurrent access is
+// possible without an exterior `Sync` wrapper, which we do not implement.
+unsafe impl Send for PjrtExecutable {}
+
+impl PjrtExecutable {
+    /// Loads HLO text from `path` and compiles it on a fresh CPU client.
+    pub fn compile_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Self { exe, _client: client, origin: path.display().to_string() })
+    }
+
+    /// Compiles HLO text directly (tests).
+    pub fn compile_text(text: &str) -> Result<Self> {
+        let tmp = crate::util::TempDir::new()?;
+        let p = tmp.path().join("prog.hlo.txt");
+        std::fs::write(&p, text)?;
+        Self::compile_file(&p)
+    }
+
+    /// Executes with f32 tensor arguments `(data, dims)`; returns the
+    /// flattened f32 outputs of the result tuple.
+    ///
+    /// The AOT convention (`aot.py`, `return_tuple=True`) makes the single
+    /// on-device result a tuple literal; each element comes back as one
+    /// `Vec<f32>`.
+    pub fn execute_f32(&mut self, args: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for (data, dims) in args {
+            let expected: i64 = dims.iter().product();
+            anyhow::ensure!(
+                expected as usize == data.len(),
+                "argument shape {:?} does not match {} elements",
+                dims,
+                data.len()
+            );
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(dims)
+                    .with_context(|| format!("reshape arg to {dims:?} ({})", self.origin))?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.origin))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-written HLO program: f(x, y) = (x + y,) over f32[4].
+    const ADD_HLO: &str = r#"
+HloModule add4, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+
+    #[test]
+    fn compile_and_execute_text() {
+        let mut exe = PjrtExecutable::compile_text(ADD_HLO).unwrap();
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        let out = exe.execute_f32(&[(&x, &[4]), (&y, &[4])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut exe = PjrtExecutable::compile_text(ADD_HLO).unwrap();
+        let x = [1.0f32, 2.0];
+        assert!(exe.execute_f32(&[(&x, &[4]), (&x, &[4])]).is_err());
+    }
+
+    #[test]
+    fn executes_repeatedly() {
+        let mut exe = PjrtExecutable::compile_text(ADD_HLO).unwrap();
+        for i in 0..10 {
+            let x = [i as f32; 4];
+            let out = exe.execute_f32(&[(&x, &[4]), (&x, &[4])]).unwrap();
+            assert_eq!(out[0][0], 2.0 * i as f32);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! The XLA local-learner backend: Algorithm 2's steps (a)–(f) executed by
+//! the AOT-compiled JAX/Pallas `pegasos_steps` artifact on the PJRT CPU
+//! client.
+//!
+//! Contract with the native backend: batches are sampled from the *same*
+//! node RNG in the same order, so both backends follow the same
+//! optimization trajectory up to f32-vs-f64 rounding — `rust/tests/`
+//! asserts this equivalence end-to-end.
+//!
+//! Artifact calling convention (must match `python/compile/model.py`):
+//!
+//! ```text
+//! pegasos_steps(w: f32[d], xs: f32[S·B·d], ys: f32[S·B],
+//!               t0: f32[1], lam: f32[1]) -> (w': f32[d],)
+//! ```
+//!
+//! where `S = local_steps` scan iterations of mini-batch size `B`, learning
+//! rate `αₜ = 1/(λ·(t0 + s + 1))`, with the `1/√λ`-ball projection applied
+//! every step (the artifact is lowered with projection on — the paper's
+//! default; configs with `project_local = false` must use the native
+//! backend).
+
+use super::artifacts::ArtifactRegistry;
+use super::pjrt::PjrtExecutable;
+use crate::coordinator::backend::{LocalBackend, StepContext};
+use crate::Result;
+use anyhow::Context;
+
+/// PJRT-backed Pegasos stepper.
+pub struct XlaBackend {
+    exe: PjrtExecutable,
+    /// Padded feature dimension of the compiled artifact.
+    d_pad: usize,
+    batch: usize,
+    steps: usize,
+    // marshalling buffers reused across calls (no hot-loop allocation)
+    w_buf: Vec<f32>,
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+}
+
+impl XlaBackend {
+    /// Loads the best-fitting `pegasos_steps` artifact from the default
+    /// artifact directory (env `GADGET_ARTIFACTS` or `./artifacts`).
+    pub fn from_default_artifacts(
+        data_dim: usize,
+        batch: usize,
+        steps: usize,
+        _lambda: f64,
+    ) -> Result<Self> {
+        Self::from_registry(&ArtifactRegistry::load(super::artifacts_dir())?, data_dim, batch, steps)
+    }
+
+    /// Loads from an explicit registry.
+    pub fn from_registry(
+        reg: &ArtifactRegistry,
+        data_dim: usize,
+        batch: usize,
+        steps: usize,
+    ) -> Result<Self> {
+        let entry = reg.select("pegasos_steps", data_dim, batch, steps)?;
+        let exe = PjrtExecutable::compile_file(reg.resolve(entry))
+            .with_context(|| format!("compiling artifact for d={}", entry.d))?;
+        Ok(Self {
+            exe,
+            d_pad: entry.d,
+            batch,
+            steps,
+            w_buf: vec![0.0; entry.d],
+            x_buf: vec![0.0; steps * batch * entry.d],
+            y_buf: vec![0.0; steps * batch],
+        })
+    }
+
+    /// The artifact's padded dimension.
+    pub fn padded_dim(&self) -> usize {
+        self.d_pad
+    }
+}
+
+impl LocalBackend for XlaBackend {
+    fn local_step(&mut self, ctx: &mut StepContext<'_>, w: &mut [f64]) -> Result<()> {
+        anyhow::ensure!(
+            ctx.project,
+            "the pegasos_steps artifact is lowered with projection on; \
+             set project_local = true or use backend = \"native\""
+        );
+        anyhow::ensure!(
+            ctx.batch_size == self.batch && ctx.local_steps == self.steps,
+            "artifact compiled for (batch={}, steps={}), got ({}, {})",
+            self.batch,
+            self.steps,
+            ctx.batch_size,
+            ctx.local_steps
+        );
+        anyhow::ensure!(
+            ctx.shard.dim <= self.d_pad,
+            "shard dim {} exceeds artifact dim {}",
+            ctx.shard.dim,
+            self.d_pad
+        );
+        let n = ctx.shard.len();
+        anyhow::ensure!(n > 0, "xla backend: empty shard");
+
+        // Sample the S×B batch indices in the same order as NativeBackend.
+        self.x_buf.iter_mut().for_each(|v| *v = 0.0);
+        for s in 0..self.steps {
+            for b in 0..self.batch {
+                let i = ctx.rng.below(n);
+                let (x, y) = ctx.shard.sample(i);
+                let base = (s * self.batch + b) * self.d_pad;
+                for (&j, &v) in x.indices.iter().zip(&x.values) {
+                    self.x_buf[base + j as usize] = v;
+                }
+                self.y_buf[s * self.batch + b] = y as f32;
+            }
+        }
+        // Pad w.
+        for (dst, &src) in self.w_buf.iter_mut().zip(w.iter()) {
+            *dst = src as f32;
+        }
+        for dst in self.w_buf[w.len()..].iter_mut() {
+            *dst = 0.0;
+        }
+        let t0 = [(((ctx.t - 1) * self.steps) as f32)];
+        let lam = [ctx.lambda as f32];
+
+        let out = self.exe.execute_f32(&[
+            (&self.w_buf, &[self.d_pad as i64]),
+            (
+                &self.x_buf,
+                &[self.steps as i64, self.batch as i64, self.d_pad as i64],
+            ),
+            (&self.y_buf, &[self.steps as i64, self.batch as i64]),
+            (&t0, &[1]),
+            (&lam, &[1]),
+        ])?;
+        anyhow::ensure!(out.len() == 1, "pegasos_steps: expected 1 output, got {}", out.len());
+        anyhow::ensure!(
+            out[0].len() == self.d_pad,
+            "pegasos_steps: output dim {} != {}",
+            out[0].len(),
+            self.d_pad
+        );
+        for (dst, &src) in w.iter_mut().zip(&out[0]) {
+            *dst = src as f64;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::rng::Rng;
+
+    fn artifacts_available() -> bool {
+        ArtifactRegistry::load(crate::runtime::artifacts_dir()).is_ok()
+    }
+
+    fn shard(d: usize) -> crate::data::Dataset {
+        let spec = DatasetSpec {
+            name: "xb".into(),
+            train_size: 128,
+            test_size: 32,
+            features: d,
+            nnz_per_row: 8,
+            noise: 0.02,
+            positive_rate: 0.5,
+            lambda: 1e-2,
+        };
+        generate(&spec, 31, 1.0).train
+    }
+
+    /// Runs `iters` GADGET-style local iterations with the given backend.
+    fn run_backend(
+        backend: &mut dyn LocalBackend,
+        ds: &crate::data::Dataset,
+        iters: usize,
+        batch: usize,
+        steps: usize,
+    ) -> Vec<f64> {
+        let mut rng = Rng::new(123);
+        let mut w = vec![0.0; ds.dim];
+        for t in 1..=iters {
+            let mut ctx = StepContext {
+                shard: ds,
+                t,
+                lambda: 1e-2,
+                batch_size: batch,
+                local_steps: steps,
+                project: true,
+                rng: &mut rng,
+            };
+            backend.local_step(&mut ctx, &mut w).unwrap();
+        }
+        w
+    }
+
+    #[test]
+    fn xla_matches_native_trajectory() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let ds = shard(48); // pads to the 64-dim artifact
+        let reg = ArtifactRegistry::load(crate::runtime::artifacts_dir()).unwrap();
+        let mut xla = match XlaBackend::from_registry(&reg, ds.dim, 1, 1) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+        let w_xla = run_backend(&mut xla, &ds, 30, 1, 1);
+        let w_nat = run_backend(&mut NativeBackend::default(), &ds, 30, 1, 1);
+        // f32 artifact vs f64 native: close but not bit-equal
+        let mut num = 0.0;
+        let mut den = 0.0f64;
+        for k in 0..ds.dim {
+            num += (w_xla[k] - w_nat[k]).powi(2);
+            den += w_nat[k].powi(2);
+        }
+        let rel = (num / den.max(1e-12)).sqrt();
+        assert!(rel < 1e-3, "relative trajectory divergence {rel}");
+    }
+
+    #[test]
+    fn xla_backend_learns() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let ds = shard(48);
+        let reg = ArtifactRegistry::load(crate::runtime::artifacts_dir()).unwrap();
+        let mut xla = match XlaBackend::from_registry(&reg, ds.dim, 8, 4) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+        let w = run_backend(&mut xla, &ds, 100, 8, 4);
+        let acc = crate::metrics::accuracy(&w, &ds);
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn mismatched_shape_is_error() {
+        if !artifacts_available() {
+            return;
+        }
+        let ds = shard(48);
+        let reg = ArtifactRegistry::load(crate::runtime::artifacts_dir()).unwrap();
+        if let Ok(mut xla) = XlaBackend::from_registry(&reg, ds.dim, 1, 1) {
+            let mut rng = Rng::new(0);
+            let mut w = vec![0.0; ds.dim];
+            let mut ctx = StepContext {
+                shard: &ds,
+                t: 1,
+                lambda: 1e-2,
+                batch_size: 2, // != compiled batch
+                local_steps: 1,
+                project: true,
+                rng: &mut rng,
+            };
+            assert!(xla.local_step(&mut ctx, &mut w).is_err());
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Dual coordinate descent for L1-loss linear SVM (Hsieh et al., ICML 2008
+//! — the LIBLINEAR solver). Converges to the *exact* optimum of the paper's
+//! Eq. 1, so the experiment harness uses it to compute the reference
+//! `f(w*)` in sub-optimality plots and the Theorem-2 bound check.
+//!
+//! Mapping to the paper's objective: Eq. 1 is
+//! `(λ/2)‖w‖² + (1/N)Σ hinge`, which equals `C`-parameterized
+//! `½‖w‖² + C·Σ hinge` scaled by λ, with `C = 1/(λN)`.
+//!
+//! Dual: `min_α ½ αᵀQα − 𝟙ᵀα` s.t. `0 ≤ αᵢ ≤ C`, with
+//! `Q_ij = yᵢyⱼ xᵢᵀxⱼ` — solved coordinate-wise keeping `w = Σ αᵢyᵢxᵢ`.
+
+use super::{LinearModel, Solver};
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// Dual coordinate-descent solver.
+#[derive(Clone, Debug)]
+pub struct DualCoordinateDescent {
+    lambda: f64,
+    max_epochs: usize,
+    tol: f64,
+    seed: u64,
+    /// Filled by `fit`: number of epochs actually run.
+    pub epochs_run: usize,
+}
+
+impl DualCoordinateDescent {
+    /// Creates a solver for regularization `lambda`, stopping after
+    /// `max_epochs` or when the maximal projected-gradient violation over
+    /// an epoch falls below `tol`.
+    pub fn new(lambda: f64, max_epochs: usize, tol: f64, seed: u64) -> Self {
+        assert!(lambda > 0.0, "DCD: lambda must be positive");
+        Self { lambda, max_epochs, tol, seed, epochs_run: 0 }
+    }
+}
+
+impl Solver for DualCoordinateDescent {
+    fn fit(&mut self, ds: &Dataset) -> LinearModel {
+        assert!(!ds.is_empty(), "DCD: empty dataset");
+        let n = ds.len();
+        let c_upper = 1.0 / (self.lambda * n as f64);
+        let mut alpha = vec![0.0f64; n];
+        let mut w = vec![0.0f64; ds.dim];
+        // Q_ii = ‖x_i‖² (y² = 1)
+        let qii: Vec<f64> = ds.rows.iter().map(|r| r.l2_norm_sq()).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(self.seed);
+
+        self.epochs_run = 0;
+        for _ in 0..self.max_epochs {
+            rng.shuffle(&mut order);
+            let mut max_violation = 0.0f64;
+            for &i in &order {
+                if qii[i] <= 0.0 {
+                    continue;
+                }
+                let (x, y) = ds.sample(i);
+                // G = y·⟨w,x⟩ − 1 (gradient of the dual coordinate)
+                let g = y * x.dot_dense(&w) - 1.0;
+                // projected gradient
+                let pg = if alpha[i] <= 0.0 {
+                    g.min(0.0)
+                } else if alpha[i] >= c_upper {
+                    g.max(0.0)
+                } else {
+                    g
+                };
+                max_violation = max_violation.max(pg.abs());
+                if pg.abs() > 1e-14 {
+                    let old = alpha[i];
+                    let new = (old - g / qii[i]).clamp(0.0, c_upper);
+                    if (new - old).abs() > 0.0 {
+                        alpha[i] = new;
+                        x.axpy_into((new - old) * y, &mut w);
+                    }
+                }
+            }
+            self.epochs_run += 1;
+            if max_violation < self.tol {
+                break;
+            }
+        }
+        // Rescale: the C-parameterized primal is (1/λ)·Eq.1 with w shared,
+        // so w is already the Eq.1 minimizer — no rescale needed.
+        LinearModel { w }
+    }
+
+    fn name(&self) -> &'static str {
+        "dcd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::objective;
+    use crate::solver::testutil::{accuracy, easy_problem};
+
+    #[test]
+    fn reaches_low_objective() {
+        let (train, test) = easy_problem(31);
+        let lambda = 1e-2;
+        let mut dcd = DualCoordinateDescent::new(lambda, 100, 1e-8, 1);
+        let m = dcd.fit(&train);
+        assert!(accuracy(&m, &test) > 0.9);
+        assert!(dcd.epochs_run <= 100);
+    }
+
+    #[test]
+    fn beats_or_matches_every_other_solver() {
+        // DCD is the reference optimum: nothing may achieve a lower Eq.1
+        // objective (modulo tolerance).
+        let (train, _) = easy_problem(32);
+        let lambda = 1e-2;
+        let f_dcd = {
+            let mut s = DualCoordinateDescent::new(lambda, 300, 1e-10, 2);
+            objective(&s.fit(&train).w, &train, lambda)
+        };
+        let f_peg = {
+            let mut s = crate::solver::Pegasos::new(crate::solver::PegasosParams {
+                lambda,
+                iterations: 30_000,
+                batch_size: 1,
+                project: true,
+                seed: 2,
+            });
+            objective(&s.fit(&train).w, &train, lambda)
+        };
+        let f_sgd = {
+            let mut s =
+                crate::solver::SvmSgd::new(crate::solver::SvmSgdParams { lambda, epochs: 30, seed: 2 });
+            objective(&s.fit(&train).w, &train, lambda)
+        };
+        assert!(f_dcd <= f_peg + 1e-6, "dcd {f_dcd} vs pegasos {f_peg}");
+        assert!(f_dcd <= f_sgd + 1e-6, "dcd {f_dcd} vs sgd {f_sgd}");
+    }
+
+    #[test]
+    fn kkt_conditions_hold_at_convergence() {
+        let (train, _) = easy_problem(33);
+        let lambda = 5e-2;
+        let mut dcd = DualCoordinateDescent::new(lambda, 500, 1e-10, 3);
+        let m = dcd.fit(&train);
+        // At the optimum: margin > 1 ⇒ no loss contribution; margin < 1
+        // samples must be "support"-active. Check the sub-gradient optimality
+        // residual ‖λw − (1/N)Σ_{violators} y x‖ is small in the span sense:
+        // compute the primal objective and verify perturbations don't help.
+        let f0 = objective(&m.w, &train, lambda);
+        let mut rng = crate::rng::Rng::new(7);
+        for _ in 0..10 {
+            let mut w2 = m.w.clone();
+            for v in w2.iter_mut() {
+                *v += 1e-3 * rng.normal();
+            }
+            assert!(objective(&w2, &train, lambda) > f0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn early_stop_on_tolerance() {
+        let (train, _) = easy_problem(34);
+        let mut dcd = DualCoordinateDescent::new(1e-1, 10_000, 1e-3, 4);
+        dcd.fit(&train);
+        assert!(dcd.epochs_run < 10_000, "never hit tolerance");
+    }
+}

@@ -1,0 +1,171 @@
+//! Native linear-SVM solvers: the local learner and every baseline the
+//! paper compares against.
+//!
+//! * [`pegasos`] — mini-batch Pegasos (Shalev-Shwartz et al. 2007): the
+//!   centralized baseline of Tables 3/5 and GADGET's local update rule.
+//! * [`svm_sgd`] — Bottou's SVM-SGD: the second online baseline of Table 4.
+//! * [`svm_perf`] — a cutting-plane solver for Joachims' structural
+//!   formulation (Eq. 6 of the paper): the SVM-Perf stand-in of Table 4.
+//! * [`dcd`] — dual coordinate descent (Hsieh et al. 2008): not in the
+//!   paper's comparison, but used as the high-precision reference optimum
+//!   `f(w*)` when reporting sub-optimality in the figures and the
+//!   Theorem-2 bound checks.
+//!
+//! All solvers optimize the same primal objective (paper Eq. 1):
+//! `F(w) = (λ/2)‖w‖² + (1/N) Σ max{0, 1 − y⟨w,x⟩}` — no bias term, exactly
+//! as in Pegasos and the paper's experiments.
+
+pub mod dcd;
+pub mod multiclass;
+pub mod pegasos;
+pub mod scaled;
+pub mod svm_perf;
+pub mod svm_sgd;
+
+pub use dcd::DualCoordinateDescent;
+pub use multiclass::{MulticlassDataset, MulticlassModel};
+pub use pegasos::{Pegasos, PegasosParams};
+pub use scaled::ScaledVector;
+pub use svm_perf::{SvmPerf, SvmPerfParams};
+pub use svm_sgd::{SvmSgd, SvmSgdParams};
+
+use crate::data::Dataset;
+
+/// A trained linear model `f(x) = ⟨w, x⟩` (the paper's formulation carries
+/// no intercept; the synthetic generators plant the bias into the data).
+#[derive(Clone, Debug, Default)]
+pub struct LinearModel {
+    /// Weight vector.
+    pub w: Vec<f64>,
+}
+
+impl LinearModel {
+    /// Zero model of dimension `d`.
+    pub fn zeros(d: usize) -> Self {
+        Self { w: vec![0.0; d] }
+    }
+
+    /// Serializes to the project's JSON model format
+    /// (`{"format": "gadget-linear-v1", "dim": d, "w": [...]}`).
+    pub fn to_json(&self) -> crate::util::Json {
+        crate::util::Json::obj(vec![
+            ("format", crate::util::Json::Str("gadget-linear-v1".into())),
+            ("dim", crate::util::Json::Num(self.w.len() as f64)),
+            ("w", crate::util::Json::nums(&self.w)),
+        ])
+    }
+
+    /// Writes the model to a JSON file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Loads a model written by [`Self::save`], validating format and dim.
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        use anyhow::Context;
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read model {}", path.as_ref().display()))?;
+        let doc = crate::util::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("model parse: {e}"))?;
+        anyhow::ensure!(
+            doc.get("format").and_then(crate::util::Json::as_str) == Some("gadget-linear-v1"),
+            "not a gadget-linear-v1 model file"
+        );
+        let w: Vec<f64> = doc
+            .get("w")
+            .and_then(crate::util::Json::as_arr)
+            .context("model: missing w array")?
+            .iter()
+            .map(|v| v.as_f64().context("model: non-numeric weight"))
+            .collect::<crate::Result<_>>()?;
+        let dim = doc.get("dim").and_then(crate::util::Json::as_usize).unwrap_or(w.len());
+        anyhow::ensure!(dim == w.len(), "model: dim {} != weights {}", dim, w.len());
+        Ok(Self { w })
+    }
+
+    /// Raw score `⟨w, x⟩`.
+    #[inline]
+    pub fn score(&self, x: &crate::linalg::SparseVec) -> f64 {
+        x.dot_dense(&self.w)
+    }
+
+    /// Predicted label in {−1, +1}.
+    #[inline]
+    pub fn predict(&self, x: &crate::linalg::SparseVec) -> i8 {
+        if self.score(x) >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+/// Common interface over the native solvers (used by the Table-4 harness to
+/// run each baseline per node under an identical protocol).
+pub trait Solver {
+    /// Trains on `ds` and returns the model.
+    fn fit(&mut self, ds: &Dataset) -> LinearModel;
+    /// Human-readable solver name for reports.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod model_io_tests {
+    use super::LinearModel;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let p = tmp.path().join("model.json");
+        let m = LinearModel { w: vec![1.5, -2.25, 0.0, 1e-9] };
+        m.save(&p).unwrap();
+        let back = LinearModel::load(&p).unwrap();
+        assert_eq!(back.w, m.w);
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_wrong_format() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let p = tmp.path().join("bad.json");
+        std::fs::write(&p, "{not json").unwrap();
+        assert!(LinearModel::load(&p).is_err());
+        std::fs::write(&p, r#"{"format": "other", "w": [1]}"#).unwrap();
+        assert!(LinearModel::load(&p).is_err());
+        std::fs::write(&p, r#"{"format": "gadget-linear-v1", "dim": 3, "w": [1]}"#).unwrap();
+        assert!(LinearModel::load(&p).is_err());
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::data::Dataset;
+
+    /// A small, clearly separable problem every solver must crack.
+    pub fn easy_problem(seed: u64) -> (Dataset, Dataset) {
+        let spec = DatasetSpec {
+            name: "easy".into(),
+            train_size: 800,
+            test_size: 400,
+            features: 32,
+            nnz_per_row: 8,
+            noise: 0.02,
+            positive_rate: 0.5,
+            lambda: 1e-3,
+        };
+        let s = generate(&spec, seed, 1.0);
+        (s.train, s.test)
+    }
+
+    pub fn accuracy(model: &super::LinearModel, ds: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            let (x, y) = ds.sample(i);
+            if model.score(x) * y > 0.0 {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.len() as f64
+    }
+}

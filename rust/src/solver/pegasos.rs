@@ -1,0 +1,227 @@
+//! Mini-batch Pegasos: Primal Estimated sub-GrAdient SOlver for SVM
+//! (Shalev-Shwartz, Singer & Srebro, ICML 2007).
+//!
+//! This is both the paper's *centralized baseline* (Tables 3/5, the figures)
+//! and the local update rule inside GADGET (Algorithm 2 steps (a)–(f)).
+//!
+//! Per step `t`:
+//! 1. draw a mini-batch `A_t` of `k` samples uniformly from the data;
+//! 2. violators `A_t⁺ = {(x,y) ∈ A_t : y⟨w,x⟩ < 1}`;
+//! 3. `αₜ = 1/(λt)`; `w ← (1 − λαₜ)·w + (αₜ/k)·Σ_{A_t⁺} y·x`;
+//! 4. optionally project onto the ball of radius `1/√λ`.
+//!
+//! The shrink uses the O(1) scaled representation ([`super::scaled`]), so a
+//! step costs `O(k·nnz)` independent of `d`.
+
+use super::{LinearModel, ScaledVector, Solver};
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// Pegasos hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct PegasosParams {
+    /// Regularization λ (paper Table 2 values per dataset).
+    pub lambda: f64,
+    /// Number of sub-gradient steps `T`.
+    pub iterations: usize,
+    /// Mini-batch size `k` (1 = the paper's single-sample variant).
+    pub batch_size: usize,
+    /// Project onto the `1/√λ` ball each step (Algorithm 2 step (f)).
+    pub project: bool,
+    /// RNG seed for batch sampling.
+    pub seed: u64,
+}
+
+impl Default for PegasosParams {
+    fn default() -> Self {
+        Self { lambda: 1e-4, iterations: 10_000, batch_size: 1, project: true, seed: 0 }
+    }
+}
+
+/// The solver object (holds parameters; state is per-`fit`).
+#[derive(Clone, Debug)]
+pub struct Pegasos {
+    /// Parameters.
+    pub params: PegasosParams,
+}
+
+impl Pegasos {
+    /// Creates a solver with the given parameters.
+    pub fn new(params: PegasosParams) -> Self {
+        Self { params }
+    }
+
+    /// Runs `fit` but also invokes `snapshot(t, w)` every `every` steps —
+    /// how the figure harness collects objective-vs-time traces without
+    /// re-training.
+    pub fn fit_with_snapshots<F: FnMut(usize, &[f64])>(
+        &self,
+        ds: &Dataset,
+        every: usize,
+        mut snapshot: F,
+    ) -> LinearModel {
+        let p = &self.params;
+        assert!(p.lambda > 0.0, "Pegasos: lambda must be positive");
+        assert!(p.batch_size >= 1, "Pegasos: batch size must be ≥ 1");
+        assert!(!ds.is_empty(), "Pegasos: empty dataset");
+        let mut rng = Rng::new(p.seed);
+        let mut w = ScaledVector::zeros(ds.dim);
+        let radius = 1.0 / p.lambda.sqrt();
+
+        for t in 1..=p.iterations {
+            let alpha = 1.0 / (p.lambda * t as f64);
+            // Accumulate the violator sub-gradient for this batch *before*
+            // shrinking (the update uses wₜ, not the shrunk vector).
+            // We gather (index, margin) first to avoid borrowing issues.
+            let shrink = 1.0 - p.lambda * alpha; // = 1 - 1/t
+            let step = alpha / p.batch_size as f64;
+            if p.batch_size == 1 {
+                let i = rng.below(ds.len());
+                let (x, y) = ds.sample(i);
+                let margin = y * w.dot_sparse(x);
+                if shrink != 0.0 {
+                    w.scale_by(shrink);
+                } else {
+                    w.set_zero(); // t = 1: (1 - 1/t) = 0
+                }
+                if margin < 1.0 {
+                    w.add_sparse(step * y, x);
+                }
+            } else {
+                // batch: record violator indices at wₜ, then update
+                let mut violators: Vec<usize> = Vec::with_capacity(p.batch_size);
+                for _ in 0..p.batch_size {
+                    let i = rng.below(ds.len());
+                    let (x, y) = ds.sample(i);
+                    if y * w.dot_sparse(x) < 1.0 {
+                        violators.push(i);
+                    }
+                }
+                if shrink != 0.0 {
+                    w.scale_by(shrink);
+                } else {
+                    w.set_zero();
+                }
+                for &i in &violators {
+                    let (x, y) = ds.sample(i);
+                    w.add_sparse(step * y, x);
+                }
+            }
+            if p.project {
+                w.project_to_ball(radius);
+            }
+            if every > 0 && t % every == 0 {
+                snapshot(t, &w.to_dense());
+            }
+        }
+        LinearModel { w: w.to_dense() }
+    }
+}
+
+impl Solver for Pegasos {
+    fn fit(&mut self, ds: &Dataset) -> LinearModel {
+        self.fit_with_snapshots(ds, 0, |_, _| {})
+    }
+
+    fn name(&self) -> &'static str {
+        "pegasos"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::objective;
+    use crate::solver::testutil::{accuracy, easy_problem};
+
+    fn params(iters: usize) -> PegasosParams {
+        PegasosParams { lambda: 1e-3, iterations: iters, batch_size: 1, project: true, seed: 42 }
+    }
+
+    #[test]
+    fn learns_separable_problem() {
+        let (train, test) = easy_problem(1);
+        let mut s = Pegasos::new(params(20_000));
+        let model = s.fit(&train);
+        let acc = accuracy(&model, &test);
+        assert!(acc > 0.9, "test accuracy {acc}");
+    }
+
+    #[test]
+    fn objective_decreases_with_more_iterations() {
+        let (train, _) = easy_problem(2);
+        let lambda = 1e-3;
+        let obj_at = |iters: usize| {
+            let mut s = Pegasos::new(params(iters));
+            let m = s.fit(&train);
+            objective(&m.w, &train, lambda)
+        };
+        let o_short = obj_at(200);
+        let o_long = obj_at(20_000);
+        assert!(
+            o_long < o_short,
+            "objective did not improve: {o_short} -> {o_long}"
+        );
+    }
+
+    #[test]
+    fn batch_variant_also_learns() {
+        let (train, test) = easy_problem(3);
+        let mut p = params(4_000);
+        p.batch_size = 8;
+        let model = Pegasos::new(p).fit(&train);
+        assert!(accuracy(&model, &test) > 0.9);
+    }
+
+    #[test]
+    fn projection_keeps_norm_bounded() {
+        let (train, _) = easy_problem(4);
+        let p = params(2_000);
+        let radius = 1.0 / p.lambda.sqrt();
+        let s = Pegasos::new(p);
+        let mut max_norm = 0.0f64;
+        s.fit_with_snapshots(&train, 100, |_, w| {
+            max_norm = max_norm.max(crate::linalg::l2_norm(w));
+        });
+        assert!(max_norm <= radius * (1.0 + 1e-9), "norm {max_norm} > radius {radius}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (train, _) = easy_problem(5);
+        let a = Pegasos::new(params(500)).fit(&train);
+        let b = Pegasos::new(params(500)).fit(&train);
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn snapshots_fire_at_requested_cadence() {
+        let (train, _) = easy_problem(6);
+        let mut steps = Vec::new();
+        Pegasos::new(params(1000)).fit_with_snapshots(&train, 250, |t, _| steps.push(t));
+        assert_eq!(steps, vec![250, 500, 750, 1000]);
+    }
+
+    #[test]
+    fn near_optimal_vs_dcd_reference() {
+        // Pegasos must approach the DCD optimum on a small problem.
+        let (train, _) = easy_problem(7);
+        let lambda = 1e-2;
+        let mut peg = Pegasos::new(PegasosParams {
+            lambda,
+            iterations: 60_000,
+            batch_size: 1,
+            project: true,
+            seed: 9,
+        });
+        let m = peg.fit(&train);
+        let mut dcd = crate::solver::DualCoordinateDescent::new(lambda, 200, 1e-8, 11);
+        let opt = crate::solver::Solver::fit(&mut dcd, &train);
+        let f_peg = objective(&m.w, &train, lambda);
+        let f_opt = objective(&opt.w, &train, lambda);
+        assert!(
+            f_peg - f_opt < 0.05 * f_opt.max(0.01),
+            "pegasos {f_peg} vs optimum {f_opt}"
+        );
+    }
+}

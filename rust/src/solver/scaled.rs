@@ -1,0 +1,212 @@
+//! Scaled-vector representation `w = a·v`.
+//!
+//! Pegasos/SVM-SGD multiply the whole weight vector by `(1 − λαₜ)` every
+//! step; done naively that is `O(d)` per step and dominates on the CCAT
+//! stand-in (d = 47 236, batch nnz ≈ 76). Storing `w` as a scalar `a` times
+//! a dense `v` turns the shrink into `a ← a·(1−λαₜ)` — O(1) — while sparse
+//! sub-gradient adds become `v[i] += (c/a)·x_i` — O(nnz). This is the
+//! classic trick from the SVM-SGD code and Pegasos §4; it is the single
+//! biggest native-path optimization (see EXPERIMENTS.md §Perf).
+
+/// A dense vector with a multiplicative scale factor.
+#[derive(Clone, Debug)]
+pub struct ScaledVector {
+    scale: f64,
+    v: Vec<f64>,
+    /// Cached ‖w‖² = scale²·‖v‖², maintained incrementally so projection
+    /// (which Pegasos does every step) is O(1) too.
+    norm_sq_v: f64,
+}
+
+impl ScaledVector {
+    /// Zero vector of dimension `d`.
+    pub fn zeros(d: usize) -> Self {
+        Self { scale: 1.0, v: vec![0.0; d], norm_sq_v: 0.0 }
+    }
+
+    /// Dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    /// Current scale factor.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// `‖w‖²` in O(1).
+    #[inline]
+    pub fn norm_sq(&self) -> f64 {
+        self.scale * self.scale * self.norm_sq_v
+    }
+
+    /// `⟨w, x⟩` for sparse `x` — O(nnz).
+    #[inline]
+    pub fn dot_sparse(&self, x: &crate::linalg::SparseVec) -> f64 {
+        self.scale * x.dot_dense(&self.v)
+    }
+
+    /// `w ← c·w` — O(1). Re-densifies if the scale underflows (the
+    /// numerical hazard the SVM-SGD readme warns about).
+    #[inline]
+    pub fn scale_by(&mut self, c: f64) {
+        assert!(c != 0.0, "scale_by(0) would lose the direction; use set_zero");
+        self.scale *= c;
+        if self.scale.abs() < 1e-120 {
+            self.rescale();
+        }
+    }
+
+    /// `w ← w + c·x` for sparse `x` — O(nnz), maintaining the norm cache.
+    pub fn add_sparse(&mut self, c: f64, x: &crate::linalg::SparseVec) {
+        let ci = c / self.scale;
+        for (&i, &xv) in x.indices.iter().zip(&x.values) {
+            let slot = &mut self.v[i as usize];
+            let old = *slot;
+            let new = old + ci * xv as f64;
+            *slot = new;
+            self.norm_sq_v += new * new - old * old;
+        }
+    }
+
+    /// Projects onto the ball of radius `r`: `w ← min{1, r/‖w‖}·w` — O(1).
+    pub fn project_to_ball(&mut self, r: f64) {
+        let n = self.norm_sq().sqrt();
+        if n > r && n > 0.0 {
+            self.scale_by(r / n);
+        }
+    }
+
+    /// Sets to zero, resetting the scale.
+    pub fn set_zero(&mut self) {
+        self.scale = 1.0;
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.norm_sq_v = 0.0;
+    }
+
+    /// Folds the scale into the storage (`scale = 1` afterwards).
+    pub fn rescale(&mut self) {
+        if self.scale != 1.0 {
+            for x in self.v.iter_mut() {
+                *x *= self.scale;
+            }
+            self.norm_sq_v *= self.scale * self.scale;
+            self.scale = 1.0;
+        }
+    }
+
+    /// Materializes `w` as a plain dense vector.
+    pub fn to_dense(&self) -> Vec<f64> {
+        self.v.iter().map(|&x| x * self.scale).collect()
+    }
+
+    /// Writes `w` into an existing slice (allocation-free hot-path variant).
+    pub fn to_dense_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.v.len(), "to_dense_into: dim mismatch");
+        for (o, &x) in out.iter_mut().zip(&self.v) {
+            *o = x * self.scale;
+        }
+    }
+
+    /// Loads from a dense vector.
+    pub fn from_dense(w: &[f64]) -> Self {
+        Self { scale: 1.0, v: w.to_vec(), norm_sq_v: crate::linalg::l2_norm_sq(w) }
+    }
+
+    /// Reloads from a dense slice in place, reusing the storage
+    /// (allocation-free counterpart of [`Self::from_dense`]).
+    pub fn load_dense(&mut self, w: &[f64]) {
+        assert_eq!(w.len(), self.v.len(), "load_dense: dim mismatch");
+        self.v.copy_from_slice(w);
+        self.scale = 1.0;
+        self.norm_sq_v = crate::linalg::l2_norm_sq(w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SparseVec;
+
+    #[test]
+    fn matches_naive_sequence() {
+        // Interleave scales and sparse adds; compare against a plain vector.
+        let mut sv = ScaledVector::zeros(6);
+        let mut naive = vec![0.0f64; 6];
+        let x1 = SparseVec::new(vec![0, 3], vec![1.0, -2.0]);
+        let x2 = SparseVec::new(vec![1, 3, 5], vec![0.5, 0.5, 4.0]);
+        let ops: Vec<(f64, Option<&SparseVec>)> =
+            vec![(1.0, Some(&x1)), (0.9, None), (-0.5, Some(&x2)), (0.99, None), (2.0, Some(&x1))];
+        for (c, x) in ops {
+            match x {
+                Some(x) => {
+                    sv.add_sparse(c, x);
+                    x.axpy_into(c, &mut naive);
+                }
+                None => {
+                    sv.scale_by(c);
+                    crate::linalg::scale_assign(c, &mut naive);
+                }
+            }
+        }
+        let dense = sv.to_dense();
+        for i in 0..6 {
+            assert!((dense[i] - naive[i]).abs() < 1e-12, "slot {i}");
+        }
+        assert!((sv.norm_sq() - crate::linalg::l2_norm_sq(&naive)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_respects_scale() {
+        let mut sv = ScaledVector::from_dense(&[1.0, 2.0, 0.0]);
+        sv.scale_by(0.5);
+        let x = SparseVec::new(vec![0, 1], vec![2.0, 1.0]);
+        assert!((sv.dot_sparse(&x) - (0.5 * (2.0 + 2.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projection_caps_norm() {
+        let mut sv = ScaledVector::from_dense(&[3.0, 4.0]);
+        sv.project_to_ball(2.5);
+        assert!((sv.norm_sq().sqrt() - 2.5).abs() < 1e-12);
+        // inside the ball: unchanged
+        let before = sv.to_dense();
+        sv.project_to_ball(10.0);
+        assert_eq!(sv.to_dense(), before);
+    }
+
+    #[test]
+    fn underflow_triggers_rescale() {
+        let mut sv = ScaledVector::from_dense(&[1.0]);
+        for _ in 0..5000 {
+            sv.scale_by(0.9);
+        }
+        // value underflows to ~0 but the representation stays finite
+        assert!(sv.scale().abs() >= 1e-130);
+        assert!(sv.to_dense()[0].is_finite());
+    }
+
+    #[test]
+    fn set_zero_resets() {
+        let mut sv = ScaledVector::from_dense(&[1.0, -2.0]);
+        sv.scale_by(0.5);
+        sv.set_zero();
+        assert_eq!(sv.to_dense(), vec![0.0, 0.0]);
+        assert_eq!(sv.norm_sq(), 0.0);
+        assert_eq!(sv.scale(), 1.0);
+    }
+
+    #[test]
+    fn rescale_is_identity_on_values() {
+        let mut sv = ScaledVector::from_dense(&[2.0, 3.0]);
+        sv.scale_by(0.25);
+        let before = sv.to_dense();
+        sv.rescale();
+        assert_eq!(sv.scale(), 1.0);
+        for (a, b) in sv.to_dense().iter().zip(&before) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! SVM-SGD (Bottou, 1998/2010): plain stochastic gradient descent on the
+//! regularized hinge objective with the `η_t = 1/(λ(t + t₀))` schedule —
+//! the second online baseline of Table 4.
+//!
+//! Differences from Pegasos, mirroring Bottou's published solver:
+//! * no projection step;
+//! * the `t₀` offset is calibrated on a small sample so the first steps are
+//!   not wildly too large (Bottou's `determineEta0` heuristic, simplified);
+//! * samples are visited in epoch order over a shuffled permutation rather
+//!   than i.i.d. draws.
+
+use super::{LinearModel, ScaledVector, Solver};
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// SVM-SGD hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct SvmSgdParams {
+    /// Regularization λ.
+    pub lambda: f64,
+    /// Number of epochs over the training set.
+    pub epochs: usize,
+    /// RNG seed (shuffling + t₀ calibration sample).
+    pub seed: u64,
+}
+
+impl Default for SvmSgdParams {
+    fn default() -> Self {
+        Self { lambda: 1e-4, epochs: 5, seed: 0 }
+    }
+}
+
+/// The SVM-SGD solver.
+#[derive(Clone, Debug)]
+pub struct SvmSgd {
+    /// Parameters.
+    pub params: SvmSgdParams,
+}
+
+impl SvmSgd {
+    /// Creates a solver with the given parameters.
+    pub fn new(params: SvmSgdParams) -> Self {
+        Self { params }
+    }
+
+    /// Bottou's skip-ahead heuristic for `t₀`: pick it so the initial step
+    /// size `η₀ = 1/(λ·t₀)` is about 1 / (typical ‖x‖²) — keeping the first
+    /// update from overshooting. We estimate the typical squared row norm
+    /// from ≤ 64 samples.
+    fn calibrate_t0(&self, ds: &Dataset, rng: &mut Rng) -> f64 {
+        let probes = ds.len().min(64);
+        let mut s = 0.0;
+        for _ in 0..probes {
+            s += ds.rows[rng.below(ds.len())].l2_norm_sq();
+        }
+        let typical = (s / probes as f64).max(1e-12);
+        // η₀ = 1/(λ t₀) = 1/typical  ⇒  t₀ = typical/λ
+        (typical / self.params.lambda).max(1.0)
+    }
+}
+
+impl Solver for SvmSgd {
+    fn fit(&mut self, ds: &Dataset) -> LinearModel {
+        let p = &self.params;
+        assert!(p.lambda > 0.0, "SvmSgd: lambda must be positive");
+        assert!(!ds.is_empty(), "SvmSgd: empty dataset");
+        let mut rng = Rng::new(p.seed);
+        let t0 = self.calibrate_t0(ds, &mut rng);
+        let mut w = ScaledVector::zeros(ds.dim);
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        let mut t = 0.0f64;
+        for _ in 0..p.epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let eta = 1.0 / (p.lambda * (t + t0));
+                let (x, y) = ds.sample(i);
+                let margin = y * w.dot_sparse(x);
+                // regularization shrink: w ← (1 − ηλ)·w
+                let shrink = 1.0 - eta * p.lambda;
+                if shrink > 0.0 {
+                    w.scale_by(shrink);
+                } else {
+                    w.set_zero();
+                }
+                // hinge part
+                if margin < 1.0 {
+                    w.add_sparse(eta * y, x);
+                }
+                t += 1.0;
+            }
+        }
+        LinearModel { w: w.to_dense() }
+    }
+
+    fn name(&self) -> &'static str {
+        "svm-sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::objective;
+    use crate::solver::testutil::{accuracy, easy_problem};
+
+    #[test]
+    fn learns_separable_problem() {
+        let (train, test) = easy_problem(21);
+        let mut s = SvmSgd::new(SvmSgdParams { lambda: 1e-3, epochs: 20, seed: 1 });
+        let m = s.fit(&train);
+        let acc = accuracy(&m, &test);
+        assert!(acc > 0.9, "accuracy {acc}");
+    }
+
+    #[test]
+    fn more_epochs_reduce_objective() {
+        let (train, _) = easy_problem(22);
+        let lambda = 1e-3;
+        let obj = |epochs| {
+            let mut s = SvmSgd::new(SvmSgdParams { lambda, epochs, seed: 2 });
+            objective(&s.fit(&train).w, &train, lambda)
+        };
+        assert!(obj(20) < obj(1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (train, _) = easy_problem(23);
+        let m1 = SvmSgd::new(SvmSgdParams { lambda: 1e-3, epochs: 3, seed: 5 }).fit(&train);
+        let m2 = SvmSgd::new(SvmSgdParams { lambda: 1e-3, epochs: 3, seed: 5 }).fit(&train);
+        assert_eq!(m1.w, m2.w);
+    }
+
+    #[test]
+    fn comparable_to_pegasos_on_same_budget() {
+        let (train, test) = easy_problem(24);
+        let lambda = 1e-3;
+        let sgd = SvmSgd::new(SvmSgdParams { lambda, epochs: 10, seed: 3 }).fit(&train);
+        let mut peg = crate::solver::Pegasos::new(crate::solver::PegasosParams {
+            lambda,
+            iterations: 10 * train.len(),
+            batch_size: 1,
+            project: true,
+            seed: 3,
+        });
+        let pm = crate::solver::Solver::fit(&mut peg, &train);
+        let a_sgd = accuracy(&sgd, &test);
+        let a_peg = accuracy(&pm, &test);
+        assert!((a_sgd - a_peg).abs() < 0.08, "sgd {a_sgd} vs pegasos {a_peg}");
+    }
+}

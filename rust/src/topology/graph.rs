@@ -1,0 +1,376 @@
+//! Undirected overlay graphs for the gossip network.
+//!
+//! Peersim (the paper's substrate) wires nodes with a static overlay; we
+//! provide the standard families used in the gossip literature (Boyd et al.
+//! 2006) so the Push-Sum mixing benchmarks can sweep topology classes:
+//! complete, ring, 2-D torus, random k-regular, Watts–Strogatz small world
+//! and connected Erdős–Rényi.
+
+use crate::rng::Rng;
+
+/// Supported overlay families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Every pair connected (Peersim's default "idle" overlay; the paper's
+    /// experiments gossip with uniformly random peers, i.e. complete).
+    Complete,
+    /// Cycle over the nodes — the slowest-mixing connected family.
+    Ring,
+    /// 2-D torus on the nearest square grid.
+    Torus,
+    /// Random k-regular graph (expander with high probability).
+    KRegular,
+    /// Watts–Strogatz small world (ring + rewiring).
+    SmallWorld,
+    /// Erdős–Rényi G(n, p), retried until connected.
+    ErdosRenyi,
+}
+
+impl std::str::FromStr for TopologyKind {
+    type Err = String;
+
+    /// Parses the kebab-case names used in configs and on the CLI.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "complete" => Ok(Self::Complete),
+            "ring" => Ok(Self::Ring),
+            "torus" | "grid" => Ok(Self::Torus),
+            "k-regular" | "kregular" | "expander" => Ok(Self::KRegular),
+            "small-world" | "watts-strogatz" => Ok(Self::SmallWorld),
+            "erdos-renyi" | "random" => Ok(Self::ErdosRenyi),
+            other => Err(format!("unknown topology {other:?}")),
+        }
+    }
+}
+
+impl std::fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Complete => "complete",
+            Self::Ring => "ring",
+            Self::Torus => "torus",
+            Self::KRegular => "k-regular",
+            Self::SmallWorld => "small-world",
+            Self::ErdosRenyi => "erdos-renyi",
+        };
+        f.write_str(s)
+    }
+}
+
+/// An undirected graph as sorted adjacency lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Number of vertices.
+    pub n: usize,
+    /// `adj[i]` = sorted neighbors of vertex `i` (no self loops).
+    pub adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Builds a graph from an edge list, deduplicating and sorting.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n, "edge out of range");
+            if a == b {
+                continue;
+            }
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        for l in &mut adj {
+            l.sort_unstable();
+            l.dedup();
+        }
+        Self { n, adj }
+    }
+
+    /// Degree of vertex `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Maximum degree over all vertices.
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Total number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &u in &self.adj[v] {
+                if !seen[u] {
+                    seen[u] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter by BFS from every vertex (fine for gossip-scale n).
+    /// Returns `usize::MAX` when disconnected.
+    pub fn diameter(&self) -> usize {
+        let mut diam = 0usize;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            dist[s] = 0;
+            let mut queue = std::collections::VecDeque::from([s]);
+            while let Some(v) = queue.pop_front() {
+                for &u in &self.adj[v] {
+                    if dist[u] == usize::MAX {
+                        dist[u] = dist[v] + 1;
+                        queue.push_back(u);
+                    }
+                }
+            }
+            let far = *dist.iter().max().unwrap();
+            if far == usize::MAX {
+                return usize::MAX;
+            }
+            diam = diam.max(far);
+        }
+        diam
+    }
+
+    /// Generates a graph of the given family. All generators return a
+    /// connected graph; random families retry with derived seeds.
+    pub fn generate(kind: TopologyKind, n: usize, seed: u64) -> Self {
+        assert!(n >= 1, "graph needs at least one vertex");
+        match kind {
+            TopologyKind::Complete => Self::complete(n),
+            TopologyKind::Ring => Self::ring(n),
+            TopologyKind::Torus => Self::torus(n),
+            TopologyKind::KRegular => Self::k_regular(n, 4.min(n.saturating_sub(1)), seed),
+            TopologyKind::SmallWorld => Self::small_world(n, 4.min(n.saturating_sub(1)), 0.1, seed),
+            TopologyKind::ErdosRenyi => {
+                let p = (2.0 * (n as f64).ln() / n as f64).min(1.0);
+                Self::erdos_renyi(n, p, seed)
+            }
+        }
+    }
+
+    /// Complete graph K_n.
+    pub fn complete(n: usize) -> Self {
+        let adj = (0..n).map(|i| (0..n).filter(|&j| j != i).collect()).collect();
+        Self { n, adj }
+    }
+
+    /// Ring (cycle) C_n; for n ≤ 2 degenerates to a path/point.
+    pub fn ring(n: usize) -> Self {
+        if n == 1 {
+            return Self { n, adj: vec![vec![]] };
+        }
+        if n == 2 {
+            return Self::from_edges(2, &[(0, 1)]);
+        }
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Self::from_edges(n, &edges)
+    }
+
+    /// 2-D torus on an `r×c` grid with `r·c = n`, `r` the largest divisor
+    /// ≤ √n (falls back to ring when n is prime).
+    pub fn torus(n: usize) -> Self {
+        let mut r = (n as f64).sqrt() as usize;
+        while r > 1 && n % r != 0 {
+            r -= 1;
+        }
+        if r <= 1 {
+            return Self::ring(n);
+        }
+        let c = n / r;
+        let mut edges = Vec::new();
+        for i in 0..r {
+            for j in 0..c {
+                let v = i * c + j;
+                edges.push((v, i * c + (j + 1) % c));
+                edges.push((v, ((i + 1) % r) * c + j));
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Random k-regular graph via the pairing model, retried until simple
+    /// and connected.
+    pub fn k_regular(n: usize, k: usize, seed: u64) -> Self {
+        assert!(k < n, "k_regular: k must be < n");
+        if k == 0 {
+            assert_eq!(n, 1, "k=0 only valid for a single vertex");
+            return Self { n, adj: vec![vec![]] };
+        }
+        assert!(n * k % 2 == 0, "k_regular: n·k must be even");
+        'attempt: for attempt in 0..1000u64 {
+            let mut rng = Rng::new(seed.wrapping_add(attempt * 0x9e37));
+            let mut stubs: Vec<usize> = (0..n).flat_map(|v| std::iter::repeat(v).take(k)).collect();
+            rng.shuffle(&mut stubs);
+            let mut edges = Vec::with_capacity(n * k / 2);
+            let mut seen = std::collections::HashSet::new();
+            for pair in stubs.chunks(2) {
+                let (a, b) = (pair[0], pair[1]);
+                if a == b || !seen.insert((a.min(b), a.max(b))) {
+                    continue 'attempt; // multi-edge or loop: resample
+                }
+                edges.push((a, b));
+            }
+            let g = Self::from_edges(n, &edges);
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("k_regular: failed to generate a simple connected graph");
+    }
+
+    /// Watts–Strogatz: ring lattice with `k` nearest neighbors (k even),
+    /// each edge rewired with probability `beta`; retried until connected.
+    pub fn small_world(n: usize, k: usize, beta: f64, seed: u64) -> Self {
+        let k = k.max(2) & !1; // even, ≥2
+        assert!(k < n, "small_world: k must be < n");
+        for attempt in 0..1000u64 {
+            let mut rng = Rng::new(seed.wrapping_add(attempt * 0x51f3));
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in 1..=k / 2 {
+                    let mut tgt = (i + j) % n;
+                    if rng.flip(beta) {
+                        tgt = rng.below(n);
+                        if tgt == i {
+                            tgt = (i + j) % n;
+                        }
+                    }
+                    edges.push((i, tgt));
+                }
+            }
+            let g = Self::from_edges(n, &edges);
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("small_world: failed to generate a connected graph");
+    }
+
+    /// Connected Erdős–Rényi G(n, p) by rejection.
+    pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Self {
+        for attempt in 0..1000u64 {
+            let mut rng = Rng::new(seed.wrapping_add(attempt * 0xabcd));
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.flip(p) {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let g = Self::from_edges(n, &edges);
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("erdos_renyi: failed to generate a connected graph (p too small?)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_properties() {
+        let g = Graph::complete(5);
+        assert_eq!(g.edge_count(), 10);
+        assert_eq!(g.max_degree(), 4);
+        assert!(g.is_connected());
+        assert_eq!(g.diameter(), 1);
+    }
+
+    #[test]
+    fn ring_properties() {
+        let g = Graph::ring(8);
+        assert_eq!(g.edge_count(), 8);
+        assert!(g.adj.iter().all(|l| l.len() == 2));
+        assert_eq!(g.diameter(), 4);
+    }
+
+    #[test]
+    fn ring_small_cases() {
+        assert_eq!(Graph::ring(1).edge_count(), 0);
+        assert_eq!(Graph::ring(2).edge_count(), 1);
+        assert_eq!(Graph::ring(3).edge_count(), 3);
+    }
+
+    #[test]
+    fn torus_regular_degree() {
+        let g = Graph::torus(16); // 4x4
+        assert!(g.adj.iter().all(|l| l.len() == 4));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_prime_falls_back_to_ring() {
+        let g = Graph::torus(7);
+        assert!(g.adj.iter().all(|l| l.len() == 2));
+    }
+
+    #[test]
+    fn k_regular_is_regular_and_connected() {
+        let g = Graph::k_regular(10, 4, 3);
+        assert!(g.adj.iter().all(|l| l.len() == 4));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn small_world_connected() {
+        let g = Graph::small_world(20, 4, 0.2, 9);
+        assert!(g.is_connected());
+        assert!(g.edge_count() >= 20);
+    }
+
+    #[test]
+    fn erdos_renyi_connected() {
+        let g = Graph::erdos_renyi(15, 0.4, 1);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn generate_dispatch_all_kinds() {
+        for kind in [
+            TopologyKind::Complete,
+            TopologyKind::Ring,
+            TopologyKind::Torus,
+            TopologyKind::KRegular,
+            TopologyKind::SmallWorld,
+            TopologyKind::ErdosRenyi,
+        ] {
+            let g = Graph::generate(kind, 10, 1);
+            assert_eq!(g.n, 10);
+            assert!(g.is_connected(), "{kind:?} not connected");
+        }
+    }
+
+    #[test]
+    fn from_edges_dedup_and_no_self_loop() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (2, 2)]);
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn disconnected_diameter_is_max() {
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        assert!(!g.is_connected());
+        assert_eq!(g.diameter(), usize::MAX);
+    }
+}

@@ -1,0 +1,17 @@
+//! Network topology substrate: overlay graphs, doubly-stochastic transition
+//! matrices `B`, and spectral mixing-time estimates.
+//!
+//! GADGET's Push-Sum converges to a γ-relative-error average in
+//! `O(τ_mix · log 1/γ)` rounds, where `τ_mix` is the mixing time of the
+//! Markov chain defined by `B` (paper §3). This module builds the graphs
+//! the experiments run on, the `B` matrices (Metropolis–Hastings or
+//! max-degree weights — both doubly stochastic on undirected graphs), and
+//! estimates `τ_mix` from the second-largest eigenvalue modulus.
+
+pub mod graph;
+pub mod spectral;
+pub mod stochastic;
+
+pub use graph::{Graph, TopologyKind};
+pub use spectral::{mixing_time, second_eigenvalue};
+pub use stochastic::TransitionMatrix;

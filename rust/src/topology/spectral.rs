@@ -1,0 +1,147 @@
+//! Spectral estimates: second-largest eigenvalue modulus of `B` and the
+//! derived mixing-time bound `τ_mix ≈ ln(2/γ) / (1 − λ₂)`.
+//!
+//! The GADGET runner uses this to size the number of Push-Sum rounds per
+//! iteration (`R = ceil(τ_mix · ln(1/γ))` in the paper's notation); the
+//! mixing benches compare the estimate against measured rounds-to-γ.
+
+use super::TransitionMatrix;
+
+/// Second-largest eigenvalue modulus of a doubly-stochastic `B`, by power
+/// iteration on the component orthogonal to the all-ones vector (the Perron
+/// vector of a doubly-stochastic matrix).
+///
+/// Deterministic: starts from a fixed seed vector; deflation is re-applied
+/// every step so round-off cannot reintroduce the 𝟙 component.
+pub fn second_eigenvalue(b: &TransitionMatrix, iters: usize) -> f64 {
+    let m = b.m;
+    if m <= 1 {
+        return 0.0;
+    }
+    // Fixed pseudo-random start, orthogonal to 1.
+    let mut v: Vec<f64> = (0..m)
+        .map(|i| {
+            let x = ((i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33) as f64;
+            x / (1u64 << 31) as f64 - 1.0
+        })
+        .collect();
+    deflate_ones(&mut v);
+    normalize(&mut v);
+
+    let mut w = vec![0.0; m];
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        // w = Bᵀ v  (B symmetric in our constructions, but use Bᵀ to match
+        // the mass-propagation semantics; eigenvalues agree for symmetric B)
+        b.transpose_apply(&v, &mut w);
+        deflate_ones(&mut w);
+        lambda = crate::linalg::l2_norm(&w);
+        if lambda < 1e-300 {
+            return 0.0;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / lambda;
+        }
+    }
+    lambda
+}
+
+/// Mixing-time estimate in rounds for relative error `gamma`.
+///
+/// Synchronous `Bᵀ` mixing contracts the disagreement *geometrically*:
+/// `err_t ≤ λ₂ᵗ · err₀`, so `τ(γ) = ln(m/γ) / (−ln λ₂)` — the sharp form.
+/// (The textbook `ln(m/γ)/(1−λ₂)` upper-bounds this and over-provisions
+/// badly for well-connected graphs: a complete graph with MH weights has
+/// `λ₂ = 0` and mixes in ONE round, not `ln(m/γ)` rounds — that single
+/// change cut end-to-end GADGET time ~5× on the complete overlay; see
+/// EXPERIMENTS.md §Perf.) Returns at least 1; disconnected or
+/// non-contracting chains (`λ₂ ≥ 1`) return `usize::MAX`.
+pub fn mixing_time(b: &TransitionMatrix, gamma: f64) -> usize {
+    assert!(gamma > 0.0 && gamma < 1.0, "gamma must be in (0,1)");
+    if b.m <= 1 {
+        return 1; // a single node is already exact
+    }
+    let l2 = second_eigenvalue(b, 200);
+    if l2 >= 1.0 - 1e-12 {
+        return usize::MAX;
+    }
+    if l2 <= 1e-9 {
+        return 1; // exact average in one round (complete graph + MH)
+    }
+    (((b.m as f64 / gamma).ln() / -l2.ln()).ceil() as usize).max(1)
+}
+
+fn deflate_ones(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = crate::linalg::l2_norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::stochastic::WeightScheme;
+    use crate::topology::Graph;
+
+    fn mh(g: &Graph) -> TransitionMatrix {
+        TransitionMatrix::from_graph(g, WeightScheme::MetropolisHastings)
+    }
+
+    #[test]
+    fn complete_graph_has_tiny_lambda2() {
+        // K_m with MH weights: B = (1/m)·𝟙𝟙ᵀ exactly ⇒ λ₂ = 0.
+        let b = mh(&Graph::complete(6));
+        assert!(second_eigenvalue(&b, 100) < 1e-10);
+    }
+
+    #[test]
+    fn ring_lambda2_matches_closed_form() {
+        // Ring with MH: b_{i,i±1} = 1/3, self 1/3 ⇒ λ₂ = 1/3 + 2/3·cos(2π/m).
+        let m = 12;
+        let b = mh(&Graph::ring(m));
+        let expect = 1.0 / 3.0 + (2.0 / 3.0) * (2.0 * std::f64::consts::PI / m as f64).cos();
+        let got = second_eigenvalue(&b, 500);
+        assert!((got - expect).abs() < 1e-6, "got {got}, expect {expect}");
+    }
+
+    #[test]
+    fn mixing_time_orders_topologies() {
+        // complete < torus < ring, the qualitative claim benched in A1.
+        let m = 16;
+        let t_complete = mixing_time(&mh(&Graph::complete(m)), 0.01);
+        let t_torus = mixing_time(&mh(&Graph::torus(m)), 0.01);
+        let t_ring = mixing_time(&mh(&Graph::ring(m)), 0.01);
+        assert!(t_complete < t_torus, "{t_complete} !< {t_torus}");
+        assert!(t_torus < t_ring, "{t_torus} !< {t_ring}");
+    }
+
+    #[test]
+    fn single_node_mixes_instantly() {
+        let b = mh(&Graph::complete(1));
+        assert_eq!(second_eigenvalue(&b, 10), 0.0);
+        assert_eq!(mixing_time(&b, 0.01), 1);
+    }
+
+    #[test]
+    fn disconnected_graph_never_mixes() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        let b = mh(&g);
+        assert_eq!(mixing_time(&b, 0.01), usize::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "gamma must be in (0,1)")]
+    fn bad_gamma_panics() {
+        mixing_time(&mh(&Graph::ring(4)), 0.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Doubly-stochastic transition matrices `B` over an overlay graph.
+//!
+//! Algorithm 2 takes `B` as input: `b_{ij} > 0` only along graph edges (plus
+//! self loops), rows and columns sum to one. On an undirected graph two
+//! standard symmetric constructions exist:
+//!
+//! * **Metropolis–Hastings**: `b_{ij} = 1 / (1 + max(deg i, deg j))` for an
+//!   edge `ij`, self loop takes the slack. Doubly stochastic on any graph,
+//!   no global knowledge beyond neighbor degrees.
+//! * **Max-degree**: `b_{ij} = 1 / (Δ + 1)` with `Δ` the max degree.
+//!
+//! The paper suggests the simple random walk `b_{ij} = 1/deg(i)` — which is
+//! only doubly stochastic on regular graphs; we expose it for the mixing
+//! benches but the GADGET runner defaults to Metropolis–Hastings so the
+//! consensus limit is the *uniform* average required by Theorem 1.
+
+use super::Graph;
+
+/// Weighting schemes for building `B` from a graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightScheme {
+    /// Metropolis–Hastings weights (doubly stochastic on any graph).
+    MetropolisHastings,
+    /// Uniform `1/(Δ+1)` weights (doubly stochastic on any graph).
+    MaxDegree,
+    /// Simple random walk `1/deg(i)` (row-stochastic only; kept for the
+    /// mixing-time benches that reproduce the paper's `b_{ij} = 1/deg i`
+    /// suggestion).
+    RandomWalk,
+}
+
+impl std::str::FromStr for WeightScheme {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "metropolis-hastings" | "mh" => Ok(Self::MetropolisHastings),
+            "max-degree" => Ok(Self::MaxDegree),
+            "random-walk" => Ok(Self::RandomWalk),
+            other => Err(format!("unknown weight scheme {other:?}")),
+        }
+    }
+}
+
+/// A dense row-major `m×m` transition matrix.
+#[derive(Clone, Debug)]
+pub struct TransitionMatrix {
+    /// Number of nodes.
+    pub m: usize,
+    /// Row-major entries.
+    pub b: Vec<f64>,
+}
+
+impl TransitionMatrix {
+    /// Builds `B` from a graph with the given scheme.
+    pub fn from_graph(g: &Graph, scheme: WeightScheme) -> Self {
+        let m = g.n;
+        let mut b = vec![0.0; m * m];
+        match scheme {
+            WeightScheme::MetropolisHastings => {
+                for i in 0..m {
+                    let mut slack = 1.0;
+                    for &j in &g.adj[i] {
+                        let w = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+                        b[i * m + j] = w;
+                        slack -= w;
+                    }
+                    b[i * m + i] = slack;
+                }
+            }
+            WeightScheme::MaxDegree => {
+                let w = 1.0 / (g.max_degree() as f64 + 1.0);
+                for i in 0..m {
+                    for &j in &g.adj[i] {
+                        b[i * m + j] = w;
+                    }
+                    b[i * m + i] = 1.0 - w * g.degree(i) as f64;
+                }
+            }
+            WeightScheme::RandomWalk => {
+                for i in 0..m {
+                    let deg = g.degree(i) as f64;
+                    if deg == 0.0 {
+                        b[i * m + i] = 1.0;
+                    } else {
+                        for &j in &g.adj[i] {
+                            b[i * m + j] = 1.0 / deg;
+                        }
+                    }
+                }
+            }
+        }
+        Self { m, b }
+    }
+
+    /// Entry accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.b[i * self.m + j]
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.b[i * self.m..(i + 1) * self.m]
+    }
+
+    /// `max_i |Σ_j b_ij − 1|` — row-stochasticity violation.
+    pub fn row_error(&self) -> f64 {
+        (0..self.m)
+            .map(|i| (self.row(i).iter().sum::<f64>() - 1.0).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// `max_j |Σ_i b_ij − 1|` — column-stochasticity violation.
+    pub fn col_error(&self) -> f64 {
+        (0..self.m)
+            .map(|j| ((0..self.m).map(|i| self.get(i, j)).sum::<f64>() - 1.0).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// True when doubly stochastic to tolerance `tol` and non-negative.
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        self.b.iter().all(|&v| v >= -tol)
+            && self.row_error() <= tol
+            && self.col_error() <= tol
+    }
+
+    /// Validates that support(B) ⊆ edges(g) ∪ self-loops.
+    pub fn respects_graph(&self, g: &Graph) -> bool {
+        for i in 0..self.m {
+            for j in 0..self.m {
+                if i != j && self.get(i, j) != 0.0 && !g.adj[i].contains(&j) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Returns `Some(1/m)` when every entry equals `1/m` — the complete
+    /// graph with MH/max-degree weights. Rank-1 `B` lets the vector-mixing
+    /// hot path replace the O(m²·d) pairwise pass with a mean + broadcast
+    /// (O(2m·d)); see `gossip::PushVector::round` and EXPERIMENTS.md §Perf.
+    pub fn uniform_value(&self) -> Option<f64> {
+        let u = 1.0 / self.m as f64;
+        if self.b.iter().all(|&v| (v - u).abs() < 1e-15) {
+            Some(u)
+        } else {
+            None
+        }
+    }
+
+    /// `y = Bᵀ x` — one synchronous Push-Sum round moves mass `x` by `Bᵀ`
+    /// (entry `j` receives `Σ_i b_{ij} x_i`).
+    pub fn transpose_apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.m);
+        assert_eq!(y.len(), self.m);
+        y.fill(0.0);
+        for i in 0..self.m {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.m {
+                y[j] += row[j] * xi;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyKind;
+
+    #[test]
+    fn mh_is_doubly_stochastic_on_irregular_graph() {
+        // star graph: maximally irregular
+        let g = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        assert!(b.is_doubly_stochastic(1e-12));
+        assert!(b.respects_graph(&g));
+    }
+
+    #[test]
+    fn max_degree_is_doubly_stochastic() {
+        let g = Graph::generate(TopologyKind::SmallWorld, 12, 5);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MaxDegree);
+        assert!(b.is_doubly_stochastic(1e-12));
+        assert!(b.respects_graph(&g));
+    }
+
+    #[test]
+    fn random_walk_row_stochastic_only() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::RandomWalk);
+        assert!(b.row_error() < 1e-12);
+        assert!(b.col_error() > 0.1); // path graph: not column stochastic
+    }
+
+    #[test]
+    fn random_walk_on_regular_graph_is_doubly_stochastic() {
+        let g = Graph::ring(6);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::RandomWalk);
+        assert!(b.is_doubly_stochastic(1e-12));
+    }
+
+    #[test]
+    fn transpose_apply_preserves_mass() {
+        let g = Graph::generate(TopologyKind::Torus, 9, 1);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let x = vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.5, 0.0, 0.0, 1.5];
+        let mut y = vec![0.0; 9];
+        b.transpose_apply(&x, &mut y);
+        let mass_in: f64 = x.iter().sum();
+        let mass_out: f64 = y.iter().sum();
+        assert!((mass_in - mass_out).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complete_graph_mixes_in_one_step() {
+        let g = Graph::complete(4);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let x = vec![4.0, 0.0, 0.0, 0.0];
+        let mut y = vec![0.0; 4];
+        b.transpose_apply(&x, &mut y);
+        // K4 MH: off-diagonal 1/4, diagonal 1/4 — exactly uniform after one step.
+        for v in y {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities: JSON emission, scoped temp dirs, timers,
+//! aligned text tables, and CSV writing. The offline build has no serde /
+//! tempfile / prettytable, so these substrates live in-tree.
+
+pub mod json;
+pub mod table;
+pub mod tempdir;
+pub mod timer;
+
+pub use json::Json;
+pub use table::TextTable;
+pub use tempdir::TempDir;
+pub use timer::Stopwatch;

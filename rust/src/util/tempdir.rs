@@ -1,0 +1,59 @@
+//! Scoped temporary directories (in-tree replacement for the `tempfile`
+//! crate): unique path under `std::env::temp_dir()`, removed on drop.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A directory deleted when the guard drops.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Creates a fresh directory `gadget-<pid>-<n>` under the system tmp.
+    pub fn new() -> std::io::Result<Self> {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("gadget-{}-{}", std::process::id(), n));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let kept_path;
+        {
+            let t = TempDir::new().unwrap();
+            kept_path = t.path().to_path_buf();
+            std::fs::write(t.path().join("f.txt"), "x").unwrap();
+            assert!(kept_path.exists());
+        }
+        assert!(!kept_path.exists());
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new().unwrap();
+        let b = TempDir::new().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

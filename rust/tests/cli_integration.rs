@@ -1,0 +1,171 @@
+//! CLI integration: spawns the actual `gadget` binary (CARGO_BIN_EXE) and
+//! checks every subcommand's surface behaviour — exit codes, report
+//! fields, error messages, config-file handling, result files.
+
+use std::process::Command;
+
+fn gadget() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gadget"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = gadget().args(args).output().expect("spawn gadget");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, stdout, _) = run(&["help"]);
+    assert!(ok);
+    for word in ["train", "baseline", "experiment", "inspect"] {
+        assert!(stdout.contains(word), "help missing {word}");
+    }
+    // no-arg invocation prints help too
+    let (ok2, stdout2, _) = run(&[]);
+    assert!(ok2);
+    assert!(stdout2.contains("USAGE"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_hint() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"), "{stderr}");
+}
+
+#[test]
+fn train_small_run_reports_accuracy() {
+    let (ok, stdout, stderr) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "3",
+        "--trials",
+        "1",
+        "--max-iterations",
+        "100",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("test accuracy"), "{stdout}");
+    assert!(stdout.contains("gossip (trial 0)"), "{stdout}");
+}
+
+#[test]
+fn train_from_config_file() {
+    let dir = std::env::temp_dir().join(format!("gadget-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("t.toml");
+    std::fs::write(
+        &cfg,
+        "dataset = \"synthetic-usps\"\nscale = 0.02\nnodes = 3\ntrials = 1\nmax_iterations = 80\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&["train", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("== GADGET report =="));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn baseline_solvers_run() {
+    for solver in ["pegasos", "svm-sgd", "dcd"] {
+        let (ok, stdout, stderr) = run(&[
+            "baseline",
+            "--solver",
+            solver,
+            "--dataset",
+            "synthetic-usps",
+            "--scale",
+            "0.02",
+        ]);
+        assert!(ok, "{solver} stderr: {stderr}");
+        assert!(stdout.contains("test accuracy"), "{solver}: {stdout}");
+    }
+}
+
+#[test]
+fn bad_option_value_is_clear_error() {
+    let (ok, _, stderr) = run(&["train", "--scale", "banana"]);
+    assert!(!ok);
+    assert!(stderr.contains("scale"), "{stderr}");
+}
+
+#[test]
+fn experiment_writes_result_files() {
+    let dir = std::env::temp_dir().join(format!("gadget-exp-{}", std::process::id()));
+    let (ok, stdout, stderr) = run(&[
+        "experiment",
+        "table3",
+        "--scale",
+        "0.02",
+        "--trials",
+        "1",
+        "--nodes",
+        "3",
+        "--max-iterations",
+        "60",
+        "--only",
+        "usps",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("Table 3"));
+    assert!(dir.join("table3.csv").is_file());
+    assert!(dir.join("table3.json").is_file());
+    let json = std::fs::read_to_string(dir.join("table3.json")).unwrap();
+    assert!(json.contains("gadget_acc"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn inspect_reports_dataset_and_spectrum() {
+    let (ok, stdout, stderr) = run(&[
+        "inspect",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "4",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("features"), "{stdout}");
+    assert!(stdout.contains("lambda2"), "{stdout}");
+}
+
+#[test]
+fn experiment_churn_and_topology_drivers() {
+    let (ok, stdout, stderr) = run(&[
+        "experiment",
+        "churn",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "4",
+        "--max-iterations",
+        "80",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("p_fail"), "{stdout}");
+
+    let (ok2, stdout2, stderr2) = run(&[
+        "experiment",
+        "topology",
+        "--scale",
+        "0.02",
+        "--m",
+        "8",
+        "--max-iterations",
+        "80",
+    ]);
+    assert!(ok2, "stderr: {stderr2}");
+    assert!(stdout2.contains("Overlay"), "{stdout2}");
+}

@@ -1,0 +1,195 @@
+//! Integration tests: the full GADGET pipeline through the public API —
+//! data generation → partitioning → topology → gossip training →
+//! evaluation — plus config-file and LIBSVM entry points.
+
+use gadget::config::ExperimentConfig;
+use gadget::coordinator::GadgetRunner;
+use gadget::data::libsvm;
+use gadget::data::synthetic::{generate, spec_by_name};
+use gadget::metrics;
+use gadget::solver::{Pegasos, PegasosParams, Solver};
+use gadget::topology::TopologyKind;
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .dataset("synthetic-usps")
+        .scale(0.05)
+        .nodes(5)
+        .trials(1)
+        .max_iterations(400)
+        .seed(11)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn end_to_end_accuracy_parity_with_centralized() {
+    let runner = GadgetRunner::new(base_cfg()).unwrap();
+    let report = runner.run().unwrap();
+    let mut peg = Pegasos::new(PegasosParams {
+        lambda: runner.lambda(),
+        iterations: 10_000,
+        batch_size: 1,
+        project: true,
+        seed: 11,
+    });
+    let central = peg.fit(runner.train_data());
+    let central_acc = metrics::accuracy(&central.w, runner.test_data());
+    assert!(
+        (report.test_accuracy - central_acc).abs() < 0.10,
+        "gadget {} vs centralized {central_acc}",
+        report.test_accuracy
+    );
+}
+
+#[test]
+fn every_topology_trains() {
+    for topo in [
+        TopologyKind::Complete,
+        TopologyKind::Ring,
+        TopologyKind::Torus,
+        TopologyKind::KRegular,
+        TopologyKind::SmallWorld,
+        TopologyKind::ErdosRenyi,
+    ] {
+        let cfg = ExperimentConfig { topology: topo, ..base_cfg() };
+        let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert!(
+            report.test_accuracy > 0.6,
+            "{topo}: accuracy {}",
+            report.test_accuracy
+        );
+    }
+}
+
+#[test]
+fn batch_and_fused_step_configs_train() {
+    for (batch, steps) in [(4usize, 1usize), (1, 4), (8, 4)] {
+        let cfg = ExperimentConfig {
+            batch_size: batch,
+            local_steps: steps,
+            max_iterations: 200,
+            ..base_cfg()
+        };
+        let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert!(
+            report.test_accuracy > 0.6,
+            "batch {batch} steps {steps}: accuracy {}",
+            report.test_accuracy
+        );
+    }
+}
+
+#[test]
+fn node_count_sweep_preserves_learning() {
+    for nodes in [2usize, 5, 10, 20] {
+        let cfg = ExperimentConfig { nodes, ..base_cfg() };
+        let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert!(report.test_accuracy > 0.6, "m={nodes}: {}", report.test_accuracy);
+    }
+}
+
+#[test]
+fn libsvm_file_roundtrip_through_runner() {
+    // Write a synthetic set as LIBSVM, then train via the `path:` loader.
+    let tmp = gadget::util::TempDir::new().unwrap();
+    let split = generate(&spec_by_name("usps").unwrap(), 3, 0.05);
+    let path = tmp.path().join("usps_small.libsvm");
+    libsvm::write_libsvm(&split.train, &path).unwrap();
+
+    let cfg = ExperimentConfig::builder()
+        .dataset(format!("path:{}", path.display()))
+        .nodes(4)
+        .lambda(1e-3) // file datasets carry no Table-2 default
+        .trials(1)
+        .max_iterations(300)
+        .seed(1)
+        .build()
+        .unwrap();
+    let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+    assert!(report.test_accuracy > 0.6, "accuracy {}", report.test_accuracy);
+}
+
+#[test]
+fn missing_lambda_for_file_dataset_is_error() {
+    let tmp = gadget::util::TempDir::new().unwrap();
+    let split = generate(&spec_by_name("usps").unwrap(), 3, 0.02);
+    let path = tmp.path().join("x.libsvm");
+    libsvm::write_libsvm(&split.train, &path).unwrap();
+    let cfg = ExperimentConfig::builder()
+        .dataset(format!("path:{}", path.display()))
+        .nodes(2)
+        .trials(1)
+        .build()
+        .unwrap();
+    assert!(GadgetRunner::new(cfg).is_err());
+}
+
+#[test]
+fn config_file_to_training_pipeline() {
+    let tmp = gadget::util::TempDir::new().unwrap();
+    let cfg_path = tmp.path().join("run.toml");
+    std::fs::write(
+        &cfg_path,
+        r#"
+dataset = "synthetic-usps"
+scale = 0.05
+nodes = 4
+trials = 1
+max_iterations = 300
+seed = 9
+topology = "torus"
+"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_toml_file(&cfg_path).unwrap();
+    assert_eq!(cfg.topology, TopologyKind::Torus);
+    let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+    assert!(report.test_accuracy > 0.6);
+}
+
+#[test]
+fn unknown_dataset_is_helpful_error() {
+    let cfg = ExperimentConfig::builder().dataset("synthetic-imagenet").build().unwrap();
+    let err = match GadgetRunner::new(cfg) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected unknown-dataset error"),
+    };
+    assert!(err.contains("unknown dataset"), "{err}");
+}
+
+#[test]
+fn anytime_property_objective_improves_with_budget() {
+    // Doubling the iteration budget must not worsen the final objective.
+    let short = ExperimentConfig { max_iterations: 60, epsilon: 1e-9, ..base_cfg() };
+    let long = ExperimentConfig { max_iterations: 600, epsilon: 1e-9, ..base_cfg() };
+    let r_short = GadgetRunner::new(short).unwrap().run().unwrap();
+    let r_long = GadgetRunner::new(long).unwrap().run().unwrap();
+    assert!(
+        r_long.objective <= r_short.objective * 1.05,
+        "objective {} -> {}",
+        r_short.objective,
+        r_long.objective
+    );
+}
+
+#[test]
+fn gisette_standin_is_hard() {
+    // The paper's Gisette row is near-chance (55%/50%): our stand-in must
+    // stay well below the easy datasets.
+    let cfg = ExperimentConfig::builder()
+        .dataset("synthetic-gisette")
+        .scale(0.05)
+        .nodes(4)
+        .trials(1)
+        .max_iterations(200)
+        .seed(2)
+        .build()
+        .unwrap();
+    let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+    assert!(
+        report.test_accuracy < 0.75,
+        "gisette should be hard, got {}",
+        report.test_accuracy
+    );
+}

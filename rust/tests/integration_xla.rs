@@ -1,0 +1,164 @@
+//! Integration tests for the three-layer stack: L3 coordinator running the
+//! AOT-compiled JAX/Pallas artifact through PJRT.
+//!
+//! Skipped (with a message) when `artifacts/` has not been built — run
+//! `make artifacts` first. CI runs `make test`, which builds them.
+
+use gadget::config::{Backend, ExperimentConfig};
+use gadget::coordinator::GadgetRunner;
+use gadget::runtime::{artifacts_dir, ArtifactRegistry};
+
+fn artifacts_ready() -> bool {
+    match ArtifactRegistry::load(artifacts_dir()) {
+        Ok(reg) => reg.check_files().is_ok(),
+        Err(_) => {
+            eprintln!("skipping xla integration: run `make artifacts` first");
+            false
+        }
+    }
+}
+
+fn cfg(backend: Backend, batch: usize, steps: usize) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .dataset("synthetic-usps") // d = 256, exact artifact dim
+        .scale(0.05)
+        .nodes(3)
+        .batch_size(batch)
+        .local_steps(steps)
+        .trials(1)
+        .max_iterations(120)
+        .seed(31)
+        .backend(backend)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn gadget_with_xla_backend_learns() {
+    if !artifacts_ready() {
+        return;
+    }
+    let report = GadgetRunner::new(cfg(Backend::Xla, 8, 4)).unwrap().run().unwrap();
+    assert!(
+        report.test_accuracy > 0.7,
+        "xla-backend accuracy {}",
+        report.test_accuracy
+    );
+}
+
+#[test]
+fn xla_and_native_backends_agree_end_to_end() {
+    if !artifacts_ready() {
+        return;
+    }
+    let xla = GadgetRunner::new(cfg(Backend::Xla, 1, 1)).unwrap().run().unwrap();
+    let native = GadgetRunner::new(cfg(Backend::Native, 1, 1)).unwrap().run().unwrap();
+    // identical batch streams, f32-vs-f64 rounding only
+    assert!(
+        (xla.test_accuracy - native.test_accuracy).abs() < 0.05,
+        "xla {} vs native {}",
+        xla.test_accuracy,
+        native.test_accuracy
+    );
+    assert!(
+        (xla.objective - native.objective).abs() < 0.05 * native.objective.max(0.1),
+        "objective xla {} vs native {}",
+        xla.objective,
+        native.objective
+    );
+}
+
+#[test]
+fn padding_path_works() {
+    if !artifacts_ready() {
+        return;
+    }
+    // adult has d = 123 → pads to the 256 artifact
+    let cfg = ExperimentConfig::builder()
+        .dataset("synthetic-adult")
+        .scale(0.02)
+        .nodes(3)
+        .batch_size(1)
+        .local_steps(1)
+        .trials(1)
+        .max_iterations(100)
+        .seed(5)
+        .backend(Backend::Xla)
+        .build()
+        .unwrap();
+    let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+    assert!(report.test_accuracy > 0.6, "padded accuracy {}", report.test_accuracy);
+}
+
+#[test]
+fn oversize_dimension_is_clear_error() {
+    if !artifacts_ready() {
+        return;
+    }
+    // reuters d = 8315 exceeds every shipped artifact dim
+    let cfg = ExperimentConfig::builder()
+        .dataset("synthetic-reuters")
+        .scale(0.02)
+        .nodes(2)
+        .trials(1)
+        .backend(Backend::Xla)
+        .build()
+        .unwrap();
+    let err = GadgetRunner::new(cfg).unwrap().run().unwrap_err().to_string();
+    assert!(err.contains("no artifact"), "{err}");
+}
+
+#[test]
+fn objective_eval_artifact_roundtrip() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Execute the objective_eval artifact directly and compare against the
+    // rust metrics on the same block.
+    use gadget::data::synthetic::{generate, spec_by_name};
+    use gadget::runtime::PjrtExecutable;
+    let reg = ArtifactRegistry::load(artifacts_dir()).unwrap();
+    let entry = reg.select("objective_eval", 256, 256, 1).unwrap();
+    let mut exe = PjrtExecutable::compile_file(reg.resolve(entry)).unwrap();
+
+    let split = generate(&spec_by_name("usps").unwrap(), 9, 0.05);
+    let ds = &split.train;
+    let n = 256usize;
+    let idx: Vec<usize> = (0..n).map(|i| i % ds.len()).collect();
+    let (x, y) = ds.dense_batch(&idx, 256);
+    let mut rng = gadget::rng::Rng::new(4);
+    let w: Vec<f64> = (0..256).map(|_| 0.1 * rng.normal()).collect();
+    let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+    let lam = [1e-3f32];
+
+    let out = exe
+        .execute_f32(&[
+            (&w32, &[256]),
+            (&x, &[n as i64, 256]),
+            (&y, &[n as i64]),
+            (&lam, &[1]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    // rust-side reference on the same block
+    let rows: Vec<gadget::linalg::SparseVec> = idx
+        .iter()
+        .map(|&i| ds.rows[i].clone())
+        .collect();
+    let labels: Vec<i8> = idx.iter().map(|&i| ds.labels[i]).collect();
+    let block = gadget::data::Dataset::new("block", 256, rows, labels);
+    let want_obj = gadget::metrics::objective(&w, &block, 1e-3);
+    let want_err = gadget::metrics::zero_one_error(&w, &block);
+    assert!(
+        (out[0][0] as f64 - want_obj).abs() < 1e-4 * (1.0 + want_obj),
+        "objective {} vs {}",
+        out[0][0],
+        want_obj
+    );
+    assert!(
+        (out[1][0] as f64 - want_err).abs() < 1e-6,
+        "error {} vs {}",
+        out[1][0],
+        want_err
+    );
+}

@@ -1,0 +1,270 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! `proptest` is unavailable in the offline build, so these are hand-rolled
+//! seeded property sweeps: each case draws many random instances from the
+//! in-tree RNG and asserts the invariant on every draw. A failing seed is
+//! printed, so cases reproduce exactly.
+
+use gadget::data::synthetic::{generate, DatasetSpec};
+use gadget::data::{partition, Dataset};
+use gadget::gossip::{PushSum, PushVector, RandomizedGossip};
+use gadget::linalg::SparseVec;
+use gadget::rng::Rng;
+use gadget::solver::ScaledVector;
+use gadget::topology::stochastic::WeightScheme;
+use gadget::topology::{Graph, TopologyKind, TransitionMatrix};
+
+const CASES: u64 = 60;
+
+fn random_connected_graph(rng: &mut Rng) -> Graph {
+    let kinds = [
+        TopologyKind::Complete,
+        TopologyKind::Ring,
+        TopologyKind::Torus,
+        TopologyKind::KRegular,
+        TopologyKind::SmallWorld,
+        TopologyKind::ErdosRenyi,
+    ];
+    let kind = *rng.choose(&kinds);
+    let n = rng.range(5, 24);
+    Graph::generate(kind, n, rng.next_u64())
+}
+
+/// Property: every weight scheme on every generated graph produces a
+/// transition matrix that is (a) stochastic as claimed, (b) supported only
+/// on graph edges.
+#[test]
+fn prop_transition_matrices_are_valid() {
+    let mut rng = Rng::new(100);
+    for case in 0..CASES {
+        let g = random_connected_graph(&mut rng);
+        for scheme in [WeightScheme::MetropolisHastings, WeightScheme::MaxDegree] {
+            let b = TransitionMatrix::from_graph(&g, scheme);
+            assert!(
+                b.is_doubly_stochastic(1e-9),
+                "case {case}: {scheme:?} not doubly stochastic on n={}",
+                g.n
+            );
+            assert!(b.respects_graph(&g), "case {case}: support violation");
+        }
+        let rw = TransitionMatrix::from_graph(&g, WeightScheme::RandomWalk);
+        assert!(rw.row_error() < 1e-9, "case {case}: random walk not row-stochastic");
+    }
+}
+
+/// Property: Push-Sum conserves total mass and weight for any graph, any
+/// initial values, any number of rounds.
+#[test]
+fn prop_pushsum_mass_conservation() {
+    let mut rng = Rng::new(200);
+    for case in 0..CASES {
+        let g = random_connected_graph(&mut rng);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let x: Vec<f64> = (0..g.n).map(|_| rng.normal() * 100.0).collect();
+        let total: f64 = x.iter().sum();
+        let mut ps = PushSum::new(&x);
+        let rounds = rng.range(1, 60);
+        for _ in 0..rounds {
+            ps.round(&b);
+        }
+        assert!(
+            (ps.total_sum() - total).abs() < 1e-8 * (1.0 + total.abs()),
+            "case {case}: mass drift"
+        );
+        assert!(
+            (ps.total_weight() - g.n as f64).abs() < 1e-9,
+            "case {case}: weight drift"
+        );
+    }
+}
+
+/// Property: Push-Vector estimates converge toward the weighted average —
+/// error after 4×τ rounds is strictly smaller than at the start, and the
+/// conserved target equals the hand-computed weighted mean.
+#[test]
+fn prop_pushvector_converges_to_weighted_mean() {
+    let mut rng = Rng::new(300);
+    for case in 0..30 {
+        let g = random_connected_graph(&mut rng);
+        let d = rng.range(1, 8);
+        let vectors: Vec<Vec<f64>> =
+            (0..g.n).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let weights: Vec<f64> = (0..g.n).map(|_| rng.range(1, 50) as f64).collect();
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let mut pv = PushVector::new_weighted(&vectors, &weights);
+        // hand-computed target
+        let wsum: f64 = weights.iter().sum();
+        let mut want = vec![0.0; d];
+        for (v, &a) in vectors.iter().zip(&weights) {
+            for k in 0..d {
+                want[k] += a * v[k] / wsum;
+            }
+        }
+        let target = pv.target();
+        for k in 0..d {
+            assert!((target[k] - want[k]).abs() < 1e-9, "case {case}: target mismatch");
+        }
+        let e0 = pv.max_rel_error();
+        pv.run_rounds(&b, 80);
+        let e1 = pv.max_rel_error();
+        assert!(e1 < e0.max(1e-12), "case {case}: error {e0} -> {e1} did not shrink");
+    }
+}
+
+/// Property: the randomized engine also conserves mass on arbitrary graphs.
+#[test]
+fn prop_randomized_gossip_mass_conservation() {
+    let mut rng = Rng::new(400);
+    for case in 0..30 {
+        let g = random_connected_graph(&mut rng);
+        let vectors: Vec<Vec<f64>> =
+            (0..g.n).map(|_| vec![rng.normal() * 10.0, rng.normal()]).collect();
+        let mut rgos = RandomizedGossip::new(&vectors, rng.next_u64());
+        let t0 = rgos.target();
+        for _ in 0..rng.range(1, 80) {
+            rgos.round(&g);
+        }
+        let t1 = rgos.target();
+        for k in 0..2 {
+            assert!((t0[k] - t1[k]).abs() < 1e-9, "case {case}: target drift");
+        }
+    }
+}
+
+/// Property: horizontal partitioning is a permutation — every sample
+/// appears exactly once across shards, shard sizes differ by ≤ 1.
+#[test]
+fn prop_partition_is_permutation() {
+    let mut rng = Rng::new(500);
+    for case in 0..CASES {
+        let n = rng.range(10, 400);
+        let m = rng.range(1, n.min(20) + 1);
+        let rows: Vec<SparseVec> =
+            (0..n).map(|i| SparseVec::new(vec![0], vec![i as f32])).collect();
+        let labels: Vec<i8> = (0..n).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        let ds = Dataset::new("p", 1, rows, labels);
+        let shards = partition::horizontal_split(&ds, m, rng.next_u64());
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), n, "case {case}");
+        let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(hi - lo <= 1, "case {case}: imbalance {sizes:?}");
+        let mut seen: Vec<f32> =
+            shards.iter().flat_map(|s| s.rows.iter().map(|r| r.values[0])).collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen.len(), n);
+        for (i, v) in seen.iter().enumerate() {
+            assert_eq!(*v, i as f32, "case {case}: sample lost/duplicated");
+        }
+    }
+}
+
+/// Property: the scaled-vector representation tracks a naive dense vector
+/// through arbitrary operation sequences.
+#[test]
+fn prop_scaled_vector_equals_naive() {
+    let mut rng = Rng::new(600);
+    for case in 0..CASES {
+        let d = rng.range(1, 64);
+        let mut sv = ScaledVector::zeros(d);
+        let mut naive = vec![0.0f64; d];
+        for _ in 0..rng.range(1, 60) {
+            match rng.below(4) {
+                0 => {
+                    // random sparse add
+                    let nnz = rng.range(1, d + 1);
+                    let idx = rng.sorted_subset(d, nnz);
+                    let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+                    let x = SparseVec::new(idx, vals);
+                    let c = rng.normal();
+                    sv.add_sparse(c, &x);
+                    x.axpy_into(c, &mut naive);
+                }
+                1 => {
+                    let c = 0.05 + rng.uniform(); // keep away from 0
+                    sv.scale_by(c);
+                    gadget::linalg::scale_assign(c, &mut naive);
+                }
+                2 => {
+                    let r = 0.1 + 10.0 * rng.uniform();
+                    sv.project_to_ball(r);
+                    gadget::linalg::project_to_ball(&mut naive, r);
+                }
+                _ => {
+                    sv.rescale();
+                }
+            }
+        }
+        let dense = sv.to_dense();
+        let scale = gadget::linalg::l2_norm(&naive).max(1.0);
+        for k in 0..d {
+            assert!(
+                (dense[k] - naive[k]).abs() < 1e-9 * scale,
+                "case {case} slot {k}: {} vs {}",
+                dense[k],
+                naive[k]
+            );
+        }
+        assert!(
+            (sv.norm_sq() - gadget::linalg::l2_norm_sq(&naive)).abs() < 1e-7 * scale * scale,
+            "case {case}: norm cache drift"
+        );
+    }
+}
+
+/// Property: GADGET node weight norms never exceed the Pegasos ball, at any
+/// snapshot, for random small configs (the Algorithm 2 (f)/(h) invariant).
+#[test]
+fn prop_gadget_ball_invariant() {
+    use gadget::config::ExperimentConfig;
+    use gadget::coordinator::GadgetRunner;
+    let mut rng = Rng::new(700);
+    for case in 0..6 {
+        let lambda = 10f64.powi(-(rng.range(2, 5) as i32));
+        let cfg = ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(0.02)
+            .nodes(rng.range(2, 6))
+            .lambda(lambda)
+            .trials(1)
+            .max_iterations(40)
+            .snapshot_every(5)
+            .seed(rng.next_u64())
+            .build()
+            .unwrap();
+        let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        // The consensus average of ball-bounded vectors is ball-bounded; the
+        // recorded objective must therefore be finite and the run sane.
+        assert!(report.objective.is_finite(), "case {case}");
+        for p in &report.trials[0].trace.points {
+            assert!(p.objective.is_finite() && p.objective >= 0.0, "case {case}");
+        }
+    }
+}
+
+/// Property: synthetic generation at different scales draws from the same
+/// distribution family — feature stats stay put while N scales.
+#[test]
+fn prop_synthetic_scale_invariance() {
+    let mut rng = Rng::new(800);
+    for _ in 0..10 {
+        let spec = DatasetSpec {
+            name: "si".into(),
+            train_size: 4000,
+            test_size: 400,
+            features: rng.range(16, 256),
+            nnz_per_row: 8,
+            noise: 0.05,
+            positive_rate: 0.5,
+            lambda: 1e-3,
+        };
+        let seed = rng.next_u64();
+        let big = generate(&spec, seed, 0.5);
+        let small = generate(&spec, seed, 0.1);
+        assert_eq!(big.train.dim, small.train.dim);
+        let nnz_big = big.train.total_nnz() as f64 / big.train.len() as f64;
+        let nnz_small = small.train.total_nnz() as f64 / small.train.len() as f64;
+        assert!((nnz_big - nnz_small).abs() < 0.5);
+        assert_eq!(big.train.len(), 2000);
+        assert_eq!(small.train.len(), 400);
+    }
+}
