@@ -1,7 +1,9 @@
 //! Bench P: the compute hot paths across all three layers.
 //!
 //! * L3 native kernels: sparse dot / axpy, the scaled-vector Pegasos step,
-//!   and the Push-Vector mixing round;
+//!   and the (cache-blocked) Push-Vector mixing round;
+//! * the node-parallel runtime: one GADGET local-step phase over m nodes,
+//!   swept across scheduler worker counts;
 //! * L3↔L1/L2 bridge: per-GADGET-iteration cost of the native backend vs
 //!   the PJRT artifact at (batch=1, steps=1) and the scan-fused
 //!   (batch=8, steps=4) variant — quantifying dispatch amortization;
@@ -11,7 +13,13 @@
 //! optimization).
 
 use gadget::coordinator::backend::{LocalBackend, NativeBackend, StepContext};
+use gadget::coordinator::sched::{
+    GossipProtocol, Parallel, ProtocolParams, Scheduler, Sequential,
+};
+use gadget::coordinator::NodeState;
+use gadget::data::partition::horizontal_split;
 use gadget::data::synthetic::{generate, DatasetSpec};
+use gadget::data::Dataset;
 use gadget::gossip::PushVector;
 use gadget::harness::{bench, print_header};
 use gadget::linalg;
@@ -79,8 +87,55 @@ fn main() {
         println!("{}", res.summary());
     }
 
+    // ---- node-parallel local-step phase ----------------------------------
+    print_header("scheduler sweep: one local-step phase, m=8 nodes (batch=8, steps=2)");
+    {
+        let m = 8usize;
+        let d = 8315usize;
+        let full = generate(&spec(d, 60), 11, 0.25).train;
+        let proto = GossipProtocol::new(ProtocolParams {
+            lambda: 1e-4,
+            batch_size: 8,
+            local_steps: 2,
+            project_local: true,
+            project_consensus: true,
+            epsilon: 1e-3,
+        });
+        let make_nodes = || -> Vec<NodeState> {
+            let root = Rng::new(5);
+            horizontal_split(&full, m, 5)
+                .into_iter()
+                .enumerate()
+                .map(|(i, sh)| {
+                    NodeState::new(i, sh, Dataset::default(), d, root.substream(i as u64))
+                })
+                .collect()
+        };
+        let ids: Vec<usize> = (0..m).collect();
+        let run_phase = |sched: &mut dyn Scheduler, label: &str| {
+            let mut nodes = make_nodes();
+            let mut t = 1usize;
+            let res = bench(label, 3, 100, || {
+                sched
+                    .for_each_node(&mut nodes, &ids, &|backend, _id, node| {
+                        proto.local_step(backend, node, t)
+                    })
+                    .unwrap();
+                t += 1;
+            });
+            println!("{}", res.summary());
+        };
+        let mut seq_backend = NativeBackend::default();
+        let mut seq = Sequential::new(&mut seq_backend);
+        run_phase(&mut seq, "sequential m=8");
+        for threads in [1usize, 2, 4, 8] {
+            let mut par = Parallel::native(threads);
+            run_phase(&mut par, &format!("parallel threads={threads}"));
+        }
+    }
+
     // ---- Push-Vector mixing round ----------------------------------------
-    print_header("gossip mixing (m=10, k-regular)");
+    print_header("gossip mixing (k-regular, cache-blocked Bᵀ-apply)");
     let g = Graph::generate(TopologyKind::KRegular, 10, 1);
     let tm = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
     for d in [256usize, 8315, 47236] {
@@ -91,7 +146,25 @@ fn main() {
             })
             .collect();
         let mut pv = PushVector::new(&vectors);
-        let res = bench(&format!("push-vector round d={d}"), 3, 50, || {
+        let res = bench(&format!("push-vector round m=10 d={d}"), 3, 50, || {
+            pv.round(&tm);
+        });
+        println!("{}", res.summary());
+    }
+    // the L3-resident stress case the blocking targets: m×d ≈ 12 M f64
+    {
+        let m = 32usize;
+        let d = 47236usize;
+        let g = Graph::generate(TopologyKind::KRegular, m, 1);
+        let tm = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let vectors: Vec<Vec<f64>> = (0..m)
+            .map(|i| {
+                let mut r = Rng::new(i as u64);
+                (0..d).map(|_| r.normal()).collect()
+            })
+            .collect();
+        let mut pv = PushVector::new(&vectors);
+        let res = bench(&format!("push-vector round m={m} d={d}"), 2, 12, || {
             pv.round(&tm);
         });
         println!("{}", res.summary());

@@ -1,13 +1,41 @@
 //! Bench: regenerates paper Table 5 — timing *including* data loading,
-//! speed-up factor `T_dist / T_central`, with the Gisette stand-in.
+//! speed-up factor `T_dist / T_central`, with the Gisette stand-in —
+//! followed by a scheduler threads sweep tracking the node-parallel
+//! runtime's scaling trajectory.
 //!
 //! Paper shape: GADGET wins (speed-up < 1) when instances ≫ features
 //! (USPS, Adult, MNIST); loses on dense high-dimensional data (Gisette).
+//!
+//! Outputs: `results/bench_table5.csv` (the table) and
+//! `BENCH_speedup.json` (the threads sweep — the speedup trajectory the
+//! ROADMAP tracks across PRs).
 
+use gadget::config::{ExperimentConfig, SchedulerKind};
+use gadget::coordinator::GadgetRunner;
 use gadget::experiments::{table5, ExperimentOpts};
+use gadget::util::Json;
 
 fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One threads sweep point: trains the same config on the parallel
+/// scheduler and reports the mean train seconds.
+fn sweep_point(threads: usize, scale: f64) -> (f64, f64) {
+    let cfg = ExperimentConfig::builder()
+        .dataset("synthetic-mnist")
+        .scale(scale)
+        .nodes(8)
+        .trials(2)
+        .max_iterations(60)
+        .epsilon(1e-9) // run the full budget so every point does equal work
+        .seed(17)
+        .scheduler(if threads == 0 { SchedulerKind::Sequential } else { SchedulerKind::Parallel })
+        .threads(threads)
+        .build()
+        .expect("sweep config");
+    let report = GadgetRunner::new(cfg).expect("runner").run().expect("train");
+    (report.train_secs, report.test_accuracy)
 }
 
 fn main() {
@@ -46,4 +74,49 @@ fn main() {
         &table5::render(&rows).to_csv(),
     )
     .unwrap();
+
+    // ---- scheduler threads sweep ------------------------------------------
+    let sweep_scale = env_f64("GADGET_BENCH_SWEEP_SCALE", 0.2);
+    println!("\nScheduler threads sweep (synthetic-mnist, scale {sweep_scale}, m=8):");
+    let (seq_secs, seq_acc) = sweep_point(0, sweep_scale);
+    println!("  sequential        : {seq_secs:.3}s  (accuracy {:.2}%)", 100.0 * seq_acc);
+    let mut points = vec![Json::obj(vec![
+        ("scheduler", Json::Str("sequential".into())),
+        ("threads", Json::Num(1.0)),
+        ("train_secs", Json::Num(seq_secs)),
+        ("speedup_vs_sequential", Json::Num(1.0)),
+    ])];
+    for threads in [1usize, 2, 4, 8] {
+        let (secs, acc) = sweep_point(threads, sweep_scale);
+        let speedup = seq_secs / secs.max(1e-12);
+        println!(
+            "  parallel threads={threads:<2}: {secs:.3}s  ({speedup:.2}x vs sequential, \
+             accuracy {:.2}%)",
+            100.0 * acc
+        );
+        assert_eq!(
+            acc, seq_acc,
+            "parallel scheduler must be bitwise-equivalent to sequential"
+        );
+        points.push(Json::obj(vec![
+            ("scheduler", Json::Str("parallel".into())),
+            ("threads", Json::Num(threads as f64)),
+            ("train_secs", Json::Num(secs)),
+            ("speedup_vs_sequential", Json::Num(speedup)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("scheduler_threads_sweep".into())),
+        ("dataset", Json::Str("synthetic-mnist".into())),
+        ("scale", Json::Num(sweep_scale)),
+        ("nodes", Json::Num(8.0)),
+        ("max_iterations", Json::Num(60.0)),
+        ("points", Json::Arr(points)),
+    ]);
+    gadget::experiments::write_output(
+        std::path::Path::new("BENCH_speedup.json"),
+        &doc.to_pretty(),
+    )
+    .unwrap();
+    println!("\nwrote BENCH_speedup.json");
 }

@@ -1,0 +1,70 @@
+#!/usr/bin/env bash
+# CI gate for the GADGET SVM repo.
+#
+# Hard gates (always fail the script): release build, test suite — the
+# tier-1 contract.
+# Advisory gates (report but do not fail unless CI_STRICT=1): rustfmt and
+# clippy. The seed codebase predates a rustfmt pass and the available
+# toolchain's clippy lint set varies; enforcing them unconditionally would
+# couple the build gate to toolchain version. Set CI_STRICT=1 once the
+# tree is formatted under the pinned toolchain.
+#
+# Usage: ./ci.sh [--strict]
+
+set -u
+cd "$(dirname "$0")"
+
+STRICT="${CI_STRICT:-0}"
+[ "${1:-}" = "--strict" ] && STRICT=1
+
+fail=0
+advisory_fail=0
+
+step() {
+    echo
+    echo "==> $*"
+}
+
+run_hard() {
+    step "$*"
+    if ! "$@"; then
+        echo "FAIL (hard): $*"
+        fail=1
+    fi
+}
+
+run_advisory() {
+    step "$* (advisory)"
+    if ! "$@"; then
+        echo "WARN (advisory): $*"
+        advisory_fail=1
+    fi
+}
+
+run_advisory cargo fmt --all -- --check
+# -A's: pervasive seed-code styles (index loops over math kernels) that are
+# deliberate; everything else in clippy's default set is enforced when
+# strict.
+run_advisory cargo clippy --all-targets -- -D warnings \
+    -A clippy::needless_range_loop \
+    -A clippy::too_many_arguments \
+    -A clippy::manual_div_ceil \
+    -A clippy::type_complexity
+
+run_hard cargo build --release
+run_hard cargo test -q
+
+echo
+if [ "$fail" -ne 0 ]; then
+    echo "ci: HARD GATE FAILED"
+    exit 1
+fi
+if [ "$STRICT" = "1" ] && [ "$advisory_fail" -ne 0 ]; then
+    echo "ci: advisory gate failed under CI_STRICT=1"
+    exit 1
+fi
+if [ "$advisory_fail" -ne 0 ]; then
+    echo "ci: OK (with advisory warnings — see above)"
+else
+    echo "ci: OK"
+fi

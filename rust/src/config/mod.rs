@@ -36,6 +36,48 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// Execution strategy for the node-parallel runtime
+/// ([`crate::coordinator::sched`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// All nodes stepped in id order on the calling thread — the
+    /// determinism reference (Peersim-equivalent cycle simulation).
+    #[default]
+    Sequential,
+    /// Per-node work fanned across a scoped thread pool; bitwise identical
+    /// results to `Sequential` (per-node RNG substreams isolate all
+    /// randomness).
+    Parallel,
+    /// Thread-per-node message passing without a global round barrier —
+    /// the paper's "completely asynchronous" execution.
+    Async,
+}
+
+impl std::str::FromStr for SchedulerKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "sequential" | "seq" => Ok(Self::Sequential),
+            "parallel" | "par" => Ok(Self::Parallel),
+            "async" => Ok(Self::Async),
+            other => Err(format!(
+                "unknown scheduler {other:?} (sequential | parallel | async)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Sequential => "sequential",
+            Self::Parallel => "parallel",
+            Self::Async => "async",
+        })
+    }
+}
+
 /// Full description of a GADGET run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -80,6 +122,13 @@ pub struct ExperimentConfig {
     /// Snapshot cadence in GADGET iterations for the figure traces
     /// (0 = no traces).
     pub snapshot_every: usize,
+    /// Execution strategy for the node-parallel runtime (`[runtime]`
+    /// section: `scheduler = "sequential" | "parallel" | "async"`).
+    pub scheduler: SchedulerKind,
+    /// Worker threads for the parallel scheduler (`[runtime]` section:
+    /// `threads = N`; 0 = all available cores). Ignored by the other
+    /// schedulers.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -103,6 +152,8 @@ impl Default for ExperimentConfig {
             seed: 1,
             backend: Backend::Native,
             snapshot_every: 0,
+            scheduler: SchedulerKind::Sequential,
+            threads: 0,
         }
     }
 }
@@ -192,6 +243,14 @@ impl ExperimentConfig {
                         .map_err(|e: String| anyhow::anyhow!(e))?
                 }
                 "snapshot_every" => cfg.snapshot_every = value.as_usize_or(k)?,
+                // `[runtime]` section (flat spellings accepted too).
+                "runtime.scheduler" | "scheduler" => {
+                    cfg.scheduler = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                "runtime.threads" | "threads" => cfg.threads = value.as_usize_or(k)?,
                 other => bail!("config: unknown key {other:?}"),
             }
         }
@@ -291,6 +350,18 @@ impl ConfigBuilder {
         self
     }
 
+    /// Sets the runtime scheduler.
+    pub fn scheduler(mut self, s: SchedulerKind) -> Self {
+        self.cfg.scheduler = s;
+        self
+    }
+
+    /// Sets the parallel scheduler's worker count (0 = all cores).
+    pub fn threads(mut self, t: usize) -> Self {
+        self.cfg.threads = t;
+        self
+    }
+
     /// Validates and returns the config.
     pub fn build(self) -> Result<ExperimentConfig> {
         self.cfg.validate()?;
@@ -385,5 +456,33 @@ snapshot_every = 10
     fn backend_parse() {
         assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
         assert!("tpu".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn scheduler_parse_and_display() {
+        assert_eq!("parallel".parse::<SchedulerKind>().unwrap(), SchedulerKind::Parallel);
+        assert_eq!("seq".parse::<SchedulerKind>().unwrap(), SchedulerKind::Sequential);
+        assert_eq!("async".parse::<SchedulerKind>().unwrap(), SchedulerKind::Async);
+        assert!("gpu".parse::<SchedulerKind>().is_err());
+        assert_eq!(SchedulerKind::Parallel.to_string(), "parallel");
+    }
+
+    #[test]
+    fn runtime_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml(
+            "dataset = \"synthetic-usps\"\n[runtime]\nscheduler = \"parallel\"\nthreads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scheduler, SchedulerKind::Parallel);
+        assert_eq!(cfg.threads, 4);
+        // flat spellings accepted too
+        let flat = ExperimentConfig::from_toml("scheduler = \"async\"").unwrap();
+        assert_eq!(flat.scheduler, SchedulerKind::Async);
+        // defaults
+        let d = ExperimentConfig::default();
+        assert_eq!(d.scheduler, SchedulerKind::Sequential);
+        assert_eq!(d.threads, 0);
+        // bad value rejected
+        assert!(ExperimentConfig::from_toml("[runtime]\nscheduler = \"warp\"").is_err());
     }
 }

@@ -9,10 +9,18 @@
 //! rebuilt on membership changes. A recovering node rejoins with its stale
 //! vector, which the shard-weighted Push-Vector consensus re-absorbs —
 //! no coordinator, no state transfer, exactly the gossip robustness story.
+//!
+//! Execution goes through the unified runtime: the per-node work is
+//! [`super::sched::GossipProtocol`] and the alive set is fanned out by the
+//! configured [`super::sched::Scheduler`] (`sequential` or `parallel`;
+//! the async scheduler has no global iteration clock to schedule churn
+//! events against, so `scheduler = "async"` falls back to sequential
+//! here).
 
-use super::backend::{LocalBackend, NativeBackend, StepContext};
+use super::backend::NativeBackend;
 use super::node::NodeState;
-use crate::config::ExperimentConfig;
+use super::sched::{GossipProtocol, Parallel, ProtocolParams, Scheduler, Sequential};
+use crate::config::{ExperimentConfig, SchedulerKind};
 use crate::data::partition;
 use crate::gossip::PushVector;
 use crate::metrics;
@@ -96,7 +104,9 @@ pub struct ChurnReport {
     pub disagreement: f64,
 }
 
-/// Runs GADGET under a churn schedule (cycle engine, native backend).
+/// Runs GADGET under a churn schedule (cycle engine, native backend),
+/// honoring the config's `[runtime]` scheduler choice for the per-node
+/// fan-out.
 pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Result<ChurnReport> {
     cfg.validate()?;
     let (train, test, spec_lambda) = super::gadget::load_dataset(cfg)?;
@@ -119,9 +129,27 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
         .map(|(i, (tr, te))| NodeState::new(i, tr, te, d, root.substream(i as u64)))
         .collect();
 
+    let protocol = GossipProtocol::new(ProtocolParams::from_config(cfg, lambda));
+    // The scheduler behind the per-node fan-out (churn always uses the
+    // native backend — the XLA artifact path is a plain-runner concern).
+    let mut seq_backend = NativeBackend::default();
+    if cfg.scheduler == SchedulerKind::Async {
+        // Churn events are keyed to the global iteration clock, which the
+        // asynchronous engine does not have — make the fallback visible.
+        eprintln!(
+            "churn: scheduler = \"async\" has no global iteration clock to \
+             schedule events against; falling back to sequential"
+        );
+    }
+    let mut sched: Box<dyn Scheduler + '_> = match cfg.scheduler {
+        // Pool capped at m — more workers than nodes can never be used.
+        SchedulerKind::Parallel => {
+            Box::new(Parallel::native(super::sched::resolve_threads(cfg.threads).min(m)))
+        }
+        _ => Box::new(Sequential::new(&mut seq_backend)),
+    };
+
     let mut alive = vec![true; m];
-    let mut backend = NativeBackend::default();
-    let radius = 1.0 / lambda.sqrt();
     let mut next_event = 0usize;
     let mut events_applied = 0usize;
     let mut min_alive = m;
@@ -131,6 +159,10 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     let mut alive_ids: Vec<usize> = Vec::new();
     let mut b: Option<TransitionMatrix> = None;
     let mut rounds = 1usize;
+    // Push-Vector state, rebuilt only when the alive set changes (the
+    // reset_weighted path keeps the steady-state hot loop allocation-free,
+    // same as the plain runner — EXPERIMENTS.md §Perf).
+    let mut pv: Option<PushVector> = None;
 
     for t in 1..=cfg.max_iterations {
         iterations = t;
@@ -170,45 +202,45 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
                     crate::topology::mixing_time(&tm, cfg.gamma).min(10_000)
                 };
                 b = Some(tm);
+                pv = Some(PushVector::new_weighted(
+                    &vec![vec![0.0; d]; alive_ids.len()],
+                    &alive_ids.iter().map(|&i| nodes[i].n_local() as f64).collect::<Vec<_>>(),
+                ));
             } else {
                 b = None;
+                pv = None;
             }
             membership_dirty = false;
         }
 
-        // local steps on alive nodes
-        for &i in &alive_ids {
-            let node = &mut nodes[i];
-            let mut ctx = StepContext {
-                shard: &node.shard,
-                t,
-                lambda,
-                batch_size: cfg.batch_size,
-                local_steps: cfg.local_steps,
-                project: cfg.project_local,
-                rng: &mut node.rng,
-            };
-            backend.local_step(&mut ctx, &mut node.w)?;
-        }
-        // gossip among alive nodes (disconnected components mix internally)
-        if let Some(tm) = &b {
-            let vectors: Vec<Vec<f64>> = alive_ids.iter().map(|&i| nodes[i].w.clone()).collect();
+        // (a)–(f): local steps on alive nodes, fanned out by the scheduler
+        sched.for_each_node(&mut nodes, &alive_ids, &|backend, _id, node| {
+            protocol.local_step(backend, node, t)
+        })?;
+        // (g): gossip among alive nodes (disconnected components mix
+        // internally)
+        if let (Some(tm), Some(pv)) = (&b, &mut pv) {
             let weights: Vec<f64> =
                 alive_ids.iter().map(|&i| nodes[i].n_local() as f64).collect();
-            let mut pv = PushVector::new_weighted(&vectors, &weights);
+            pv.reset_weighted(alive_ids.iter().map(|&i| nodes[i].w.as_slice()), &weights);
             pv.run_rounds(tm, rounds);
-            for (slot, &i) in alive_ids.iter().enumerate() {
-                pv.estimate_into(slot, &mut nodes[i].w);
-                if cfg.project_consensus {
-                    crate::linalg::project_to_ball(&mut nodes[i].w, radius);
-                }
+            // (g)-consume/(h)/ε via the shared protocol; the scheduler
+            // hands each closure the node's position within `alive_ids`,
+            // which is exactly the Push-Vector slot.
+            let pv_ref: &PushVector = pv;
+            sched.for_each_node(&mut nodes, &alive_ids, &|_backend, slot, node| {
+                protocol.apply_estimate(pv_ref, slot, node);
+                protocol.check_convergence(node);
+                Ok(())
+            })?;
+        } else {
+            // isolated survivor (or empty alive set): no gossip, still run
+            // the ε bookkeeping so convergence can terminate the run
+            for &i in &alive_ids {
+                protocol.check_convergence(&mut nodes[i]);
             }
         }
-        // ε-convergence over alive nodes only
-        let mut all = true;
-        for &i in &alive_ids {
-            all &= nodes[i].check_convergence(cfg.epsilon);
-        }
+        let all = alive_ids.iter().all(|&i| nodes[i].converged);
         if all && next_event >= schedule.events.len() {
             break;
         }
@@ -324,5 +356,21 @@ mod tests {
             .iter()
             .zip(&c.events)
             .all(|(x, y)| x.at_iter == y.at_iter && x.node == y.node));
+    }
+
+    #[test]
+    fn parallel_scheduler_matches_sequential_under_churn() {
+        let schedule = ChurnSchedule::random(6, 200, 0.02, 0.08, 13);
+        let seq = run_with_churn(&cfg(), &schedule).unwrap();
+        let par_cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Parallel,
+            threads: 3,
+            ..cfg()
+        };
+        let par = run_with_churn(&par_cfg, &schedule).unwrap();
+        assert_eq!(seq.iterations, par.iterations);
+        assert_eq!(seq.events_applied, par.events_applied);
+        assert_eq!(seq.test_accuracy, par.test_accuracy);
+        assert_eq!(seq.disagreement, par.disagreement);
     }
 }

@@ -1,202 +1,38 @@
-//! Asynchronous gossip engine: one OS thread per node, channel-based
-//! message passing, no global round barrier.
+//! Asynchronous gossip engine — compatibility facade over the unified
+//! runtime's [`crate::coordinator::sched::AsyncScheduler`].
 //!
-//! The cycle-driven runner in [`super::gadget`] matches Peersim's
-//! synchronous accounting (and Theorem 1's analysis); this engine
-//! demonstrates the paper's §1 claim that consensus learning is
-//! "completely asynchronous": nodes run local steps and ship halves of
-//! their `(nᵢ·wᵢ, nᵢ)` mass to random neighbors whenever *they* are ready,
-//! ingesting whatever has arrived since. Mass conservation still holds
-//! (every message is eventually drained before reporting), so node
-//! estimates still converge to the shard-weighted average.
+//! The thread-per-node protocol loop used to live here; it is now one of
+//! the three execution strategies behind the `Scheduler` abstraction in
+//! [`crate::coordinator::sched`], sharing the Algorithm-2 step and the
+//! push-sum mass algebra with the cycle-driven engines instead of
+//! re-implementing them. This module keeps the original public surface
+//! (`AsyncGossipEngine::new(params).run(shards, graph)`) for examples and
+//! downstream callers; new code should prefer the scheduler API (or
+//! `scheduler = "async"` in the config, which routes `GadgetRunner`
+//! through the same path).
 
-use super::backend::{LocalBackend, NativeBackend, StepContext};
+pub use super::sched::AsyncParams;
+use super::sched::AsyncScheduler;
 use crate::data::Dataset;
-use crate::rng::Rng;
 use crate::topology::Graph;
 use crate::Result;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread;
 
-/// A mass message: (vector·weight payload, push-sum weight).
-struct MassMsg {
-    v: Vec<f64>,
-    w: f64,
-}
-
-/// Parameters for an asynchronous run.
-#[derive(Clone, Debug)]
-pub struct AsyncParams {
-    /// Regularization λ.
-    pub lambda: f64,
-    /// Local mini-batch size.
-    pub batch_size: usize,
-    /// Gossip cycles each node performs.
-    pub cycles: usize,
-    /// Trailing cycles that gossip *without* fresh local steps — a
-    /// consensus cool-down so the final estimates agree tightly (pure
-    /// Push-Sum contracts geometrically once the drift stops). 0 disables.
-    pub cooldown: usize,
-    /// Local Pegasos steps between sends.
-    pub local_steps: usize,
-    /// Project onto the `1/√λ` ball after local steps.
-    pub project: bool,
-    /// Root seed.
-    pub seed: u64,
-    /// Bounded staleness: a node may run at most this many cycles ahead of
-    /// the slowest peer. Without a bound, a thread can finish every cycle
-    /// before its peers start and no mixing happens — the consensus theory
-    /// (and the paper's asynchronous model) assumes bounded communication
-    /// delays. 0 = lock-step.
-    pub max_lag: usize,
-}
-
-/// The asynchronous engine.
+/// The asynchronous engine (facade).
 pub struct AsyncGossipEngine {
-    params: AsyncParams,
+    inner: AsyncScheduler,
 }
 
 impl AsyncGossipEngine {
     /// Creates an engine.
     pub fn new(params: AsyncParams) -> Self {
-        Self { params }
+        Self { inner: AsyncScheduler::new(params) }
     }
 
     /// Runs the asynchronous protocol over `shards` on `graph`; returns the
-    /// per-node weight estimates after all threads finish.
-    ///
-    /// Each node thread, per cycle: (1) local Pegasos step(s); (2) fold its
-    /// weight vector into its push-sum mass; (3) keep half, send half to a
-    /// random neighbor; (4) drain its inbox. The current estimate `v/w`
-    /// becomes the working weight vector for the next local step — the
-    /// Algorithm 2 loop, minus the barrier.
+    /// per-node weight estimates after all threads finish. See
+    /// [`AsyncScheduler::run`] for the full result (mass state, stats).
     pub fn run(&self, shards: Vec<Dataset>, graph: &Graph) -> Result<Vec<Vec<f64>>> {
-        let m = shards.len();
-        anyhow::ensure!(m == graph.n, "async engine: shard/graph size mismatch");
-        anyhow::ensure!(m > 0, "async engine: no shards");
-        let d = shards[0].dim;
-        let p = self.params.clone();
-
-        // channels: node i's inbox
-        let mut senders: Vec<Sender<MassMsg>> = Vec::with_capacity(m);
-        let mut receivers: Vec<Option<Receiver<MassMsg>>> = Vec::with_capacity(m);
-        for _ in 0..m {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(Some(rx));
-        }
-
-        let root = Rng::new(p.seed);
-        // bounded-staleness pacing: per-node completed-cycle counters
-        let counters: std::sync::Arc<Vec<std::sync::atomic::AtomicUsize>> =
-            std::sync::Arc::new((0..m).map(|_| std::sync::atomic::AtomicUsize::new(0)).collect());
-        let mut handles = Vec::with_capacity(m);
-        for (i, shard) in shards.into_iter().enumerate() {
-            let rx = receivers[i].take().unwrap();
-            let txs: Vec<Sender<MassMsg>> = senders.clone();
-            let nbrs = graph.adj[i].clone();
-            let mut rng = root.substream(i as u64);
-            let p = p.clone();
-            let counters = counters.clone();
-            handles.push(thread::spawn(move || -> Result<(Vec<f64>, f64)> {
-                let n_i = shard.len() as f64;
-                let mut backend = NativeBackend::default();
-                // push-sum state: v = nᵢ·w, weight = nᵢ
-                let mut w_est = vec![0.0f64; d];
-                let mut v = vec![0.0f64; d];
-                let mut mass_w = n_i;
-                let active = p.cycles.saturating_sub(p.cooldown);
-                for t in 1..=p.cycles {
-                    // bounded staleness: wait until the slowest peer is
-                    // within `max_lag` cycles (yielding, not spinning hot)
-                    loop {
-                        let min = counters
-                            .iter()
-                            .map(|c| c.load(std::sync::atomic::Ordering::Acquire))
-                            .min()
-                            .unwrap_or(0);
-                        if t <= min + p.max_lag + 1 {
-                            break;
-                        }
-                        thread::yield_now();
-                    }
-                    if t <= active {
-                        // (1) local step on the current estimate
-                        let mut ctx = StepContext {
-                            shard: &shard,
-                            t,
-                            lambda: p.lambda,
-                            batch_size: p.batch_size,
-                            local_steps: p.local_steps,
-                            project: p.project,
-                            rng: &mut rng,
-                        };
-                        backend.local_step(&mut ctx, &mut w_est)?;
-                        // (2) fold the stepped estimate back into the mass
-                        for k in 0..d {
-                            v[k] = w_est[k] * mass_w;
-                        }
-                    }
-                    // (3) halve and send
-                    if !nbrs.is_empty() {
-                        let tgt = nbrs[rng.below(nbrs.len())];
-                        let half_v: Vec<f64> = v.iter().map(|x| 0.5 * x).collect();
-                        let half_w = 0.5 * mass_w;
-                        for k in 0..d {
-                            v[k] *= 0.5;
-                        }
-                        mass_w *= 0.5;
-                        // A send fails only if the peer already exited; its
-                        // inbox is gone, so keep the mass local instead.
-                        if let Err(e) = txs[tgt].send(MassMsg { v: half_v, w: half_w }) {
-                            let MassMsg { v: hv, w: hw } = e.0;
-                            for k in 0..d {
-                                v[k] += hv[k];
-                            }
-                            mass_w += hw;
-                        }
-                    }
-                    // (4) drain inbox (non-blocking)
-                    while let Ok(msg) = rx.try_recv() {
-                        for k in 0..d {
-                            v[k] += msg.v[k];
-                        }
-                        mass_w += msg.w;
-                    }
-                    // refresh the estimate
-                    for k in 0..d {
-                        w_est[k] = v[k] / mass_w;
-                    }
-                    counters[i].store(t, std::sync::atomic::Ordering::Release);
-                }
-                // final drain with a short grace period so in-flight mass
-                // is ingested (mass conservation at the report boundary)
-                let deadline = std::time::Instant::now() + std::time::Duration::from_millis(50);
-                while std::time::Instant::now() < deadline {
-                    match rx.try_recv() {
-                        Ok(msg) => {
-                            for k in 0..d {
-                                v[k] += msg.v[k];
-                            }
-                            mass_w += msg.w;
-                        }
-                        Err(_) => thread::sleep(std::time::Duration::from_millis(1)),
-                    }
-                }
-                for k in 0..d {
-                    w_est[k] = v[k] / mass_w;
-                }
-                Ok((w_est, mass_w))
-            }));
-        }
-        drop(senders);
-
-        let mut out = Vec::with_capacity(m);
-        for h in handles {
-            let (w, _mass) = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
-            out.push(w);
-        }
-        Ok(out)
+        Ok(self.inner.run(shards, graph)?.estimates)
     }
 }
 

@@ -1,5 +1,5 @@
-//! The GADGET SVM runner — Algorithm 2 of the paper, cycle-driven
-//! (Peersim-equivalent) execution.
+//! The GADGET SVM runner — Algorithm 2 of the paper, executed on the
+//! unified node-parallel runtime.
 //!
 //! Per iteration `t` every node `i`:
 //! 1. **local step** (backend): mini-batch Pegasos sub-gradient update on
@@ -12,12 +12,28 @@
 //! 4. **ε-convergence**: stop when every node's weight vector moved less
 //!    than ε since the previous iteration (the paper's anytime criterion).
 //!
+//! The per-node step logic lives in [`super::sched::GossipProtocol`]; this
+//! runner only orchestrates trials and drives the phases through the
+//! configured [`super::sched::Scheduler`]:
+//!
+//! * `sequential` — all nodes on the calling thread (determinism
+//!   reference);
+//! * `parallel` — per-node work fanned across a scoped thread pool,
+//!   bitwise identical to `sequential` (per-node RNG substreams isolate
+//!   all randomness);
+//! * `async` — the thread-per-node message-passing engine; no global
+//!   barrier, so iteration accounting is "cycles" and the ε-criterion is
+//!   replaced by a consensus cool-down.
+//!
 //! The runner executes `trials` independent repetitions and aggregates
 //! accuracy/time with the paper's `sqrt(Var(Nodes) + Var(Trials))` rule.
 
-use super::backend::{LocalBackend, NativeBackend, StepContext};
+use super::backend::{LocalBackend, NativeBackend};
 use super::node::NodeState;
-use crate::config::{Backend, ExperimentConfig};
+use super::sched::{
+    AsyncParams, AsyncScheduler, GossipProtocol, Parallel, ProtocolParams, Scheduler, Sequential,
+};
+use crate::config::{Backend, ExperimentConfig, SchedulerKind};
 use crate::data::synthetic::{generate, spec_by_name};
 use crate::data::{partition, Dataset};
 use crate::gossip::{GossipStats, PushVector};
@@ -31,7 +47,7 @@ use anyhow::{bail, Context};
 /// Result of one GADGET trial.
 #[derive(Clone, Debug)]
 pub struct TrialResult {
-    /// GADGET iterations executed (≤ `max_iterations`).
+    /// GADGET iterations executed (≤ `max_iterations`; async: cycles).
     pub iterations: usize,
     /// Model-construction wall time (excludes data loading, as in Table 3).
     pub train_secs: f64,
@@ -41,13 +57,14 @@ pub struct TrialResult {
     /// training set.
     pub node_objective: Vec<f64>,
     /// Max `‖ŵᵢ^(T) − ŵᵢ^(T−1)‖` at stop — the paper's "epsilon at
-    /// convergence".
+    /// convergence" (async: max node deviation from the consensus mean).
     pub epsilon_final: f64,
     /// Node-averaged weight vector at stop (the network consensus model).
     pub consensus_w: Vec<f64>,
     /// Gossip communication totals.
     pub gossip: GossipStats,
-    /// Convergence trace (non-empty when `snapshot_every > 0`).
+    /// Convergence trace (non-empty when `snapshot_every > 0`; the async
+    /// engine records no trace — there is no global iteration to snapshot).
     pub trace: Trace,
 }
 
@@ -102,7 +119,8 @@ pub struct DatasetRunReport {
 
 /// Runs GADGET on explicit train/test datasets (bypassing the config's
 /// dataset loader) — the entry point the multiclass reduction and the
-/// feature-mapped (RFF) paths use.
+/// feature-mapped (RFF) paths use. The `[runtime]` scheduler choice of the
+/// base config applies here too.
 pub fn run_on_datasets(
     base: &ExperimentConfig,
     train: Dataset,
@@ -159,9 +177,9 @@ impl GadgetRunner {
         self.lambda
     }
 
-    /// Runs all configured trials with the configured backend.
-    pub fn run(&self) -> Result<GadgetReport> {
-        let mut backend: Box<dyn LocalBackend> = match self.cfg.backend {
+    /// Builds one local-step backend per the config's `backend` choice.
+    fn make_backend(&self) -> Result<Box<dyn LocalBackend + Send>> {
+        Ok(match self.cfg.backend {
             Backend::Native => Box::new(NativeBackend::default()),
             Backend::Xla => Box::new(crate::runtime::XlaBackend::from_default_artifacts(
                 self.train.dim,
@@ -169,19 +187,65 @@ impl GadgetRunner {
                 self.cfg.local_steps,
                 self.lambda,
             )?),
-        };
-        self.run_with_backend(backend.as_mut())
+        })
     }
 
-    /// Runs all trials with an explicit backend (tests / benches inject
-    /// their own).
+    /// Runs all configured trials on the configured scheduler and backend.
+    pub fn run(&self) -> Result<GadgetReport> {
+        match self.cfg.scheduler {
+            SchedulerKind::Sequential => {
+                let mut backend = self.make_backend()?;
+                self.run_with_backend(&mut *backend)
+            }
+            SchedulerKind::Parallel => {
+                // Cap the pool at the node count: more workers than nodes
+                // can never be used, and each worker costs a backend
+                // (an entire artifact compilation on the XLA path).
+                let workers =
+                    super::sched::resolve_threads(self.cfg.threads).min(self.cfg.nodes);
+                let mut sched = Parallel::new(workers, || self.make_backend())?;
+                self.run_with_scheduler(&mut sched)
+            }
+            SchedulerKind::Async => {
+                // The async engine's node threads run the native backend;
+                // silently training native while reporting backend=Xla
+                // would poison any backend comparison — reject loudly.
+                anyhow::ensure!(
+                    self.cfg.backend == Backend::Native,
+                    "scheduler = \"async\" supports only backend = \"native\" \
+                     (the thread-per-node engine embeds the native local \
+                     learner); use the sequential or parallel scheduler for \
+                     the XLA backend"
+                );
+                self.run_async()
+            }
+        }
+    }
+
+    /// Runs all trials sequentially with an explicit backend (tests /
+    /// benches inject their own).
     pub fn run_with_backend(&self, backend: &mut dyn LocalBackend) -> Result<GadgetReport> {
+        let mut sched = Sequential::new(backend);
+        self.run_with_scheduler(&mut sched)
+    }
+
+    /// Runs all trials on an explicit cycle-driven scheduler.
+    pub fn run_with_scheduler(&self, sched: &mut dyn Scheduler) -> Result<GadgetReport> {
         let mut trials = Vec::with_capacity(self.cfg.trials);
         for trial in 0..self.cfg.trials {
-            let seed = self.cfg.seed.wrapping_add(trial as u64 * 0x1000_0001);
-            trials.push(self.run_trial(seed, backend)?);
+            let seed = self.trial_seed(trial);
+            trials.push(self.run_trial(seed, sched)?);
         }
-        // Paper aggregation.
+        Ok(self.aggregate(trials))
+    }
+
+    /// Per-trial root seed.
+    fn trial_seed(&self, trial: usize) -> u64 {
+        self.cfg.seed.wrapping_add(trial as u64 * 0x1000_0001)
+    }
+
+    /// Paper aggregation over per-trial results.
+    fn aggregate(&self, trials: Vec<TrialResult>) -> GadgetReport {
         let acc_matrix: Vec<Vec<f64>> =
             trials.iter().map(|t| t.node_accuracy.clone()).collect();
         let (acc_mean, acc_std) = node_trial_std(&acc_matrix);
@@ -194,7 +258,7 @@ impl GadgetRunner {
             trials.iter().map(|t| t.epsilon_final).sum::<f64>() / trials.len() as f64;
         let iter_mean =
             trials.iter().map(|t| t.iterations as f64).sum::<f64>() / trials.len() as f64;
-        Ok(GadgetReport {
+        GadgetReport {
             dataset: self.cfg.dataset.clone(),
             lambda: self.lambda,
             load_secs: self.load_secs,
@@ -206,11 +270,45 @@ impl GadgetRunner {
             epsilon_final: eps_mean,
             iterations: iter_mean,
             trials,
-        })
+        }
     }
 
-    /// One full GADGET trial.
-    fn run_trial(&self, seed: u64, backend: &mut dyn LocalBackend) -> Result<TrialResult> {
+    /// Builds the per-trial node set (shards, RNG substreams, zero
+    /// weights) — shared by the cycle and async paths.
+    fn build_nodes(&self, seed: u64) -> Vec<NodeState> {
+        let m = self.cfg.nodes;
+        let d = self.train.dim;
+        let train_shards = partition::horizontal_split(&self.train, m, seed);
+        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57);
+        let root = Rng::new(seed);
+        train_shards
+            .into_iter()
+            .zip(test_shards)
+            .enumerate()
+            .map(|(i, (tr, te))| NodeState::new(i, tr, te, d, root.substream(i as u64)))
+            .collect()
+    }
+
+    /// Per-node evaluation shared by both execution paths.
+    fn evaluate_nodes(&self, nodes: &[NodeState]) -> (Vec<f64>, Vec<f64>) {
+        let node_accuracy: Vec<f64> = nodes
+            .iter()
+            .map(|n| {
+                metrics::accuracy(
+                    &n.w,
+                    if n.test_shard.is_empty() { &self.test } else { &n.test_shard },
+                )
+            })
+            .collect();
+        let node_objective: Vec<f64> = nodes
+            .iter()
+            .map(|n| metrics::objective(&n.w, &self.train, self.lambda))
+            .collect();
+        (node_accuracy, node_objective)
+    }
+
+    /// One full cycle-driven GADGET trial on the given scheduler.
+    fn run_trial(&self, seed: u64, sched: &mut dyn Scheduler) -> Result<TrialResult> {
         let cfg = &self.cfg;
         let m = cfg.nodes;
         let d = self.train.dim;
@@ -225,22 +323,15 @@ impl GadgetRunner {
         };
 
         // --- data distribution ---------------------------------------------
-        let train_shards = partition::horizontal_split(&self.train, m, seed);
-        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57);
-        let root = Rng::new(seed);
-        let mut nodes: Vec<NodeState> = train_shards
-            .into_iter()
-            .zip(test_shards)
-            .enumerate()
-            .map(|(i, (tr, te))| NodeState::new(i, tr, te, d, root.substream(i as u64)))
-            .collect();
+        let mut nodes = self.build_nodes(seed);
         let shard_sizes: Vec<f64> = nodes.iter().map(|n| n.n_local() as f64).collect();
+        let ids: Vec<usize> = (0..m).collect();
+        let protocol = GossipProtocol::new(ProtocolParams::from_config(cfg, self.lambda));
 
         // --- the GADGET loop -----------------------------------------------
         let sw = Stopwatch::new();
         let mut gossip_total = GossipStats::default();
         let mut trace = Trace::new(format!("gadget-{}", cfg.dataset));
-        let radius = 1.0 / self.lambda.sqrt();
         let mut iterations = 0usize;
         // One Push-Vector state reused across iterations (reset_weighted is
         // allocation-free; constructing it fresh allocates 4 m×d buffers
@@ -250,35 +341,23 @@ impl GadgetRunner {
 
         for t in 1..=cfg.max_iterations {
             iterations = t;
-            // (a)–(f): local sub-gradient step at every node.
-            for node in nodes.iter_mut() {
-                let mut ctx = StepContext {
-                    shard: &node.shard,
-                    t,
-                    lambda: self.lambda,
-                    batch_size: cfg.batch_size,
-                    local_steps: cfg.local_steps,
-                    project: cfg.project_local,
-                    rng: &mut node.rng,
-                };
-                backend.local_step(&mut ctx, &mut node.w)?;
-            }
+            // (a)–(f): local sub-gradient step at every node, fanned out
+            // by the scheduler.
+            sched.for_each_node(&mut nodes, &ids, &|backend, _id, node| {
+                protocol.local_step(backend, node, t)
+            })?;
             // (g): Push-Vector consensus on the shard-weighted vectors.
             pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
             pv.run_rounds(&b, rounds);
             gossip_total.merge(pv.stats());
-            for node in nodes.iter_mut() {
-                pv.estimate_into(node.id, &mut node.w);
-                // (h): optional consensus projection.
-                if cfg.project_consensus {
-                    crate::linalg::project_to_ball(&mut node.w, radius);
-                }
-            }
-            // ε-convergence across all nodes.
-            let mut all = true;
-            for node in nodes.iter_mut() {
-                all &= node.check_convergence(cfg.epsilon);
-            }
+            // (g)-consume/(h)/ε: estimate, optional projection and the
+            // convergence test, per node (slot == id here since ids = 0..m).
+            sched.for_each_node(&mut nodes, &ids, &|_backend, slot, node| {
+                protocol.apply_estimate(&pv, slot, node);
+                protocol.check_convergence(node);
+                Ok(())
+            })?;
+            let all = nodes.iter().all(|n| n.converged);
             // anytime snapshot for the figures.
             if cfg.snapshot_every > 0 && (t % cfg.snapshot_every == 0 || all) {
                 let w_avg = average_w(&nodes);
@@ -296,12 +375,7 @@ impl GadgetRunner {
         let train_secs = sw.secs();
 
         // --- evaluation ------------------------------------------------------
-        let node_accuracy: Vec<f64> = nodes
-            .iter()
-            .map(|n| metrics::accuracy(&n.w, if n.test_shard.is_empty() { &self.test } else { &n.test_shard }))
-            .collect();
-        let node_objective: Vec<f64> =
-            nodes.iter().map(|n| metrics::objective(&n.w, &self.train, self.lambda)).collect();
+        let (node_accuracy, node_objective) = self.evaluate_nodes(&nodes);
         let epsilon_final =
             nodes.iter().map(|n| n.last_delta).fold(0.0f64, f64::max);
 
@@ -316,7 +390,94 @@ impl GadgetRunner {
             trace,
         })
     }
+
+    /// Runs all trials through the asynchronous scheduler (`scheduler =
+    /// "async"`): thread-per-node, no global barrier. `max_iterations`
+    /// becomes the per-node cycle budget, with the trailing eighth of the
+    /// budget as a consensus cool-down.
+    fn run_async(&self) -> Result<GadgetReport> {
+        let mut trials = Vec::with_capacity(self.cfg.trials);
+        for trial in 0..self.cfg.trials {
+            let seed = self.trial_seed(trial);
+            trials.push(self.run_async_trial(seed)?);
+        }
+        Ok(self.aggregate(trials))
+    }
+
+    /// One asynchronous trial. The train shards move straight into the
+    /// scheduler's node threads (no NodeState husks, no shard clones);
+    /// evaluation works directly on the returned estimates.
+    fn run_async_trial(&self, seed: u64) -> Result<TrialResult> {
+        let cfg = &self.cfg;
+        let m = cfg.nodes;
+        let graph = Graph::generate(cfg.topology, m, seed ^ GRAPH_SEED);
+        let train_shards = partition::horizontal_split(&self.train, m, seed);
+        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57);
+        let params = AsyncParams {
+            lambda: self.lambda,
+            batch_size: cfg.batch_size,
+            cycles: cfg.max_iterations,
+            cooldown: (cfg.max_iterations / ASYNC_COOLDOWN_DIV).max(1),
+            local_steps: cfg.local_steps,
+            project: cfg.project_local,
+            seed,
+            max_lag: ASYNC_MAX_LAG,
+        };
+        let sw = Stopwatch::new();
+        let result = AsyncScheduler::new(params).run(train_shards, &graph)?;
+        let train_secs = sw.secs();
+
+        let node_accuracy: Vec<f64> = result
+            .estimates
+            .iter()
+            .zip(&test_shards)
+            .map(|(w, te)| {
+                metrics::accuracy(w, if te.is_empty() { &self.test } else { te })
+            })
+            .collect();
+        let node_objective: Vec<f64> = result
+            .estimates
+            .iter()
+            .map(|w| metrics::objective(w, &self.train, self.lambda))
+            .collect();
+        let d = self.train.dim;
+        let mut consensus_w = vec![0.0; d];
+        for w in &result.estimates {
+            crate::linalg::add_assign(w, &mut consensus_w);
+        }
+        crate::linalg::scale_assign(1.0 / m as f64, &mut consensus_w);
+        // ε surrogate: worst node deviation from the consensus mean.
+        let epsilon_final = result
+            .estimates
+            .iter()
+            .map(|w| {
+                let mut diff = 0.0;
+                for (a, b) in w.iter().zip(&consensus_w) {
+                    let x = a - b;
+                    diff += x * x;
+                }
+                diff.sqrt()
+            })
+            .fold(0.0f64, f64::max);
+
+        Ok(TrialResult {
+            iterations: cfg.max_iterations,
+            train_secs,
+            node_accuracy,
+            node_objective,
+            epsilon_final,
+            consensus_w,
+            gossip: result.stats,
+            trace: Trace::new(format!("gadget-async-{}", cfg.dataset)),
+        })
+    }
 }
+
+/// Async cool-down fraction: the trailing `1/8` of the cycle budget runs
+/// pure push-sum so estimates agree tightly before reporting.
+const ASYNC_COOLDOWN_DIV: usize = 8;
+/// Async bounded-staleness window (cycles a node may run ahead).
+const ASYNC_MAX_LAG: usize = 4;
 
 fn average_w(nodes: &[NodeState]) -> Vec<f64> {
     let d = nodes[0].w.len();
@@ -452,5 +613,19 @@ mod tests {
         // 0.005·7329 ≈ 36 samples ⇒ max(32) ⇒ 36 ≥ 36? borderline; force tiny
         let cfg2 = ExperimentConfig { nodes: 5000, ..cfg };
         assert!(GadgetRunner::new(cfg2).is_err());
+    }
+
+    #[test]
+    fn async_scheduler_trains_end_to_end() {
+        let cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Async,
+            max_iterations: 400,
+            trials: 1,
+            ..small_cfg()
+        };
+        let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert!(report.test_accuracy > 0.75, "async accuracy {}", report.test_accuracy);
+        assert_eq!(report.iterations, 400.0);
+        assert!(report.trials[0].gossip.messages > 0);
     }
 }

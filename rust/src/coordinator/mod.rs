@@ -5,12 +5,18 @@
 //!   artifact in [`crate::runtime`]).
 //! * [`node`] — per-site state: shard, weight vector, RNG stream,
 //!   convergence bookkeeping.
+//! * [`sched`] — the unified node-parallel execution runtime: the shared
+//!   per-node protocol step (Algorithm 2 (a)–(h) + ε-check) behind one
+//!   `Scheduler` abstraction with sequential, parallel (scoped thread
+//!   pool) and asynchronous (thread-per-node message passing)
+//!   implementations.
 //! * [`gadget`] — the cycle-driven runner: local sub-gradient step →
 //!   Push-Vector consensus → projection → ε-convergence test, with anytime
-//!   snapshots for the figures.
-//! * [`engine`] — the asynchronous message-passing engine (threads +
-//!   channels): the same protocol executed without a global round barrier,
-//!   demonstrating the "completely asynchronous" property claimed in §1.
+//!   snapshots for the figures, executed through the configured scheduler.
+//! * [`engine`] — compatibility facade over the async scheduler (the
+//!   "completely asynchronous" property claimed in §1).
+//! * [`churn`] — node failures and re-joins during training (§5
+//!   resilience), on the same runtime.
 
 pub mod backend;
 pub mod churn;
@@ -18,6 +24,7 @@ pub mod engine;
 pub mod gadget;
 pub mod multiclass;
 pub mod node;
+pub mod sched;
 
 pub use backend::{LocalBackend, NativeBackend, StepContext};
 pub use churn::{run_with_churn, ChurnEvent, ChurnKind, ChurnReport, ChurnSchedule};
@@ -25,3 +32,7 @@ pub use engine::{AsyncGossipEngine, AsyncParams};
 pub use gadget::{run_on_datasets, DatasetRunReport, GadgetReport, GadgetRunner, TrialResult};
 pub use multiclass::{MulticlassGadget, MulticlassReport};
 pub use node::NodeState;
+pub use sched::{
+    AsyncRunResult, AsyncScheduler, GossipProtocol, MassState, Parallel, ProtocolParams,
+    Scheduler, Sequential,
+};

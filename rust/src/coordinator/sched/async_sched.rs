@@ -1,0 +1,348 @@
+//! The asynchronous scheduler: one OS thread per node, channel-based
+//! message passing, no global round barrier.
+//!
+//! This is the third [`super::Scheduler`] execution strategy — it absorbs
+//! the former `coordinator::engine` thread-per-node loop and runs it on
+//! the shared protocol atoms: [`super::GossipProtocol::local_step`] for
+//! Algorithm 2 (a)–(f) and [`super::MassState`] for the push-sum mass
+//! algebra. Nodes run local steps and ship halves of their `(nᵢ·wᵢ, nᵢ)`
+//! mass to random neighbors whenever *they* are ready, ingesting whatever
+//! has arrived since.
+//!
+//! Two liveness/correctness mechanisms:
+//!
+//! * **bounded staleness** — a node may run at most `max_lag` cycles ahead
+//!   of the slowest peer; without a bound a thread can finish every cycle
+//!   before its peers start and no mixing happens (the consensus theory
+//!   assumes bounded communication delays);
+//! * **barrier drain** — after the last cycle every thread passes a
+//!   barrier and then drains its inbox to empty. All sends happen before
+//!   the barrier and in-memory channels deliver immediately, so the final
+//!   states ingest *every* in-flight message: total mass `Σ nᵢwᵢ` and
+//!   total weight `Σ nᵢ` are conserved at the report boundary (the
+//!   mass-conservation property test in `rust/tests/` asserts this).
+
+use super::protocol::{GossipProtocol, MassState, ProtocolParams};
+use crate::coordinator::backend::NativeBackend;
+use crate::coordinator::node::NodeState;
+use crate::data::Dataset;
+use crate::gossip::GossipStats;
+use crate::rng::Rng;
+use crate::topology::Graph;
+use crate::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+/// A mass message: (vector·weight payload, push-sum weight).
+struct MassMsg {
+    v: Vec<f64>,
+    w: f64,
+}
+
+/// Liveness guard for a node thread: guarantees the thread's exit
+/// obligations — unblocking the staleness loop (counter → max) and
+/// passing the final-drain [`Barrier`] — are met even if the thread
+/// *panics* mid-cycle. Without this, one panicking node would leave the
+/// other `m − 1` threads blocked forever (first on the staleness
+/// yield-loop, then on the barrier) and `run()` would hang instead of
+/// returning the join error.
+struct ExitGuard {
+    counters: Arc<Vec<AtomicUsize>>,
+    barrier: Arc<Barrier>,
+    node: usize,
+    cycles: usize,
+    /// Set by the normal/error exit path right before it performs the
+    /// counter-store + barrier-wait itself.
+    disarmed: bool,
+}
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        if !self.disarmed {
+            self.counters[self.node].store(self.cycles, Ordering::Release);
+            self.barrier.wait();
+        }
+    }
+}
+
+/// Parameters for an asynchronous run.
+#[derive(Clone, Debug)]
+pub struct AsyncParams {
+    /// Regularization λ.
+    pub lambda: f64,
+    /// Local mini-batch size.
+    pub batch_size: usize,
+    /// Gossip cycles each node performs.
+    pub cycles: usize,
+    /// Trailing cycles that gossip *without* fresh local steps — a
+    /// consensus cool-down so the final estimates agree tightly (pure
+    /// Push-Sum contracts geometrically once the drift stops). 0 disables.
+    pub cooldown: usize,
+    /// Local Pegasos steps between sends.
+    pub local_steps: usize,
+    /// Project onto the `1/√λ` ball after local steps.
+    pub project: bool,
+    /// Root seed.
+    pub seed: u64,
+    /// Bounded staleness: a node may run at most this many cycles ahead of
+    /// the slowest peer. 0 = lock-step.
+    pub max_lag: usize,
+}
+
+/// Everything an asynchronous run reports: per-node estimates plus the
+/// raw push-sum mass (for conservation checks) and communication totals.
+#[derive(Clone, Debug)]
+pub struct AsyncRunResult {
+    /// Per-node final weight estimates `vᵢ / weightᵢ`.
+    pub estimates: Vec<Vec<f64>>,
+    /// Per-node final mass vectors `vᵢ` (Σᵢ vᵢ is conserved).
+    pub mass_v: Vec<Vec<f64>>,
+    /// Per-node final push-sum weights (Σᵢ weightᵢ = Σᵢ nᵢ, conserved).
+    pub mass_weights: Vec<f64>,
+    /// Communication totals across all nodes.
+    pub stats: GossipStats,
+}
+
+/// The asynchronous execution engine.
+pub struct AsyncScheduler {
+    params: AsyncParams,
+}
+
+impl AsyncScheduler {
+    /// Creates the scheduler.
+    pub fn new(params: AsyncParams) -> Self {
+        Self { params }
+    }
+
+    /// The configured parameters.
+    pub fn params(&self) -> &AsyncParams {
+        &self.params
+    }
+
+    /// Runs the asynchronous protocol over `shards` on `graph`.
+    ///
+    /// Each node thread, per cycle: (1) protocol local step(s); (2) fold
+    /// the stepped estimate into its push-sum mass; (3) keep half, send
+    /// half to a random neighbor; (4) drain its inbox. The current
+    /// estimate `v/w` becomes the working weight vector for the next local
+    /// step — the Algorithm 2 loop, minus the barrier.
+    pub fn run(&self, shards: Vec<Dataset>, graph: &Graph) -> Result<AsyncRunResult> {
+        let m = shards.len();
+        anyhow::ensure!(m == graph.n, "async scheduler: shard/graph size mismatch");
+        anyhow::ensure!(m > 0, "async scheduler: no shards");
+        for (i, s) in shards.iter().enumerate() {
+            anyhow::ensure!(!s.is_empty(), "async scheduler: shard {i} is empty");
+        }
+        let d = shards[0].dim;
+        let p = self.params.clone();
+        let protocol = GossipProtocol::new(ProtocolParams {
+            lambda: p.lambda,
+            batch_size: p.batch_size,
+            local_steps: p.local_steps,
+            project_local: p.project,
+            // the async path has no consensus projection / ε phase — the
+            // estimate itself is the consensus step
+            project_consensus: false,
+            epsilon: 0.0,
+        });
+
+        // channels: node i's inbox
+        let mut senders: Vec<Sender<MassMsg>> = Vec::with_capacity(m);
+        let mut receivers: Vec<Option<Receiver<MassMsg>>> = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+
+        let root = Rng::new(p.seed);
+        // bounded-staleness pacing: per-node completed-cycle counters
+        let counters: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..m).map(|_| AtomicUsize::new(0)).collect());
+        // the final-drain barrier (see module docs)
+        let barrier = Arc::new(Barrier::new(m));
+        let mut handles = Vec::with_capacity(m);
+        for (i, shard) in shards.into_iter().enumerate() {
+            let rx = receivers[i].take().unwrap();
+            let txs: Vec<Sender<MassMsg>> = senders.clone();
+            let nbrs = graph.adj[i].clone();
+            let rng = root.substream(i as u64);
+            let p = p.clone();
+            let protocol = protocol.clone();
+            let counters = counters.clone();
+            let barrier = barrier.clone();
+            handles.push(thread::spawn(
+                move || -> Result<(Vec<f64>, Vec<f64>, f64, usize)> {
+                    let mut guard = ExitGuard {
+                        counters: counters.clone(),
+                        barrier: barrier.clone(),
+                        node: i,
+                        cycles: p.cycles,
+                        disarmed: false,
+                    };
+                    let n_i = shard.len() as f64;
+                    let mut backend = NativeBackend::default();
+                    // The node state carries the shard, the RNG substream
+                    // and the working estimate; the test shard is unused
+                    // here (evaluation happens in the coordinator).
+                    let mut node = NodeState::new(i, shard, Dataset::default(), d, rng);
+                    let mut mass = MassState::new(d, n_i);
+                    let active = p.cycles.saturating_sub(p.cooldown);
+                    let mut sent = 0usize;
+                    let mut failure: Option<anyhow::Error> = None;
+                    for t in 1..=p.cycles {
+                        // bounded staleness: wait until the slowest peer is
+                        // within `max_lag` cycles (yielding, not spinning hot)
+                        loop {
+                            let min = counters
+                                .iter()
+                                .map(|c| c.load(Ordering::Acquire))
+                                .min()
+                                .unwrap_or(0);
+                            if t <= min + p.max_lag + 1 {
+                                break;
+                            }
+                            thread::yield_now();
+                        }
+                        if t <= active {
+                            // (1) protocol local step on the current estimate
+                            if let Err(e) = protocol.local_step(&mut backend, &mut node, t) {
+                                // Record and unblock peers: the barrier
+                                // below must still be reached by everyone.
+                                failure = Some(e);
+                                counters[i].store(p.cycles, Ordering::Release);
+                                break;
+                            }
+                            // (2) fold the stepped estimate back into the mass
+                            mass.fold(&node.w);
+                        }
+                        // (3) halve and send
+                        if !nbrs.is_empty() {
+                            let tgt = nbrs[node.rng.below(nbrs.len())];
+                            let (half_v, half_w) = mass.split_half();
+                            // A send fails only if the peer already exited;
+                            // its inbox is gone, so keep the mass local.
+                            match txs[tgt].send(MassMsg { v: half_v, w: half_w }) {
+                                Ok(()) => sent += 1,
+                                Err(e) => {
+                                    let MassMsg { v: hv, w: hw } = e.0;
+                                    mass.absorb(&hv, hw);
+                                }
+                            }
+                        }
+                        // (4) drain inbox (non-blocking)
+                        while let Ok(msg) = rx.try_recv() {
+                            mass.absorb(&msg.v, msg.w);
+                        }
+                        // refresh the estimate
+                        mass.estimate_into(&mut node.w);
+                        counters[i].store(t, Ordering::Release);
+                    }
+                    // Final drain: every send happens before this barrier,
+                    // so draining to empty afterwards ingests all in-flight
+                    // mass — exact conservation at the report boundary.
+                    // (Normal exit performs the guard's obligations itself;
+                    // the guard only fires on a panic path.)
+                    guard.disarmed = true;
+                    counters[i].store(p.cycles, Ordering::Release);
+                    barrier.wait();
+                    while let Ok(msg) = rx.try_recv() {
+                        mass.absorb(&msg.v, msg.w);
+                    }
+                    mass.estimate_into(&mut node.w);
+                    if let Some(e) = failure {
+                        return Err(e);
+                    }
+                    Ok((node.w, mass.v, mass.w, sent))
+                },
+            ));
+        }
+        drop(senders);
+
+        let mut estimates = Vec::with_capacity(m);
+        let mut mass_v = Vec::with_capacity(m);
+        let mut mass_weights = Vec::with_capacity(m);
+        let mut stats = GossipStats::default();
+        for h in handles {
+            let (w, v, mw, sent) =
+                h.join().map_err(|_| anyhow::anyhow!("async scheduler: node thread panicked"))??;
+            estimates.push(w);
+            mass_v.push(v);
+            mass_weights.push(mw);
+            stats.messages += sent;
+            stats.bytes += sent * 8 * (d + 1);
+        }
+        stats.rounds = p.cycles;
+        Ok(AsyncRunResult { estimates, mass_v, mass_weights, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::horizontal_split;
+    use crate::data::synthetic::{generate, DatasetSpec};
+
+    fn problem(m: usize) -> (Vec<Dataset>, Dataset) {
+        let spec = DatasetSpec {
+            name: "asched".into(),
+            train_size: 480,
+            test_size: 240,
+            features: 20,
+            nnz_per_row: 6,
+            noise: 0.03,
+            positive_rate: 0.5,
+            lambda: 1e-2,
+        };
+        let s = generate(&spec, 91, 1.0);
+        (horizontal_split(&s.train, m, 2), s.test)
+    }
+
+    fn params(cycles: usize, cooldown: usize) -> AsyncParams {
+        AsyncParams {
+            lambda: 1e-2,
+            batch_size: 2,
+            cycles,
+            cooldown,
+            local_steps: 1,
+            project: true,
+            seed: 5,
+            max_lag: 4,
+        }
+    }
+
+    #[test]
+    fn learns_and_reports_full_mass_state() {
+        let (shards, test) = problem(4);
+        let total_n: f64 = shards.iter().map(|s| s.len() as f64).sum();
+        let g = Graph::complete(4);
+        let res = AsyncScheduler::new(params(400, 50)).run(shards, &g).unwrap();
+        assert_eq!(res.estimates.len(), 4);
+        for w in &res.estimates {
+            let acc = crate::metrics::accuracy(w, &test);
+            assert!(acc > 0.8, "node accuracy {acc}");
+        }
+        // total push-sum weight is exactly the sample count (conservation)
+        let w_sum: f64 = res.mass_weights.iter().sum();
+        assert!((w_sum - total_n).abs() < 1e-9 * total_n, "weight drift {w_sum} vs {total_n}");
+        assert!(res.stats.messages > 0);
+        assert!(res.stats.bytes > res.stats.messages);
+    }
+
+    #[test]
+    fn empty_shard_is_rejected_upfront() {
+        let (mut shards, _) = problem(3);
+        shards[1] = Dataset::default();
+        let g = Graph::complete(3);
+        assert!(AsyncScheduler::new(params(10, 0)).run(shards, &g).is_err());
+    }
+
+    #[test]
+    fn mismatched_graph_rejected() {
+        let (shards, _) = problem(4);
+        let g = Graph::complete(3);
+        assert!(AsyncScheduler::new(params(1, 0)).run(shards, &g).is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! The node-parallel execution runtime: one `Scheduler` abstraction behind
+//! every GADGET engine.
+//!
+//! The paper describes GADGET as a *distributed* anytime algorithm — each
+//! site runs Algorithm 2 locally. This module separates the protocol (what
+//! one node does per iteration — [`protocol::GossipProtocol`]) from the
+//! execution strategy (where and when node steps run — [`Scheduler`]):
+//!
+//! * [`Sequential`] — all nodes stepped in id order on the calling thread.
+//!   The determinism reference, and what Peersim's cycle-driven simulation
+//!   does.
+//! * [`Parallel`] — a scoped pool fans the per-node work across cores,
+//!   one backend instance per worker. Because every node samples from its
+//!   own RNG substream (`root.substream(i)`) and the backends carry no
+//!   result-bearing state across calls, the outcome is **bitwise
+//!   identical** to [`Sequential`] — asserted by
+//!   `rust/tests/scheduler_equivalence.rs`.
+//! * [`AsyncScheduler`] — thread-per-node message passing with bounded
+//!   staleness and a consensus cool-down: no global round barrier at all
+//!   (the paper's §1 "completely asynchronous" claim).
+//!
+//! The scheduler choice threads through `[runtime]` in the config
+//! (`scheduler = "sequential" | "parallel" | "async"`, `threads = N`) and
+//! `--scheduler/--threads` on the CLI.
+
+pub mod async_sched;
+pub mod protocol;
+
+pub use async_sched::{AsyncParams, AsyncRunResult, AsyncScheduler};
+pub use protocol::{GossipProtocol, MassState, ProtocolParams};
+
+use crate::coordinator::backend::LocalBackend;
+use crate::coordinator::node::NodeState;
+use crate::Result;
+
+/// A per-node work item: receives the worker's backend, the node's
+/// position within the `ids` slice (== the Push-Vector slot under churn;
+/// == the node id when `ids` is `0..m`), and exclusive access to the
+/// node's state (`node.id` carries the global id).
+pub type NodeFn<'a> =
+    &'a (dyn Fn(&mut dyn LocalBackend, usize, &mut NodeState) -> Result<()> + Sync);
+
+/// Executes per-node protocol phases over a node set.
+///
+/// `ids` selects which nodes participate (all of them for the plain
+/// runner; the alive set under churn) and must be strictly increasing and
+/// in range. A scheduler guarantees each selected node is visited exactly
+/// once with exclusive access; it does *not* guarantee any ordering
+/// between nodes — per-node work must not depend on other nodes' state,
+/// which is exactly the structure of Algorithm 2's local phase.
+pub trait Scheduler {
+    /// Scheduler name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Worker count (1 for sequential).
+    fn threads(&self) -> usize;
+
+    /// Applies `f` to every node selected by `ids`.
+    fn for_each_node(
+        &mut self,
+        nodes: &mut [NodeState],
+        ids: &[usize],
+        f: NodeFn<'_>,
+    ) -> Result<()>;
+}
+
+/// Resolves a configured thread count: `0` means "use all available
+/// cores".
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// The sequential scheduler: today's cycle-driven behavior, one backend,
+/// nodes visited in id order on the calling thread.
+pub struct Sequential<'b> {
+    backend: &'b mut dyn LocalBackend,
+}
+
+impl<'b> Sequential<'b> {
+    /// Wraps a borrowed backend (callers keep ownership — the public
+    /// `GadgetRunner::run_with_backend` entry point injects test/bench
+    /// backends this way).
+    pub fn new(backend: &'b mut dyn LocalBackend) -> Self {
+        Self { backend }
+    }
+}
+
+impl Scheduler for Sequential<'_> {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn for_each_node(
+        &mut self,
+        nodes: &mut [NodeState],
+        ids: &[usize],
+        f: NodeFn<'_>,
+    ) -> Result<()> {
+        for (slot, &id) in ids.iter().enumerate() {
+            let node = nodes
+                .get_mut(id)
+                .ok_or_else(|| anyhow::anyhow!("scheduler: node id {id} out of range"))?;
+            f(&mut *self.backend, slot, node)?;
+        }
+        Ok(())
+    }
+}
+
+/// The node-parallel scheduler: scoped worker threads with one backend
+/// per worker. Nodes are split into contiguous chunks of the selected id
+/// set; each worker steps its chunk in order. Since node results depend
+/// only on the node's own state (shard, RNG substream, weight vector) and
+/// the backends re-initialize their scratch from `w` on every call, the
+/// results are bitwise identical to [`Sequential`] regardless of worker
+/// count or interleaving.
+///
+/// Workers are *spawned per `for_each_node` call* (scoped threads keep
+/// the borrow story safe without `unsafe`); only the backends persist.
+/// Spawn cost is tens of microseconds per worker per phase, which is
+/// noise against the local-step phase but can cap speedups at tiny
+/// `d`·`batch` — a persistent parked pool is a ROADMAP open item; the
+/// threads sweep in `benches/table5_speedup.rs` tracks the real effect.
+pub struct Parallel {
+    backends: Vec<Box<dyn LocalBackend + Send>>,
+}
+
+impl Parallel {
+    /// Builds a pool of `threads` workers (`0` = all cores), constructing
+    /// one backend per worker with `factory`.
+    pub fn new<F>(threads: usize, factory: F) -> Result<Self>
+    where
+        F: Fn() -> Result<Box<dyn LocalBackend + Send>>,
+    {
+        let t = resolve_threads(threads);
+        let mut backends = Vec::with_capacity(t);
+        for _ in 0..t {
+            backends.push(factory()?);
+        }
+        Ok(Self { backends })
+    }
+
+    /// A native-backend pool — the common case (churn, benches).
+    pub fn native(threads: usize) -> Self {
+        // The factory is infallible for the native backend.
+        Self::new(threads, || {
+            let b: Box<dyn LocalBackend + Send> =
+                Box::new(crate::coordinator::backend::NativeBackend::default());
+            Ok(b)
+        })
+        .expect("native backend construction cannot fail")
+    }
+}
+
+impl Scheduler for Parallel {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn threads(&self) -> usize {
+        self.backends.len()
+    }
+
+    fn for_each_node(
+        &mut self,
+        nodes: &mut [NodeState],
+        ids: &[usize],
+        f: NodeFn<'_>,
+    ) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        // Collect disjoint &mut references to the selected nodes, in id
+        // order, without unsafe: walk the slice's iter_mut once.
+        let mut refs: Vec<(usize, &mut NodeState)> = Vec::with_capacity(ids.len());
+        {
+            let mut it = nodes.iter_mut().enumerate();
+            for (slot, &want) in ids.iter().enumerate() {
+                let node = loop {
+                    match it.next() {
+                        Some((i, n)) if i == want => break n,
+                        Some(_) => continue,
+                        None => anyhow::bail!(
+                            "scheduler: node ids must be strictly increasing and in \
+                             range (id {want} not reachable)"
+                        ),
+                    }
+                };
+                refs.push((slot, node));
+            }
+        }
+        let workers = self.backends.len().min(refs.len()).max(1);
+        let chunk = (refs.len() + workers - 1) / workers;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(workers);
+            for (backend, slab) in self.backends.iter_mut().zip(refs.chunks_mut(chunk)) {
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for (slot, node) in slab.iter_mut() {
+                        f(&mut **backend, *slot, node)?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("scheduler: worker thread panicked"))??;
+            }
+            Ok(())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::data::partition::horizontal_split;
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::data::Dataset;
+    use crate::rng::Rng;
+
+    fn nodes(m: usize, seed: u64) -> Vec<NodeState> {
+        let spec = DatasetSpec {
+            name: "sched".into(),
+            train_size: 240,
+            test_size: 40,
+            features: 16,
+            nnz_per_row: 5,
+            noise: 0.03,
+            positive_rate: 0.5,
+            lambda: 1e-2,
+        };
+        let ds = generate(&spec, seed, 1.0).train;
+        let root = Rng::new(seed);
+        horizontal_split(&ds, m, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| NodeState::new(i, sh, Dataset::default(), 16, root.substream(i as u64)))
+            .collect()
+    }
+
+    fn step_all(sched: &mut dyn Scheduler, nodes: &mut [NodeState], iters: usize) {
+        let proto = GossipProtocol::new(ProtocolParams {
+            lambda: 1e-2,
+            batch_size: 2,
+            local_steps: 2,
+            project_local: true,
+            project_consensus: true,
+            epsilon: 1e-3,
+        });
+        let ids: Vec<usize> = (0..nodes.len()).collect();
+        for t in 1..=iters {
+            sched
+                .for_each_node(nodes, &ids, &|backend, _id, node| {
+                    proto.local_step(backend, node, t)
+                })
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        for threads in [1usize, 2, 3, 8] {
+            let mut seq_nodes = nodes(6, 42);
+            let mut backend = NativeBackend::default();
+            let mut seq = Sequential::new(&mut backend);
+            step_all(&mut seq, &mut seq_nodes, 12);
+
+            let mut par_nodes = nodes(6, 42);
+            let mut par = Parallel::native(threads);
+            step_all(&mut par, &mut par_nodes, 12);
+
+            for (a, b) in seq_nodes.iter().zip(&par_nodes) {
+                assert_eq!(a.w, b.w, "threads={threads} node {}", a.id);
+            }
+        }
+    }
+
+    #[test]
+    fn id_subset_touches_only_selected_nodes() {
+        let mut ns = nodes(5, 7);
+        let before: Vec<Vec<f64>> = ns.iter().map(|n| n.w.clone()).collect();
+        let mut par = Parallel::native(2);
+        let ids = [1usize, 3];
+        par.for_each_node(&mut ns, &ids, &|_b, _id, node| {
+            node.w[0] += 1.0;
+            Ok(())
+        })
+        .unwrap();
+        for (i, n) in ns.iter().enumerate() {
+            if ids.contains(&i) {
+                assert_eq!(n.w[0], before[i][0] + 1.0, "node {i} not stepped");
+            } else {
+                assert_eq!(n.w, before[i], "node {i} touched");
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_and_unsorted_ids_rejected() {
+        let mut ns = nodes(3, 1);
+        let mut par = Parallel::native(2);
+        assert!(par.for_each_node(&mut ns, &[5], &|_b, _i, _n| Ok(())).is_err());
+        // descending ids cannot be satisfied by the single forward walk
+        assert!(par.for_each_node(&mut ns, &[2, 0], &|_b, _i, _n| Ok(())).is_err());
+        let mut backend = NativeBackend::default();
+        let mut seq = Sequential::new(&mut backend);
+        assert!(seq.for_each_node(&mut ns, &[9], &|_b, _i, _n| Ok(())).is_err());
+    }
+
+    #[test]
+    fn worker_errors_propagate() {
+        let mut ns = nodes(4, 2);
+        let mut par = Parallel::native(4);
+        let err = par
+            .for_each_node(&mut ns, &[0, 1, 2, 3], &|_b, id, _n| {
+                if id == 2 {
+                    anyhow::bail!("boom at {id}");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

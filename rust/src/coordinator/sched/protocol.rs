@@ -1,0 +1,280 @@
+//! The shared per-node GADGET protocol step — Algorithm 2 factored out of
+//! the execution engines.
+//!
+//! Every engine (cycle-driven sequential, node-parallel, asynchronous
+//! message-passing, churn) runs the *same* per-node work each iteration:
+//!
+//! * steps (a)–(f): `local_steps` mini-batch Pegasos sub-gradient updates
+//!   on the node's shard, with optional `1/√λ`-ball projection;
+//! * step (g) consume side: replace the node vector with its Push-Vector
+//!   consensus estimate;
+//! * step (h): optional consensus projection;
+//! * the ε-convergence test on `‖ŵ^(t) − ŵ^(t−1)‖`.
+//!
+//! [`GossipProtocol`] is that per-node logic in one place; the schedulers
+//! in [`super`] decide only *where and when* each node's step runs. The
+//! asynchronous engine additionally carries push-sum mass explicitly —
+//! [`MassState`] holds the `(v = n·w, weight = n)` pair and its
+//! conservation-preserving operations (halve/absorb/fold).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::backend::{LocalBackend, StepContext};
+use crate::coordinator::node::NodeState;
+use crate::gossip::PushVector;
+use crate::Result;
+
+/// The Algorithm-2 parameters shared by every execution engine.
+#[derive(Clone, Copy, Debug)]
+pub struct ProtocolParams {
+    /// Regularization λ.
+    pub lambda: f64,
+    /// Mini-batch size per local step.
+    pub batch_size: usize,
+    /// Fused local Pegasos steps per GADGET iteration.
+    pub local_steps: usize,
+    /// Project after local steps (step (f)).
+    pub project_local: bool,
+    /// Project the consensus estimate (step (h)).
+    pub project_consensus: bool,
+    /// ε-convergence threshold.
+    pub epsilon: f64,
+}
+
+impl ProtocolParams {
+    /// Extracts the protocol parameters from an experiment config and the
+    /// resolved λ (configs may defer λ to the dataset's Table-2 default).
+    pub fn from_config(cfg: &ExperimentConfig, lambda: f64) -> Self {
+        Self {
+            lambda,
+            batch_size: cfg.batch_size,
+            local_steps: cfg.local_steps,
+            project_local: cfg.project_local,
+            project_consensus: cfg.project_consensus,
+            epsilon: cfg.epsilon,
+        }
+    }
+
+    /// The Pegasos ball radius `1/√λ`.
+    pub fn radius(&self) -> f64 {
+        1.0 / self.lambda.sqrt()
+    }
+}
+
+/// The per-node GADGET step logic, shared by all schedulers.
+#[derive(Clone, Debug)]
+pub struct GossipProtocol {
+    /// Step parameters.
+    pub params: ProtocolParams,
+}
+
+impl GossipProtocol {
+    /// Creates the protocol from its parameters.
+    pub fn new(params: ProtocolParams) -> Self {
+        Self { params }
+    }
+
+    /// Algorithm 2 steps (a)–(f): advances `node.w` in place by the
+    /// backend's local sub-gradient step(s), sampling batches from the
+    /// node's own RNG stream (which is what makes the result independent
+    /// of *which* worker executes the node — see the scheduler
+    /// equivalence test).
+    pub fn local_step(
+        &self,
+        backend: &mut dyn LocalBackend,
+        node: &mut NodeState,
+        t: usize,
+    ) -> Result<()> {
+        let p = &self.params;
+        let mut ctx = StepContext {
+            shard: &node.shard,
+            t,
+            lambda: p.lambda,
+            batch_size: p.batch_size,
+            local_steps: p.local_steps,
+            project: p.project_local,
+            rng: &mut node.rng,
+        };
+        backend.local_step(&mut ctx, &mut node.w)
+    }
+
+    /// Steps (g)/(h) consume side: writes Push-Vector slot `slot`'s
+    /// consensus estimate into the node and applies the optional consensus
+    /// projection. (`slot` is the node's index *within the gossiping set*,
+    /// which differs from `node.id` under churn.)
+    pub fn apply_estimate(&self, pv: &PushVector, slot: usize, node: &mut NodeState) {
+        pv.estimate_into(slot, &mut node.w);
+        if self.params.project_consensus {
+            crate::linalg::project_to_ball(&mut node.w, self.params.radius());
+        }
+    }
+
+    /// The ε-convergence test against the node's previous consensus
+    /// vector; rolls the node's `w_prev` forward and records the flag on
+    /// the node.
+    pub fn check_convergence(&self, node: &mut NodeState) -> bool {
+        node.check_convergence(self.params.epsilon)
+    }
+}
+
+/// Push-sum mass carried by one asynchronous node: `v = weight·w` and the
+/// scalar `weight`. All operations preserve the network-wide invariants
+/// `Σᵢ vᵢ` and `Σᵢ weightᵢ` (up to f64 rounding on re-association), which
+/// is exactly why every node's estimate `v/weight` converges to the
+/// shard-weighted average.
+#[derive(Clone, Debug)]
+pub struct MassState {
+    /// Mass vector `v = weight · w`.
+    pub v: Vec<f64>,
+    /// Push-sum weight (initialized to the shard size `nᵢ`).
+    pub w: f64,
+}
+
+impl MassState {
+    /// Zero mass vector with initial weight `w0` (the shard size).
+    pub fn new(d: usize, w0: f64) -> Self {
+        Self { v: vec![0.0; d], w: w0 }
+    }
+
+    /// Folds a freshly-stepped weight estimate back into the mass:
+    /// `v ← w_est · weight`. This is the only operation that *changes* the
+    /// network total — it injects the local sub-gradient drift, exactly as
+    /// the cycle engine's `reset_weighted` does.
+    pub fn fold(&mut self, w_est: &[f64]) {
+        for (vk, &ek) in self.v.iter_mut().zip(w_est) {
+            *vk = ek * self.w;
+        }
+    }
+
+    /// Halves the mass in place and returns the shipped half
+    /// (`α = ½` push-sum). Conserving: kept + returned = previous total,
+    /// exactly (halving an f64 is exact).
+    pub fn split_half(&mut self) -> (Vec<f64>, f64) {
+        let half_v: Vec<f64> = self.v.iter().map(|x| 0.5 * x).collect();
+        let half_w = 0.5 * self.w;
+        for x in self.v.iter_mut() {
+            *x *= 0.5;
+        }
+        self.w *= 0.5;
+        (half_v, half_w)
+    }
+
+    /// Ingests received mass.
+    pub fn absorb(&mut self, v: &[f64], w: f64) {
+        for (a, &b) in self.v.iter_mut().zip(v) {
+            *a += b;
+        }
+        self.w += w;
+    }
+
+    /// Writes the current estimate `v / weight` into `out`.
+    pub fn estimate_into(&self, out: &mut [f64]) {
+        let inv = 1.0 / self.w;
+        for (o, &x) in out.iter_mut().zip(&self.v) {
+            *o = x * inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::data::Dataset;
+    use crate::rng::Rng;
+
+    fn shard() -> Dataset {
+        let spec = DatasetSpec {
+            name: "proto".into(),
+            train_size: 120,
+            test_size: 30,
+            features: 12,
+            nnz_per_row: 4,
+            noise: 0.02,
+            positive_rate: 0.5,
+            lambda: 1e-2,
+        };
+        generate(&spec, 7, 1.0).train
+    }
+
+    fn params() -> ProtocolParams {
+        ProtocolParams {
+            lambda: 1e-2,
+            batch_size: 2,
+            local_steps: 1,
+            project_local: true,
+            project_consensus: true,
+            epsilon: 1e-3,
+        }
+    }
+
+    #[test]
+    fn local_step_matches_direct_backend_call() {
+        // The protocol wrapper must be a pure refactor of the inline
+        // StepContext construction: identical bits either way.
+        let ds = shard();
+        let proto = GossipProtocol::new(params());
+        let mut node = NodeState::new(0, ds.clone(), Dataset::default(), ds.dim, Rng::new(3));
+        let mut backend = NativeBackend::default();
+        for t in 1..=5 {
+            proto.local_step(&mut backend, &mut node, t).unwrap();
+        }
+
+        let mut rng = Rng::new(3);
+        let mut w = vec![0.0; ds.dim];
+        let mut backend2 = NativeBackend::default();
+        for t in 1..=5 {
+            let mut ctx = StepContext {
+                shard: &ds,
+                t,
+                lambda: 1e-2,
+                batch_size: 2,
+                local_steps: 1,
+                project: true,
+                rng: &mut rng,
+            };
+            backend2.local_step(&mut ctx, &mut w).unwrap();
+        }
+        assert_eq!(node.w, w);
+    }
+
+    #[test]
+    fn apply_estimate_projects_to_ball() {
+        let mut p = params();
+        p.lambda = 1.0; // radius 1
+        let proto = GossipProtocol::new(p);
+        let pv = PushVector::new(&[vec![3.0, 4.0], vec![3.0, 4.0]]);
+        let mut node = NodeState::new(0, shard(), Dataset::default(), 2, Rng::new(0));
+        proto.apply_estimate(&pv, 0, &mut node);
+        let norm = crate::linalg::l2_norm(&node.w);
+        assert!(norm <= 1.0 + 1e-12, "norm {norm}");
+    }
+
+    #[test]
+    fn mass_operations_conserve_totals() {
+        let mut a = MassState::new(3, 10.0);
+        let mut b = MassState::new(3, 4.0);
+        a.fold(&[1.0, -2.0, 0.5]);
+        b.fold(&[0.25, 8.0, -1.0]);
+        let total_v: Vec<f64> = (0..3).map(|k| a.v[k] + b.v[k]).collect();
+        let total_w = a.w + b.w;
+        // a ships half to b, b ships half to a, several times over
+        for _ in 0..10 {
+            let (hv, hw) = a.split_half();
+            b.absorb(&hv, hw);
+            let (hv, hw) = b.split_half();
+            a.absorb(&hv, hw);
+        }
+        for k in 0..3 {
+            let now = a.v[k] + b.v[k];
+            assert!((now - total_v[k]).abs() < 1e-12 * (1.0 + total_v[k].abs()));
+        }
+        assert!((a.w + b.w - total_w).abs() < 1e-12 * total_w);
+        // estimates converge toward the weighted mean under pure exchange
+        let mut ea = vec![0.0; 3];
+        a.estimate_into(&mut ea);
+        for k in 0..3 {
+            assert!((ea[k] - total_v[k] / total_w).abs() < 1e-3, "slot {k}");
+        }
+    }
+}

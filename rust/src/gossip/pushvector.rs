@@ -16,6 +16,11 @@ use super::pushsum::count_offdiag;
 use super::GossipStats;
 use crate::topology::TransitionMatrix;
 
+/// Column-panel width (f64 entries) for the tiled `Bᵀ`-apply: 1024
+/// columns = 8 KB per destination row, so a 10-node destination panel
+/// (~80 KB) sits comfortably in L2 while the source rows stream.
+const COL_BLOCK: usize = 1024;
+
 /// Synchronous deterministic Push-Vector state.
 #[derive(Clone, Debug)]
 pub struct PushVector {
@@ -104,6 +109,16 @@ impl PushVector {
     /// Written as a j-major accumulation over B's rows so the inner loop is
     /// a dense axpy over the d-vector — auto-vectorizes and touches each
     /// cache line once per (i,j) pair with b_ij ≠ 0.
+    ///
+    /// **Cache blocking**: at large `d` the two `m×d` buffers exceed L2/L3
+    /// and the naive (i, j, k) loop streams the whole `v_next` matrix once
+    /// per source row — `m` full passes of `m·d·8` bytes. The apply is
+    /// therefore tiled over column panels of [`COL_BLOCK`] entries: within
+    /// a panel every destination row stays cache-resident across all `m`
+    /// source rows, cutting `v_next` traffic by ~`m×`. The accumulation
+    /// order per output element (ascending `i`) is unchanged, so the
+    /// result is **bitwise identical** to the unblocked loop
+    /// (EXPERIMENTS.md §Perf has the before/after numbers).
     pub fn round(&mut self, b: &TransitionMatrix) {
         assert_eq!(b.m, self.m, "PushVector: matrix size mismatch");
         // Rank-1 fast path: uniform B (complete graph + MH) averages in one
@@ -132,19 +147,39 @@ impl PushVector {
         }
         self.v_next.fill(0.0);
         self.w_next.fill(0.0);
-        for i in 0..self.m {
+        let (m, d) = (self.m, self.d);
+        // Column-panel tiling (see the doc comment above): for each panel
+        // of at most COL_BLOCK columns, run the full (i, j) sweep so the
+        // destination panel stays hot. Per-element accumulation order is
+        // identical to the untiled loop.
+        let v = &self.v;
+        let v_next = &mut self.v_next;
+        let mut k0 = 0;
+        while k0 < d {
+            let k1 = (k0 + COL_BLOCK).min(d);
+            for i in 0..m {
+                let row = b.row(i);
+                let src = &v[i * d + k0..i * d + k1];
+                for j in 0..m {
+                    let bij = row[j];
+                    if bij == 0.0 {
+                        continue;
+                    }
+                    let dst = &mut v_next[j * d + k0..j * d + k1];
+                    for (o, &s) in dst.iter_mut().zip(src) {
+                        *o += bij * s;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        for i in 0..m {
             let row = b.row(i);
-            let src = &self.v[i * self.d..(i + 1) * self.d];
-            for j in 0..self.m {
+            for j in 0..m {
                 let bij = row[j];
-                if bij == 0.0 {
-                    continue;
+                if bij != 0.0 {
+                    self.w_next[j] += bij * self.w[i];
                 }
-                let dst = &mut self.v_next[j * self.d..(j + 1) * self.d];
-                for k in 0..self.d {
-                    dst[k] += bij * src[k];
-                }
-                self.w_next[j] += bij * self.w[i];
             }
         }
         std::mem::swap(&mut self.v, &mut self.v_next);
@@ -301,6 +336,50 @@ mod tests {
         assert_eq!(s.rounds, 1);
         assert_eq!(s.messages, 6); // C3: 6 directed edges
         assert_eq!(s.bytes, 6 * 8 * 6); // (d+1)=6 f64s per message
+    }
+
+    #[test]
+    fn blocked_round_is_bitwise_equal_to_naive_apply() {
+        // d straddles the panel boundary so the tiled loop takes both the
+        // full-panel and the tail path.
+        let d = super::COL_BLOCK + 37;
+        let m = 5;
+        let mut rng = crate::rng::Rng::new(404);
+        let vectors: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let b = mh(&Graph::ring(m));
+        let mut pv = PushVector::new(&vectors);
+        // naive untiled Bᵀ-apply with the same ascending-i accumulation
+        let mut expect = vec![vec![0.0f64; d]; m];
+        let mut expect_w = vec![0.0f64; m];
+        for i in 0..m {
+            for j in 0..m {
+                let bij = b.get(i, j);
+                if bij == 0.0 {
+                    continue;
+                }
+                for k in 0..d {
+                    expect[j][k] += bij * vectors[i][k];
+                }
+                expect_w[j] += bij; // initial weights are all 1
+            }
+        }
+        pv.round(&b);
+        for j in 0..m {
+            // estimate = v/w; both sides divide by the identically-computed
+            // weight, so the comparison is exact.
+            let est = pv.estimate(j);
+            let inv = 1.0 / expect_w[j]; // mirror estimate_into exactly
+            for k in 0..d {
+                let want = expect[j][k] * inv;
+                assert_eq!(
+                    est[k].to_bits(),
+                    want.to_bits(),
+                    "node {j} slot {k}: {} vs {want}",
+                    est[k]
+                );
+            }
+        }
     }
 
     #[test]

@@ -8,8 +8,12 @@
 //! rust + JAX + Pallas stack:
 //!
 //! * [`coordinator`] — the paper's contribution: the GADGET algorithm
-//!   (Algorithm 2), a cycle-driven gossip engine (Peersim-equivalent) and an
-//!   asynchronous tokio engine, node state management and ε-convergence.
+//!   (Algorithm 2) on a unified node-parallel runtime
+//!   ([`coordinator::sched`]): one shared per-node protocol step behind a
+//!   `Scheduler` abstraction with sequential (Peersim-equivalent
+//!   cycle-driven), parallel (scoped thread pool, bitwise-identical) and
+//!   asynchronous (thread-per-node message passing) execution, plus node
+//!   state management, ε-convergence and churn.
 //! * [`gossip`] — the Push-Sum / Push-Vector consensus protocols
 //!   (Kempe et al. 2003, Algorithm 1 of the paper).
 //! * [`topology`] — overlay graphs and doubly-stochastic transition

@@ -59,7 +59,8 @@ fn print_help() {
          \x20 train        run GADGET (options: --config FILE | --dataset NAME --scale F\n\
          \x20              --nodes N --lambda F --epsilon F --max-iterations N --trials N\n\
          \x20              --topology complete|ring|torus|k-regular|small-world\n\
-         \x20              --backend native|xla --batch-size N --local-steps N --seed N)\n\
+         \x20              --backend native|xla --batch-size N --local-steps N --seed N\n\
+         \x20              --scheduler sequential|parallel|async --threads N)\n\
          \x20 baseline     run a solver centrally (--solver pegasos|svm-sgd|svm-perf|dcd,\n\
          \x20              same dataset options)\n\
          \x20 experiment   regenerate paper artifacts: table3 | table4 | table5 | figures |\n\
@@ -100,6 +101,10 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(b) = args.get("backend") {
         cfg.backend = b.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     }
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler = s.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    cfg.threads = args.get_parsed("threads", cfg.threads).map_err(err)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -111,8 +116,8 @@ fn err(e: String) -> anyhow::Error {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     println!(
-        "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} trials={}",
-        cfg.dataset, cfg.scale, cfg.nodes, cfg.topology, cfg.backend, cfg.trials
+        "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} trials={}",
+        cfg.dataset, cfg.scale, cfg.nodes, cfg.topology, cfg.backend, cfg.scheduler, cfg.trials
     );
     let runner = GadgetRunner::new(cfg)?;
     println!(

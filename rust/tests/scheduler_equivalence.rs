@@ -1,0 +1,229 @@
+//! Equivalence and conservation guarantees of the unified execution
+//! runtime (`coordinator::sched`).
+//!
+//! * The **parallel** scheduler must be *bitwise identical* to the
+//!   sequential reference: per-node RNG substreams isolate all randomness
+//!   and backends re-initialize scratch from `w` on every call, so the
+//!   consensus trajectory cannot depend on worker count or interleaving.
+//! * The **async** scheduler must conserve push-sum mass: `Σ nᵢ` exactly
+//!   and `Σ nᵢwᵢ` across every drain/halve/absorb, which is the invariant
+//!   that makes each node's estimate converge to the shard-weighted
+//!   average.
+
+use gadget::config::{ExperimentConfig, SchedulerKind};
+use gadget::coordinator::sched::{AsyncParams, AsyncScheduler};
+use gadget::coordinator::{GadgetRunner, MassState};
+use gadget::data::partition::horizontal_split;
+use gadget::data::synthetic::{generate, DatasetSpec};
+use gadget::rng::Rng;
+use gadget::topology::{Graph, TopologyKind};
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .dataset("synthetic-usps")
+        .scale(0.05)
+        .nodes(6)
+        .trials(2)
+        .max_iterations(150)
+        .epsilon(5e-3)
+        .seed(23)
+        .build()
+        .unwrap()
+}
+
+fn bits(w: &[f64]) -> Vec<u64> {
+    w.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn parallel_is_bitwise_identical_to_sequential() {
+    let seq = GadgetRunner::new(base_cfg()).unwrap().run().unwrap();
+    for threads in [1usize, 2, 3, 8] {
+        let cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Parallel,
+            threads,
+            ..base_cfg()
+        };
+        let par = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert_eq!(seq.trials.len(), par.trials.len());
+        for (ts, tp) in seq.trials.iter().zip(&par.trials) {
+            assert_eq!(ts.iterations, tp.iterations, "threads={threads}");
+            assert_eq!(
+                bits(&ts.consensus_w),
+                bits(&tp.consensus_w),
+                "threads={threads}: consensus_w diverged"
+            );
+            assert_eq!(
+                bits(&ts.node_accuracy),
+                bits(&tp.node_accuracy),
+                "threads={threads}: node accuracies diverged"
+            );
+            assert_eq!(
+                ts.epsilon_final.to_bits(),
+                tp.epsilon_final.to_bits(),
+                "threads={threads}: epsilon diverged"
+            );
+        }
+        assert_eq!(seq.iterations, par.iterations);
+        assert_eq!(seq.test_accuracy.to_bits(), par.test_accuracy.to_bits());
+    }
+}
+
+#[test]
+fn parallel_equivalence_holds_on_sparse_topologies() {
+    // A ring forces many gossip rounds per iteration; the equivalence must
+    // not depend on the overlay.
+    let mk = |scheduler, threads| {
+        let cfg = ExperimentConfig {
+            topology: TopologyKind::Ring,
+            scheduler,
+            threads,
+            max_iterations: 80,
+            trials: 1,
+            ..base_cfg()
+        };
+        GadgetRunner::new(cfg).unwrap().run().unwrap()
+    };
+    let seq = mk(SchedulerKind::Sequential, 0);
+    let par = mk(SchedulerKind::Parallel, 4);
+    assert_eq!(seq.iterations, par.iterations);
+    assert_eq!(bits(&seq.trials[0].consensus_w), bits(&par.trials[0].consensus_w));
+}
+
+fn async_problem(m: usize, seed: u64) -> (Vec<gadget::data::Dataset>, f64) {
+    let spec = DatasetSpec {
+        name: "mass".into(),
+        train_size: 420,
+        test_size: 60,
+        features: 18,
+        nnz_per_row: 5,
+        noise: 0.03,
+        positive_rate: 0.5,
+        lambda: 1e-2,
+    };
+    let shards = horizontal_split(&generate(&spec, seed, 1.0).train, m, seed);
+    let total_n: f64 = shards.iter().map(|s| s.len() as f64).sum();
+    (shards, total_n)
+}
+
+#[test]
+fn async_path_conserves_total_mass_across_drains() {
+    for (topo, cycles, cooldown) in
+        [(Graph::complete(5), 300usize, 40usize), (Graph::ring(5), 500, 100)]
+    {
+        let (shards, total_n) = async_problem(5, 77);
+        let res = AsyncScheduler::new(AsyncParams {
+            lambda: 1e-2,
+            batch_size: 2,
+            cycles,
+            cooldown,
+            local_steps: 1,
+            project: true,
+            seed: 11,
+            max_lag: 4,
+        })
+        .run(shards, &topo)
+        .unwrap();
+        // Σ nᵢ: the push-sum weight is never created or destroyed, only
+        // halved and shipped — the total must match the sample count to
+        // f64 re-association error.
+        let w_sum: f64 = res.mass_weights.iter().sum();
+        assert!(
+            (w_sum - total_n).abs() < 1e-9 * total_n,
+            "total weight drifted: {w_sum} vs {total_n}"
+        );
+        // Σ nᵢ·wᵢ: the final mass vectors must equal estimate·weight
+        // slot-for-slot (the estimate is exactly v/w), and the total mass
+        // must be finite and consistent with the reported estimates.
+        for (i, (v, w)) in res.mass_v.iter().zip(&res.mass_weights).enumerate() {
+            for (k, (&vk, &ek)) in v.iter().zip(&res.estimates[i]).enumerate() {
+                let back = ek * *w;
+                assert!(
+                    (vk - back).abs() <= 1e-9 * (1.0 + vk.abs()),
+                    "node {i} slot {k}: v {vk} vs est*w {back}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pure_gossip_conserves_mass_vector_exactly() {
+    // With zero active cycles (cycles == cooldown) no local drift is ever
+    // folded in: Σ vᵢ stays the initial zero vector while Σ weights stays
+    // Σ nᵢ — conservation across *every* drain with no confound.
+    let (shards, total_n) = async_problem(4, 5);
+    let g = Graph::complete(4);
+    let res = AsyncScheduler::new(AsyncParams {
+        lambda: 1e-2,
+        batch_size: 1,
+        cycles: 200,
+        cooldown: 200,
+        local_steps: 1,
+        project: true,
+        seed: 3,
+        max_lag: 2,
+    })
+    .run(shards, &g)
+    .unwrap();
+    let w_sum: f64 = res.mass_weights.iter().sum();
+    assert!((w_sum - total_n).abs() < 1e-9 * total_n, "weight drift {w_sum}");
+    for v in &res.mass_v {
+        for &x in v {
+            assert_eq!(x, 0.0, "mass appeared from nowhere");
+        }
+    }
+}
+
+#[test]
+fn mass_state_invariants_under_random_exchange() {
+    // Protocol-level property sweep: any sequence of halve/ship/absorb
+    // over any membership keeps Σ v and Σ w invariant.
+    let mut rng = Rng::new(900);
+    for case in 0..40 {
+        let m = rng.range(2, 8);
+        let d = rng.range(1, 6);
+        let mut masses: Vec<MassState> =
+            (0..m).map(|_| MassState::new(d, rng.range(1, 50) as f64)).collect();
+        // give each node a nonzero folded vector
+        for mass in masses.iter_mut() {
+            let w_est: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            mass.fold(&w_est);
+        }
+        let total_w: f64 = masses.iter().map(|s| s.w).sum();
+        let total_v: Vec<f64> =
+            (0..d).map(|k| masses.iter().map(|s| s.v[k]).sum()).collect();
+        // random exchange sequence, including self-sends
+        for _ in 0..rng.range(10, 120) {
+            let from = rng.below(m);
+            let to = rng.below(m);
+            let (hv, hw) = masses[from].split_half();
+            masses[to].absorb(&hv, hw);
+        }
+        let now_w: f64 = masses.iter().map(|s| s.w).sum();
+        assert!(
+            (now_w - total_w).abs() < 1e-9 * total_w,
+            "case {case}: weight drift"
+        );
+        for k in 0..d {
+            let now: f64 = masses.iter().map(|s| s.v[k]).sum();
+            assert!(
+                (now - total_v[k]).abs() < 1e-9 * (1.0 + total_v[k].abs()),
+                "case {case} slot {k}: mass drift"
+            );
+        }
+    }
+}
+
+#[test]
+fn async_end_to_end_through_runner_learns() {
+    let cfg = ExperimentConfig {
+        scheduler: SchedulerKind::Async,
+        max_iterations: 400,
+        trials: 1,
+        ..base_cfg()
+    };
+    let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+    assert!(report.test_accuracy > 0.7, "async accuracy {}", report.test_accuracy);
+    assert!(report.trials[0].gossip.messages > 0);
+}

@@ -1,0 +1,230 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no access to crates.io, so this vendored
+//! shim provides exactly the surface the workspace uses:
+//!
+//! * [`Error`] — a context-chain error value (`Display` prints the
+//!   outermost message, `{:#}` prints the whole chain `outer: ...: root`);
+//! * [`Result<T>`] — alias for `Result<T, Error>`;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both `Result`
+//!   and `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros;
+//! * a blanket `From<E: std::error::Error>` so `?` converts `io::Error`,
+//!   parse errors, etc.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket `From` coherent.
+
+use std::fmt;
+
+/// A lightweight error value carrying a chain of context messages.
+///
+/// `frames[0]` is the root cause; later entries are contexts added on the
+/// way up. The memory layout is plain `String`s: this shim trades the real
+/// crate's downcasting for zero dependencies, which nothing in this
+/// workspace uses.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+/// Crate-wide result alias, mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Creates an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { frames: vec![message.to_string()] }
+    }
+
+    /// Wraps the error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.push(context.to_string());
+        self
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn outermost(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterates the chain from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().rev().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, outermost first, like real anyhow.
+            let mut first = true;
+            for frame in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                first = false;
+                write!(f, "{frame}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outermost())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Multi-line like real anyhow's Debug: message, then causes.
+        write!(f, "{}", self.outermost())?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?`-conversion from any standard error type. `Error` itself does not
+// implement `std::error::Error`, so this blanket impl is coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Context-attachment on fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    /// Attaches a context message, evaluating it eagerly.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attaches a context message, evaluating it lazily on the error path.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Creates an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Returns early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Returns early with an [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading the config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading the config");
+        assert!(format!("{e:#}").starts_with("reading the config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let some: Option<u32> = Some(3);
+        assert_eq!(some.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format_and_chain() {
+        let n = 4;
+        let e = anyhow!("bad count {n}").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: bad count 4");
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(from_string.to_string(), "plain");
+
+        fn guard(x: usize) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("seven is right out");
+            }
+            Ok(())
+        }
+        assert!(guard(3).is_ok());
+        assert_eq!(guard(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(guard(7).unwrap_err().to_string(), "seven is right out");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+}
