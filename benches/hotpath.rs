@@ -14,8 +14,9 @@
 
 use gadget::coordinator::backend::{LocalBackend, NativeBackend, StepContext};
 use gadget::coordinator::sched::{
-    GossipProtocol, Parallel, ProtocolParams, Scheduler, Sequential,
+    GossipProtocol, Parallel, ProtocolParams, Scheduler, ScopedSpawn, Sequential,
 };
+use gadget::pool::WorkerPool;
 use gadget::coordinator::NodeState;
 use gadget::data::partition::horizontal_split;
 use gadget::data::synthetic::{generate, DatasetSpec};
@@ -132,6 +133,12 @@ fn main() {
             let mut par = Parallel::native(threads);
             run_phase(&mut par, &format!("parallel threads={threads}"));
         }
+        // PR-1's scoped-spawn dispatch as the control arm: same chunking,
+        // same backends, fresh thread spawns every phase.
+        for threads in [2usize, 8] {
+            let mut scoped = ScopedSpawn::native(threads);
+            run_phase(&mut scoped, &format!("scoped-spawn threads={threads} (PR-1)"));
+        }
     }
 
     // ---- Push-Vector mixing round ----------------------------------------
@@ -148,6 +155,14 @@ fn main() {
         let mut pv = PushVector::new(&vectors);
         let res = bench(&format!("push-vector round m=10 d={d}"), 3, 50, || {
             pv.round(&tm);
+        });
+        println!("{}", res.summary());
+        // panel-parallel apply on a 4-worker pool (bitwise-identical;
+        // only d ≥ 512 actually fans out — smaller d stays inline)
+        let pool = WorkerPool::new(4);
+        let mut pv_pooled = PushVector::new(&vectors);
+        let res = bench(&format!("push-vector round m=10 d={d} pooled(4)"), 3, 50, || {
+            pv_pooled.round_with(&tm, &pool);
         });
         println!("{}", res.summary());
     }

@@ -1,17 +1,21 @@
 //! Bench: regenerates paper Table 5 — timing *including* data loading,
 //! speed-up factor `T_dist / T_central`, with the Gisette stand-in —
 //! followed by a scheduler threads sweep tracking the node-parallel
-//! runtime's scaling trajectory.
+//! runtime's scaling trajectory, and a **dispatch-overhead A/B** pitting
+//! the persistent parked pool against PR-1's scoped-spawn scheduler at a
+//! small-`d·batch` configuration where per-phase thread management is
+//! the dominant cost.
 //!
 //! Paper shape: GADGET wins (speed-up < 1) when instances ≫ features
 //! (USPS, Adult, MNIST); loses on dense high-dimensional data (Gisette).
 //!
 //! Outputs: `results/bench_table5.csv` (the table) and
-//! `BENCH_speedup.json` (the threads sweep — the speedup trajectory the
-//! ROADMAP tracks across PRs).
+//! `BENCH_speedup.json` (threads sweep + dispatch A/B — the speedup
+//! trajectory the ROADMAP tracks across PRs).
 
 use gadget::config::{ExperimentConfig, SchedulerKind};
-use gadget::coordinator::GadgetRunner;
+use gadget::coordinator::sched::{Parallel, ScopedSpawn};
+use gadget::coordinator::{GadgetRunner, NativeBackend};
 use gadget::experiments::{table5, ExperimentOpts};
 use gadget::util::Json;
 
@@ -105,13 +109,83 @@ fn main() {
             ("speedup_vs_sequential", Json::Num(speedup)),
         ]));
     }
+    // ---- dispatch overhead: parked pool vs PR-1 scoped spawn --------------
+    // Small d·batch (usps d=256, batch 1) with a long iteration budget:
+    // per-node work is a few µs, so per-phase thread management dominates
+    // and the A/B isolates exactly what the persistent pool removes
+    // (~2·threads thread spawns per GADGET iteration). Same trials=1
+    // config through `run_with_scheduler`, so nothing but the dispatch
+    // mechanism differs; accuracies are asserted bitwise-equal.
+    let dispatch_threads = 4usize;
+    println!("\nDispatch overhead (synthetic-usps scale 0.05, m=8, trials=1, {dispatch_threads} workers):");
+    let cfg = ExperimentConfig::builder()
+        .dataset("synthetic-usps")
+        .scale(0.05)
+        .nodes(8)
+        .trials(1)
+        .max_iterations(200)
+        .epsilon(1e-9) // run the full budget: equal work per variant
+        .seed(17)
+        .build()
+        .expect("dispatch config");
+    let runner = GadgetRunner::new(cfg).expect("runner");
+    let mut nb = NativeBackend::default();
+    let seq_report = runner.run_with_backend(&mut nb).expect("sequential");
+    let mut scoped = ScopedSpawn::native(dispatch_threads);
+    let scoped_report = runner.run_with_scheduler(&mut scoped).expect("scoped");
+    let mut pooled = Parallel::native(dispatch_threads);
+    let pooled_report = runner.run_with_scheduler(&mut pooled).expect("pooled");
+    assert_eq!(seq_report.test_accuracy, scoped_report.test_accuracy);
+    assert_eq!(seq_report.test_accuracy, pooled_report.test_accuracy);
+    let (seq_s, scoped_s, pooled_s) = (
+        seq_report.train_secs,
+        scoped_report.train_secs,
+        pooled_report.train_secs,
+    );
+    println!("  sequential        : {seq_s:.3}s");
+    println!(
+        "  scoped spawn (PR1): {scoped_s:.3}s  ({:.2}x vs sequential)",
+        seq_s / scoped_s.max(1e-12)
+    );
+    println!(
+        "  parked pool       : {pooled_s:.3}s  ({:.2}x vs sequential, {:.2}x vs scoped)",
+        seq_s / pooled_s.max(1e-12),
+        scoped_s / pooled_s.max(1e-12)
+    );
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("scheduler_threads_sweep".into())),
+        (
+            "note",
+            Json::Str(
+                "written by `cargo bench --bench table5_speedup`; the speedup \
+                 ratios, not the absolute seconds, are the tracked quantity \
+                 (EXPERIMENTS.md, Reproducibility section)"
+                    .into(),
+            ),
+        ),
         ("dataset", Json::Str("synthetic-mnist".into())),
         ("scale", Json::Num(sweep_scale)),
         ("nodes", Json::Num(8.0)),
         ("max_iterations", Json::Num(60.0)),
         ("points", Json::Arr(points)),
+        (
+            "dispatch_overhead",
+            Json::obj(vec![
+                ("dataset", Json::Str("synthetic-usps".into())),
+                ("scale", Json::Num(0.05)),
+                ("nodes", Json::Num(8.0)),
+                ("max_iterations", Json::Num(200.0)),
+                ("threads", Json::Num(dispatch_threads as f64)),
+                ("sequential_secs", Json::Num(seq_s)),
+                ("scoped_spawn_secs", Json::Num(scoped_s)),
+                ("pooled_secs", Json::Num(pooled_s)),
+                (
+                    "pooled_speedup_vs_scoped",
+                    Json::Num(scoped_s / pooled_s.max(1e-12)),
+                ),
+            ]),
+        ),
     ]);
     gadget::experiments::write_output(
         std::path::Path::new("BENCH_speedup.json"),

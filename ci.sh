@@ -54,6 +54,15 @@ run_advisory cargo clippy --all-targets -- -D warnings \
 run_hard cargo build --release
 run_hard cargo test -q
 
+# The scheduler-equivalence contract must be worker-count-invariant:
+# re-run the pool-size-dependent equivalence tests (filter: every test
+# whose name contains "bitwise" reads GADGET_POOL_THREADS) pinned to a
+# degenerate (1) and a multi-worker (4) pool. The rest of the suite
+# (async conservation, churn) doesn't vary with pool size and already
+# ran once above.
+run_hard env GADGET_POOL_THREADS=1 cargo test -q --test scheduler_equivalence bitwise
+run_hard env GADGET_POOL_THREADS=4 cargo test -q --test scheduler_equivalence bitwise
+
 echo
 if [ "$fail" -ne 0 ]; then
     echo "ci: HARD GATE FAILED"

@@ -44,9 +44,9 @@ pub enum SchedulerKind {
     /// determinism reference (Peersim-equivalent cycle simulation).
     #[default]
     Sequential,
-    /// Per-node work fanned across a scoped thread pool; bitwise identical
-    /// results to `Sequential` (per-node RNG substreams isolate all
-    /// randomness).
+    /// Work fanned across a persistent parked worker pool (per-node
+    /// phases, mixing panels, whole trials); bitwise identical results to
+    /// `Sequential` (per-node RNG substreams isolate all randomness).
     Parallel,
     /// Thread-per-node message passing without a global round barrier —
     /// the paper's "completely asynchronous" execution.
@@ -187,7 +187,10 @@ impl ExperimentConfig {
             bail!("config: gamma must be in (0, 1)");
         }
         if self.trials == 0 {
-            bail!("config: trials must be ≥ 1");
+            bail!(
+                "config: trials must be ≥ 1 (reports aggregate over trials and \
+                 index trial 0; use trials = 1 for a single run)"
+            );
         }
         if self.max_iterations == 0 {
             bail!("config: max_iterations must be ≥ 1");
@@ -431,6 +434,8 @@ snapshot_every = 10
         assert!(ExperimentConfig::from_toml("epsilon = 0").is_err());
         assert!(ExperimentConfig::from_toml("gamma = 1.5").is_err());
         assert!(ExperimentConfig::from_toml("lambda = -1").is_err());
+        let trials_err = ExperimentConfig::from_toml("trials = 0").unwrap_err();
+        assert!(trials_err.to_string().contains("trials"), "{trials_err}");
     }
 
     #[test]

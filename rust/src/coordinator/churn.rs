@@ -223,7 +223,10 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
             let weights: Vec<f64> =
                 alive_ids.iter().map(|&i| nodes[i].n_local() as f64).collect();
             pv.reset_weighted(alive_ids.iter().map(|&i| nodes[i].w.as_slice()), &weights);
-            pv.run_rounds(tm, rounds);
+            // Bᵀ-apply column panels fan over the scheduler's executor
+            // (the worker pool when `[runtime] scheduler = "parallel"`);
+            // bitwise identical to inline execution.
+            pv.run_rounds_with(tm, rounds, sched.panel_exec());
             // (g)-consume/(h)/ε via the shared protocol; the scheduler
             // hands each closure the node's position within `alive_ids`,
             // which is exactly the Push-Vector slot.
@@ -356,6 +359,25 @@ mod tests {
             .iter()
             .zip(&c.events)
             .all(|(x, y)| x.at_iter == y.at_iter && x.node == y.node));
+    }
+
+    #[test]
+    fn pooled_scheduler_survives_empty_alive_set() {
+        // Every node fails at once: the scheduler receives an *empty* id
+        // set each remaining iteration and the gossip phase is skipped.
+        // The pooled dispatch must treat that as a clean no-op — no hang
+        // on an empty task batch, no error — and the run must terminate.
+        let events = (0..6)
+            .map(|node| ChurnEvent { at_iter: 5, node, kind: ChurnKind::Fail })
+            .collect();
+        let par_cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Parallel,
+            threads: 4,
+            ..cfg()
+        };
+        let report = run_with_churn(&par_cfg, &ChurnSchedule::new(events)).unwrap();
+        assert_eq!(report.min_alive, 0);
+        assert_eq!(report.events_applied, 6);
     }
 
     #[test]

@@ -18,9 +18,14 @@
 //!
 //! * `sequential` — all nodes on the calling thread (determinism
 //!   reference);
-//! * `parallel` — per-node work fanned across a scoped thread pool,
-//!   bitwise identical to `sequential` (per-node RNG substreams isolate
-//!   all randomness);
+//! * `parallel` — work fanned across one persistent parked worker pool
+//!   ([`crate::pool::WorkerPool`]), bitwise identical to `sequential`
+//!   (per-node RNG substreams isolate all randomness). The per-node
+//!   phases and the mixing round's column panels dispatch on the pool;
+//!   when there are at least as many trials as workers, whole trial
+//!   chunks dispatch instead — trials are embarrassingly parallel (one
+//!   protocol state and RNG root substream each), so either fan-out
+//!   only changes wall-clock;
 //! * `async` — the thread-per-node message-passing engine; no global
 //!   barrier, so iteration accounting is "cycles" and the ε-criterion is
 //!   replaced by a consensus cool-down.
@@ -38,6 +43,7 @@ use crate::data::synthetic::{generate, spec_by_name};
 use crate::data::{partition, Dataset};
 use crate::gossip::{GossipStats, PushVector};
 use crate::metrics::{self, node_trial_std, Trace, TracePoint};
+use crate::pool::{Task, WorkerPool};
 use crate::rng::Rng;
 use crate::topology::{mixing_time, Graph, TransitionMatrix};
 use crate::util::Stopwatch;
@@ -198,13 +204,29 @@ impl GadgetRunner {
                 self.run_with_backend(&mut *backend)
             }
             SchedulerKind::Parallel => {
-                // Cap the pool at the node count: more workers than nodes
-                // can never be used, and each worker costs a backend
-                // (an entire artifact compilation on the XLA path).
-                let workers =
-                    super::sched::resolve_threads(self.cfg.threads).min(self.cfg.nodes);
-                let mut sched = Parallel::new(workers, || self.make_backend())?;
-                self.run_with_scheduler(&mut sched)
+                let threads = super::sched::resolve_threads(self.cfg.threads);
+                if threads > 1 && self.cfg.trials >= threads {
+                    // Trials are embarrassingly parallel — when there are
+                    // enough of them to keep every worker busy, fan trial
+                    // chunks across the pool. Each trial's computation is
+                    // byte-for-byte the sequential path (own protocol
+                    // state and root substream; one backend per worker
+                    // chunk), so only wall-clock changes. With fewer
+                    // trials than workers this path would idle
+                    // `threads − trials` workers (each trial runs
+                    // serially inside), so it is taken only at
+                    // saturation.
+                    self.run_trials_pooled(threads)
+                } else {
+                    // Fan the per-node phases inside each trial instead.
+                    // Cap the pool at the node count — more workers than
+                    // nodes can never be used, and each worker costs a
+                    // backend (an entire artifact compilation on the XLA
+                    // path).
+                    let workers = threads.min(self.cfg.nodes);
+                    let mut sched = Parallel::new(workers, || self.make_backend())?;
+                    self.run_with_scheduler(&mut sched)
+                }
             }
             SchedulerKind::Async => {
                 // The async engine's node threads run the native backend;
@@ -231,10 +253,54 @@ impl GadgetRunner {
 
     /// Runs all trials on an explicit cycle-driven scheduler.
     pub fn run_with_scheduler(&self, sched: &mut dyn Scheduler) -> Result<GadgetReport> {
+        // Defense in depth for callers that bypass `new()` with a struct
+        // literal: `aggregate` divides by the trial count and every
+        // report consumer indexes `trials[0]` — a zero-trial config must
+        // fail here with a clear error, not panic downstream.
+        self.cfg.validate()?;
         let mut trials = Vec::with_capacity(self.cfg.trials);
         for trial in 0..self.cfg.trials {
             let seed = self.trial_seed(trial);
             trials.push(self.run_trial(seed, sched)?);
+        }
+        Ok(self.aggregate(trials))
+    }
+
+    /// Fans whole trials across a persistent worker pool: trials are
+    /// chunked per worker exactly like `for_each_node` chunks nodes, so
+    /// the backend count scales with *workers*, not trials (one backend
+    /// per task — an entire artifact compilation each on the XLA path).
+    /// Each task steps its trials' nodes sequentially on whichever
+    /// worker picks it up; per-trial computation is identical to
+    /// [`GadgetRunner::run_with_backend`], so the aggregated report is
+    /// bitwise-equal — the scheduler equivalence tests sweep this path
+    /// via `trials ≥ threads` configs.
+    fn run_trials_pooled(&self, threads: usize) -> Result<GadgetReport> {
+        self.cfg.validate()?;
+        let workers = threads.min(self.cfg.trials);
+        let pool = WorkerPool::new(workers);
+        let mut slots: Vec<Option<Result<TrialResult>>> = Vec::new();
+        slots.resize_with(self.cfg.trials, || None);
+        let chunk = (slots.len() + workers - 1) / workers;
+        let tasks: Vec<Task<'_>> = slots
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(c, slab)| {
+                Box::new(move || -> Result<()> {
+                    let mut backend = self.make_backend()?;
+                    let mut sched = Sequential::new(&mut *backend);
+                    for (off, slot) in slab.iter_mut().enumerate() {
+                        let trial = c * chunk + off;
+                        *slot = Some(self.run_trial(self.trial_seed(trial), &mut sched));
+                    }
+                    Ok(())
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run_tasks(tasks)?;
+        let mut trials = Vec::with_capacity(slots.len());
+        for slot in slots {
+            trials.push(slot.expect("pool ran every trial task")?);
         }
         Ok(self.aggregate(trials))
     }
@@ -346,9 +412,12 @@ impl GadgetRunner {
             sched.for_each_node(&mut nodes, &ids, &|backend, _id, node| {
                 protocol.local_step(backend, node, t)
             })?;
-            // (g): Push-Vector consensus on the shard-weighted vectors.
+            // (g): Push-Vector consensus on the shard-weighted vectors;
+            // the Bᵀ-apply fans its column panels over the scheduler's
+            // executor (inline for sequential, the worker pool for
+            // parallel) — bitwise identical either way.
             pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
-            pv.run_rounds(&b, rounds);
+            pv.run_rounds_with(&b, rounds, sched.panel_exec());
             gossip_total.merge(pv.stats());
             // (g)-consume/(h)/ε: estimate, optional projection and the
             // convergence test, per node (slot == id here since ids = 0..m).
@@ -613,6 +682,56 @@ mod tests {
         // 0.005·7329 ≈ 36 samples ⇒ max(32) ⇒ 36 ≥ 36? borderline; force tiny
         let cfg2 = ExperimentConfig { nodes: 5000, ..cfg };
         assert!(GadgetRunner::new(cfg2).is_err());
+    }
+
+    #[test]
+    fn zero_trials_rejected_with_clear_error_everywhere() {
+        // `GadgetReport` consumers index `trials[0]`; a trials = 0 config
+        // must die at validation, not panic in aggregation.
+        let cfg = ExperimentConfig { trials: 0, ..small_cfg() };
+        // (match, not unwrap_err: GadgetRunner has no Debug impl)
+        let err = match GadgetRunner::new(cfg.clone()) {
+            Err(e) => e,
+            Ok(_) => panic!("trials = 0 must be rejected at construction"),
+        };
+        assert!(err.to_string().contains("trials"), "{err}");
+        // the literal-config bypass is caught by run_with_scheduler too
+        let ok_runner = GadgetRunner::new(small_cfg()).unwrap();
+        let bypass = GadgetRunner { cfg, ..ok_runner };
+        let mut backend = NativeBackend::default();
+        let err2 = bypass.run_with_backend(&mut backend).unwrap_err();
+        assert!(err2.to_string().contains("trials"), "{err2}");
+        // and by the explicit-dataset entry point
+        let good = GadgetRunner::new(small_cfg()).unwrap();
+        let err3 = run_on_datasets(
+            &ExperimentConfig { trials: 0, ..small_cfg() },
+            good.train_data().clone(),
+            good.test_data().clone(),
+            good.lambda(),
+        )
+        .unwrap_err();
+        assert!(err3.to_string().contains("trials"), "{err3}");
+    }
+
+    #[test]
+    fn pooled_trial_fanout_is_bitwise_identical_to_sequential() {
+        // trials (2) ≥ threads (2) on the parallel scheduler takes the
+        // trial fan-out path; every aggregate must match the sequential
+        // reference exactly.
+        let seq = GadgetRunner::new(small_cfg()).unwrap().run().unwrap();
+        let cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Parallel,
+            threads: 2,
+            ..small_cfg()
+        };
+        let par = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert_eq!(seq.trials.len(), par.trials.len());
+        assert_eq!(seq.test_accuracy.to_bits(), par.test_accuracy.to_bits());
+        assert_eq!(seq.iterations, par.iterations);
+        for (a, b) in seq.trials.iter().zip(&par.trials) {
+            assert_eq!(a.consensus_w, b.consensus_w);
+            assert_eq!(a.iterations, b.iterations);
+        }
     }
 
     #[test]

@@ -7,9 +7,9 @@
 //!   convergence bookkeeping.
 //! * [`sched`] — the unified node-parallel execution runtime: the shared
 //!   per-node protocol step (Algorithm 2 (a)–(h) + ε-check) behind one
-//!   `Scheduler` abstraction with sequential, parallel (scoped thread
-//!   pool) and asynchronous (thread-per-node message passing)
-//!   implementations.
+//!   `Scheduler` abstraction with sequential, parallel (persistent
+//!   parked worker pool, see [`crate::pool`]) and asynchronous
+//!   (thread-per-node message passing) implementations.
 //! * [`gadget`] — the cycle-driven runner: local sub-gradient step →
 //!   Push-Vector consensus → projection → ε-convergence test, with anytime
 //!   snapshots for the figures, executed through the configured scheduler.
@@ -34,5 +34,5 @@ pub use multiclass::{MulticlassGadget, MulticlassReport};
 pub use node::NodeState;
 pub use sched::{
     AsyncRunResult, AsyncScheduler, GossipProtocol, MassState, Parallel, ProtocolParams,
-    Scheduler, Sequential,
+    Scheduler, ScopedSpawn, Sequential,
 };

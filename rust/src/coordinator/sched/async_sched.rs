@@ -236,7 +236,10 @@ impl AsyncScheduler {
                         while let Ok(msg) = rx.try_recv() {
                             mass.absorb(&msg.v, msg.w);
                         }
-                        // refresh the estimate
+                        // refresh the estimate; on a collapsed push-sum
+                        // weight (halved away without absorbing) the node
+                        // keeps its last finite estimate rather than
+                        // ingesting inf/NaN — see MassState::estimate_into
                         mass.estimate_into(&mut node.w);
                         counters[i].store(t, Ordering::Release);
                     }

@@ -9,11 +9,15 @@
 //! * [`Sequential`] — all nodes stepped in id order on the calling thread.
 //!   The determinism reference, and what Peersim's cycle-driven simulation
 //!   does.
-//! * [`Parallel`] — a scoped pool fans the per-node work across cores,
-//!   one backend instance per worker. Because every node samples from its
-//!   own RNG substream (`root.substream(i)`) and the backends carry no
-//!   result-bearing state across calls, the outcome is **bitwise
-//!   identical** to [`Sequential`] — asserted by
+//! * [`Parallel`] — a **persistent parked worker pool**
+//!   ([`crate::pool::WorkerPool`]) fans the per-node work across cores,
+//!   one backend instance per worker. Workers spawn once at scheduler
+//!   construction and park between dispatches (PR-1 spawned scoped
+//!   threads twice per iteration — [`ScopedSpawn`] keeps that
+//!   implementation as the benchmark baseline). Because every node
+//!   samples from its own RNG substream (`root.substream(i)`) and the
+//!   backends carry no result-bearing state across calls, the outcome is
+//!   **bitwise identical** to [`Sequential`] — asserted by
 //!   `rust/tests/scheduler_equivalence.rs`.
 //! * [`AsyncScheduler`] — thread-per-node message passing with bounded
 //!   staleness and a consensus cool-down: no global round barrier at all
@@ -31,6 +35,7 @@ pub use protocol::{GossipProtocol, MassState, ProtocolParams};
 
 use crate::coordinator::backend::LocalBackend;
 use crate::coordinator::node::NodeState;
+use crate::pool::{ParallelExec, Task, WorkerPool, SERIAL_EXEC};
 use crate::Result;
 
 /// A per-node work item: receives the worker's backend, the node's
@@ -62,6 +67,40 @@ pub trait Scheduler {
         ids: &[usize],
         f: NodeFn<'_>,
     ) -> Result<()>;
+
+    /// The executor data-parallel *non-node* phases should run on — the
+    /// Push-Vector mixing round fans its column panels over this. Inline
+    /// by default; the pooled scheduler exposes its worker pool. The
+    /// choice may only move work, never change results (the panel apply
+    /// is bitwise executor-invariant).
+    fn panel_exec(&self) -> &dyn ParallelExec {
+        &SERIAL_EXEC
+    }
+}
+
+/// Checks the [`Scheduler::for_each_node`] id contract — strictly
+/// increasing, in range, therefore each node visited exactly once.
+/// Shared by every scheduler so they all reject exactly the same inputs:
+/// before this helper existed, `Sequential` silently visited a node
+/// *twice* on duplicate ids (advancing its RNG stream twice) where
+/// `Parallel` errored — a divergence the equivalence contract forbids.
+pub fn validate_ids(ids: &[usize], m: usize) -> Result<()> {
+    let mut prev: Option<usize> = None;
+    for &id in ids {
+        if id >= m {
+            anyhow::bail!("scheduler: node id {id} out of range (m = {m})");
+        }
+        if let Some(p) = prev {
+            if id <= p {
+                anyhow::bail!(
+                    "scheduler: node ids must be strictly increasing, each node \
+                     visited exactly once (got {p} then {id})"
+                );
+            }
+        }
+        prev = Some(id);
+    }
+    Ok(())
 }
 
 /// Resolves a configured thread count: `0` means "use all available
@@ -104,37 +143,59 @@ impl Scheduler for Sequential<'_> {
         ids: &[usize],
         f: NodeFn<'_>,
     ) -> Result<()> {
+        validate_ids(ids, nodes.len())?;
         for (slot, &id) in ids.iter().enumerate() {
-            let node = nodes
-                .get_mut(id)
-                .ok_or_else(|| anyhow::anyhow!("scheduler: node id {id} out of range"))?;
-            f(&mut *self.backend, slot, node)?;
+            f(&mut *self.backend, slot, &mut nodes[id])?;
         }
         Ok(())
     }
 }
 
-/// The node-parallel scheduler: scoped worker threads with one backend
-/// per worker. Nodes are split into contiguous chunks of the selected id
-/// set; each worker steps its chunk in order. Since node results depend
-/// only on the node's own state (shard, RNG substream, weight vector) and
-/// the backends re-initialize their scratch from `w` on every call, the
+/// Collects disjoint `&mut` references to the selected nodes, in id
+/// order, without unsafe: one forward walk of the slice's `iter_mut`.
+/// Requires `validate_ids`-clean ids.
+fn collect_node_refs<'n>(
+    nodes: &'n mut [NodeState],
+    ids: &[usize],
+) -> Vec<(usize, &'n mut NodeState)> {
+    let mut refs: Vec<(usize, &mut NodeState)> = Vec::with_capacity(ids.len());
+    let mut it = nodes.iter_mut().enumerate();
+    for (slot, &want) in ids.iter().enumerate() {
+        let node = loop {
+            match it.next() {
+                Some((i, n)) if i == want => break n,
+                Some(_) => continue,
+                None => unreachable!("validate_ids guarantees ids are reachable"),
+            }
+        };
+        refs.push((slot, node));
+    }
+    refs
+}
+
+/// The node-parallel scheduler: a **persistent parked worker pool**
+/// ([`crate::pool::WorkerPool`]) with one backend per worker. Workers
+/// spawn once here, at construction, and park between dispatches; each
+/// `for_each_node` call splits the selected id set into contiguous
+/// chunks, ships one borrowed task per chunk to the pool, and blocks
+/// until the phase completes. Since node results depend only on the
+/// node's own state (shard, RNG substream, weight vector) and the
+/// backends re-initialize their scratch from `w` on every call, the
 /// results are bitwise identical to [`Sequential`] regardless of worker
 /// count or interleaving.
 ///
-/// Workers are *spawned per `for_each_node` call* (scoped threads keep
-/// the borrow story safe without `unsafe`); only the backends persist.
-/// Spawn cost is tens of microseconds per worker per phase, which is
-/// noise against the local-step phase but can cap speedups at tiny
-/// `d`·`batch` — a persistent parked pool is a ROADMAP open item; the
-/// threads sweep in `benches/table5_speedup.rs` tracks the real effect.
+/// PR-1's [`ScopedSpawn`] paid ~2·`threads` thread spawns per GADGET
+/// iteration (one per worker per phase); the pool pays a condvar wake
+/// instead — the difference is measured in `benches/table5_speedup.rs`
+/// §dispatch overhead and dominates at small `d`·`batch`.
 pub struct Parallel {
+    pool: WorkerPool,
     backends: Vec<Box<dyn LocalBackend + Send>>,
 }
 
 impl Parallel {
-    /// Builds a pool of `threads` workers (`0` = all cores), constructing
-    /// one backend per worker with `factory`.
+    /// Builds a pool of `threads` parked workers (`0` = all cores),
+    /// constructing one backend per worker with `factory`.
     pub fn new<F>(threads: usize, factory: F) -> Result<Self>
     where
         F: Fn() -> Result<Box<dyn LocalBackend + Send>>,
@@ -144,7 +205,7 @@ impl Parallel {
         for _ in 0..t {
             backends.push(factory()?);
         }
-        Ok(Self { backends })
+        Ok(Self { pool: WorkerPool::new(t), backends })
     }
 
     /// A native-backend pool — the common case (churn, benches).
@@ -157,11 +218,81 @@ impl Parallel {
         })
         .expect("native backend construction cannot fail")
     }
+
 }
 
 impl Scheduler for Parallel {
     fn name(&self) -> &'static str {
         "parallel"
+    }
+
+    fn threads(&self) -> usize {
+        self.backends.len()
+    }
+
+    fn panel_exec(&self) -> &dyn ParallelExec {
+        &self.pool
+    }
+
+    fn for_each_node(
+        &mut self,
+        nodes: &mut [NodeState],
+        ids: &[usize],
+        f: NodeFn<'_>,
+    ) -> Result<()> {
+        validate_ids(ids, nodes.len())?;
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let Self { pool, backends } = self;
+        let mut refs = collect_node_refs(nodes, ids);
+        let workers = backends.len().min(refs.len()).max(1);
+        let chunk = (refs.len() + workers - 1) / workers;
+        let tasks: Vec<Task<'_>> = backends
+            .iter_mut()
+            .zip(refs.chunks_mut(chunk))
+            .map(|(backend, slab)| {
+                Box::new(move || -> Result<()> {
+                    for (slot, node) in slab.iter_mut() {
+                        f(&mut **backend, *slot, node)?;
+                    }
+                    Ok(())
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run_tasks(tasks)
+    }
+}
+
+/// PR-1's scoped-spawn scheduler, retained verbatim as the measurement
+/// baseline the pooled [`Parallel`] is compared against
+/// (`benches/table5_speedup.rs` §dispatch overhead, `benches/hotpath.rs`
+/// scheduler sweep). Spawns fresh scoped threads on every
+/// `for_each_node` call; produces bit-identical results to both
+/// [`Sequential`] and [`Parallel`]. Not reachable from configs — the
+/// `parallel` scheduler kind always builds the pooled implementation.
+pub struct ScopedSpawn {
+    backends: Vec<Box<dyn LocalBackend + Send>>,
+}
+
+impl ScopedSpawn {
+    /// A native-backend scoped-spawn scheduler with `threads` workers
+    /// (`0` = all cores).
+    pub fn native(threads: usize) -> Self {
+        let t = resolve_threads(threads);
+        let backends = (0..t)
+            .map(|_| {
+                Box::new(crate::coordinator::backend::NativeBackend::default())
+                    as Box<dyn LocalBackend + Send>
+            })
+            .collect();
+        Self { backends }
+    }
+}
+
+impl Scheduler for ScopedSpawn {
+    fn name(&self) -> &'static str {
+        "parallel-scoped"
     }
 
     fn threads(&self) -> usize {
@@ -174,28 +305,11 @@ impl Scheduler for Parallel {
         ids: &[usize],
         f: NodeFn<'_>,
     ) -> Result<()> {
+        validate_ids(ids, nodes.len())?;
         if ids.is_empty() {
             return Ok(());
         }
-        // Collect disjoint &mut references to the selected nodes, in id
-        // order, without unsafe: walk the slice's iter_mut once.
-        let mut refs: Vec<(usize, &mut NodeState)> = Vec::with_capacity(ids.len());
-        {
-            let mut it = nodes.iter_mut().enumerate();
-            for (slot, &want) in ids.iter().enumerate() {
-                let node = loop {
-                    match it.next() {
-                        Some((i, n)) if i == want => break n,
-                        Some(_) => continue,
-                        None => anyhow::bail!(
-                            "scheduler: node ids must be strictly increasing and in \
-                             range (id {want} not reachable)"
-                        ),
-                    }
-                };
-                refs.push((slot, node));
-            }
-        }
+        let mut refs = collect_node_refs(nodes, ids);
         let workers = self.backends.len().min(refs.len()).max(1);
         let chunk = (refs.len() + workers - 1) / workers;
         std::thread::scope(|scope| -> Result<()> {
@@ -308,11 +422,110 @@ mod tests {
         let mut ns = nodes(3, 1);
         let mut par = Parallel::native(2);
         assert!(par.for_each_node(&mut ns, &[5], &|_b, _i, _n| Ok(())).is_err());
-        // descending ids cannot be satisfied by the single forward walk
+        // descending ids violate the strictly-increasing contract
         assert!(par.for_each_node(&mut ns, &[2, 0], &|_b, _i, _n| Ok(())).is_err());
         let mut backend = NativeBackend::default();
         let mut seq = Sequential::new(&mut backend);
         assert!(seq.for_each_node(&mut ns, &[9], &|_b, _i, _n| Ok(())).is_err());
+    }
+
+    #[test]
+    fn id_contract_is_shared_by_all_schedulers() {
+        // Regression: `Sequential` used to silently accept duplicate and
+        // descending ids (visiting a node twice — advancing its RNG
+        // stream twice) while `Parallel` rejected them. The shared
+        // `validate_ids` helper must make every scheduler enforce the
+        // documented "strictly increasing, visited exactly once" contract
+        // identically.
+        let mut ns = nodes(4, 9);
+        let w_before: Vec<Vec<f64>> = ns.iter().map(|n| n.w.clone()).collect();
+        fn bump(_b: &mut dyn LocalBackend, _i: usize, n: &mut NodeState) -> crate::Result<()> {
+            n.w[0] += 1.0;
+            Ok(())
+        }
+        let mut backend = NativeBackend::default();
+        let mut seq = Sequential::new(&mut backend);
+        let mut par = Parallel::native(2);
+        let mut scoped = ScopedSpawn::native(2);
+        let scheds: [&mut dyn Scheduler; 3] = [&mut seq, &mut par, &mut scoped];
+        for sched in scheds {
+            for bad in [&[1usize, 1][..], &[2, 0][..], &[0, 3, 3][..], &[4][..]] {
+                let err = sched.for_each_node(&mut ns, bad, &bump).unwrap_err();
+                let msg = err.to_string();
+                assert!(
+                    msg.contains("strictly increasing") || msg.contains("out of range"),
+                    "{}: {bad:?}: {msg}",
+                    sched.name()
+                );
+            }
+        }
+        // rejection happens before any node is touched
+        for (n, before) in ns.iter().zip(&w_before) {
+            assert_eq!(&n.w, before, "node {} mutated by a rejected call", n.id);
+        }
+        assert!(validate_ids(&[0, 2, 3], 4).is_ok());
+        assert!(validate_ids(&[], 0).is_ok());
+    }
+
+    #[test]
+    fn scoped_spawn_matches_sequential_bitwise() {
+        // The retained PR-1 baseline must stay equivalent too — it is the
+        // control arm of the dispatch-overhead bench.
+        let mut seq_nodes = nodes(5, 11);
+        let mut backend = NativeBackend::default();
+        let mut seq = Sequential::new(&mut backend);
+        step_all(&mut seq, &mut seq_nodes, 8);
+
+        let mut sc_nodes = nodes(5, 11);
+        let mut scoped = ScopedSpawn::native(3);
+        step_all(&mut scoped, &mut sc_nodes, 8);
+        for (a, b) in seq_nodes.iter().zip(&sc_nodes) {
+            assert_eq!(a.w, b.w, "node {}", a.id);
+        }
+    }
+
+    #[test]
+    fn pool_larger_than_node_count_matches_sequential() {
+        // threads ≫ nodes: surplus workers stay parked and the result is
+        // unchanged.
+        let mut seq_nodes = nodes(3, 21);
+        let mut backend = NativeBackend::default();
+        let mut seq = Sequential::new(&mut backend);
+        step_all(&mut seq, &mut seq_nodes, 6);
+
+        let mut par_nodes = nodes(3, 21);
+        let mut par = Parallel::native(16);
+        assert_eq!(par.threads(), 16);
+        step_all(&mut par, &mut par_nodes, 6);
+        for (a, b) in seq_nodes.iter().zip(&par_nodes) {
+            assert_eq!(a.w, b.w, "node {}", a.id);
+        }
+    }
+
+    #[test]
+    fn empty_id_set_is_a_noop_dispatch() {
+        // The churn path hands the scheduler an empty alive set when every
+        // node is down — must be a clean no-op, not a hang or error.
+        let mut ns = nodes(3, 2);
+        let before: Vec<Vec<f64>> = ns.iter().map(|n| n.w.clone()).collect();
+        let mut par = Parallel::native(4);
+        par.for_each_node(&mut ns, &[], &|_b, _i, n| {
+            n.w[0] += 1.0;
+            Ok(())
+        })
+        .unwrap();
+        for (n, b) in ns.iter().zip(&before) {
+            assert_eq!(&n.w, b);
+        }
+    }
+
+    #[test]
+    fn panel_exec_defaults_inline_and_pool_for_parallel() {
+        let mut backend = NativeBackend::default();
+        let seq = Sequential::new(&mut backend);
+        assert_eq!(seq.panel_exec().threads(), 1);
+        let par = Parallel::native(3);
+        assert_eq!(par.panel_exec().threads(), 3);
     }
 
     #[test]

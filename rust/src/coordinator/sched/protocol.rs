@@ -166,12 +166,27 @@ impl MassState {
         self.w += w;
     }
 
-    /// Writes the current estimate `v / weight` into `out`.
-    pub fn estimate_into(&self, out: &mut [f64]) {
+    /// Writes the current estimate `v / weight` into `out` and returns
+    /// `true`.
+    ///
+    /// If the push-sum weight has collapsed to zero/denormal — possible
+    /// in pathological exchange sequences where a node halves its mass
+    /// many times without absorbing (each cycle halves `w`; ~1075 halves
+    /// reach exactly 0.0) — or gone non-finite, the division would emit
+    /// `inf`/`NaN` that silently poisons `consensus_w` downstream.
+    /// Instead `out` is left untouched and `false` is returned; by the
+    /// call convention (every engine passes the node's current working
+    /// vector) the caller keeps its **last finite estimate**, and the
+    /// next absorb restores a healthy weight.
+    pub fn estimate_into(&self, out: &mut [f64]) -> bool {
+        if !self.w.is_finite() || self.w < f64::MIN_POSITIVE {
+            return false;
+        }
         let inv = 1.0 / self.w;
         for (o, &x) in out.iter_mut().zip(&self.v) {
             *o = x * inv;
         }
+        true
     }
 }
 
@@ -272,9 +287,55 @@ mod tests {
         assert!((a.w + b.w - total_w).abs() < 1e-12 * total_w);
         // estimates converge toward the weighted mean under pure exchange
         let mut ea = vec![0.0; 3];
-        a.estimate_into(&mut ea);
+        assert!(a.estimate_into(&mut ea));
         for k in 0..3 {
             assert!((ea[k] - total_v[k] / total_w).abs() < 1e-3, "slot {k}");
         }
+    }
+
+    #[test]
+    fn estimate_keeps_last_finite_value_on_collapsed_weight() {
+        let mut m = MassState::new(2, 8.0);
+        m.fold(&[2.0, -4.0]);
+        let mut out = vec![0.0; 2];
+        assert!(m.estimate_into(&mut out));
+        assert_eq!(out, vec![2.0, -4.0]);
+        // weight collapsed to exact zero ⇒ out untouched, no inf/NaN
+        let last = out.clone();
+        m.w = 0.0;
+        assert!(!m.estimate_into(&mut out));
+        assert_eq!(out, last);
+        // denormal weight would overflow the reciprocal — same guard
+        m.w = f64::MIN_POSITIVE / 4.0;
+        assert!(!m.estimate_into(&mut out));
+        assert_eq!(out, last);
+        // non-finite weight (absorbed from a poisoned peer) — same guard
+        m.w = f64::NAN;
+        assert!(!m.estimate_into(&mut out));
+        m.w = f64::INFINITY;
+        assert!(!m.estimate_into(&mut out));
+        assert_eq!(out, last);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn repeated_unanswered_halving_never_emits_non_finite() {
+        // A node that ships half its mass every cycle and never receives:
+        // after ~1100 cycles the weight underflows to exact 0.0. The
+        // estimate must freeze at the last finite value instead of
+        // exploding.
+        let mut m = MassState::new(3, 50.0);
+        m.fold(&[1.0, -0.5, 2.0]);
+        let mut est = vec![0.0; 3];
+        assert!(m.estimate_into(&mut est));
+        for _ in 0..1200 {
+            let _ = m.split_half();
+            m.estimate_into(&mut est);
+            assert!(est.iter().all(|x| x.is_finite()), "w = {}", m.w);
+        }
+        assert_eq!(m.w, 0.0, "weight should underflow to exactly zero");
+        // the frozen estimate is still the (constant) v/w ratio from
+        // before the underflow
+        assert!((est[0] - 1.0).abs() < 1e-9, "{}", est[0]);
     }
 }

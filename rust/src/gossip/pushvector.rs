@@ -14,12 +14,72 @@
 
 use super::pushsum::count_offdiag;
 use super::GossipStats;
+use crate::pool::{ParallelExec, Task, SERIAL_EXEC};
 use crate::topology::TransitionMatrix;
 
 /// Column-panel width (f64 entries) for the tiled `Bᵀ`-apply: 1024
 /// columns = 8 KB per destination row, so a 10-node destination panel
 /// (~80 KB) sits comfortably in L2 while the source rows stream.
 const COL_BLOCK: usize = 1024;
+
+/// Minimum columns a parallel panel task must own: below this the
+/// dispatch latency (condvar wake, ~µs) exceeds the panel's arithmetic,
+/// and [`PushVector::round_with`] stays on the inline path.
+const PAR_COL_MIN: usize = 256;
+
+/// The tiled `Bᵀ`-accumulation restricted to columns `[k0, k1)`: for
+/// every `(i, j)` with `b_ij ≠ 0`,
+/// `v_next[j, k0..k1] += b_ij · v[i, k0..k1]`, destination rows
+/// addressed through the raw base pointer `v_next` (row-major `m×d`).
+///
+/// Per output element the accumulation runs over ascending `i` exactly
+/// like the original blocked loop, and a column's value never depends on
+/// any other column — so **any** column split (serial full-width, or
+/// panels fanned across threads) reproduces the same bits.
+///
+/// # Safety
+/// `v_next` must point to a live `m×d` f64 buffer disjoint from `v`, and
+/// no other thread may access columns `[k0, k1)` of it for the duration
+/// of the call. Callers pass pairwise-disjoint column ranges.
+unsafe fn bt_apply_columns(
+    b: &TransitionMatrix,
+    v: &[f64],
+    v_next: *mut f64,
+    m: usize,
+    d: usize,
+    k0: usize,
+    k1: usize,
+) {
+    let mut c0 = k0;
+    while c0 < k1 {
+        let c1 = (c0 + COL_BLOCK).min(k1);
+        for i in 0..m {
+            let row = b.row(i);
+            let src = &v[i * d + c0..i * d + c1];
+            for j in 0..m {
+                let bij = row[j];
+                if bij == 0.0 {
+                    continue;
+                }
+                // SAFETY: columns [c0, c1) ⊆ [k0, k1) of row j — inside
+                // the m×d buffer and exclusive to this call per the
+                // function contract.
+                let dst = std::slice::from_raw_parts_mut(v_next.add(j * d + c0), c1 - c0);
+                for (o, &s) in dst.iter_mut().zip(src) {
+                    *o += bij * s;
+                }
+            }
+        }
+        c0 = c1;
+    }
+}
+
+/// `Send`/`Sync` wrapper for shipping the `v_next` base pointer into
+/// panel tasks. The wrapper itself proves nothing — soundness comes from
+/// the tasks' pairwise-disjoint column ranges (see [`bt_apply_columns`]).
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 /// Synchronous deterministic Push-Vector state.
 #[derive(Clone, Debug)]
@@ -104,7 +164,15 @@ impl PushVector {
         self.d
     }
 
-    /// One synchronous round: `V ← Bᵀ V`, `w ← Bᵀ w`.
+    /// One synchronous round: `V ← Bᵀ V`, `w ← Bᵀ w`, on the calling
+    /// thread. Equivalent to [`PushVector::round_with`] on the inline
+    /// executor.
+    pub fn round(&mut self, b: &TransitionMatrix) {
+        self.round_with(b, &SERIAL_EXEC);
+    }
+
+    /// One synchronous round with the `Bᵀ`-apply fanned over column
+    /// panels on `exec`: `V ← Bᵀ V`, `w ← Bᵀ w`.
     ///
     /// Written as a j-major accumulation over B's rows so the inner loop is
     /// a dense axpy over the d-vector — auto-vectorizes and touches each
@@ -119,7 +187,16 @@ impl PushVector {
     /// order per output element (ascending `i`) is unchanged, so the
     /// result is **bitwise identical** to the unblocked loop
     /// (EXPERIMENTS.md §Perf has the before/after numbers).
-    pub fn round(&mut self, b: &TransitionMatrix) {
+    ///
+    /// **Panel parallelism**: when `exec` offers more than one thread and
+    /// `d` spans at least two [`PAR_COL_MIN`] panels, the column range is
+    /// split into contiguous chunks, one borrowed task per chunk, fanned
+    /// over `exec` (the scheduler's worker pool in the parallel runtime).
+    /// Column values are mutually independent and each keeps its
+    /// ascending-`i` accumulation, so the result is bitwise identical to
+    /// the inline path for every thread count — the equivalence tests pin
+    /// this.
+    pub fn round_with(&mut self, b: &TransitionMatrix, exec: &dyn ParallelExec) {
         assert_eq!(b.m, self.m, "PushVector: matrix size mismatch");
         // Rank-1 fast path: uniform B (complete graph + MH) averages in one
         // mean + broadcast — O(2m·d) instead of O(m²·d).
@@ -148,30 +225,36 @@ impl PushVector {
         self.v_next.fill(0.0);
         self.w_next.fill(0.0);
         let (m, d) = (self.m, self.d);
-        // Column-panel tiling (see the doc comment above): for each panel
-        // of at most COL_BLOCK columns, run the full (i, j) sweep so the
-        // destination panel stays hot. Per-element accumulation order is
-        // identical to the untiled loop.
         let v = &self.v;
-        let v_next = &mut self.v_next;
-        let mut k0 = 0;
-        while k0 < d {
-            let k1 = (k0 + COL_BLOCK).min(d);
-            for i in 0..m {
-                let row = b.row(i);
-                let src = &v[i * d + k0..i * d + k1];
-                for j in 0..m {
-                    let bij = row[j];
-                    if bij == 0.0 {
-                        continue;
-                    }
-                    let dst = &mut v_next[j * d + k0..j * d + k1];
-                    for (o, &s) in dst.iter_mut().zip(src) {
-                        *o += bij * s;
-                    }
+        let base = self.v_next.as_mut_ptr();
+        // How many panel tasks are worth dispatching: one per PAR_COL_MIN
+        // columns, capped by the executor's parallelism. 1 ⇒ run inline.
+        let tasks_n = exec.threads().min(d / PAR_COL_MIN).max(1);
+        if tasks_n <= 1 {
+            // SAFETY: `&mut self` gives this call exclusive access to the
+            // whole `v_next` buffer.
+            unsafe { bt_apply_columns(b, v, base, m, d, 0, d) };
+        } else {
+            let chunk = (d + tasks_n - 1) / tasks_n;
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(tasks_n);
+            for t in 0..tasks_n {
+                let k0 = t * chunk;
+                let k1 = ((t + 1) * chunk).min(d);
+                if k0 >= k1 {
+                    break;
                 }
+                let dst = SendPtr(base);
+                tasks.push(Box::new(move || {
+                    // SAFETY: the tasks' `[k0, k1)` ranges partition
+                    // `[0, d)` — pairwise disjoint columns of `v_next` —
+                    // and `run_tasks` returns only after every task
+                    // finished, so the buffer outlives all writes.
+                    unsafe { bt_apply_columns(b, v, dst.0, m, d, k0, k1) };
+                    Ok(())
+                }));
             }
-            k0 = k1;
+            exec.run_tasks(tasks)
+                .expect("panel tasks are infallible");
         }
         for i in 0..m {
             let row = b.row(i);
@@ -253,8 +336,20 @@ impl PushVector {
 
     /// Runs exactly `rounds` rounds.
     pub fn run_rounds(&mut self, b: &TransitionMatrix, rounds: usize) {
+        self.run_rounds_with(b, rounds, &SERIAL_EXEC);
+    }
+
+    /// Runs exactly `rounds` rounds with the `Bᵀ`-apply fanned over
+    /// `exec` (see [`PushVector::round_with`]); bitwise identical to
+    /// [`PushVector::run_rounds`] for every executor.
+    pub fn run_rounds_with(
+        &mut self,
+        b: &TransitionMatrix,
+        rounds: usize,
+        exec: &dyn ParallelExec,
+    ) {
         for _ in 0..rounds {
-            self.round(b);
+            self.round_with(b, exec);
         }
     }
 
@@ -379,6 +474,57 @@ mod tests {
                     est[k]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn panel_parallel_round_is_bitwise_equal_to_inline() {
+        // d spans several PAR_COL_MIN panels with a ragged tail, on a
+        // non-uniform B (ring ⇒ no rank-1 fast path): the pooled apply
+        // must reproduce the inline apply bit for bit at every pool size,
+        // including sizes above the panel count.
+        let d = 3 * super::PAR_COL_MIN + 41;
+        let m = 5;
+        let mut rng = crate::rng::Rng::new(909);
+        let vectors: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let b = mh(&Graph::ring(m));
+        for threads in [2usize, 3, 8] {
+            let pool = crate::pool::WorkerPool::new(threads);
+            let mut inline = PushVector::new(&vectors);
+            let mut pooled = PushVector::new(&vectors);
+            for _ in 0..7 {
+                inline.round(&b);
+                pooled.round_with(&b, &pool);
+            }
+            for i in 0..m {
+                let (a, c) = (inline.estimate(i), pooled.estimate(i));
+                for k in 0..d {
+                    assert_eq!(
+                        a[k].to_bits(),
+                        c[k].to_bits(),
+                        "threads={threads} node {i} col {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_d_stays_on_inline_path_and_matches() {
+        // Below 2·PAR_COL_MIN columns the dispatch is skipped entirely;
+        // results are identical either way.
+        let vectors = vec![vec![1.0, -2.0, 0.5], vec![3.0, 5.0, -0.25], vec![0.0, 1.0, 2.0]];
+        let b = mh(&Graph::ring(3));
+        let pool = crate::pool::WorkerPool::new(4);
+        let mut inline = PushVector::new(&vectors);
+        let mut pooled = PushVector::new(&vectors);
+        for _ in 0..5 {
+            inline.round(&b);
+            pooled.round_with(&b, &pool);
+        }
+        for i in 0..3 {
+            assert_eq!(inline.estimate(i), pooled.estimate(i));
         }
     }
 

@@ -11,9 +11,13 @@
 //!   (Algorithm 2) on a unified node-parallel runtime
 //!   ([`coordinator::sched`]): one shared per-node protocol step behind a
 //!   `Scheduler` abstraction with sequential (Peersim-equivalent
-//!   cycle-driven), parallel (scoped thread pool, bitwise-identical) and
-//!   asynchronous (thread-per-node message passing) execution, plus node
-//!   state management, ε-convergence and churn.
+//!   cycle-driven), parallel (persistent parked worker pool,
+//!   bitwise-identical) and asynchronous (thread-per-node message
+//!   passing) execution, plus node state management, ε-convergence and
+//!   churn.
+//! * [`pool`] — the persistent parked worker pool every parallel phase
+//!   dispatches through (node fan-out, mixing-round column panels,
+//!   trial fan-out).
 //! * [`gossip`] — the Push-Sum / Push-Vector consensus protocols
 //!   (Kempe et al. 2003, Algorithm 1 of the paper).
 //! * [`topology`] — overlay graphs and doubly-stochastic transition
@@ -57,6 +61,7 @@ pub mod gossip;
 pub mod harness;
 pub mod linalg;
 pub mod metrics;
+pub mod pool;
 pub mod rng;
 pub mod runtime;
 pub mod solver;

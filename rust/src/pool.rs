@@ -1,0 +1,450 @@
+//! A persistent parked worker pool — the dispatch substrate of the
+//! node-parallel runtime.
+//!
+//! PR-1's `Parallel` scheduler spawned scoped threads on every
+//! `for_each_node` call: 2 phases × `threads` spawns per GADGET
+//! iteration, tens of microseconds each — noise against a large local
+//! step, but the dominant cost once per-node work shrinks (small
+//! `d`·`batch`; measured in `benches/table5_speedup.rs` §dispatch
+//! overhead). This module replaces that with workers that spawn **once**,
+//! park on a condvar between dispatches, and receive work through a
+//! shared injector queue.
+//!
+//! ## Dispatch protocol
+//!
+//! [`WorkerPool::run_tasks`] is a *scoped* dispatch:
+//!
+//! 1. the caller enqueues its tasks (type-erased to `'static`; see
+//!    Safety) under one per-call completion latch ([`ScopeState`]);
+//! 2. parked workers wake, pop tasks FIFO, run each under
+//!    `catch_unwind`, and decrement the latch — a panicking task is
+//!    converted into an error on the latch instead of a poisoned thread,
+//!    so parked peers and concurrent scopes are never deadlocked;
+//! 3. the caller *helps*: it drains the queue LIFO (most-recently
+//!    enqueued first, so nested dispatches service their own sub-tasks
+//!    before stealing unrelated work) instead of idling, then blocks on
+//!    the latch until the in-flight remainder completes.
+//!
+//! The help-running step is what makes nested dispatch — a pool task that
+//! itself calls `run_tasks`, e.g. a fanned-out GADGET trial whose mixing
+//! round fans column panels — deadlock-free: progress never depends on a
+//! free worker, because every waiting dispatcher is also an executor.
+//!
+//! ## Safety
+//!
+//! Tasks borrow the caller's stack (`&mut NodeState` slabs, `&PushVector`
+//! buffers), so they are erased from `'env` to `'static` when enqueued —
+//! the same erasure scoped threads perform. Soundness rests on one
+//! invariant, maintained by [`WorkerPool::run_tasks`]: **it does not
+//! return until the latch counts every task of its scope as finished, and
+//! a task is consumed (its captures dropped, by return or by unwind)
+//! before it is counted** — so no `'env` borrow survives the call that
+//! created it.
+//!
+//! [`ParallelExec`] is the object-safe facade over "run these disjoint
+//! tasks to completion": [`SerialExec`] runs them inline (the sequential
+//! scheduler's executor), [`WorkerPool`] fans them out. Consumers
+//! (`gossip::PushVector::round_with`, `Scheduler::panel_exec`) are
+//! executor-agnostic; results must be — and are — bitwise identical
+//! either way.
+
+use crate::Result;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// A unit of work for one dispatch: runs once, on whichever thread picks
+/// it up. May borrow the dispatching caller's stack (`'env`).
+pub type Task<'env> = Box<dyn FnOnce() -> Result<()> + Send + 'env>;
+
+/// A [`Task`] after lifetime erasure (queue representation).
+type ErasedTask = Box<dyn FnOnce() -> Result<()> + Send + 'static>;
+
+/// Object-safe executor for a batch of disjoint tasks.
+///
+/// The contract mirrors the scheduler's: every task runs exactly once and
+/// `run_tasks` returns only after all of them finished (even when some
+/// failed — the first error is returned after the batch completes, so
+/// borrowed data is never still in flight). Implementations may only
+/// change *where* tasks run, never *what* they compute.
+pub trait ParallelExec: Sync {
+    /// Worker parallelism available to a batch (1 for inline execution).
+    fn threads(&self) -> usize;
+
+    /// Runs all tasks to completion; first task error (or panic,
+    /// converted) wins.
+    fn run_tasks<'env>(&self, tasks: Vec<Task<'env>>) -> Result<()>;
+}
+
+/// Inline executor: runs every task on the calling thread, in order.
+pub struct SerialExec;
+
+/// Shared [`SerialExec`] instance (the default `Scheduler::panel_exec`).
+pub static SERIAL_EXEC: SerialExec = SerialExec;
+
+impl ParallelExec for SerialExec {
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn run_tasks<'env>(&self, tasks: Vec<Task<'env>>) -> Result<()> {
+        // Run the whole batch even after an error — identical semantics
+        // to the pool, which cannot recall already-queued tasks.
+        let mut first_error = None;
+        for task in tasks {
+            if let Err(e) = task() {
+                if first_error.is_none() {
+                    first_error = Some(e);
+                }
+            }
+        }
+        match first_error {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+/// Completion latch for one `run_tasks` call.
+struct ScopeState {
+    progress: Mutex<ScopeProgress>,
+    done: Condvar,
+}
+
+struct ScopeProgress {
+    /// Tasks of this scope not yet finished.
+    remaining: usize,
+    /// First task error (or panic, converted) observed.
+    first_error: Option<anyhow::Error>,
+}
+
+/// One queued task plus the latch it reports to.
+struct Job {
+    task: ErasedTask,
+    scope: Arc<ScopeState>,
+}
+
+/// State shared between the pool handle and its workers.
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Signaled when jobs are enqueued or shutdown is requested.
+    available: Condvar,
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Locks a mutex, pressing on through poisoning: the pool never panics
+/// while holding a lock (task panics are caught *before* locking), but a
+/// poisoned latch must not turn into a second panic that would leak
+/// in-flight borrows out of `run_tasks`.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Runs one job and reports it to its scope's latch. The task is consumed
+/// (captures dropped) by the call or its unwind before the latch is
+/// decremented — the soundness invariant of the lifetime erasure.
+fn run_job(job: Job) {
+    let Job { task, scope } = job;
+    let outcome = match catch_unwind(AssertUnwindSafe(move || task())) {
+        Ok(Ok(())) => None,
+        Ok(Err(e)) => Some(e),
+        Err(payload) => Some(anyhow::anyhow!(
+            "pool: worker task panicked: {}",
+            panic_message(payload.as_ref())
+        )),
+    };
+    let mut p = lock(&scope.progress);
+    if let Some(e) = outcome {
+        if p.first_error.is_none() {
+            p.first_error = Some(e);
+        }
+    }
+    p.remaining -= 1;
+    if p.remaining == 0 {
+        scope.done.notify_all();
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared
+                    .available
+                    .wait(q)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+            }
+        };
+        run_job(job);
+    }
+}
+
+/// The persistent pool: `threads` workers spawned at construction, parked
+/// between dispatches, joined on drop.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawns a pool of `threads` parked workers (clamped to ≥ 1; callers
+    /// resolve `0 = all cores` themselves, see
+    /// `coordinator::sched::resolve_threads`).
+    pub fn new(threads: usize) -> Self {
+        let t = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let workers = (0..t)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gadget-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("pool: failed to spawn worker thread")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+}
+
+impl ParallelExec for WorkerPool {
+    fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn run_tasks<'env>(&self, tasks: Vec<Task<'env>>) -> Result<()> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let scope = Arc::new(ScopeState {
+            progress: Mutex::new(ScopeProgress { remaining: n, first_error: None }),
+            done: Condvar::new(),
+        });
+        {
+            let mut q = lock(&self.shared.queue);
+            for task in tasks {
+                // SAFETY: the `'env` borrows inside `task` outlive every
+                // use, because (a) this function does not return before
+                // the latch below reaches zero, and (b) `run_job` consumes
+                // the task — dropping its captures — before decrementing
+                // the latch. No `'env` borrow survives this call.
+                let task = unsafe { std::mem::transmute::<Task<'env>, ErasedTask>(task) };
+                q.jobs.push_back(Job { task, scope: Arc::clone(&scope) });
+            }
+            self.shared.available.notify_all();
+        }
+        // Help-run instead of idling: drain LIFO so a nested dispatch
+        // (a pool task calling run_tasks) services its own freshly-queued
+        // sub-tasks first — and progress never requires a free worker.
+        loop {
+            let job = lock(&self.shared.queue).jobs.pop_back();
+            match job {
+                Some(job) => run_job(job),
+                None => break,
+            }
+        }
+        // Whatever is left of this scope is running on workers; wait.
+        let mut p = lock(&scope.progress);
+        while p.remaining > 0 {
+            p = scope.done.wait(p).unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+        match p.first_error.take() {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        lock(&self.shared.queue).shutdown = true;
+        self.shared.available.notify_all();
+        for handle in self.workers.drain(..) {
+            // A worker that panicked outside a task (impossible today —
+            // run_job catches task panics) just reports a join error;
+            // swallowing it keeps drop panic-free.
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn counting_tasks(n: usize, hits: &AtomicUsize) -> Vec<Task<'_>> {
+        (0..n)
+            .map(|_| {
+                Box::new(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                }) as Task<'_>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run_tasks(counting_tasks(64, &hits)).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn borrows_mutable_stack_data() {
+        // The scoped-dispatch property: tasks may write disjoint &mut
+        // slices of the caller's stack.
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0usize; 10];
+        {
+            let tasks: Vec<Task<'_>> = data
+                .chunks_mut(3)
+                .enumerate()
+                .map(|(c, chunk)| {
+                    Box::new(move || {
+                        for x in chunk.iter_mut() {
+                            *x = c + 1;
+                        }
+                        Ok(())
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run_tasks(tasks).unwrap();
+        }
+        assert_eq!(data, vec![1, 1, 1, 2, 2, 2, 3, 3, 3, 4]);
+    }
+
+    #[test]
+    fn task_error_is_returned_after_batch_completes() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let hits_ref = &hits;
+        let mut tasks: Vec<Task<'_>> = Vec::new();
+        for i in 0..8 {
+            tasks.push(Box::new(move || {
+                hits_ref.fetch_add(1, Ordering::SeqCst);
+                if i == 3 {
+                    anyhow::bail!("task {i} failed");
+                }
+                Ok(())
+            }));
+        }
+        let err = pool.run_tasks(tasks).unwrap_err();
+        assert!(err.to_string().contains("task 3 failed"), "{err}");
+        // the batch still ran to completion (no early abandon of borrows)
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn worker_panic_becomes_error_and_pool_stays_usable() {
+        // A panicking task must neither deadlock parked peers nor kill
+        // the pool: the next dispatch has to work.
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Task<'_>> = vec![
+            Box::new(|| Ok(())),
+            Box::new(|| panic!("deliberate test panic")),
+            Box::new(|| Ok(())),
+        ];
+        let err = pool.run_tasks(tasks).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("deliberate test panic"), "{err}");
+
+        let hits = AtomicUsize::new(0);
+        pool.run_tasks(counting_tasks(16, &hits)).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn nested_dispatch_does_not_deadlock() {
+        // Every task of the outer batch dispatches an inner batch on the
+        // same pool while all workers may already be busy with outer
+        // tasks — help-running must keep this live even at pool size 1.
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits = AtomicUsize::new(0);
+            let outer: Vec<Task<'_>> = (0..6)
+                .map(|_| {
+                    let pool = &pool;
+                    let hits = &hits;
+                    Box::new(move || {
+                        let inner: Vec<Task<'_>> = (0..5)
+                            .map(|_| {
+                                Box::new(move || {
+                                    hits.fetch_add(1, Ordering::SeqCst);
+                                    Ok(())
+                                }) as Task<'_>
+                            })
+                            .collect();
+                        pool.run_tasks(inner)
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run_tasks(outer).unwrap();
+            assert_eq!(hits.load(Ordering::SeqCst), 30, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_larger_than_task_count_and_cores() {
+        // Oversubscription (threads ≫ cores) and underfill (tasks <
+        // workers) are both fine: extra workers just stay parked.
+        let pool = WorkerPool::new(64);
+        assert_eq!(pool.threads(), 64);
+        let hits = AtomicUsize::new(0);
+        pool.run_tasks(counting_tasks(3, &hits)).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn empty_dispatch_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run_tasks(Vec::new()).unwrap();
+    }
+
+    #[test]
+    fn serial_exec_matches_pool_semantics() {
+        let hits = AtomicUsize::new(0);
+        let hits_ref = &hits;
+        let mut tasks: Vec<Task<'_>> = Vec::new();
+        for i in 0..4 {
+            tasks.push(Box::new(move || {
+                hits_ref.fetch_add(1, Ordering::SeqCst);
+                if i == 1 {
+                    anyhow::bail!("boom");
+                }
+                Ok(())
+            }));
+        }
+        let err = SERIAL_EXEC.run_tasks(tasks).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        assert_eq!(SERIAL_EXEC.threads(), 1);
+    }
+}

@@ -98,6 +98,68 @@ fn bad_option_value_is_clear_error() {
 }
 
 #[test]
+fn zero_trials_is_a_clear_config_error() {
+    // `--trials 0` would make every report consumer index a missing
+    // trial 0 — it must die at config validation with a message naming
+    // the field, through both the flag and the config-file path.
+    let (ok, _, stderr) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "3",
+        "--trials",
+        "0",
+    ]);
+    assert!(!ok, "trials = 0 must fail");
+    assert!(stderr.contains("trials"), "{stderr}");
+
+    let dir = std::env::temp_dir().join(format!("gadget-trials0-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("t.toml");
+    std::fs::write(&cfg, "dataset = \"synthetic-usps\"\ntrials = 0\n").unwrap();
+    let (ok2, _, stderr2) = run(&["train", "--config", cfg.to_str().unwrap()]);
+    assert!(!ok2);
+    assert!(stderr2.contains("trials"), "{stderr2}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn parallel_scheduler_cli_reports_identical_accuracy() {
+    // End-to-end through the binary: the pooled parallel scheduler (here
+    // trials = 2 ⇒ trial fan-out) must print the exact accuracy line the
+    // sequential reference prints.
+    let base = [
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "3",
+        "--trials",
+        "2",
+        "--max-iterations",
+        "60",
+    ];
+    let (ok_seq, out_seq, err_seq) = run(&base);
+    assert!(ok_seq, "stderr: {err_seq}");
+    let mut par_args: Vec<&str> = base.to_vec();
+    par_args.extend_from_slice(&["--scheduler", "parallel", "--threads", "3"]);
+    let (ok_par, out_par, err_par) = run(&par_args);
+    assert!(ok_par, "stderr: {err_par}");
+    let acc = |s: &str| {
+        s.lines()
+            .find(|l| l.contains("test accuracy"))
+            .map(str::to_string)
+            .unwrap_or_else(|| panic!("no accuracy line in: {s}"))
+    };
+    assert_eq!(acc(&out_seq), acc(&out_par));
+}
+
+#[test]
 fn experiment_writes_result_files() {
     let dir = std::env::temp_dir().join(format!("gadget-exp-{}", std::process::id()));
     let (ok, stdout, stderr) = run(&[

@@ -268,3 +268,57 @@ fn prop_synthetic_scale_invariance() {
         assert_eq!(small.train.len(), 400);
     }
 }
+
+/// Property: asynchronous runs never emit non-finite estimates or mass —
+/// for any topology, cycle budget, staleness bound and seed, every
+/// reported weight vector and push-sum weight is finite. (The guard in
+/// `MassState::estimate_into` freezes a node at its last finite estimate
+/// if its push-sum weight ever collapses to zero/denormal instead of
+/// letting inf/NaN propagate into `consensus_w`.)
+#[test]
+fn prop_async_runs_never_emit_non_finite_weights() {
+    use gadget::coordinator::sched::{AsyncParams, AsyncScheduler};
+    let mut rng = Rng::new(900);
+    for case in 0..8 {
+        let g = random_connected_graph(&mut rng);
+        let m = g.n;
+        let spec = DatasetSpec {
+            name: "finite".into(),
+            train_size: 40 * m,
+            test_size: 20,
+            features: rng.range(8, 24),
+            nnz_per_row: 4,
+            noise: 0.03,
+            positive_rate: 0.5,
+            lambda: 1e-2,
+        };
+        let shards =
+            partition::horizontal_split(&generate(&spec, rng.next_u64(), 1.0).train, m, case);
+        let cycles = rng.range(50, 300);
+        let res = AsyncScheduler::new(AsyncParams {
+            lambda: 1e-2,
+            batch_size: 2,
+            cycles,
+            cooldown: cycles / 8,
+            local_steps: 1,
+            project: true,
+            seed: rng.next_u64(),
+            max_lag: rng.range(1, 6),
+        })
+        .run(shards, &g)
+        .unwrap();
+        for (i, w) in res.estimates.iter().enumerate() {
+            assert!(
+                w.iter().all(|x| x.is_finite()),
+                "case {case}: node {i} estimate not finite"
+            );
+        }
+        for (i, (v, w)) in res.mass_v.iter().zip(&res.mass_weights).enumerate() {
+            assert!(w.is_finite(), "case {case}: node {i} mass weight {w}");
+            assert!(
+                v.iter().all(|x| x.is_finite()),
+                "case {case}: node {i} mass vector not finite"
+            );
+        }
+    }
+}

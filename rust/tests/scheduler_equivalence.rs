@@ -35,10 +35,20 @@ fn bits(w: &[f64]) -> Vec<u64> {
     w.iter().map(|x| x.to_bits()).collect()
 }
 
+/// Pool sizes the equivalence sweep runs at. `GADGET_POOL_THREADS=n`
+/// pins a single size — `ci.sh` uses this to re-run the suite at pool
+/// sizes 1 and 4, proving the contract is worker-count-invariant.
+fn pool_threads() -> Vec<usize> {
+    match std::env::var("GADGET_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("GADGET_POOL_THREADS must be an integer")],
+        Err(_) => vec![1, 2, 3, 8],
+    }
+}
+
 #[test]
 fn parallel_is_bitwise_identical_to_sequential() {
     let seq = GadgetRunner::new(base_cfg()).unwrap().run().unwrap();
-    for threads in [1usize, 2, 3, 8] {
+    for threads in pool_threads() {
         let cfg = ExperimentConfig {
             scheduler: SchedulerKind::Parallel,
             threads,
@@ -88,6 +98,68 @@ fn parallel_equivalence_holds_on_sparse_topologies() {
     let par = mk(SchedulerKind::Parallel, 4);
     assert_eq!(seq.iterations, par.iterations);
     assert_eq!(bits(&seq.trials[0].consensus_w), bits(&par.trials[0].consensus_w));
+}
+
+#[test]
+fn panel_parallel_mixing_is_bitwise_identical() {
+    // d = 784 spans several mixing panels and the ring B has no rank-1
+    // fast path, so the pooled run (trials = 1 ⇒ node fan-out) takes the
+    // panel-parallel Bᵀ-apply; the result must stay bitwise identical.
+    let mk = |scheduler, threads| {
+        let cfg = ExperimentConfig {
+            dataset: "synthetic-mnist".into(),
+            scale: 0.01,
+            topology: TopologyKind::Ring,
+            scheduler,
+            threads,
+            max_iterations: 25,
+            trials: 1,
+            ..base_cfg()
+        };
+        GadgetRunner::new(cfg).unwrap().run().unwrap()
+    };
+    let seq = mk(SchedulerKind::Sequential, 0);
+    for threads in pool_threads() {
+        let par = mk(SchedulerKind::Parallel, threads);
+        assert_eq!(seq.iterations, par.iterations, "threads={threads}");
+        assert_eq!(
+            bits(&seq.trials[0].consensus_w),
+            bits(&par.trials[0].consensus_w),
+            "threads={threads}"
+        );
+        assert_eq!(seq.test_accuracy.to_bits(), par.test_accuracy.to_bits());
+    }
+}
+
+#[test]
+fn trial_fanout_is_bitwise_identical() {
+    // The trial fan-out path engages when trials ≥ threads > 1, so pin
+    // trials = threads at every swept pool size (size 1 never fans out
+    // and is skipped — the headline test covers the node path there).
+    // Shorter runs than base_cfg: trials grows with the pool size.
+    for threads in pool_threads() {
+        if threads < 2 {
+            continue;
+        }
+        let mk = |scheduler, t| {
+            let cfg = ExperimentConfig {
+                scheduler,
+                threads: t,
+                trials: threads,
+                max_iterations: 60,
+                ..base_cfg()
+            };
+            GadgetRunner::new(cfg).unwrap().run().unwrap()
+        };
+        let seq = mk(SchedulerKind::Sequential, 0);
+        let par = mk(SchedulerKind::Parallel, threads);
+        assert_eq!(seq.trials.len(), par.trials.len(), "threads={threads}");
+        assert_eq!(seq.test_accuracy.to_bits(), par.test_accuracy.to_bits(), "threads={threads}");
+        assert_eq!(seq.iterations, par.iterations, "threads={threads}");
+        for (ts, tp) in seq.trials.iter().zip(&par.trials) {
+            assert_eq!(bits(&ts.consensus_w), bits(&tp.consensus_w), "threads={threads}");
+        }
+    }
 }
 
 fn async_problem(m: usize, seed: u64) -> (Vec<gadget::data::Dataset>, f64) {
