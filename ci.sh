@@ -59,9 +59,35 @@ run_hard cargo test -q
 # whose name contains "bitwise" reads GADGET_POOL_THREADS) pinned to a
 # degenerate (1) and a multi-worker (4) pool. The rest of the suite
 # (async conservation, churn) doesn't vary with pool size and already
-# ran once above.
+# ran once above. The serve shard-equivalence property rides the same
+# matrix: predictions must be bitwise shard-count-invariant too.
 run_hard env GADGET_POOL_THREADS=1 cargo test -q --test scheduler_equivalence bitwise
 run_hard env GADGET_POOL_THREADS=4 cargo test -q --test scheduler_equivalence bitwise
+run_hard env GADGET_POOL_THREADS=1 cargo test -q --test property_invariants prop_sharded
+run_hard env GADGET_POOL_THREADS=4 cargo test -q --test property_invariants prop_sharded
+
+# Serve smoke test: train at tiny scale, persist the consensus model,
+# score a piped batch at shard counts 1 and 4 — the outputs (scores
+# included: shortest-round-trip text, so textual equality is bitwise
+# equality) must be identical, with one ±1 prediction per input row.
+# (subshell body: `set -e` and the cleanup trap stay contained)
+serve_smoke() (
+    set -e
+    tmp="$(mktemp -d)"
+    trap 'rm -rf "$tmp"' EXIT
+    ./target/release/gadget train --dataset synthetic-usps --scale 0.02 \
+        --nodes 3 --trials 1 --max-iterations 60 --save "$tmp/model.json"
+    printf -- '+1 1:0.5 3:1.25\n2:0.75 5:0.5\n0.1 0.2 0.3\n' > "$tmp/batch.libsvm"
+    ./target/release/gadget serve --model "$tmp/model.json" --shards 1 --scores \
+        < "$tmp/batch.libsvm" > "$tmp/pred1.txt"
+    ./target/release/gadget serve --model "$tmp/model.json" --shards 4 --scores \
+        < "$tmp/batch.libsvm" > "$tmp/pred4.txt"
+    diff "$tmp/pred1.txt" "$tmp/pred4.txt"
+    test "$(wc -l < "$tmp/pred1.txt")" -eq 3
+    # every prediction is a ±1 label followed by a score column
+    ! grep -qvE '^[+-]1\b' "$tmp/pred1.txt"
+)
+run_hard serve_smoke
 
 echo
 if [ "$fail" -ne 0 ]; then

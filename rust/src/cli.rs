@@ -20,7 +20,7 @@ pub struct Args {
 
 /// Boolean switches — needed to disambiguate `--flag positional` from
 /// `--option value` without a full schema.
-pub const KNOWN_FLAGS: &[&str] = &["help", "verbose", "artifacts", "quiet", "csv"];
+pub const KNOWN_FLAGS: &[&str] = &["help", "verbose", "artifacts", "quiet", "csv", "scores"];
 
 impl Args {
     /// Parses an argument vector (without `argv[0]`).
@@ -132,6 +132,17 @@ mod tests {
         let a = Args::parse(&sv(&["--help"])).unwrap();
         assert_eq!(a.command, "");
         assert!(a.has_flag("help"));
+    }
+
+    #[test]
+    fn scores_is_a_known_flag() {
+        // `serve --scores --model m.json`: the known-flag list is what
+        // keeps `--scores` from eating the next token as its value.
+        let a = Args::parse(&sv(&["serve", "--scores", "positional", "--model", "m.json"]))
+            .unwrap();
+        assert!(a.has_flag("scores"));
+        assert_eq!(a.get("model"), Some("m.json"));
+        assert_eq!(a.positional, vec!["positional"]);
     }
 
     #[test]

@@ -129,6 +129,13 @@ pub struct ExperimentConfig {
     /// `threads = N`; 0 = all available cores). Ignored by the other
     /// schedulers.
     pub threads: usize,
+    /// Shard replica count for the batch-inference service (`[serve]`
+    /// section: `shards = N`; 0 = one per available core). Predictions
+    /// are bitwise shard-count-invariant — this only moves work.
+    pub serve_shards: usize,
+    /// Rows per scoring batch for the inference service (`[serve]`
+    /// section: `batch = N`).
+    pub serve_batch: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -154,6 +161,8 @@ impl Default for ExperimentConfig {
             snapshot_every: 0,
             scheduler: SchedulerKind::Sequential,
             threads: 0,
+            serve_shards: 0,
+            serve_batch: 256,
         }
     }
 }
@@ -194,6 +203,9 @@ impl ExperimentConfig {
         }
         if self.max_iterations == 0 {
             bail!("config: max_iterations must be ≥ 1");
+        }
+        if self.serve_batch == 0 {
+            bail!("config: serve batch must be ≥ 1");
         }
         Ok(())
     }
@@ -254,6 +266,9 @@ impl ExperimentConfig {
                         .map_err(|e: String| anyhow::anyhow!(e))?
                 }
                 "runtime.threads" | "threads" => cfg.threads = value.as_usize_or(k)?,
+                // `[serve]` section (flat spellings accepted too).
+                "serve.shards" | "shards" => cfg.serve_shards = value.as_usize_or(k)?,
+                "serve.batch" | "batch" => cfg.serve_batch = value.as_usize_or(k)?,
                 other => bail!("config: unknown key {other:?}"),
             }
         }
@@ -362,6 +377,18 @@ impl ConfigBuilder {
     /// Sets the parallel scheduler's worker count (0 = all cores).
     pub fn threads(mut self, t: usize) -> Self {
         self.cfg.threads = t;
+        self
+    }
+
+    /// Sets the inference service's shard replica count (0 = all cores).
+    pub fn serve_shards(mut self, s: usize) -> Self {
+        self.cfg.serve_shards = s;
+        self
+    }
+
+    /// Sets the inference service's rows-per-batch.
+    pub fn serve_batch(mut self, b: usize) -> Self {
+        self.cfg.serve_batch = b;
         self
     }
 
@@ -489,5 +516,29 @@ snapshot_every = 10
         assert_eq!(d.threads, 0);
         // bad value rejected
         assert!(ExperimentConfig::from_toml("[runtime]\nscheduler = \"warp\"").is_err());
+    }
+
+    #[test]
+    fn serve_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml(
+            "dataset = \"synthetic-usps\"\n[serve]\nshards = 4\nbatch = 128\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve_shards, 4);
+        assert_eq!(cfg.serve_batch, 128);
+        // flat spellings accepted too
+        let flat = ExperimentConfig::from_toml("shards = 2\nbatch = 16").unwrap();
+        assert_eq!(flat.serve_shards, 2);
+        assert_eq!(flat.serve_batch, 16);
+        // defaults: auto shards, 256-row batches
+        let d = ExperimentConfig::default();
+        assert_eq!(d.serve_shards, 0);
+        assert_eq!(d.serve_batch, 256);
+        // builder setters
+        let b = ExperimentConfig::builder().serve_shards(3).serve_batch(7).build().unwrap();
+        assert_eq!((b.serve_shards, b.serve_batch), (3, 7));
+        // a zero-row batch can never make progress
+        let err = ExperimentConfig::from_toml("[serve]\nbatch = 0").unwrap_err();
+        assert!(err.to_string().contains("serve batch"), "{err}");
     }
 }

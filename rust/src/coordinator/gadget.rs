@@ -101,6 +101,18 @@ pub struct GadgetReport {
     pub trials: Vec<TrialResult>,
 }
 
+impl GadgetReport {
+    /// The trial-0 consensus weight vector as a deployable linear model —
+    /// what `train --save` persists
+    /// ([`crate::serve::ModelArtifact::from_report`]). Trial 0 is the
+    /// canonical artifact: trials differ only in their RNG root
+    /// substream, and averaging across trials would produce a model no
+    /// single training run ever held.
+    pub fn consensus_model(&self) -> crate::solver::LinearModel {
+        crate::solver::LinearModel { w: self.trials[0].consensus_w.clone() }
+    }
+}
+
 /// The GADGET coordinator entry point.
 pub struct GadgetRunner {
     cfg: ExperimentConfig,
@@ -659,6 +671,14 @@ mod tests {
         let b = GadgetRunner::new(small_cfg()).unwrap().run().unwrap();
         assert_eq!(a.test_accuracy, b.test_accuracy);
         assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn consensus_model_is_trial_zero() {
+        let report = GadgetRunner::new(small_cfg()).unwrap().run().unwrap();
+        let model = report.consensus_model();
+        assert_eq!(model.w, report.trials[0].consensus_w);
+        assert_eq!(model.w.len(), 256); // usps stand-in dim
     }
 
     #[test]

@@ -24,6 +24,11 @@ pub struct MulticlassReport {
     pub train_secs: f64,
     /// Per-class binary reports (accuracy is the one-vs-rest accuracy).
     pub class_accuracy: Vec<f64>,
+    /// Feature dimension the per-class scorers were trained at — recorded
+    /// so the report can be persisted as a serve artifact
+    /// ([`crate::serve::ModelArtifact::from_multiclass`]) without
+    /// re-deriving it from the weight rows.
+    pub dim: usize,
 }
 
 /// One-vs-rest GADGET trainer.
@@ -76,6 +81,7 @@ impl MulticlassGadget {
             test_accuracy,
             train_secs: sw.secs(),
             class_accuracy,
+            dim: train.dim,
         })
     }
 }
@@ -115,6 +121,23 @@ mod tests {
         assert_eq!(report.class_accuracy.len(), 3);
         for (k, acc) in report.class_accuracy.iter().enumerate() {
             assert!(*acc > 0.8, "class {k} binary accuracy {acc}");
+        }
+        assert_eq!(report.dim, 32);
+
+        // the report persists as a serve artifact whose argmax decoding
+        // agrees with the in-memory model on every test row
+        let artifact = crate::serve::ModelArtifact::from_multiclass(
+            &report,
+            crate::serve::ScalingMeta { dataset: "tr".into(), scale: 1.0, lambda: 1e-3 },
+        )
+        .unwrap();
+        let tmp = crate::util::TempDir::new().unwrap();
+        let path = tmp.path().join("mc.json");
+        artifact.save(&path).unwrap();
+        let back = crate::serve::ModelArtifact::load(&path).unwrap();
+        assert_eq!(back.classes(), 3);
+        for x in &test.rows {
+            assert_eq!(back.predict(x).label as u32, report.model.predict(x));
         }
     }
 

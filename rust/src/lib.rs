@@ -29,6 +29,9 @@
 //!   reference optimizer.
 //! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and runs them from the hot path.
+//! * [`serve`] — the sharded batch-inference subsystem: versioned model
+//!   artifacts (`train --save` / `serve --model`) scored by per-shard
+//!   warm replicas over the worker pool.
 //! * [`experiments`] — drivers regenerating every table and figure of the
 //!   paper's evaluation section.
 //!
@@ -64,6 +67,7 @@ pub mod metrics;
 pub mod pool;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod topology;
 pub mod util;

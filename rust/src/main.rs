@@ -1,7 +1,9 @@
 //! `gadget` — the GADGET SVM command-line launcher.
 //!
 //! Subcommands:
-//!   train        run GADGET on one dataset, print the report
+//!   train        run GADGET on one dataset, print the report (--save persists
+//!                the consensus model as a serve artifact)
+//!   serve        batch-score rows from stdin against a saved model artifact
 //!   baseline     run a centralized/per-node baseline solver
 //!   experiment   regenerate a paper table/figure (table3|table4|table5|figures|mixing|bound|rounds)
 //!   inspect      dataset/topology/artifact diagnostics
@@ -9,7 +11,8 @@
 //!
 //! Examples:
 //!   gadget train --dataset synthetic-usps --scale 0.1 --nodes 10
-//!   gadget train --config configs/reuters.toml
+//!   gadget train --config configs/reuters.toml --save model.json
+//!   gadget serve --model model.json --shards 4 < batch.libsvm
 //!   gadget experiment table3 --scale 0.05 --out results
 //!   gadget experiment figures --only usps,reuters
 //!   gadget inspect --dataset synthetic-ccat --scale 0.01
@@ -38,6 +41,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv).map_err(|e| anyhow::anyhow!(e))?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "baseline" => cmd_baseline(&args),
         "experiment" => cmd_experiment(&args),
         "inspect" => cmd_inspect(&args),
@@ -60,7 +64,12 @@ fn print_help() {
          \x20              --nodes N --lambda F --epsilon F --max-iterations N --trials N\n\
          \x20              --topology complete|ring|torus|k-regular|small-world\n\
          \x20              --backend native|xla --batch-size N --local-steps N --seed N\n\
-         \x20              --scheduler sequential|parallel|async --threads N)\n\
+         \x20              --scheduler sequential|parallel|async --threads N\n\
+         \x20              --save FILE to persist the consensus model artifact)\n\
+         \x20 serve        batch-score stdin rows against a saved model\n\
+         \x20              (--model FILE required; --shards N --batch N\n\
+         \x20              --format auto|libsvm|dense --scores; one prediction\n\
+         \x20              per input line on stdout)\n\
          \x20 baseline     run a solver centrally (--solver pegasos|svm-sgd|svm-perf|dcd,\n\
          \x20              same dataset options)\n\
          \x20 experiment   regenerate paper artifacts: table3 | table4 | table5 | figures |\n\
@@ -115,6 +124,7 @@ fn err(e: String) -> anyhow::Error {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
+    let scale = cfg.scale;
     println!(
         "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} trials={}",
         cfg.dataset, cfg.scale, cfg.nodes, cfg.topology, cfg.backend, cfg.scheduler, cfg.trials
@@ -144,6 +154,52 @@ fn cmd_train(args: &Args) -> Result<()> {
         g.rounds,
         g.messages,
         g.bytes as f64 / 1e6
+    );
+    if let Some(path) = args.get("save") {
+        let artifact = gadget::serve::ModelArtifact::from_report(&report, scale)?;
+        artifact.save(path)?;
+        println!(
+            "model saved     : {path} (format {} v{}, dim {})",
+            gadget::serve::FORMAT_NAME,
+            gadget::serve::FORMAT_VERSION,
+            artifact.dim
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("serve: --model FILE is required"))?;
+    // `[serve]` config section as the baseline, CLI flags override — the
+    // same precedence `train` gives `[runtime]`.
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    let opts = gadget::serve::ServeOptions {
+        shards: args.get_parsed("shards", cfg.serve_shards).map_err(err)?,
+        batch: args.get_parsed("batch", cfg.serve_batch).map_err(err)?,
+        format: args
+            .get("format")
+            .unwrap_or("auto")
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!("--format: {e}"))?,
+        emit_scores: args.has_flag("scores"),
+    };
+    let artifact = gadget::serve::ModelArtifact::load(model_path)?;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let stats = gadget::serve::run_serve(
+        artifact,
+        &opts,
+        &mut stdin.lock(),
+        &mut std::io::BufWriter::new(stdout.lock()),
+    )?;
+    eprintln!(
+        "served {} rows in {} batches (shards = {})",
+        stats.rows, stats.batches, stats.shards
     );
     Ok(())
 }

@@ -44,7 +44,8 @@
 //! [`ParallelExec`] is the object-safe facade over "run these disjoint
 //! tasks to completion": [`SerialExec`] runs them inline (the sequential
 //! scheduler's executor), [`WorkerPool`] fans them out. Consumers
-//! (`gossip::PushVector::round_with`, `Scheduler::panel_exec`) are
+//! (`gossip::PushVector::round_with`, `Scheduler::panel_exec`, and the
+//! inference service's `serve::ShardedScorer` batch fan-out) are
 //! executor-agnostic; results must be — and are — bitwise identical
 //! either way.
 

@@ -1,0 +1,566 @@
+//! The versioned model-artifact format — what `train --save` persists and
+//! `serve --model` loads.
+//!
+//! One JSON document (written through [`crate::util::Json`], whose number
+//! serialization is shortest-round-trip and therefore **bitwise exact**
+//! for every finite f64) carries everything inference needs:
+//!
+//! * `format` / `version` — the format name (`"gadget-model"`) and an
+//!   integer version. Version 1 is the legacy `gadget-linear-v1`
+//!   single-vector format of [`crate::solver::LinearModel`]; this module
+//!   reads and writes **version 2**, which adds per-class weight rows, a
+//!   bias vector, the one-vs-rest code matrix and scaling metadata.
+//!   Unknown versions are rejected with an error naming both versions —
+//!   never silently misread.
+//! * `dim` — the feature dimension every scoring row must fit in.
+//! * `classes` / `weights` / `bias` — `K` weight rows (`K = 1` for a
+//!   binary margin scorer, `K ≥ 2` for one-vs-rest multiclass) plus one
+//!   bias per row. The paper's formulation carries no intercept, so
+//!   trained artifacts have zero bias, but the format keeps the field so
+//!   externally-produced linear models can be served too.
+//! * `code` — the `K×K` one-vs-rest output code (diagonal `+1`, rest
+//!   `-1`), present exactly when `K ≥ 2`. Argmax decoding
+//!   ([`crate::solver::multiclass::argmax_decode`]) is max-correlation
+//!   decoding under this code; other codes are rejected at load.
+//! * `scaling` — provenance metadata ([`ScalingMeta`]): dataset name,
+//!   synthetic scale factor and the λ the model was trained with. Not
+//!   used at scoring time; recorded so a served model is traceable to
+//!   its training run (EXPERIMENTS.md §Reproducibility).
+//!
+//! Save rejects non-finite parameters (JSON cannot represent them and a
+//! NaN weight would poison every score); load re-validates every shape so
+//! a hand-edited artifact fails loudly rather than scoring garbage.
+
+use crate::coordinator::{GadgetReport, MulticlassReport};
+use crate::linalg::SparseVec;
+use crate::solver::multiclass::{argmax_decode, ovr_code_matrix};
+use crate::util::Json;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+/// Format name written into every artifact.
+pub const FORMAT_NAME: &str = "gadget-model";
+/// Format version this build reads and writes.
+pub const FORMAT_VERSION: usize = 2;
+
+/// Training-provenance metadata carried by an artifact.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScalingMeta {
+    /// Dataset name the model was trained on (`synthetic-*` or `path:`).
+    pub dataset: String,
+    /// Synthetic sample-count scale factor used at training time.
+    pub scale: f64,
+    /// Regularization λ the model was trained with.
+    pub lambda: f64,
+}
+
+/// One scored row: the decoded label and the winning raw score.
+///
+/// Binary models decode to `label ∈ {-1, +1}` with `score` the signed
+/// margin `⟨w, x⟩ + b`; multiclass models decode to `label ∈ 0..K` with
+/// `score` the winning class's `⟨w_k, x⟩ + b_k`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Prediction {
+    /// Decoded label.
+    pub label: i64,
+    /// Raw score of the decoded label.
+    pub score: f64,
+}
+
+/// A persisted linear model: `K` weight rows + biases over a fixed
+/// feature dimension, with the one-vs-rest code matrix for `K ≥ 2`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelArtifact {
+    /// Feature dimension.
+    pub dim: usize,
+    /// Per-class weight rows (`K = 1` ⇒ binary margin scorer).
+    pub weights: Vec<Vec<f64>>,
+    /// Per-class biases, aligned with `weights`.
+    pub bias: Vec<f64>,
+    /// Training provenance.
+    pub scaling: ScalingMeta,
+}
+
+impl ModelArtifact {
+    /// Builds and validates an artifact from raw parts.
+    pub fn new(
+        dim: usize,
+        weights: Vec<Vec<f64>>,
+        bias: Vec<f64>,
+        scaling: ScalingMeta,
+    ) -> Result<Self> {
+        let artifact = Self { dim, weights, bias, scaling };
+        artifact.validate()?;
+        Ok(artifact)
+    }
+
+    /// A binary artifact from a GADGET training report: the trial-0
+    /// consensus model ([`GadgetReport::consensus_model`]) plus scaling
+    /// metadata from the report and the config's scale factor.
+    pub fn from_report(report: &GadgetReport, scale: f64) -> Result<Self> {
+        let model = report.consensus_model();
+        ensure!(!model.w.is_empty(), "artifact: report has an empty consensus model");
+        let dim = model.w.len();
+        Self::new(
+            dim,
+            vec![model.w],
+            vec![0.0],
+            ScalingMeta { dataset: report.dataset.clone(), scale, lambda: report.lambda },
+        )
+    }
+
+    /// A multiclass artifact from a distributed one-vs-rest report: the
+    /// `K` per-class consensus vectors become the weight rows, decoded by
+    /// argmax under the one-vs-rest code matrix.
+    pub fn from_multiclass(report: &MulticlassReport, scaling: ScalingMeta) -> Result<Self> {
+        let k = report.model.models.len();
+        ensure!(k >= 2, "artifact: multiclass report has {k} class scorers (need ≥ 2)");
+        let weights: Vec<Vec<f64>> =
+            report.model.models.iter().map(|m| m.w.clone()).collect();
+        Self::new(report.dim, weights, vec![0.0; k], scaling)
+    }
+
+    /// Class count `K` (1 = binary).
+    pub fn classes(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// True for a `K ≥ 2` argmax decoder.
+    pub fn is_multiclass(&self) -> bool {
+        self.classes() >= 2
+    }
+
+    /// Shape and finiteness invariants shared by save and load.
+    fn validate(&self) -> Result<()> {
+        ensure!(self.dim >= 1, "artifact: dim must be ≥ 1");
+        ensure!(!self.weights.is_empty(), "artifact: no weight rows");
+        ensure!(
+            self.bias.len() == self.weights.len(),
+            "artifact: {} bias entries for {} weight rows",
+            self.bias.len(),
+            self.weights.len()
+        );
+        for (k, row) in self.weights.iter().enumerate() {
+            ensure!(
+                row.len() == self.dim,
+                "artifact: weight row {k} has {} entries, feature dim is {}",
+                row.len(),
+                self.dim
+            );
+            ensure!(
+                row.iter().all(|x| x.is_finite()),
+                "artifact: weight row {k} contains a non-finite value"
+            );
+        }
+        ensure!(
+            self.bias.iter().all(|x| x.is_finite()),
+            "artifact: bias contains a non-finite value"
+        );
+        ensure!(
+            self.scaling.scale.is_finite() && self.scaling.lambda.is_finite(),
+            "artifact: scaling metadata contains a non-finite value"
+        );
+        Ok(())
+    }
+
+    /// Scores one row: per-class margins `⟨w_k, x⟩ + b_k`, decoded by
+    /// sign (binary) or the shared argmax decoder (multiclass). The row
+    /// must satisfy `x.min_dim() ≤ self.dim` — [`super::ShardedScorer`]
+    /// validates batches up front with row-indexed errors.
+    pub fn predict(&self, x: &SparseVec) -> Prediction {
+        if !self.is_multiclass() {
+            let score = x.dot_dense(&self.weights[0]) + self.bias[0];
+            return Prediction { label: if score >= 0.0 { 1 } else { -1 }, score };
+        }
+        let scores = self
+            .weights
+            .iter()
+            .zip(&self.bias)
+            .map(|(w, &b)| x.dot_dense(w) + b);
+        let (label, score) = argmax_decode(scores).expect("validate() guarantees K ≥ 1");
+        Prediction { label: label as i64, score }
+    }
+
+    /// Serializes to the version-2 JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("format", Json::Str(FORMAT_NAME.into())),
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("classes", Json::Num(self.classes() as f64)),
+            (
+                "weights",
+                Json::Arr(self.weights.iter().map(|row| Json::nums(row)).collect()),
+            ),
+            ("bias", Json::nums(&self.bias)),
+            (
+                "scaling",
+                Json::obj(vec![
+                    ("dataset", Json::Str(self.scaling.dataset.clone())),
+                    ("scale", Json::Num(self.scaling.scale)),
+                    ("lambda", Json::Num(self.scaling.lambda)),
+                ]),
+            ),
+        ];
+        if self.is_multiclass() {
+            let code = ovr_code_matrix(self.classes());
+            fields.push((
+                "code",
+                Json::Arr(
+                    code.iter()
+                        .map(|row| Json::Arr(row.iter().map(|&c| Json::Num(c as f64)).collect()))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Validates and writes the artifact to `path`.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.validate()?;
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("write model artifact {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Loads and fully re-validates an artifact written by [`Self::save`].
+    ///
+    /// Rejects, with errors naming the offending field: wrong format
+    /// name, any version other than [`FORMAT_VERSION`] (including the
+    /// legacy `gadget-linear-v1` single-vector files), shape mismatches
+    /// between `dim`/`classes` and the stored arrays, non-finite
+    /// parameters, and a non-one-vs-rest code matrix.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read model artifact {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("model artifact {}: {e}", path.display()))?;
+        Self::from_json(&doc).with_context(|| format!("model artifact {}", path.display()))
+    }
+
+    /// The load path on an already-parsed document (exposed for tests).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        match doc.get("format").and_then(Json::as_str) {
+            Some(FORMAT_NAME) => {}
+            Some("gadget-linear-v1") => bail!(
+                "legacy gadget-linear-v1 model file (format version 1); re-save it \
+                 with `gadget train --save` to produce a version-{FORMAT_VERSION} artifact"
+            ),
+            Some(other) => bail!("unknown model format {other:?} (expected {FORMAT_NAME:?})"),
+            None => bail!("missing \"format\" field (expected {FORMAT_NAME:?})"),
+        }
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("missing \"version\" field")?;
+        ensure!(
+            version == FORMAT_VERSION,
+            "unsupported model format version {version} (this build reads version \
+             {FORMAT_VERSION})"
+        );
+        let dim = doc.get("dim").and_then(Json::as_usize).context("missing \"dim\" field")?;
+        let weights: Vec<Vec<f64>> = doc
+            .get("weights")
+            .and_then(Json::as_arr)
+            .context("missing \"weights\" array")?
+            .iter()
+            .enumerate()
+            .map(|(k, row)| {
+                row.as_arr()
+                    .with_context(|| format!("weight row {k}: not an array"))?
+                    .iter()
+                    .map(|v| v.as_f64().with_context(|| format!("weight row {k}: non-numeric entry")))
+                    .collect::<Result<Vec<f64>>>()
+            })
+            .collect::<Result<_>>()?;
+        let classes = doc
+            .get("classes")
+            .and_then(Json::as_usize)
+            .context("missing \"classes\" field")?;
+        ensure!(
+            classes == weights.len(),
+            "\"classes\" is {classes} but \"weights\" has {} rows",
+            weights.len()
+        );
+        let bias: Vec<f64> = match doc.get("bias") {
+            None => vec![0.0; weights.len()],
+            Some(b) => b
+                .as_arr()
+                .context("\"bias\": not an array")?
+                .iter()
+                .map(|v| v.as_f64().context("\"bias\": non-numeric entry"))
+                .collect::<Result<_>>()?,
+        };
+        let scaling = match doc.get("scaling") {
+            None => ScalingMeta::default(),
+            Some(s) => ScalingMeta {
+                dataset: s
+                    .get("dataset")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                scale: s.get("scale").and_then(Json::as_f64).unwrap_or(1.0),
+                lambda: s.get("lambda").and_then(Json::as_f64).unwrap_or(0.0),
+            },
+        };
+        if classes >= 2 {
+            let code = doc.get("code").and_then(Json::as_arr).context(
+                "multiclass artifact is missing the \"code\" matrix",
+            )?;
+            let want = ovr_code_matrix(classes);
+            ensure!(code.len() == classes, "\"code\": {} rows for {classes} classes", code.len());
+            for (k, (row, want_row)) in code.iter().zip(&want).enumerate() {
+                let row = row
+                    .as_arr()
+                    .with_context(|| format!("\"code\" row {k}: not an array"))?;
+                ensure!(
+                    row.len() == classes,
+                    "\"code\" row {k}: {} entries for {classes} classes",
+                    row.len()
+                );
+                for (j, (v, &w)) in row.iter().zip(want_row).enumerate() {
+                    let v = v
+                        .as_f64()
+                        .with_context(|| format!("\"code\" row {k}: non-numeric entry"))?;
+                    ensure!(
+                        v == w as f64,
+                        "\"code\"[{k}][{j}] = {v}: only the one-vs-rest code matrix \
+                         (+1 diagonal, -1 elsewhere) is supported by the argmax decoder"
+                    );
+                }
+            }
+        } else {
+            ensure!(
+                doc.get("code").is_none(),
+                "binary artifact carries an unexpected \"code\" matrix"
+            );
+        }
+        Self::new(dim, weights, bias, scaling)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn toy_binary() -> ModelArtifact {
+        ModelArtifact::new(
+            4,
+            vec![vec![0.5, -1.25, 0.0, 3.0]],
+            vec![0.0],
+            ScalingMeta { dataset: "toy".into(), scale: 1.0, lambda: 1e-3 },
+        )
+        .unwrap()
+    }
+
+    fn toy_multiclass() -> ModelArtifact {
+        ModelArtifact::new(
+            3,
+            vec![
+                vec![1.0, 0.0, 0.0],
+                vec![0.0, 1.0, 0.0],
+                vec![0.0, 0.0, 1.0],
+            ],
+            vec![0.0, 0.0, 0.25],
+            ScalingMeta::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn save_load_is_bitwise_exact() {
+        let tmp = TempDir::new().unwrap();
+        // awkward values: negative zero, denormal, huge, shortest-roundtrip
+        // stress cases — every one must survive the text round trip bit
+        // for bit.
+        let m = ModelArtifact::new(
+            6,
+            vec![vec![-0.0, f64::MIN_POSITIVE, 1e300, 0.1 + 0.2, -1.5e-17, 7.0]],
+            vec![1e-9],
+            ScalingMeta { dataset: "bits".into(), scale: 0.05, lambda: 1.29e-4 },
+        )
+        .unwrap();
+        let p = tmp.path().join("m.json");
+        m.save(&p).unwrap();
+        let back = ModelArtifact::load(&p).unwrap();
+        for (a, b) in m.weights[0].iter().zip(&back.weights[0]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(m.bias[0].to_bits(), back.bias[0].to_bits());
+        assert_eq!(m.scaling, back.scaling);
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn trained_model_roundtrip_preserves_predictions() {
+        // Golden-file property: train a tiny model, persist, reload —
+        // weights bitwise equal and every prediction identical.
+        use crate::config::ExperimentConfig;
+        use crate::coordinator::GadgetRunner;
+        let cfg = ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(0.02)
+            .nodes(3)
+            .trials(1)
+            .max_iterations(60)
+            .seed(5)
+            .build()
+            .unwrap();
+        let runner = GadgetRunner::new(cfg).unwrap();
+        let report = runner.run().unwrap();
+        let artifact = ModelArtifact::from_report(&report, 0.02).unwrap();
+        assert_eq!(artifact.dim, runner.train_data().dim);
+        assert_eq!(artifact.scaling.lambda, runner.lambda());
+
+        let tmp = TempDir::new().unwrap();
+        let p = tmp.path().join("trained.json");
+        artifact.save(&p).unwrap();
+        let back = ModelArtifact::load(&p).unwrap();
+        for (a, b) in artifact.weights[0].iter().zip(&back.weights[0]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for row in &runner.test_data().rows {
+            assert_eq!(artifact.predict(row), back.predict(row));
+        }
+    }
+
+    #[test]
+    fn multiclass_roundtrip_and_argmax_decoding() {
+        let tmp = TempDir::new().unwrap();
+        let m = toy_multiclass();
+        let p = tmp.path().join("mc.json");
+        m.save(&p).unwrap();
+        let back = ModelArtifact::load(&p).unwrap();
+        assert_eq!(m, back);
+        assert!(back.is_multiclass());
+        // row that activates feature 1 ⇒ class 1
+        let x = SparseVec::new(vec![1], vec![2.0]);
+        let pred = back.predict(&x);
+        assert_eq!(pred.label, 1);
+        assert_eq!(pred.score, 2.0);
+        // the bias breaks the all-zero tie in favor of class 2
+        let zero = SparseVec::default();
+        assert_eq!(back.predict(&zero).label, 2);
+    }
+
+    #[test]
+    fn binary_predict_matches_linear_model() {
+        let m = toy_binary();
+        let lm = crate::solver::LinearModel { w: m.weights[0].clone() };
+        for x in [
+            SparseVec::new(vec![0, 3], vec![1.0, -1.0]),
+            SparseVec::new(vec![1], vec![4.0]),
+            SparseVec::default(),
+        ] {
+            let pred = m.predict(&x);
+            assert_eq!(pred.label as i8, lm.predict(&x));
+            assert_eq!(pred.score, lm.score(&x));
+        }
+    }
+
+    #[test]
+    fn wrong_version_rejected_with_clear_error() {
+        let tmp = TempDir::new().unwrap();
+        let p = tmp.path().join("v9.json");
+        let mut doc = toy_binary().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("version".into(), Json::Num(9.0));
+        }
+        std::fs::write(&p, doc.to_pretty()).unwrap();
+        let err = ModelArtifact::load(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("version 9"), "{msg}");
+        assert!(msg.contains("version 2"), "{msg}");
+    }
+
+    #[test]
+    fn legacy_v1_format_rejected_with_upgrade_hint() {
+        let tmp = TempDir::new().unwrap();
+        let p = tmp.path().join("v1.json");
+        crate::solver::LinearModel { w: vec![1.0, 2.0] }.save(&p).unwrap();
+        let err = ModelArtifact::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("gadget-linear-v1"), "{err:#}");
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let tmp = TempDir::new().unwrap();
+        let p = tmp.path().join("bad.json");
+        // dim disagrees with the weight row
+        std::fs::write(
+            &p,
+            r#"{"format":"gadget-model","version":2,"dim":3,"classes":1,"weights":[[1,2]],"bias":[0]}"#,
+        )
+        .unwrap();
+        let err = ModelArtifact::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("feature dim"), "{err:#}");
+        // classes disagrees with the row count
+        std::fs::write(
+            &p,
+            r#"{"format":"gadget-model","version":2,"dim":2,"classes":3,"weights":[[1,2]],"bias":[0]}"#,
+        )
+        .unwrap();
+        assert!(ModelArtifact::load(&p).is_err());
+        // bias length mismatch
+        std::fs::write(
+            &p,
+            r#"{"format":"gadget-model","version":2,"dim":2,"classes":1,"weights":[[1,2]],"bias":[0,0]}"#,
+        )
+        .unwrap();
+        assert!(ModelArtifact::load(&p).is_err());
+        // multiclass without a code matrix
+        std::fs::write(
+            &p,
+            r#"{"format":"gadget-model","version":2,"dim":1,"classes":2,"weights":[[1],[2]],"bias":[0,0]}"#,
+        )
+        .unwrap();
+        let err = ModelArtifact::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("code"), "{err:#}");
+        // non-OvR code matrix
+        std::fs::write(
+            &p,
+            r#"{"format":"gadget-model","version":2,"dim":1,"classes":2,"weights":[[1],[2]],"bias":[0,0],"code":[[1,1],[-1,1]]}"#,
+        )
+        .unwrap();
+        let err = ModelArtifact::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("one-vs-rest"), "{err:#}");
+        // garbage
+        std::fs::write(&p, "{not json").unwrap();
+        assert!(ModelArtifact::load(&p).is_err());
+    }
+
+    #[test]
+    fn non_finite_weights_rejected_at_save() {
+        let mut m = toy_binary();
+        m.weights[0][1] = f64::NAN;
+        let tmp = TempDir::new().unwrap();
+        let err = m.save(tmp.path().join("nan.json")).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn from_multiclass_report_carries_all_rows() {
+        use crate::solver::multiclass::MulticlassModel;
+        use crate::solver::LinearModel;
+        let report = MulticlassReport {
+            model: MulticlassModel {
+                models: vec![
+                    LinearModel { w: vec![1.0, 0.0] },
+                    LinearModel { w: vec![0.0, 1.0] },
+                ],
+            },
+            test_accuracy: 1.0,
+            train_secs: 0.0,
+            class_accuracy: vec![1.0, 1.0],
+            dim: 2,
+        };
+        let a = ModelArtifact::from_multiclass(&report, ScalingMeta::default()).unwrap();
+        assert_eq!(a.classes(), 2);
+        assert_eq!(a.dim, 2);
+        assert_eq!(a.weights[1], vec![0.0, 1.0]);
+    }
+}

@@ -1,0 +1,40 @@
+//! The sharded batch-inference subsystem: persisted model artifacts plus
+//! a pool-backed scoring service.
+//!
+//! GADGET's anytime guarantee (ROADMAP north-star: serve the consensus
+//! model, not just train it) means every node holds a usable model at all
+//! times; this module turns that model into a first-class inference
+//! artifact, mirroring how *Distributed Inference for Linear SVM*
+//! (arXiv:1811.11922) treats the trained separator and how
+//! *High-Performance SVMs* (arXiv:1905.00331) emphasizes
+//! throughput-oriented batch scoring:
+//!
+//! * [`artifact`] — the versioned JSON model format ([`ModelArtifact`]):
+//!   weight rows, biases, the one-vs-rest code matrix, feature dim and
+//!   scaling metadata; save/load constructors for both the binary
+//!   ([`crate::coordinator::GadgetReport`]) and multiclass
+//!   ([`crate::coordinator::MulticlassReport`]) trainers. The text round
+//!   trip is bitwise exact for every finite f64.
+//! * [`shard`] — [`ShardedScorer`]: per-shard scoring tasks over one
+//!   shared warm model, request batches fanned over the persistent
+//!   [`crate::pool::WorkerPool`] as disjoint row chunks (in-process
+//!   shards are logical replicas — the consensus model is identical
+//!   everywhere, so cloning it per shard would buy nothing). Bitwise
+//!   shard-count-invariant by construction, pinned by
+//!   `rust/tests/property_invariants.rs` and the `ci.sh` serve smoke
+//!   test.
+//! * [`service`] — the `gadget serve` loop: line-delimited LIBSVM or
+//!   dense rows on stdin, one prediction per line on stdout, batched per
+//!   the `[serve]` config section (`shards`, `batch`) or the
+//!   `--shards`/`--batch` CLI flags.
+//!
+//! The full pipeline: `gadget train --save model.json` → `gadget serve
+//! --model model.json --shards 4 < batch.libsvm` (DESIGN.md §Serving).
+
+pub mod artifact;
+pub mod service;
+pub mod shard;
+
+pub use artifact::{ModelArtifact, Prediction, ScalingMeta, FORMAT_NAME, FORMAT_VERSION};
+pub use service::{run_serve, parse_row, RowFormat, ServeOptions, ServeStats};
+pub use shard::ShardedScorer;

@@ -1,0 +1,370 @@
+//! The stdin/stdout batch-scoring service behind `gadget serve`.
+//!
+//! Protocol: one input row per line, one prediction per line, in input
+//! order. Rows accumulate into batches of `batch` lines; each full batch
+//! fans across the [`super::ShardedScorer`]'s shard replicas, and the
+//! final partial batch flushes at EOF. Blank lines and `#`-comments are
+//! skipped (matching the LIBSVM reader). A malformed row aborts the
+//! service with an error naming the input line — a scoring service must
+//! never silently drop or misscore a request.
+//!
+//! Row formats ([`RowFormat`]):
+//! * `libsvm` — `idx:val` pairs with 1-based strictly-increasing indices,
+//!   with or without a leading label token (labels are ignored: this is
+//!   inference);
+//! * `dense` — whitespace- or comma-separated feature values, at most
+//!   `dim` of them (shorter rows are implicitly zero-padded);
+//! * `auto` (default) — per line: contains `:` ⇒ libsvm, else dense;
+//!   a bare label token (`+1`/`-1`/`1`/`0`) is valid under *both*
+//!   encodings, so auto refuses it with an error asking for an explicit
+//!   `--format` instead of guessing.
+//!
+//! Output: the decoded label (`+1`/`-1` binary, `0..K` multiclass), plus
+//! the raw winning score as a second tab-separated column when
+//! `emit_scores` is set. Scores print via Rust's shortest-round-trip
+//! float formatting, so two serve runs agree bitwise exactly when their
+//! outputs agree textually — which is how `ci.sh` pins the shard-count
+//! equivalence end to end.
+
+use super::artifact::ModelArtifact;
+use super::shard::ShardedScorer;
+use crate::data::libsvm;
+use crate::linalg::SparseVec;
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::io::{BufRead, Write};
+
+/// Input row encoding.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RowFormat {
+    /// Per line: `:` present ⇒ libsvm, otherwise dense.
+    #[default]
+    Auto,
+    /// LIBSVM `idx:val` pairs (label token optional, ignored).
+    Libsvm,
+    /// Whitespace/comma-separated dense values.
+    Dense,
+}
+
+impl std::str::FromStr for RowFormat {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "libsvm" => Ok(Self::Libsvm),
+            "dense" => Ok(Self::Dense),
+            other => Err(format!("unknown row format {other:?} (auto | libsvm | dense)")),
+        }
+    }
+}
+
+/// Service configuration (the `[serve]` config section / `--shards`
+/// `--batch` CLI flags resolve into this).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Shard replica count (0 = one per available core).
+    pub shards: usize,
+    /// Rows per scoring batch.
+    pub batch: usize,
+    /// Input row encoding.
+    pub format: RowFormat,
+    /// Emit the raw winning score as a second output column.
+    pub emit_scores: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { shards: 0, batch: 256, format: RowFormat::Auto, emit_scores: false }
+    }
+}
+
+/// What a serve run processed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Rows scored.
+    pub rows: usize,
+    /// Batches dispatched (including the final partial batch).
+    pub batches: usize,
+    /// Resolved shard count.
+    pub shards: usize,
+}
+
+/// Parses one input line into a scoring row.
+///
+/// `Auto` resolves per line; labeled LIBSVM lines lose their label (this
+/// is inference — the label column of recycled training files is
+/// ignored); dense rows longer than `dim` are rejected.
+pub fn parse_row(line: &str, format: RowFormat, dim: usize) -> Result<SparseVec> {
+    let format = match format {
+        RowFormat::Auto => {
+            if line.contains(':') {
+                RowFormat::Libsvm
+            } else {
+                // A bare "+1"/"-1"/"0" is a *valid* LIBSVM row (a label
+                // with zero features) but would also parse as a one-value
+                // dense row — a silent mis-score either way we guess, so
+                // refuse the guess (the service contract is "never
+                // silently misscore").
+                let mut tokens = line.split_ascii_whitespace();
+                let (first, rest) = (tokens.next().unwrap_or(""), tokens.next());
+                ensure!(
+                    rest.is_some() || !matches!(first, "+1" | "-1" | "1" | "0"),
+                    "ambiguous row {first:?}: a label-only libsvm line and a \
+                     one-value dense row look alike — pass --format libsvm \
+                     (scores the zero vector) or --format dense"
+                );
+                RowFormat::Dense
+            }
+        }
+        fixed => fixed,
+    };
+    let row = match format {
+        RowFormat::Libsvm => {
+            let first = line.split_ascii_whitespace().next().unwrap_or("");
+            let (_, row) = if first.contains(':') {
+                // unlabeled row: give the shared parser a dummy label
+                libsvm::parse_line(&format!("0 {line}"))?
+            } else {
+                libsvm::parse_line(line)?
+            };
+            row
+        }
+        RowFormat::Dense => {
+            let values: Vec<f64> = line
+                .split(|c: char| c == ',' || c.is_ascii_whitespace())
+                .filter(|t| !t.is_empty())
+                .map(|t| t.parse::<f64>().with_context(|| format!("bad dense value {t:?}")))
+                .collect::<Result<_>>()?;
+            ensure!(
+                values.len() <= dim,
+                "dense row has {} values but the model dim is {dim}",
+                values.len()
+            );
+            SparseVec::from_dense(&values)
+        }
+        RowFormat::Auto => unreachable!("resolved above"),
+    };
+    // Validate against the model dimension here, where the caller still
+    // knows the input line — the scorer's own check is batch-relative.
+    ensure!(
+        row.min_dim() <= dim,
+        "feature index {} out of range for model dim {dim}",
+        row.min_dim().saturating_sub(1)
+    );
+    Ok(row)
+}
+
+/// Formats one prediction line.
+fn write_prediction(
+    out: &mut dyn Write,
+    pred: &super::artifact::Prediction,
+    multiclass: bool,
+    emit_scores: bool,
+) -> Result<()> {
+    let label = if multiclass {
+        pred.label.to_string()
+    } else if pred.label > 0 {
+        "+1".to_string()
+    } else {
+        "-1".to_string()
+    };
+    if emit_scores {
+        writeln!(out, "{label}\t{}", pred.score)?;
+    } else {
+        writeln!(out, "{label}")?;
+    }
+    Ok(())
+}
+
+/// Runs the batch-scoring loop: reads rows from `input` until EOF,
+/// scores them in `opts.batch`-row batches across the shard replicas,
+/// and writes one prediction per row to `out`.
+pub fn run_serve(
+    model: ModelArtifact,
+    opts: &ServeOptions,
+    input: &mut dyn BufRead,
+    out: &mut dyn Write,
+) -> Result<ServeStats> {
+    ensure!(opts.batch >= 1, "serve: batch must be ≥ 1");
+    let shards = crate::coordinator::sched::resolve_threads(opts.shards);
+    let multiclass = model.is_multiclass();
+    let dim = model.dim;
+    let scorer = ShardedScorer::new(model, shards);
+    let mut stats = ServeStats { rows: 0, batches: 0, shards: scorer.shards() };
+
+    let mut pending: Vec<SparseVec> = Vec::with_capacity(opts.batch);
+    let mut line = String::new();
+    let mut line_no = 0usize;
+    loop {
+        line.clear();
+        let n = input.read_line(&mut line).context("serve: read input")?;
+        if n > 0 {
+            line_no += 1;
+            let text = line.trim();
+            if text.is_empty() || text.starts_with('#') {
+                continue;
+            }
+            let row = parse_row(text, opts.format, dim)
+                .with_context(|| format!("input line {line_no}"))?;
+            pending.push(row);
+        }
+        let eof = n == 0;
+        if pending.len() == opts.batch || (eof && !pending.is_empty()) {
+            let predictions = scorer.score_batch(&pending)?;
+            for pred in &predictions {
+                write_prediction(out, pred, multiclass, opts.emit_scores)?;
+            }
+            stats.rows += pending.len();
+            stats.batches += 1;
+            pending.clear();
+        }
+        if eof {
+            break;
+        }
+    }
+    out.flush().context("serve: flush output")?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::artifact::ScalingMeta;
+
+    fn model() -> ModelArtifact {
+        ModelArtifact::new(
+            3,
+            vec![vec![1.0, -1.0, 0.5]],
+            vec![0.0],
+            ScalingMeta::default(),
+        )
+        .unwrap()
+    }
+
+    fn serve_text(model: ModelArtifact, opts: &ServeOptions, text: &str) -> (ServeStats, String) {
+        let mut input = std::io::Cursor::new(text.as_bytes().to_vec());
+        let mut out: Vec<u8> = Vec::new();
+        let stats = run_serve(model, opts, &mut input, &mut out).unwrap();
+        (stats, String::from_utf8(out).unwrap())
+    }
+
+    #[test]
+    fn scores_libsvm_and_dense_rows_mixed() {
+        let opts = ServeOptions { shards: 2, batch: 2, ..Default::default() };
+        // libsvm labeled, libsvm unlabeled, dense, comment + blank
+        let text = "+1 1:2\n\n# comment\n2:3\n0.5, 0, 1\n";
+        let (stats, out) = serve_text(model(), &opts, text);
+        assert_eq!(stats.rows, 3);
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.shards, 2);
+        // w = [1, -1, 0.5]: 2·1 = 2 ⇒ +1; 3·(−1) = −3 ⇒ −1; 0.5+0.5 = 1 ⇒ +1
+        assert_eq!(out, "+1\n-1\n+1\n");
+    }
+
+    #[test]
+    fn scores_column_is_shortest_roundtrip() {
+        let opts = ServeOptions { emit_scores: true, shards: 1, ..Default::default() };
+        let (_, out) = serve_text(model(), &opts, "1:0.25\n");
+        assert_eq!(out, "+1\t0.25\n");
+    }
+
+    #[test]
+    fn batch_boundary_does_not_change_output() {
+        let text = "1:1\n2:1\n3:1\n1:1 2:1\n1:1 3:1\n";
+        let one = serve_text(model(), &ServeOptions { batch: 1, shards: 1, ..Default::default() }, text);
+        let big = serve_text(model(), &ServeOptions { batch: 64, shards: 3, ..Default::default() }, text);
+        assert_eq!(one.1, big.1);
+        assert_eq!(one.0.rows, 5);
+        assert_eq!(one.0.batches, 5);
+        assert_eq!(big.0.batches, 1);
+    }
+
+    #[test]
+    fn malformed_row_error_names_the_line() {
+        let mut input = std::io::Cursor::new(b"1:1\n1:banana\n".to_vec());
+        let mut out: Vec<u8> = Vec::new();
+        let err =
+            run_serve(model(), &ServeOptions::default(), &mut input, &mut out).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("input line 2"), "{msg}");
+        assert!(msg.contains("banana"), "{msg}");
+    }
+
+    #[test]
+    fn dense_row_longer_than_dim_rejected() {
+        let mut input = std::io::Cursor::new(b"1 2 3 4\n".to_vec());
+        let mut out: Vec<u8> = Vec::new();
+        let err =
+            run_serve(model(), &ServeOptions::default(), &mut input, &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("model dim is 3"), "{err:#}");
+    }
+
+    #[test]
+    fn libsvm_row_beyond_model_dim_rejected() {
+        let mut input = std::io::Cursor::new(b"1:1 9:1\n".to_vec());
+        let mut out: Vec<u8> = Vec::new();
+        let err =
+            run_serve(model(), &ServeOptions::default(), &mut input, &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("model dim 3"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let (stats, out) = serve_text(model(), &ServeOptions::default(), "");
+        assert_eq!(stats, ServeStats { rows: 0, batches: 0, shards: stats.shards });
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn forced_formats_override_auto() {
+        // dense forced: a ':'-free line parses even with format=dense
+        let opts = ServeOptions { format: RowFormat::Dense, shards: 1, ..Default::default() };
+        let (_, out) = serve_text(model(), &opts, "1 0 0\n");
+        assert_eq!(out, "+1\n");
+        // libsvm forced: dense-looking line is rejected (bad feature token)
+        let opts = ServeOptions { format: RowFormat::Libsvm, shards: 1, ..Default::default() };
+        let mut input = std::io::Cursor::new(b"1 2 3\n".to_vec());
+        let mut outbuf: Vec<u8> = Vec::new();
+        assert!(run_serve(model(), &opts, &mut input, &mut outbuf).is_err());
+        // bad format string
+        assert!("csv".parse::<RowFormat>().is_err());
+        assert_eq!("libsvm".parse::<RowFormat>().unwrap(), RowFormat::Libsvm);
+    }
+
+    #[test]
+    fn label_only_line_is_ambiguous_in_auto_but_fine_when_forced() {
+        // "+1" is a legal zero-feature libsvm row AND a legal one-value
+        // dense row — auto must refuse to guess.
+        let mut input = std::io::Cursor::new(b"+1\n".to_vec());
+        let mut out: Vec<u8> = Vec::new();
+        let err =
+            run_serve(model(), &ServeOptions::default(), &mut input, &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("ambiguous"), "{err:#}");
+        // forced libsvm: the label-only row is the zero vector ⇒ sign(0) = +1
+        let opts = ServeOptions { format: RowFormat::Libsvm, shards: 1, ..Default::default() };
+        let (_, out) = serve_text(model(), &opts, "+1\n-1\n");
+        assert_eq!(out, "+1\n+1\n");
+        // forced dense: the token is feature 0
+        let opts = ServeOptions { format: RowFormat::Dense, shards: 1, ..Default::default() };
+        let (_, out) = serve_text(model(), &opts, "-1\n");
+        assert_eq!(out, "-1\n"); // w[0] = 1 ⇒ score −1
+        // a multi-token dense row starting with a label-like value is
+        // NOT ambiguous (libsvm features would need ':')
+        let (_, out) = serve_text(model(), &ServeOptions { shards: 1, ..Default::default() }, "1 0 1\n");
+        assert_eq!(out, "+1\n"); // 1·1 + 1·0.5 = 1.5
+    }
+
+    #[test]
+    fn multiclass_labels_are_class_indices() {
+        let m = ModelArtifact::new(
+            2,
+            vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![-1.0, -1.0]],
+            vec![0.0; 3],
+            ScalingMeta::default(),
+        )
+        .unwrap();
+        let (_, out) = serve_text(m, &ServeOptions { shards: 2, ..Default::default() }, "1:3\n2:5\n");
+        assert_eq!(out, "0\n1\n");
+    }
+}

@@ -1,0 +1,174 @@
+//! Pool-backed sharded batch scoring.
+//!
+//! The paper's anytime guarantee makes the consensus model identical on
+//! every node, so inference shards are pure replicas. Within one process
+//! the replicas are *logical*: every shard task scores against the same
+//! immutable [`ModelArtifact`] — a deep clone per shard would cost
+//! `K·d` f64s each (tens of MB for a wide one-vs-rest model at 16
+//! shards) and buy nothing in a single address space; the persisted
+//! artifact (DESIGN.md §Serving) is what enables real per-process
+//! replicas. Each request batch fans over the persistent [`WorkerPool`]
+//! (the same dispatch substrate the training runtime uses — DESIGN.md
+//! §Worker-pool dispatch), one contiguous row chunk per shard.
+//!
+//! Scoring a row reads only the row and the model's immutable
+//! parameters, so the shard count can only move work, never change
+//! results: predictions are **bitwise identical** at any shard count,
+//! including `shards > rows` (surplus shards idle) and empty batches
+//! (no dispatch at all). `rust/tests/property_invariants.rs` pins this,
+//! and `ci.sh` re-runs the pin at pool sizes 1 and 4 like the
+//! scheduler-equivalence matrix.
+
+use super::artifact::{ModelArtifact, Prediction};
+use crate::linalg::SparseVec;
+use crate::pool::{ParallelExec, Task, WorkerPool, SERIAL_EXEC};
+use crate::Result;
+use anyhow::ensure;
+
+/// A batch scorer fanning row chunks across `shards` pool workers, all
+/// scoring one shared warm model.
+pub struct ShardedScorer {
+    /// The model every shard task scores against.
+    model: ModelArtifact,
+    /// Shard (= maximum concurrent chunk) count, clamped to ≥ 1.
+    shards: usize,
+    /// The dispatch pool; `None` at one shard — scoring runs inline on
+    /// the caller thread with no worker threads spawned at all.
+    pool: Option<WorkerPool>,
+}
+
+impl ShardedScorer {
+    /// Builds a scorer with `shards` shard slots (clamped to ≥ 1) and,
+    /// for `shards > 1`, the worker pool they score on.
+    pub fn new(model: ModelArtifact, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let pool = if shards > 1 { Some(WorkerPool::new(shards)) } else { None };
+        Self { model, shards, pool }
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &ModelArtifact {
+        &self.model
+    }
+
+    /// The executor batches dispatch on.
+    fn exec(&self) -> &dyn ParallelExec {
+        match &self.pool {
+            Some(pool) => pool,
+            None => &SERIAL_EXEC,
+        }
+    }
+
+    /// Scores `rows`, one [`Prediction`] per row in input order.
+    ///
+    /// Rows are validated against the model dimension up front (errors
+    /// name the offending row index), then split into one contiguous
+    /// chunk per shard and dispatched; each task writes its disjoint
+    /// output slice. Empty batches return an empty vector without
+    /// touching the pool.
+    pub fn score_batch(&self, rows: &[SparseVec]) -> Result<Vec<Prediction>> {
+        let dim = self.model.dim;
+        for (i, row) in rows.iter().enumerate() {
+            ensure!(
+                row.min_dim() <= dim,
+                "row {i}: feature index {} out of range for model dim {dim}",
+                row.min_dim() - 1
+            );
+        }
+        let mut out = vec![Prediction::default(); rows.len()];
+        if rows.is_empty() {
+            return Ok(out);
+        }
+        let model = &self.model;
+        let chunk = (rows.len() + self.shards - 1) / self.shards;
+        let tasks: Vec<Task<'_>> = rows
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .map(|(row_chunk, out_chunk)| {
+                Box::new(move || -> Result<()> {
+                    for (o, r) in out_chunk.iter_mut().zip(row_chunk) {
+                        *o = model.predict(r);
+                    }
+                    Ok(())
+                }) as Task<'_>
+            })
+            .collect();
+        self.exec().run_tasks(tasks)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::artifact::ScalingMeta;
+
+    fn model(dim: usize) -> ModelArtifact {
+        let w: Vec<f64> = (0..dim)
+            .map(|j| (j as f64 + 1.0) * if j % 2 == 0 { 1.0 } else { -0.5 })
+            .collect();
+        ModelArtifact::new(dim, vec![w], vec![0.0], ScalingMeta::default()).unwrap()
+    }
+
+    fn rows(n: usize, dim: usize) -> Vec<SparseVec> {
+        (0..n)
+            .map(|i| {
+                let j = (i % dim) as u32;
+                SparseVec::new(vec![j], vec![1.0 + i as f32 * 0.25])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_counts_agree_bitwise() {
+        let batch = rows(23, 7);
+        let reference = ShardedScorer::new(model(7), 1).score_batch(&batch).unwrap();
+        for shards in [2usize, 3, 5, 23, 40] {
+            let scorer = ShardedScorer::new(model(7), shards);
+            assert_eq!(scorer.shards(), shards);
+            let got = scorer.score_batch(&batch).unwrap();
+            assert_eq!(got.len(), reference.len());
+            for (a, b) in reference.iter().zip(&got) {
+                assert_eq!(a.label, b.label, "shards={shards}");
+                assert_eq!(a.score.to_bits(), b.score.to_bits(), "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_zero_shards_clamp() {
+        let scorer = ShardedScorer::new(model(4), 0);
+        assert_eq!(scorer.shards(), 1);
+        assert!(scorer.score_batch(&[]).unwrap().is_empty());
+        let scorer = ShardedScorer::new(model(4), 6);
+        assert!(scorer.score_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn out_of_range_row_names_its_index() {
+        let scorer = ShardedScorer::new(model(4), 2);
+        let batch = vec![
+            SparseVec::new(vec![0], vec![1.0]),
+            SparseVec::new(vec![9], vec![1.0]),
+        ];
+        let err = scorer.score_batch(&batch).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("row 1"), "{msg}");
+        assert!(msg.contains("model dim 4"), "{msg}");
+    }
+
+    #[test]
+    fn scorer_stays_warm_across_batches() {
+        let scorer = ShardedScorer::new(model(5), 3);
+        let a = scorer.score_batch(&rows(9, 5)).unwrap();
+        let b = scorer.score_batch(&rows(9, 5)).unwrap();
+        assert_eq!(a, b);
+        let big = scorer.score_batch(&rows(64, 5)).unwrap();
+        assert_eq!(big.len(), 64);
+    }
+}

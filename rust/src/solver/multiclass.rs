@@ -75,19 +75,61 @@ pub struct MulticlassModel {
     pub models: Vec<LinearModel>,
 }
 
+/// Decodes per-class scores to `(class, winning score)` — the first
+/// strict maximum wins, so ties resolve to the lowest class index.
+///
+/// This is the **single** argmax decoder of the codebase: both
+/// [`MulticlassModel::predict`] and the serve-path
+/// [`crate::serve::ModelArtifact`] decode through it, so training-time
+/// evaluation and the inference service can never disagree on a
+/// tie-break. Under the one-vs-rest output code ([`ovr_code_matrix`])
+/// argmax equals max-correlation decoding: the code-correlation of class
+/// `k` is `2·s_k − Σ_j s_j`, a per-row monotone transform of `s_k`.
+///
+/// Returns `None` for an empty score set.
+pub fn argmax_decode(scores: impl IntoIterator<Item = f64>) -> Option<(u32, f64)> {
+    let mut best: Option<(u32, f64)> = None;
+    for (k, s) in scores.into_iter().enumerate() {
+        // Strict >, with NaN demoted below every finite score — including
+        // a NaN in slot 0, which a naive first-element seed would let win
+        // (the historical loop seeded with NEG_INFINITY, so a leading NaN
+        // never beat a later finite score).
+        let take = match best {
+            None => true,
+            Some((_, bs)) => s > bs || (bs.is_nan() && !s.is_nan()),
+        };
+        if take {
+            best = Some((k as u32, s));
+        }
+    }
+    best
+}
+
+/// The `K×K` one-vs-rest output code: `+1` on the diagonal, `-1`
+/// elsewhere — the code matrix persisted into multiclass model artifacts.
+pub fn ovr_code_matrix(num_classes: usize) -> Vec<Vec<i8>> {
+    (0..num_classes)
+        .map(|k| (0..num_classes).map(|j| if j == k { 1 } else { -1 }).collect())
+        .collect()
+}
+
 impl MulticlassModel {
+    /// Per-class raw scores `⟨w_k, x⟩`.
+    pub fn scores(&self, x: &SparseVec) -> Vec<f64> {
+        self.models.iter().map(|m| m.score(x)).collect()
+    }
+
     /// Predicted class = argmax_k ⟨w_k, x⟩.
     pub fn predict(&self, x: &SparseVec) -> u32 {
-        let mut best = 0u32;
-        let mut best_score = f64::NEG_INFINITY;
-        for (k, m) in self.models.iter().enumerate() {
-            let s = m.score(x);
-            if s > best_score {
-                best_score = s;
-                best = k as u32;
-            }
-        }
-        best
+        argmax_decode(self.models.iter().map(|m| m.score(x)))
+            .expect("MulticlassModel: no class scorers")
+            .0
+    }
+
+    /// Batch scoring: one predicted class per row, in row order — the
+    /// decoder shape the sharded inference service fans across replicas.
+    pub fn predict_batch(&self, rows: &[SparseVec]) -> Vec<u32> {
+        rows.iter().map(|x| self.predict(x)).collect()
     }
 
     /// Accuracy on a multiclass dataset.
@@ -249,5 +291,52 @@ mod tests {
     #[should_panic(expected = "label out of range")]
     fn label_range_checked() {
         MulticlassDataset::new("x", 2, 1, vec![SparseVec::default()], vec![5]);
+    }
+
+    #[test]
+    fn argmax_decode_first_max_wins_and_empty_is_none() {
+        assert_eq!(argmax_decode([1.0, 3.0, 3.0, 2.0]), Some((1, 3.0)));
+        assert_eq!(argmax_decode([-5.0]), Some((0, -5.0)));
+        assert_eq!(argmax_decode(std::iter::empty::<f64>()), None);
+        // a NaN score never beats a finite one — in any slot, including 0
+        assert_eq!(argmax_decode([0.5, f64::NAN, 1.5]), Some((2, 1.5)));
+        assert_eq!(argmax_decode([f64::NAN, 0.5]), Some((1, 0.5)));
+        assert_eq!(argmax_decode([f64::NAN, f64::NEG_INFINITY]), Some((1, f64::NEG_INFINITY)));
+        // all-NaN degenerates to the first class, like the historical loop
+        assert_eq!(argmax_decode([f64::NAN, f64::NAN]).unwrap().0, 0);
+    }
+
+    #[test]
+    fn ovr_code_matrix_shape() {
+        let c = ovr_code_matrix(3);
+        assert_eq!(c.len(), 3);
+        for (k, row) in c.iter().enumerate() {
+            assert_eq!(row.len(), 3);
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(v, if j == k { 1 } else { -1 });
+            }
+        }
+    }
+
+    #[test]
+    fn predict_batch_matches_per_row_predict() {
+        let ds = generate_multiclass(3, 40, 8, 4, 0.0, 13);
+        let model = train_one_vs_rest(&ds, |k| {
+            Pegasos::new(PegasosParams {
+                lambda: 1e-2,
+                iterations: 500,
+                batch_size: 1,
+                project: true,
+                seed: k as u64,
+            })
+        });
+        let batch = model.predict_batch(&ds.rows);
+        assert_eq!(batch.len(), ds.len());
+        for (x, &b) in ds.rows.iter().zip(&batch) {
+            assert_eq!(model.predict(x), b);
+            let scores = model.scores(x);
+            assert_eq!(argmax_decode(scores.iter().copied()).unwrap().0, b);
+        }
+        assert!(model.predict_batch(&[]).is_empty());
     }
 }

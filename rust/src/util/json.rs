@@ -174,7 +174,12 @@ fn push_indent(out: &mut String, n: usize) {
 }
 
 fn write_num(out: &mut String, x: f64) {
-    if x.fract() == 0.0 && x.abs() < 1e15 {
+    // Integer-valued floats render without a fraction — except -0.0,
+    // whose sign the i64 cast would drop: "-0" parses back to -0.0, so
+    // the text round trip stays bitwise exact for every finite f64
+    // (Display is shortest-round-trip) — the serve model artifacts rely
+    // on this.
+    if x.fract() == 0.0 && x.abs() < 1e15 && !(x == 0.0 && x.is_sign_negative()) {
         let _ = write!(out, "{}", x as i64);
     } else {
         let _ = write!(out, "{x}");
@@ -389,6 +394,25 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn finite_floats_roundtrip_bitwise() {
+        for x in [
+            -0.0,
+            0.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            1e300,
+            -2.5e-17,
+            0.1 + 0.2,
+            1e15,
+            -(2f64.powi(53)),
+        ] {
+            let text = Json::Num(x).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} -> {text} -> {back}");
+        }
     }
 
     #[test]

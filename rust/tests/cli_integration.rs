@@ -2,7 +2,8 @@
 //! checks every subcommand's surface behaviour — exit codes, report
 //! fields, error messages, config-file handling, result files.
 
-use std::process::Command;
+use std::io::Write;
+use std::process::{Command, Stdio};
 
 fn gadget() -> Command {
     Command::new(env!("CARGO_BIN_EXE_gadget"))
@@ -10,6 +11,26 @@ fn gadget() -> Command {
 
 fn run(args: &[&str]) -> (bool, String, String) {
     let out = gadget().args(args).output().expect("spawn gadget");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// Runs the binary with `input` piped to stdin (the serve protocol).
+fn run_piped(args: &[&str], input: &str) -> (bool, String, String) {
+    let mut child = gadget()
+        .args(args)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn gadget");
+    // ignore write errors: a child that fails fast (bad --model) may
+    // close the pipe before the batch is written
+    let _ = child.stdin.take().expect("piped stdin").write_all(input.as_bytes());
+    let out = child.wait_with_output().expect("wait gadget");
     (
         out.status.success(),
         String::from_utf8_lossy(&out.stdout).into_owned(),
@@ -201,6 +222,117 @@ fn inspect_reports_dataset_and_spectrum() {
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("features"), "{stdout}");
     assert!(stdout.contains("lambda2"), "{stdout}");
+}
+
+#[test]
+fn train_save_then_serve_scores_a_piped_batch() {
+    let dir = std::env::temp_dir().join(format!("gadget-serve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    let model_path = model.to_str().unwrap();
+
+    // end-to-end: train tiny, persist the consensus model
+    let (ok, stdout, stderr) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "3",
+        "--trials",
+        "1",
+        "--max-iterations",
+        "60",
+        "--save",
+        model_path,
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("model saved"), "{stdout}");
+    assert!(model.is_file());
+
+    // serve a piped batch: labeled libsvm, unlabeled libsvm, dense
+    let batch = "+1 1:0.5 3:1.25\n2:0.75 5:0.5\n0.1 0.2 0.3\n";
+    let (ok, stdout, stderr) =
+        run_piped(&["serve", "--model", model_path, "--shards", "2", "--batch", "2"], batch);
+    assert!(ok, "stderr: {stderr}");
+    let labels: Vec<&str> = stdout.lines().collect();
+    assert_eq!(labels.len(), 3, "{stdout}");
+    for l in &labels {
+        assert!(*l == "+1" || *l == "-1", "unexpected prediction {l:?}");
+    }
+    assert!(stderr.contains("served 3 rows"), "{stderr}");
+
+    // the acceptance contract: --shards 4 output is byte-identical to
+    // --shards 1, scores included
+    let (ok1, out1, err1) = run_piped(
+        &["serve", "--model", model_path, "--shards", "1", "--scores"],
+        batch,
+    );
+    let (ok4, out4, err4) = run_piped(
+        &["serve", "--model", model_path, "--shards", "4", "--scores"],
+        batch,
+    );
+    assert!(ok1, "stderr: {err1}");
+    assert!(ok4, "stderr: {err4}");
+    assert_eq!(out1, out4, "shard count changed the predictions");
+    assert!(out1.lines().all(|l| l.contains('\t')), "missing score column: {out1}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_rejects_malformed_input_and_bad_artifacts() {
+    let dir = std::env::temp_dir().join(format!("gadget-serve-neg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    let model_path = model.to_str().unwrap();
+
+    // a tiny valid artifact, written directly (dim 3, binary)
+    std::fs::write(
+        &model,
+        r#"{"format":"gadget-model","version":2,"dim":3,"classes":1,"weights":[[1,-1,0.5]],"bias":[0]}"#,
+    )
+    .unwrap();
+
+    // malformed row: non-zero exit, message names the input line
+    let (ok, _, stderr) = run_piped(&["serve", "--model", model_path], "1:1\n1:banana\n");
+    assert!(!ok, "malformed input must fail");
+    assert!(stderr.contains("input line 2"), "{stderr}");
+
+    // feature index beyond the model dim: clear dim-mismatch error
+    let (ok, _, stderr) = run_piped(&["serve", "--model", model_path], "1:1 9:2\n");
+    assert!(!ok);
+    assert!(stderr.contains("model dim 3"), "{stderr}");
+
+    // --model is required
+    let (ok, _, stderr) = run_piped(&["serve"], "");
+    assert!(!ok);
+    assert!(stderr.contains("--model"), "{stderr}");
+
+    // missing file
+    let (ok, _, stderr) = run_piped(&["serve", "--model", "/no/such/model.json"], "");
+    assert!(!ok);
+    assert!(stderr.contains("model"), "{stderr}");
+
+    // wrong format version: error names both versions
+    std::fs::write(
+        &model,
+        r#"{"format":"gadget-model","version":9,"dim":1,"classes":1,"weights":[[1]],"bias":[0]}"#,
+    )
+    .unwrap();
+    let (ok, _, stderr) = run_piped(&["serve", "--model", model_path], "1:1\n");
+    assert!(!ok);
+    assert!(stderr.contains("version 9"), "{stderr}");
+    assert!(stderr.contains("version 2"), "{stderr}");
+
+    // legacy v1 single-vector file: upgrade hint
+    std::fs::write(&model, r#"{"format":"gadget-linear-v1","dim":1,"w":[1]}"#).unwrap();
+    let (ok, _, stderr) = run_piped(&["serve", "--model", model_path], "1:1\n");
+    assert!(!ok);
+    assert!(stderr.contains("gadget-linear-v1"), "{stderr}");
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -10,6 +10,7 @@ use gadget::data::{partition, Dataset};
 use gadget::gossip::{PushSum, PushVector, RandomizedGossip};
 use gadget::linalg::SparseVec;
 use gadget::rng::Rng;
+use gadget::serve::{ModelArtifact, ScalingMeta, ShardedScorer};
 use gadget::solver::ScaledVector;
 use gadget::topology::stochastic::WeightScheme;
 use gadget::topology::{Graph, TopologyKind, TransitionMatrix};
@@ -266,6 +267,112 @@ fn prop_synthetic_scale_invariance() {
         assert!((nnz_big - nnz_small).abs() < 0.5);
         assert_eq!(big.train.len(), 2000);
         assert_eq!(small.train.len(), 400);
+    }
+}
+
+/// Shard counts the serve-equivalence sweep runs at. `GADGET_POOL_THREADS=n`
+/// pins a single count — `ci.sh` uses this to re-run the sweep at pool
+/// sizes 1 and 4, matching the scheduler-equivalence matrix.
+fn serve_shard_counts() -> Vec<usize> {
+    match std::env::var("GADGET_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("GADGET_POOL_THREADS must be an integer")],
+        Err(_) => vec![1, 2, 3, 7],
+    }
+}
+
+/// A random model artifact: binary (one weight row) or multiclass
+/// (2–5 rows), random dimension, random finite weights and biases.
+fn random_artifact(rng: &mut Rng) -> ModelArtifact {
+    let dim = rng.range(1, 40);
+    let classes = if rng.flip(0.5) { 1 } else { rng.range(2, 6) };
+    let weights: Vec<Vec<f64>> = (0..classes)
+        .map(|_| (0..dim).map(|_| rng.normal()).collect())
+        .collect();
+    let bias: Vec<f64> = (0..classes).map(|_| rng.normal() * 0.1).collect();
+    ModelArtifact::new(dim, weights, bias, ScalingMeta::default()).unwrap()
+}
+
+/// A random scoring batch over `dim` features (possibly empty rows).
+fn random_batch(rng: &mut Rng, dim: usize, n: usize) -> Vec<SparseVec> {
+    (0..n)
+        .map(|_| {
+            let nnz = rng.below(dim + 1);
+            let idx = if nnz == 0 { Vec::new() } else { rng.sorted_subset(dim, nnz) };
+            let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+            SparseVec::new(idx, vals)
+        })
+        .collect()
+}
+
+/// Property: batch scoring through N shards is bitwise identical to
+/// single-shard sequential scoring for any shard count — including
+/// shards > rows and empty batches — on both binary and multiclass
+/// models. (The serve acceptance contract; `ci.sh` re-runs this at
+/// `GADGET_POOL_THREADS` 1 and 4.)
+#[test]
+fn prop_sharded_scoring_matches_single_shard_bitwise() {
+    let mut rng = Rng::new(1000);
+    let shard_counts = serve_shard_counts();
+    for case in 0..12 {
+        let model = random_artifact(&mut rng);
+        let dim = model.dim;
+        // batch sizes stress the chunking: empty, 1, below/above shard
+        // counts, and a larger remainder-heavy size
+        for n in [0usize, 1, 3, 8, 41] {
+            let batch = random_batch(&mut rng, dim, n);
+            let reference =
+                ShardedScorer::new(model.clone(), 1).score_batch(&batch).unwrap();
+            assert_eq!(reference.len(), n);
+            for &shards in &shard_counts {
+                // the swept count, and a count strictly above the row
+                // count so surplus replicas must idle harmlessly
+                let narrow = ShardedScorer::new(model.clone(), shards);
+                let wide = ShardedScorer::new(model.clone(), shards.max(n + 3));
+                for scorer in [&narrow, &wide] {
+                    let got = scorer.score_batch(&batch).unwrap();
+                    assert_eq!(got.len(), n, "case {case} shards {}", scorer.shards());
+                    for (r, g) in reference.iter().zip(&got) {
+                        assert_eq!(r.label, g.label, "case {case} shards {}", scorer.shards());
+                        assert_eq!(
+                            r.score.to_bits(),
+                            g.score.to_bits(),
+                            "case {case} shards {}: score bits diverged",
+                            scorer.shards()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: argmax decoding is invariant under row order — scoring a
+/// permuted batch equals permuting the scored batch, for any model,
+/// batch and shard count.
+#[test]
+fn prop_argmax_decoding_invariant_under_row_order() {
+    let mut rng = Rng::new(1100);
+    for case in 0..10 {
+        let model = random_artifact(&mut rng);
+        let n = rng.range(2, 30);
+        let batch = random_batch(&mut rng, model.dim, n);
+        // a random permutation via seeded shuffle
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
+        }
+        let permuted: Vec<SparseVec> = perm.iter().map(|&i| batch[i].clone()).collect();
+        let shards = *rng.choose(&[1usize, 2, 5]);
+        let scorer = ShardedScorer::new(model, shards);
+        let direct = scorer.score_batch(&batch).unwrap();
+        let shuffled = scorer.score_batch(&permuted).unwrap();
+        for (slot, &src) in perm.iter().enumerate() {
+            assert_eq!(
+                direct[src], shuffled[slot],
+                "case {case}: row {src} changed under permutation"
+            );
+        }
     }
 }
 
