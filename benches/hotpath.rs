@@ -24,6 +24,7 @@ use gadget::data::Dataset;
 use gadget::gossip::PushVector;
 use gadget::harness::{bench, print_header};
 use gadget::linalg;
+use gadget::linalg::kernel::{self, Kernel};
 use gadget::rng::Rng;
 use gadget::runtime::{ArtifactRegistry, XlaBackend};
 use gadget::topology::stochastic::WeightScheme;
@@ -162,7 +163,7 @@ fn main() {
         let pool = WorkerPool::new(4);
         let mut pv_pooled = PushVector::new(&vectors);
         let res = bench(&format!("push-vector round m=10 d={d} pooled(4)"), 3, 50, || {
-            pv_pooled.round_with(&tm, &pool);
+            pv_pooled.round_with(&tm, &pool, kernel::scalar());
         });
         println!("{}", res.summary());
     }
@@ -183,6 +184,80 @@ fn main() {
             pv.round(&tm);
         });
         println!("{}", res.summary());
+    }
+
+    // ---- kernel backend A/B: scalar vs simd -------------------------------
+    // The swappable-kernel payoff, measured on the three loop shapes the
+    // trait abstracts: the dense dot (reduction — the backends genuinely
+    // differ), the sparse margin sweep (gather reduction, serve's hot
+    // loop), and axpy + the Bᵀ panel apply (element-wise — expect parity;
+    // any gap is pure dispatch overhead, which this section also bounds).
+    print_header("kernel backend A/B: scalar vs simd");
+    {
+        let backends: [&'static dyn Kernel; 2] = [kernel::scalar(), kernel::simd()];
+        let mut r = Rng::new(77);
+        let d = 47236usize;
+        let xs: Vec<f64> = (0..d).map(|_| r.normal()).collect();
+        let ys: Vec<f64> = (0..d).map(|_| r.normal()).collect();
+        for k in backends {
+            let res = bench(&format!("{:>6} dot d={d}", k.name()), 10, 200, || {
+                std::hint::black_box(k.dot(&xs, &ys));
+            });
+            println!(
+                "{}   ({:.2} GFLOP/s)",
+                res.summary(),
+                2.0 * d as f64 / res.median_secs / 1e9
+            );
+        }
+        for k in backends {
+            let mut acc = vec![0.0f64; d];
+            let res = bench(&format!("{:>6} axpy d={d}", k.name()), 10, 200, || {
+                k.axpy(1.000_000_1, &xs, &mut acc);
+            });
+            println!("{}", res.summary());
+        }
+        for k in backends {
+            let mut acc = vec![0.0f64; d];
+            let res = bench(&format!("{:>6} scale_add d={d}", k.name()), 10, 200, || {
+                k.scale_add(0.999_999, &mut acc, 1e-3, &xs);
+            });
+            println!("{}", res.summary());
+        }
+        // sparse margin sweep: one serve-style batch of 512 rows, nnz≈76
+        let ds = generate(&spec(d, 76), 9, 0.15).train;
+        let rows: Vec<_> = ds.rows.iter().take(512).cloned().collect();
+        let mut margins = vec![0.0f64; rows.len()];
+        for k in backends {
+            let res = bench(
+                &format!("{:>6} score_rows 512×nnz76", k.name()),
+                5,
+                200,
+                || {
+                    k.score_rows(&xs, 0.0, &rows, &mut margins);
+                },
+            );
+            println!("{}", res.summary());
+        }
+        // Bᵀ panel apply: element-wise — parity expected (shared loop)
+        let m = 10usize;
+        let g = Graph::generate(TopologyKind::KRegular, m, 1);
+        let tm = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let mut rr = Rng::new(5);
+        let src: Vec<f64> = (0..m * 1024).map(|_| rr.normal()).collect();
+        let mut dst = vec![0.0f64; 1024];
+        for k in backends {
+            let res = bench(&format!("{:>6} gemv_panel m=10 w=1024", k.name()), 5, 500, || {
+                for j in 0..m {
+                    k.gemv_panel(&mut dst, &tm.b[j..], m, m, &src, 1024, 0);
+                }
+            });
+            println!("{}", res.summary());
+        }
+        println!(
+            "\nnote: axpy/scale_add/gemv_panel share one element-wise loop across\n\
+             backends (bitwise-invariant by construction); only the dot\n\
+             reductions reassociate — EXPERIMENTS.md §Kernel A/B has the recipe."
+        );
     }
 
     // ---- XLA artifact dispatch vs native ----------------------------------

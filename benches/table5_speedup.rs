@@ -168,6 +168,9 @@ fn main() {
         ("scale", Json::Num(sweep_scale)),
         ("nodes", Json::Num(8.0)),
         ("max_iterations", Json::Num(60.0)),
+        // the arithmetic backend the sweep trained on, so logs stay
+        // self-describing (kernel A/B itself lives in `hotpath`)
+        ("kernel", Json::Str("scalar".into())),
         ("points", Json::Arr(points)),
         (
             "dispatch_overhead",

@@ -44,8 +44,9 @@ run_advisory() {
 run_advisory cargo fmt --all -- --check
 # -A's: pervasive seed-code styles (index loops over math kernels) that are
 # deliberate; everything else in clippy's default set is enforced when
-# strict.
-run_advisory cargo clippy --all-targets -- -D warnings \
+# strict. --features simd so the gated kernel-selection paths are linted
+# too (the kernel module itself compiles either way).
+run_advisory cargo clippy --all-targets --features simd -- -D warnings \
     -A clippy::needless_range_loop \
     -A clippy::too_many_arguments \
     -A clippy::manual_div_ceil \
@@ -57,20 +58,42 @@ run_hard cargo test -q
 # The scheduler-equivalence contract must be worker-count-invariant:
 # re-run the pool-size-dependent equivalence tests (filter: every test
 # whose name contains "bitwise" reads GADGET_POOL_THREADS) pinned to a
-# degenerate (1) and a multi-worker (4) pool. The rest of the suite
-# (async conservation, churn) doesn't vary with pool size and already
-# ran once above. The serve shard-equivalence property rides the same
-# matrix: predictions must be bitwise shard-count-invariant too.
-run_hard env GADGET_POOL_THREADS=1 cargo test -q --test scheduler_equivalence bitwise
-run_hard env GADGET_POOL_THREADS=4 cargo test -q --test scheduler_equivalence bitwise
+# degenerate (1) and a multi-worker (4) pool, explicitly on the scalar
+# kernel — the only backend the *bitwise* contract is stated over
+# (GADGET_KERNEL=scalar is also the default; pinning it keeps the gate
+# meaningful if the default ever changes). The rest of the suite (async
+# conservation, churn) doesn't vary with pool size and already ran once
+# above. The serve shard-equivalence property rides the same matrix:
+# predictions must be bitwise shard-count-invariant too.
+run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test scheduler_equivalence bitwise
+run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test scheduler_equivalence bitwise
 run_hard env GADGET_POOL_THREADS=1 cargo test -q --test property_invariants prop_sharded
 run_hard env GADGET_POOL_THREADS=4 cargo test -q --test property_invariants prop_sharded
 
-# Serve smoke test: train at tiny scale, persist the consensus model,
-# score a piped batch at shard counts 1 and 4 — the outputs (scores
-# included: shortest-round-trip text, so textual equality is bitwise
-# equality) must be identical, with one ±1 prediction per input row.
-# (subshell body: `set -e` and the cleanup trap stay contained)
+# Kernel-layer matrix. The feature compiles identical arithmetic — it
+# only unlocks runtime selection — so the simd build re-runs just the
+# surfaces that actually differ under the feature (the feature-gated
+# end-to-end simd trainer module, the gated CLI selection branch, and
+# the kernel-selection unit tests) instead of doubling the whole suite.
+# The ULP-bounded equivalence suite runs explicitly in the default build
+# so a filter typo elsewhere can't silently skip it.
+run_hard cargo test -q --test kernel_equivalence
+run_hard cargo build --release --features simd
+run_hard cargo test -q --features simd --test kernel_equivalence
+run_hard cargo test -q --features simd --test cli_integration serve_kernel
+run_hard cargo test -q --features simd --lib linalg::kernel
+
+# Serve smoke test: train at tiny scale ONCE, persist the consensus
+# model, then (a) score a piped batch at shard counts 1 and 4 — the
+# outputs (scores included: shortest-round-trip text, so textual
+# equality is bitwise equality) must be identical, one ±1 prediction per
+# input row — and (b) on the simd-featured binary (built above — the
+# last `cargo build --release` wrote it), decode identical labels with
+# `--kernel scalar` and `--kernel simd`, with the stderr startup line
+# naming the active backend so benchmark logs are self-describing. The
+# kernel diff compares labels only (no --scores): simd scores
+# legitimately differ from scalar in low bits within the documented ULP
+# bound. (subshell body: `set -e` and the cleanup trap stay contained)
 serve_smoke() (
     set -e
     tmp="$(mktemp -d)"
@@ -78,6 +101,7 @@ serve_smoke() (
     ./target/release/gadget train --dataset synthetic-usps --scale 0.02 \
         --nodes 3 --trials 1 --max-iterations 60 --save "$tmp/model.json"
     printf -- '+1 1:0.5 3:1.25\n2:0.75 5:0.5\n0.1 0.2 0.3\n' > "$tmp/batch.libsvm"
+    # (a) shard-count invariance, bitwise via --scores
     ./target/release/gadget serve --model "$tmp/model.json" --shards 1 --scores \
         < "$tmp/batch.libsvm" > "$tmp/pred1.txt"
     ./target/release/gadget serve --model "$tmp/model.json" --shards 4 --scores \
@@ -86,6 +110,14 @@ serve_smoke() (
     test "$(wc -l < "$tmp/pred1.txt")" -eq 3
     # every prediction is a ±1 label followed by a score column
     ! grep -qvE '^[+-]1\b' "$tmp/pred1.txt"
+    # (b) kernel-backend label agreement + self-describing startup line
+    ./target/release/gadget serve --model "$tmp/model.json" --kernel scalar \
+        < "$tmp/batch.libsvm" > "$tmp/pred_scalar.txt" 2> "$tmp/err_scalar.txt"
+    ./target/release/gadget serve --model "$tmp/model.json" --kernel simd \
+        < "$tmp/batch.libsvm" > "$tmp/pred_simd.txt" 2> "$tmp/err_simd.txt"
+    diff "$tmp/pred_scalar.txt" "$tmp/pred_simd.txt"
+    grep -q 'kernel=scalar' "$tmp/err_scalar.txt"
+    grep -q 'kernel=simd' "$tmp/err_simd.txt"
 )
 run_hard serve_smoke
 

@@ -14,6 +14,8 @@ use crate::topology::TopologyKind;
 use crate::Result;
 use anyhow::{bail, Context};
 
+pub use crate::linalg::KernelKind;
+
 /// Compute backend for the local Pegasos step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -129,6 +131,12 @@ pub struct ExperimentConfig {
     /// `threads = N`; 0 = all available cores). Ignored by the other
     /// schedulers.
     pub threads: usize,
+    /// Kernel backend behind every dense/sparse hot loop (`[runtime]`
+    /// section: `kernel = "scalar" | "simd" | "auto"`). `scalar` is the
+    /// bitwise determinism reference; `simd` requires a `--features simd`
+    /// build and has its own ULP-bounded equivalence contract (see
+    /// `linalg::kernel`).
+    pub kernel: KernelKind,
     /// Shard replica count for the batch-inference service (`[serve]`
     /// section: `shards = N`; 0 = one per available core). Predictions
     /// are bitwise shard-count-invariant — this only moves work.
@@ -161,6 +169,7 @@ impl Default for ExperimentConfig {
             snapshot_every: 0,
             scheduler: SchedulerKind::Sequential,
             threads: 0,
+            kernel: KernelKind::Scalar,
             serve_shards: 0,
             serve_batch: 256,
         }
@@ -266,6 +275,12 @@ impl ExperimentConfig {
                         .map_err(|e: String| anyhow::anyhow!(e))?
                 }
                 "runtime.threads" | "threads" => cfg.threads = value.as_usize_or(k)?,
+                "runtime.kernel" | "kernel" => {
+                    cfg.kernel = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
                 // `[serve]` section (flat spellings accepted too).
                 "serve.shards" | "shards" => cfg.serve_shards = value.as_usize_or(k)?,
                 "serve.batch" | "batch" => cfg.serve_batch = value.as_usize_or(k)?,
@@ -377,6 +392,12 @@ impl ConfigBuilder {
     /// Sets the parallel scheduler's worker count (0 = all cores).
     pub fn threads(mut self, t: usize) -> Self {
         self.cfg.threads = t;
+        self
+    }
+
+    /// Sets the kernel backend behind the hot loops.
+    pub fn kernel(mut self, k: KernelKind) -> Self {
+        self.cfg.kernel = k;
         self
     }
 
@@ -516,6 +537,32 @@ snapshot_every = 10
         assert_eq!(d.threads, 0);
         // bad value rejected
         assert!(ExperimentConfig::from_toml("[runtime]\nscheduler = \"warp\"").is_err());
+    }
+
+    #[test]
+    fn kernel_key_round_trips() {
+        let cfg = ExperimentConfig::from_toml(
+            "dataset = \"synthetic-usps\"\n[runtime]\nkernel = \"scalar\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.kernel, KernelKind::Scalar);
+        // flat spelling, and the other variants, parse too
+        assert_eq!(
+            ExperimentConfig::from_toml("kernel = \"auto\"").unwrap().kernel,
+            KernelKind::Auto
+        );
+        assert_eq!(
+            ExperimentConfig::from_toml("kernel = \"simd\"").unwrap().kernel,
+            KernelKind::Simd
+        );
+        // default + builder
+        assert_eq!(ExperimentConfig::default().kernel, KernelKind::Scalar);
+        let b = ExperimentConfig::builder().kernel(KernelKind::Auto).build().unwrap();
+        assert_eq!(b.kernel, KernelKind::Auto);
+        // bad value rejected at parse (feature availability is checked at
+        // resolution, not here — a scalar-build must still *parse* simd
+        // configs so the error can name the missing feature)
+        assert!(ExperimentConfig::from_toml("[runtime]\nkernel = \"avx\"").is_err());
     }
 
     #[test]

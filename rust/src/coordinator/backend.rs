@@ -15,6 +15,7 @@
 //! `rust/tests/` relies on this.
 
 use crate::data::Dataset;
+use crate::linalg::Kernel;
 use crate::rng::Rng;
 use crate::Result;
 
@@ -47,12 +48,38 @@ pub trait LocalBackend {
 
 /// Pure-rust sparse backend: O(batch·nnz) per step via the scaled-vector
 /// trick, O(d) only at entry/exit (densify). The scaled-vector state and
-/// the violator scratch buffer persist across calls so the per-iteration
-/// hot path allocates nothing (EXPERIMENTS.md §Perf).
-#[derive(Debug, Default)]
+/// the batch/violator scratch buffers persist across calls so the
+/// per-iteration hot path allocates nothing (EXPERIMENTS.md §Perf).
+///
+/// The margin dots dispatch through the backend's [`Kernel`] handle
+/// ([`Self::with_kernel`]; `Default` is the scalar reference): on the
+/// scalar backend every bit of the trajectory matches the pre-kernel-layer
+/// loops, on the SIMD backend margins near the hinge threshold may resolve
+/// differently within the kernel's documented ULP bound.
+#[derive(Debug)]
 pub struct NativeBackend {
     sv: Option<crate::solver::ScaledVector>,
+    batch: Vec<usize>,
     violators: Vec<usize>,
+    kernel: &'static dyn Kernel,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::with_kernel(crate::linalg::kernel::scalar())
+    }
+}
+
+impl NativeBackend {
+    /// A backend whose margin dots run on `kernel`.
+    pub fn with_kernel(kernel: &'static dyn Kernel) -> Self {
+        Self { sv: None, batch: Vec::new(), violators: Vec::new(), kernel }
+    }
+
+    /// The kernel backend this learner computes on.
+    pub fn kernel(&self) -> &'static dyn Kernel {
+        self.kernel
+    }
 }
 
 impl LocalBackend for NativeBackend {
@@ -77,15 +104,22 @@ impl LocalBackend for NativeBackend {
             let alpha = 1.0 / (ctx.lambda * t_eff as f64);
             let shrink = 1.0 - ctx.lambda * alpha; // = 1 − 1/t_eff
             let step = alpha / ctx.batch_size as f64;
-            // Sample batch + record violators at the current w.
-            self.violators.clear();
+            // Sample the batch (all RNG draws up front, same draw order as
+            // the pre-kernel per-sample loop), then flag violators at the
+            // current w in one kernel call.
+            self.batch.clear();
             for _ in 0..ctx.batch_size {
-                let i = ctx.rng.below(n);
-                let (x, y) = ctx.shard.sample(i);
-                if y * sv.dot_sparse(x) < 1.0 {
-                    self.violators.push(i);
-                }
+                self.batch.push(ctx.rng.below(n));
             }
+            self.violators.clear();
+            self.kernel.hinge_subgrad_accum(
+                sv.storage(),
+                sv.scale(),
+                &ctx.shard.rows,
+                &ctx.shard.labels,
+                &self.batch,
+                &mut self.violators,
+            );
             if shrink > 0.0 {
                 sv.scale_by(shrink);
             } else {

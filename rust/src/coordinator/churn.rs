@@ -132,7 +132,10 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     let protocol = GossipProtocol::new(ProtocolParams::from_config(cfg, lambda));
     // The scheduler behind the per-node fan-out (churn always uses the
     // native backend — the XLA artifact path is a plain-runner concern).
-    let mut seq_backend = NativeBackend::default();
+    // `[runtime] kernel` threads through exactly like the plain runner:
+    // one handle for the local-step margins and the mixing panels.
+    let kernel = cfg.kernel.build()?;
+    let mut seq_backend = NativeBackend::with_kernel(kernel);
     if cfg.scheduler == SchedulerKind::Async {
         // Churn events are keyed to the global iteration clock, which the
         // asynchronous engine does not have — make the fallback visible.
@@ -143,10 +146,14 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     }
     let mut sched: Box<dyn Scheduler + '_> = match cfg.scheduler {
         // Pool capped at m — more workers than nodes can never be used.
-        SchedulerKind::Parallel => {
-            Box::new(Parallel::native(super::sched::resolve_threads(cfg.threads).min(m)))
-        }
-        _ => Box::new(Sequential::new(&mut seq_backend)),
+        SchedulerKind::Parallel => Box::new(
+            Parallel::new(super::sched::resolve_threads(cfg.threads).min(m), || {
+                Ok(Box::new(NativeBackend::with_kernel(kernel))
+                    as Box<dyn super::backend::LocalBackend + Send>)
+            })?
+            .with_kernel(kernel),
+        ),
+        _ => Box::new(Sequential::new(&mut seq_backend).with_kernel(kernel)),
     };
 
     let mut alive = vec![true; m];
@@ -224,9 +231,10 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
                 alive_ids.iter().map(|&i| nodes[i].n_local() as f64).collect();
             pv.reset_weighted(alive_ids.iter().map(|&i| nodes[i].w.as_slice()), &weights);
             // Bᵀ-apply column panels fan over the scheduler's executor
-            // (the worker pool when `[runtime] scheduler = "parallel"`);
-            // bitwise identical to inline execution.
-            pv.run_rounds_with(tm, rounds, sched.panel_exec());
+            // (the worker pool when `[runtime] scheduler = "parallel"`)
+            // on its kernel; bitwise identical to inline execution on
+            // every backend.
+            pv.run_rounds_with(tm, rounds, sched.panel_exec(), sched.kernel());
             // (g)-consume/(h)/ε via the shared protocol; the scheduler
             // hands each closure the node's position within `alive_ids`,
             // which is exactly the Push-Vector slot.

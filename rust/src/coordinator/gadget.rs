@@ -40,6 +40,7 @@ use super::sched::{
 };
 use crate::config::{Backend, ExperimentConfig, SchedulerKind};
 use crate::data::synthetic::{generate, spec_by_name};
+use crate::linalg::Kernel;
 use crate::data::{partition, Dataset};
 use crate::gossip::{GossipStats, PushVector};
 use crate::metrics::{self, node_trial_std, Trace, TracePoint};
@@ -195,25 +196,45 @@ impl GadgetRunner {
         self.lambda
     }
 
-    /// Builds one local-step backend per the config's `backend` choice.
-    fn make_backend(&self) -> Result<Box<dyn LocalBackend + Send>> {
+    /// Builds one local-step backend per the config's `backend` choice,
+    /// computing on `kernel` (the native path; the XLA artifact's
+    /// arithmetic is fixed at compile time — the kernel layer reserves it
+    /// a third implementation slot, see DESIGN.md §Kernel backends).
+    fn make_backend(&self, kernel: &'static dyn Kernel) -> Result<Box<dyn LocalBackend + Send>> {
         Ok(match self.cfg.backend {
-            Backend::Native => Box::new(NativeBackend::default()),
-            Backend::Xla => Box::new(crate::runtime::XlaBackend::from_default_artifacts(
-                self.train.dim,
-                self.cfg.batch_size,
-                self.cfg.local_steps,
-                self.lambda,
-            )?),
+            Backend::Native => Box::new(NativeBackend::with_kernel(kernel)),
+            Backend::Xla => {
+                // The artifact's arithmetic is compiled into the HLO —
+                // training it while the report claims kernel=simd would be
+                // the mislabeled-benchmark case the kernel layer forbids.
+                anyhow::ensure!(
+                    kernel.name() == "scalar",
+                    "backend = \"xla\" supports only kernel = \"scalar\" (the AOT \
+                     artifact's arithmetic is fixed at compile time; the kernel \
+                     layer reserves the XLA path a future implementation slot)"
+                );
+                Box::new(crate::runtime::XlaBackend::from_default_artifacts(
+                    self.train.dim,
+                    self.cfg.batch_size,
+                    self.cfg.local_steps,
+                    self.lambda,
+                )?)
+            }
         })
     }
 
     /// Runs all configured trials on the configured scheduler and backend.
     pub fn run(&self) -> Result<GadgetReport> {
+        // Resolve `[runtime] kernel` once; the handle threads through
+        // scheduler construction (mixing-round panels) and backend
+        // construction (local-step margin dots) so one selection governs
+        // every hot loop of the run.
+        let kernel = self.cfg.kernel.build()?;
         match self.cfg.scheduler {
             SchedulerKind::Sequential => {
-                let mut backend = self.make_backend()?;
-                self.run_with_backend(&mut *backend)
+                let mut backend = self.make_backend(kernel)?;
+                let mut sched = Sequential::new(&mut *backend).with_kernel(kernel);
+                self.run_with_scheduler(&mut sched)
             }
             SchedulerKind::Parallel => {
                 let threads = super::sched::resolve_threads(self.cfg.threads);
@@ -228,7 +249,7 @@ impl GadgetRunner {
                     // `threads − trials` workers (each trial runs
                     // serially inside), so it is taken only at
                     // saturation.
-                    self.run_trials_pooled(threads)
+                    self.run_trials_pooled(threads, kernel)
                 } else {
                     // Fan the per-node phases inside each trial instead.
                     // Cap the pool at the node count — more workers than
@@ -236,7 +257,8 @@ impl GadgetRunner {
                     // backend (an entire artifact compilation on the XLA
                     // path).
                     let workers = threads.min(self.cfg.nodes);
-                    let mut sched = Parallel::new(workers, || self.make_backend())?;
+                    let mut sched =
+                        Parallel::new(workers, || self.make_backend(kernel))?.with_kernel(kernel);
                     self.run_with_scheduler(&mut sched)
                 }
             }
@@ -251,13 +273,26 @@ impl GadgetRunner {
                      learner); use the sequential or parallel scheduler for \
                      the XLA backend"
                 );
+                // Same loudness for the kernel: the embedded learners run
+                // the scalar reference; a log claiming kernel=simd must
+                // never have trained scalar.
+                anyhow::ensure!(
+                    kernel.name() == "scalar",
+                    "scheduler = \"async\" supports only kernel = \"scalar\" \
+                     (the thread-per-node engine embeds scalar-kernel \
+                     learners); use the sequential or parallel scheduler \
+                     for the simd kernel"
+                );
                 self.run_async()
             }
         }
     }
 
     /// Runs all trials sequentially with an explicit backend (tests /
-    /// benches inject their own).
+    /// benches inject their own). An injected backend carries its own
+    /// kernel handle for the local step; the mixing round runs on the
+    /// scalar reference — use [`GadgetRunner::run`] with `[runtime]
+    /// kernel` to thread one selection through both.
     pub fn run_with_backend(&self, backend: &mut dyn LocalBackend) -> Result<GadgetReport> {
         let mut sched = Sequential::new(backend);
         self.run_with_scheduler(&mut sched)
@@ -287,7 +322,7 @@ impl GadgetRunner {
     /// [`GadgetRunner::run_with_backend`], so the aggregated report is
     /// bitwise-equal — the scheduler equivalence tests sweep this path
     /// via `trials ≥ threads` configs.
-    fn run_trials_pooled(&self, threads: usize) -> Result<GadgetReport> {
+    fn run_trials_pooled(&self, threads: usize, kernel: &'static dyn Kernel) -> Result<GadgetReport> {
         self.cfg.validate()?;
         let workers = threads.min(self.cfg.trials);
         let pool = WorkerPool::new(workers);
@@ -299,8 +334,8 @@ impl GadgetRunner {
             .enumerate()
             .map(|(c, slab)| {
                 Box::new(move || -> Result<()> {
-                    let mut backend = self.make_backend()?;
-                    let mut sched = Sequential::new(&mut *backend);
+                    let mut backend = self.make_backend(kernel)?;
+                    let mut sched = Sequential::new(&mut *backend).with_kernel(kernel);
                     for (off, slot) in slab.iter_mut().enumerate() {
                         let trial = c * chunk + off;
                         *slot = Some(self.run_trial(self.trial_seed(trial), &mut sched));
@@ -427,9 +462,11 @@ impl GadgetRunner {
             // (g): Push-Vector consensus on the shard-weighted vectors;
             // the Bᵀ-apply fans its column panels over the scheduler's
             // executor (inline for sequential, the worker pool for
-            // parallel) — bitwise identical either way.
+            // parallel) on the scheduler's kernel — bitwise identical for
+            // every executor and kernel backend (the panel apply is
+            // element-wise).
             pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
-            pv.run_rounds_with(&b, rounds, sched.panel_exec());
+            pv.run_rounds_with(&b, rounds, sched.panel_exec(), sched.kernel());
             gossip_total.merge(pv.stats());
             // (g)-consume/(h)/ε: estimate, optional projection and the
             // convergence test, per node (slot == id here since ids = 0..m).

@@ -35,6 +35,7 @@ pub use protocol::{GossipProtocol, MassState, ProtocolParams};
 
 use crate::coordinator::backend::LocalBackend;
 use crate::coordinator::node::NodeState;
+use crate::linalg::Kernel;
 use crate::pool::{ParallelExec, Task, WorkerPool, SERIAL_EXEC};
 use crate::Result;
 
@@ -75,6 +76,18 @@ pub trait Scheduler {
     /// is bitwise executor-invariant).
     fn panel_exec(&self) -> &dyn ParallelExec {
         &SERIAL_EXEC
+    }
+
+    /// The kernel backend threaded through this scheduler at construction
+    /// (`[runtime] kernel` / `--kernel`) — what the mixing round's panel
+    /// apply and any other scheduler-driven dense phase computes on.
+    /// Scalar (the bitwise reference) unless overridden via the
+    /// schedulers' `with_kernel` constructors; the panel apply itself is
+    /// element-wise and therefore bitwise identical on every backend (see
+    /// `linalg::kernel`), so this choice also only moves work on that
+    /// phase.
+    fn kernel(&self) -> &'static dyn Kernel {
+        crate::linalg::kernel::scalar()
     }
 }
 
@@ -117,14 +130,23 @@ pub fn resolve_threads(threads: usize) -> usize {
 /// nodes visited in id order on the calling thread.
 pub struct Sequential<'b> {
     backend: &'b mut dyn LocalBackend,
+    kernel: &'static dyn Kernel,
 }
 
 impl<'b> Sequential<'b> {
     /// Wraps a borrowed backend (callers keep ownership — the public
     /// `GadgetRunner::run_with_backend` entry point injects test/bench
-    /// backends this way).
+    /// backends this way). The scheduler-level kernel is the scalar
+    /// reference; see [`Self::with_kernel`].
     pub fn new(backend: &'b mut dyn LocalBackend) -> Self {
-        Self { backend }
+        Self { backend, kernel: crate::linalg::kernel::scalar() }
+    }
+
+    /// Threads a kernel backend through the scheduler (the runner does
+    /// this with the `[runtime] kernel` selection).
+    pub fn with_kernel(mut self, kernel: &'static dyn Kernel) -> Self {
+        self.kernel = kernel;
+        self
     }
 }
 
@@ -135,6 +157,10 @@ impl Scheduler for Sequential<'_> {
 
     fn threads(&self) -> usize {
         1
+    }
+
+    fn kernel(&self) -> &'static dyn Kernel {
+        self.kernel
     }
 
     fn for_each_node(
@@ -191,11 +217,16 @@ fn collect_node_refs<'n>(
 pub struct Parallel {
     pool: WorkerPool,
     backends: Vec<Box<dyn LocalBackend + Send>>,
+    kernel: &'static dyn Kernel,
 }
 
 impl Parallel {
     /// Builds a pool of `threads` parked workers (`0` = all cores),
-    /// constructing one backend per worker with `factory`.
+    /// constructing one backend per worker with `factory`. The
+    /// scheduler-level kernel is the scalar reference; the runner chains
+    /// [`Self::with_kernel`] so the `[runtime] kernel` selection rides
+    /// along the worker pool (the backends the factory builds carry their
+    /// own handle for the local step).
     pub fn new<F>(threads: usize, factory: F) -> Result<Self>
     where
         F: Fn() -> Result<Box<dyn LocalBackend + Send>>,
@@ -205,7 +236,7 @@ impl Parallel {
         for _ in 0..t {
             backends.push(factory()?);
         }
-        Ok(Self { pool: WorkerPool::new(t), backends })
+        Ok(Self { pool: WorkerPool::new(t), backends, kernel: crate::linalg::kernel::scalar() })
     }
 
     /// A native-backend pool — the common case (churn, benches).
@@ -219,6 +250,11 @@ impl Parallel {
         .expect("native backend construction cannot fail")
     }
 
+    /// Threads a kernel backend through the scheduler.
+    pub fn with_kernel(mut self, kernel: &'static dyn Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
 }
 
 impl Scheduler for Parallel {
@@ -232,6 +268,10 @@ impl Scheduler for Parallel {
 
     fn panel_exec(&self) -> &dyn ParallelExec {
         &self.pool
+    }
+
+    fn kernel(&self) -> &'static dyn Kernel {
+        self.kernel
     }
 
     fn for_each_node(
@@ -526,6 +566,24 @@ mod tests {
         assert_eq!(seq.panel_exec().threads(), 1);
         let par = Parallel::native(3);
         assert_eq!(par.panel_exec().threads(), 3);
+    }
+
+    #[test]
+    fn kernel_threads_through_scheduler_construction() {
+        // Default is the scalar reference; `with_kernel` carries the
+        // runtime selection alongside the worker pool.
+        let mut backend = NativeBackend::default();
+        let seq = Sequential::new(&mut backend);
+        assert_eq!(seq.kernel().name(), "scalar");
+        let mut backend2 = NativeBackend::default();
+        let seq_simd =
+            Sequential::new(&mut backend2).with_kernel(crate::linalg::kernel::simd());
+        assert_eq!(seq_simd.kernel().name(), "simd");
+        let par = Parallel::native(2).with_kernel(crate::linalg::kernel::simd());
+        assert_eq!(par.kernel().name(), "simd");
+        assert_eq!(Parallel::native(2).kernel().name(), "scalar");
+        // the bench control arm stays pinned to the reference
+        assert_eq!(ScopedSpawn::native(2).kernel().name(), "scalar");
     }
 
     #[test]

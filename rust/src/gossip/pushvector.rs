@@ -14,6 +14,7 @@
 
 use super::pushsum::count_offdiag;
 use super::GossipStats;
+use crate::linalg::Kernel;
 use crate::pool::{ParallelExec, Task, SERIAL_EXEC};
 use crate::topology::TransitionMatrix;
 
@@ -32,10 +33,14 @@ const PAR_COL_MIN: usize = 256;
 /// `v_next[j, k0..k1] += b_ij · v[i, k0..k1]`, destination rows
 /// addressed through the raw base pointer `v_next` (row-major `m×d`).
 ///
-/// Per output element the accumulation runs over ascending `i` exactly
-/// like the original blocked loop, and a column's value never depends on
-/// any other column — so **any** column split (serial full-width, or
-/// panels fanned across threads) reproduces the same bits.
+/// Each destination row's panel is one [`Kernel::gemv_panel`] call —
+/// coefficients are column `j` of `B` (stride-`m` view of the row-major
+/// entries), sources the stride-`d` column panel of `v`. The kernel
+/// contract fixes the per-element accumulation to ascending `i` (exactly
+/// the original blocked loop), and a column's value never depends on any
+/// other column — so **any** column split (serial full-width, or panels
+/// fanned across threads) and **any** kernel backend (`gemv_panel` is
+/// element-wise) reproduces the same bits.
 ///
 /// # Safety
 /// `v_next` must point to a live `m×d` f64 buffer disjoint from `v`, and
@@ -49,26 +54,18 @@ unsafe fn bt_apply_columns(
     d: usize,
     k0: usize,
     k1: usize,
+    kernel: &'static dyn Kernel,
 ) {
     let mut c0 = k0;
     while c0 < k1 {
         let c1 = (c0 + COL_BLOCK).min(k1);
-        for i in 0..m {
-            let row = b.row(i);
-            let src = &v[i * d + c0..i * d + c1];
-            for j in 0..m {
-                let bij = row[j];
-                if bij == 0.0 {
-                    continue;
-                }
-                // SAFETY: columns [c0, c1) ⊆ [k0, k1) of row j — inside
-                // the m×d buffer and exclusive to this call per the
-                // function contract.
-                let dst = std::slice::from_raw_parts_mut(v_next.add(j * d + c0), c1 - c0);
-                for (o, &s) in dst.iter_mut().zip(src) {
-                    *o += bij * s;
-                }
-            }
+        for j in 0..m {
+            // SAFETY: columns [c0, c1) ⊆ [k0, k1) of row j — inside the
+            // m×d buffer and exclusive to this call per the function
+            // contract.
+            let dst = std::slice::from_raw_parts_mut(v_next.add(j * d + c0), c1 - c0);
+            // Column j of row-major B starts at flat index j with stride m.
+            kernel.gemv_panel(dst, &b.b[j..], m, m, v, d, c0);
         }
         c0 = c1;
     }
@@ -165,27 +162,27 @@ impl PushVector {
     }
 
     /// One synchronous round: `V ← Bᵀ V`, `w ← Bᵀ w`, on the calling
-    /// thread. Equivalent to [`PushVector::round_with`] on the inline
-    /// executor.
+    /// thread with the scalar reference kernel. Equivalent to
+    /// [`PushVector::round_with`] on the inline executor — and, because
+    /// the panel apply is element-wise, bitwise equivalent on **every**
+    /// kernel backend.
     pub fn round(&mut self, b: &TransitionMatrix) {
-        self.round_with(b, &SERIAL_EXEC);
+        self.round_with(b, &SERIAL_EXEC, crate::linalg::kernel::scalar());
     }
 
     /// One synchronous round with the `Bᵀ`-apply fanned over column
-    /// panels on `exec`: `V ← Bᵀ V`, `w ← Bᵀ w`.
-    ///
-    /// Written as a j-major accumulation over B's rows so the inner loop is
-    /// a dense axpy over the d-vector — auto-vectorizes and touches each
-    /// cache line once per (i,j) pair with b_ij ≠ 0.
+    /// panels on `exec` and computed on `kernel`: `V ← Bᵀ V`, `w ← Bᵀ w`.
     ///
     /// **Cache blocking**: at large `d` the two `m×d` buffers exceed L2/L3
     /// and the naive (i, j, k) loop streams the whole `v_next` matrix once
     /// per source row — `m` full passes of `m·d·8` bytes. The apply is
     /// therefore tiled over column panels of [`COL_BLOCK`] entries: within
-    /// a panel every destination row stays cache-resident across all `m`
-    /// source rows, cutting `v_next` traffic by ~`m×`. The accumulation
-    /// order per output element (ascending `i`) is unchanged, so the
-    /// result is **bitwise identical** to the unblocked loop
+    /// a panel the `m` source panels and the destination panel all stay
+    /// cache-resident, cutting main-memory traffic by ~`m×`. Each
+    /// destination row's panel is one [`Kernel::gemv_panel`] call whose
+    /// contract fixes the per-element accumulation to ascending `i`, so
+    /// the result is **bitwise identical** to the unblocked loop and to
+    /// every kernel backend — `gemv_panel` is element-wise
     /// (EXPERIMENTS.md §Perf has the before/after numbers).
     ///
     /// **Panel parallelism**: when `exec` offers more than one thread and
@@ -196,7 +193,12 @@ impl PushVector {
     /// ascending-`i` accumulation, so the result is bitwise identical to
     /// the inline path for every thread count — the equivalence tests pin
     /// this.
-    pub fn round_with(&mut self, b: &TransitionMatrix, exec: &dyn ParallelExec) {
+    pub fn round_with(
+        &mut self,
+        b: &TransitionMatrix,
+        exec: &dyn ParallelExec,
+        kernel: &'static dyn Kernel,
+    ) {
         assert_eq!(b.m, self.m, "PushVector: matrix size mismatch");
         // Rank-1 fast path: uniform B (complete graph + MH) averages in one
         // mean + broadcast — O(2m·d) instead of O(m²·d).
@@ -205,9 +207,7 @@ impl PushVector {
             head.fill(0.0);
             for i in 0..self.m {
                 let src = &self.v[i * self.d..(i + 1) * self.d];
-                for (o, &s) in head.iter_mut().zip(src) {
-                    *o += u * s;
-                }
+                kernel.axpy(u, src, head);
             }
             for chunk in tail.chunks_mut(self.d) {
                 chunk.copy_from_slice(head);
@@ -233,7 +233,7 @@ impl PushVector {
         if tasks_n <= 1 {
             // SAFETY: `&mut self` gives this call exclusive access to the
             // whole `v_next` buffer.
-            unsafe { bt_apply_columns(b, v, base, m, d, 0, d) };
+            unsafe { bt_apply_columns(b, v, base, m, d, 0, d, kernel) };
         } else {
             let chunk = (d + tasks_n - 1) / tasks_n;
             let mut tasks: Vec<Task<'_>> = Vec::with_capacity(tasks_n);
@@ -249,7 +249,7 @@ impl PushVector {
                     // `[0, d)` — pairwise disjoint columns of `v_next` —
                     // and `run_tasks` returns only after every task
                     // finished, so the buffer outlives all writes.
-                    unsafe { bt_apply_columns(b, v, dst.0, m, d, k0, k1) };
+                    unsafe { bt_apply_columns(b, v, dst.0, m, d, k0, k1, kernel) };
                     Ok(())
                 }));
             }
@@ -336,20 +336,22 @@ impl PushVector {
 
     /// Runs exactly `rounds` rounds.
     pub fn run_rounds(&mut self, b: &TransitionMatrix, rounds: usize) {
-        self.run_rounds_with(b, rounds, &SERIAL_EXEC);
+        self.run_rounds_with(b, rounds, &SERIAL_EXEC, crate::linalg::kernel::scalar());
     }
 
     /// Runs exactly `rounds` rounds with the `Bᵀ`-apply fanned over
-    /// `exec` (see [`PushVector::round_with`]); bitwise identical to
-    /// [`PushVector::run_rounds`] for every executor.
+    /// `exec` on `kernel` (see [`PushVector::round_with`]); bitwise
+    /// identical to [`PushVector::run_rounds`] for every executor and
+    /// kernel backend.
     pub fn run_rounds_with(
         &mut self,
         b: &TransitionMatrix,
         rounds: usize,
         exec: &dyn ParallelExec,
+        kernel: &'static dyn Kernel,
     ) {
         for _ in 0..rounds {
-            self.round_with(b, exec);
+            self.round_with(b, exec, kernel);
         }
     }
 
@@ -495,7 +497,7 @@ mod tests {
             let mut pooled = PushVector::new(&vectors);
             for _ in 0..7 {
                 inline.round(&b);
-                pooled.round_with(&b, &pool);
+                pooled.round_with(&b, &pool, crate::linalg::kernel::scalar());
             }
             for i in 0..m {
                 let (a, c) = (inline.estimate(i), pooled.estimate(i));
@@ -521,10 +523,37 @@ mod tests {
         let mut pooled = PushVector::new(&vectors);
         for _ in 0..5 {
             inline.round(&b);
-            pooled.round_with(&b, &pool);
+            pooled.round_with(&b, &pool, crate::linalg::kernel::scalar());
         }
         for i in 0..3 {
             assert_eq!(inline.estimate(i), pooled.estimate(i));
+        }
+    }
+
+    #[test]
+    fn mixing_round_is_bitwise_kernel_invariant() {
+        // The Bᵀ-apply is pure gemv_panel + axpy — element-wise kernel
+        // operations — so even the reassociating SIMD backend must
+        // reproduce the scalar round bit for bit, on both the general
+        // path (ring) and the rank-1 uniform fast path (complete).
+        let d = super::COL_BLOCK + 13;
+        let m = 4;
+        let mut rng = crate::rng::Rng::new(606);
+        let vectors: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        for b in [mh(&Graph::ring(m)), mh(&Graph::complete(m))] {
+            let mut scalar_pv = PushVector::new(&vectors);
+            let mut simd_pv = PushVector::new(&vectors);
+            for _ in 0..6 {
+                scalar_pv.round_with(&b, &SERIAL_EXEC, crate::linalg::kernel::scalar());
+                simd_pv.round_with(&b, &SERIAL_EXEC, crate::linalg::kernel::simd());
+            }
+            for i in 0..m {
+                let (a, c) = (scalar_pv.estimate(i), simd_pv.estimate(i));
+                for k in 0..d {
+                    assert_eq!(a[k].to_bits(), c[k].to_bits(), "node {i} col {k}");
+                }
+            }
         }
     }
 

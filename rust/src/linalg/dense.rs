@@ -1,43 +1,26 @@
-//! Dense `f64` slice kernels.
+//! Dense `f64` slice helpers.
 //!
-//! These are the only operations on the GADGET per-cycle hot path (the
-//! sub-gradient update Eq. 10 and the Push-Vector mixing step), so they are
-//! written to auto-vectorize: plain indexed loops over equal-length slices
-//! with the bounds hoisted by a single `assert_eq!`.
+//! The hot-loop implementations (dot, axpy, the panel apply) live in
+//! [`super::kernel`]; the functions here delegate to the **scalar
+//! reference** backend so every non-hot caller keeps the ergonomic
+//! free-function API with bit-for-bit the pre-refactor behavior. Code on a
+//! runtime-selected hot path should dispatch through a
+//! `&'static dyn Kernel` instead (see DESIGN.md §Kernel backends).
 
-/// Dot product `xᵀy`.
+/// Dot product `xᵀy` — the scalar reference reduction
+/// ([`super::kernel::scalar::dot`]: four-way unrolled, fixed order).
 ///
 /// # Panics
 /// Panics if `x.len() != y.len()`.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
-    assert_eq!(x.len(), y.len(), "dot: length mismatch");
-    // Four-way unrolled accumulation: breaks the serial FP dependence chain
-    // so LLVM emits vector FMAs (see EXPERIMENTS.md §Perf).
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = 4 * i;
-        s0 += x[j] * y[j];
-        s1 += x[j + 1] * y[j + 1];
-        s2 += x[j + 2] * y[j + 2];
-        s3 += x[j + 3] * y[j + 3];
-    }
-    let mut tail = 0.0;
-    for j in 4 * chunks..n {
-        tail += x[j] * y[j];
-    }
-    (s0 + s1) + (s2 + s3) + tail
+    super::kernel::scalar::dot(x, y)
 }
 
 /// `y ← y + a·x`.
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
-    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
-    for i in 0..x.len() {
-        y[i] += a * x[i];
-    }
+    super::kernel::scalar::axpy(a, x, y);
 }
 
 /// `y ← a·y`.

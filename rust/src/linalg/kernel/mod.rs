@@ -1,0 +1,305 @@
+//! The unified kernel layer: one [`Kernel`] trait behind every dense/sparse
+//! hot loop in the system.
+//!
+//! Every hot inner loop — the solver sub-gradient dots/axpys (Algorithm 2's
+//! local step), the Push-Vector `Bᵀ`-apply panel loop, and the sharded
+//! scorer's margin computation — dispatches through this trait instead of a
+//! hand-rolled per-call-site loop. Two backends exist:
+//!
+//! * [`ScalarKernel`] — the original loops, **bit for bit**. This is the
+//!   determinism reference: everything the `Parallel ≡ Sequential` bitwise
+//!   contract pins runs on it.
+//! * [`SimdKernel`] — explicit-width lane splitting with a **fixed
+//!   reduction tree** for the reducing operations. Reassociation changes
+//!   f64 rounding, so this backend lives *outside* the bitwise contract and
+//!   under its own ULP-bounded equivalence suite
+//!   (`rust/tests/kernel_equivalence.rs`). Selecting it at runtime
+//!   (`[runtime] kernel = "simd"` / `--kernel simd`) requires building with
+//!   `--features simd`; the implementation itself is portable stable Rust
+//!   (no `std::simd` needed — the lane-split loops are shaped so LLVM emits
+//!   vector code on any target), so the type always compiles and the
+//!   default build still unit-tests it.
+//!
+//! ## Which operations diverge between backends
+//!
+//! Only **reductions** have ordering freedom: [`Kernel::dot`] and
+//! [`Kernel::dot_sparse`] (and the provided methods built on them —
+//! [`Kernel::hinge_subgrad_accum`], [`Kernel::score_rows`]) may reassociate
+//! and therefore differ between backends by a documented ULP bound (see
+//! [`simd`]). The element-wise operations — [`Kernel::axpy`],
+//! [`Kernel::scale_add`], [`Kernel::axpy_sparse`], [`Kernel::gemv_panel`] —
+//! have exactly one evaluation order per output element, so they are
+//! **bitwise backend-invariant** by construction and share the canonical
+//! loops in [`scalar`]. This split is what keeps the Push-Vector mixing
+//! round (pure `gemv_panel`) bitwise identical under *every* backend while
+//! the margin dots legitimately differ.
+//!
+//! ## Selection
+//!
+//! [`KernelKind`] (config `[runtime] kernel = "scalar" | "simd" | "auto"`,
+//! CLI `--kernel`) resolves to a `&'static dyn Kernel` via
+//! [`KernelKind::build`]: `scalar` always works; `simd` errors unless the
+//! crate was built with `--features simd`; `auto` picks `simd` when the
+//! feature is compiled in and `scalar` otherwise. The resolved handle
+//! threads through `Scheduler` construction (the schedulers carry it to the
+//! mixing round), through backend construction (the local step), and
+//! through `ShardedScorer` (batch scoring) — see DESIGN.md §Kernel
+//! backends.
+
+pub mod scalar;
+pub mod simd;
+
+pub use scalar::ScalarKernel;
+pub use simd::SimdKernel;
+
+use crate::linalg::SparseVec;
+
+/// The object-safe kernel interface behind every hot loop.
+///
+/// Implementations must be stateless (`Send + Sync`, shared as
+/// `&'static dyn Kernel`): a kernel only chooses *how* arithmetic is
+/// evaluated, never carries data between calls.
+pub trait Kernel: Send + Sync + std::fmt::Debug {
+    /// Backend name for reports and logs (`"scalar"` / `"simd"`).
+    fn name(&self) -> &'static str;
+
+    /// Dense dot product `xᵀy`. **Reduction** — the summation order is
+    /// backend-defined ([`ScalarKernel`] is the reference order).
+    ///
+    /// # Panics
+    /// Panics if `x.len() != y.len()`.
+    fn dot(&self, x: &[f64], y: &[f64]) -> f64;
+
+    /// Sparse–dense dot `⟨x, w⟩` (gather reduction; order
+    /// backend-defined). Out-of-range indices panic.
+    fn dot_sparse(&self, x: &SparseVec, w: &[f64]) -> f64;
+
+    /// `y ← y + a·x`. Element-wise: bitwise identical across backends.
+    ///
+    /// # Panics
+    /// Panics if `x.len() != y.len()`.
+    fn axpy(&self, a: f64, x: &[f64], y: &mut [f64]) {
+        scalar::axpy(a, x, y);
+    }
+
+    /// `y ← a·y + b·x` (the unscaled Pegasos/consensus blend form).
+    /// Element-wise: bitwise identical across backends.
+    ///
+    /// No in-tree hot loop needs this today — the solvers carry the blend
+    /// inside the O(1)-shrink scaled representation instead
+    /// (`solver::scaled`). It completes the level-1 contract for external
+    /// and future consumers (the XLA implementation slot foremost) and is
+    /// pinned by the equivalence suite and the hotpath bench like every
+    /// other method.
+    ///
+    /// # Panics
+    /// Panics if `x.len() != y.len()`.
+    fn scale_add(&self, a: f64, y: &mut [f64], b: f64, x: &[f64]) {
+        scalar::scale_add(a, y, b, x);
+    }
+
+    /// `w ← w + a·x` for sparse `x` (scatter). Element-wise: bitwise
+    /// identical across backends.
+    fn axpy_sparse(&self, a: f64, x: &SparseVec, w: &mut [f64]) {
+        scalar::axpy_sparse(a, x, w);
+    }
+
+    /// One destination panel of the blocked `Bᵀ`-apply:
+    ///
+    /// `dst[k] += Σ_i coeffs[i·coeff_stride] · src[i·src_stride + src_off + k]`
+    ///
+    /// accumulated over **ascending** `i ∈ 0..rows`, skipping zero
+    /// coefficients. The accumulation order per output element is part of
+    /// the contract (it is what makes the Push-Vector column split bitwise
+    /// executor- and backend-invariant), so every backend evaluates it
+    /// identically; lane splitting may only run across `k`.
+    ///
+    /// # Panics
+    /// Panics if a source panel `[i·src_stride + src_off, +dst.len())`
+    /// falls outside `src`, or `coeffs` is shorter than the strided access
+    /// pattern requires.
+    fn gemv_panel(
+        &self,
+        dst: &mut [f64],
+        coeffs: &[f64],
+        coeff_stride: usize,
+        rows: usize,
+        src: &[f64],
+        src_stride: usize,
+        src_off: usize,
+    ) {
+        scalar::gemv_panel(dst, coeffs, coeff_stride, rows, src, src_stride, src_off);
+    }
+
+    /// The margin half of a mini-batch hinge sub-gradient step over the
+    /// scaled weight representation `w = scale·v`: for each sampled row
+    /// index `i` in `batch` (in order, duplicates allowed), computes the
+    /// margin `labels[i] · scale·⟨v, rows[i]⟩` and appends `i` to
+    /// `violators` when it is `< 1`. Built on [`Kernel::dot_sparse`], so
+    /// backends may differ for margins within the dot's ULP bound of 1.
+    fn hinge_subgrad_accum(
+        &self,
+        v: &[f64],
+        scale: f64,
+        rows: &[SparseVec],
+        labels: &[i8],
+        batch: &[usize],
+        violators: &mut Vec<usize>,
+    ) {
+        for &i in batch {
+            let margin = labels[i] as f64 * (scale * self.dot_sparse(&rows[i], v));
+            if margin < 1.0 {
+                violators.push(i);
+            }
+        }
+    }
+
+    /// Batched margins `out[r] = ⟨w, rows[r]⟩ + bias` — the scorer's hot
+    /// loop. Built on [`Kernel::dot_sparse`].
+    ///
+    /// # Panics
+    /// Panics if `rows.len() != out.len()`.
+    fn score_rows(&self, w: &[f64], bias: f64, rows: &[SparseVec], out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len(), "score_rows: length mismatch");
+        for (o, r) in out.iter_mut().zip(rows) {
+            *o = self.dot_sparse(r, w) + bias;
+        }
+    }
+}
+
+/// The shared scalar backend instance.
+static SCALAR_KERNEL: ScalarKernel = ScalarKernel;
+/// The shared SIMD backend instance (always compiled; runtime-selectable
+/// only behind `--features simd` — see [`KernelKind::build`]).
+static SIMD_KERNEL: SimdKernel = SimdKernel;
+
+/// The scalar reference backend — the default everywhere.
+pub fn scalar() -> &'static dyn Kernel {
+    &SCALAR_KERNEL
+}
+
+/// The lane-split SIMD backend (tests and benches may use it directly;
+/// runtime selection goes through [`KernelKind::build`]).
+pub fn simd() -> &'static dyn Kernel {
+    &SIMD_KERNEL
+}
+
+/// The configured kernel choice (`[runtime] kernel` / `--kernel`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The reference backend — bit-for-bit the original loops; the only
+    /// backend under the bitwise `Parallel ≡ Sequential` contract.
+    #[default]
+    Scalar,
+    /// Explicit lane-split backend; requires `--features simd` and its own
+    /// ULP-bounded equivalence tolerance.
+    Simd,
+    /// `simd` when compiled in, `scalar` otherwise.
+    Auto,
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(Self::Scalar),
+            "simd" => Ok(Self::Simd),
+            "auto" => Ok(Self::Auto),
+            other => Err(format!("unknown kernel {other:?} (scalar | simd | auto)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Scalar => "scalar",
+            Self::Simd => "simd",
+            Self::Auto => "auto",
+        })
+    }
+}
+
+impl KernelKind {
+    /// Resolves the configured choice to a backend handle.
+    ///
+    /// `Simd` without the `simd` cargo feature is an error rather than a
+    /// silent fallback — a benchmark log claiming `kernel=simd` must never
+    /// have measured the scalar path.
+    pub fn build(self) -> crate::Result<&'static dyn Kernel> {
+        match self {
+            Self::Scalar => Ok(scalar()),
+            Self::Simd => {
+                if cfg!(feature = "simd") {
+                    Ok(simd())
+                } else {
+                    anyhow::bail!(
+                        "kernel = \"simd\" requires a build with `--features simd` \
+                         (this binary was built without it; use kernel = \"scalar\" \
+                         or \"auto\", or rebuild)"
+                    )
+                }
+            }
+            Self::Auto => {
+                if cfg!(feature = "simd") {
+                    Ok(simd())
+                } else {
+                    Ok(scalar())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_and_display() {
+        assert_eq!("scalar".parse::<KernelKind>().unwrap(), KernelKind::Scalar);
+        assert_eq!("simd".parse::<KernelKind>().unwrap(), KernelKind::Simd);
+        assert_eq!("auto".parse::<KernelKind>().unwrap(), KernelKind::Auto);
+        assert!("avx9".parse::<KernelKind>().is_err());
+        assert_eq!(KernelKind::Scalar.to_string(), "scalar");
+        assert_eq!(KernelKind::Simd.to_string(), "simd");
+        assert_eq!(KernelKind::Auto.to_string(), "auto");
+        assert_eq!(KernelKind::default(), KernelKind::Scalar);
+    }
+
+    #[test]
+    fn scalar_always_builds() {
+        assert_eq!(KernelKind::Scalar.build().unwrap().name(), "scalar");
+    }
+
+    #[test]
+    fn auto_resolves_per_feature() {
+        let k = KernelKind::Auto.build().unwrap();
+        if cfg!(feature = "simd") {
+            assert_eq!(k.name(), "simd");
+        } else {
+            assert_eq!(k.name(), "scalar");
+        }
+    }
+
+    #[test]
+    fn simd_selection_gated_by_feature() {
+        match KernelKind::Simd.build() {
+            Ok(k) => {
+                assert!(cfg!(feature = "simd"));
+                assert_eq!(k.name(), "simd");
+            }
+            Err(e) => {
+                assert!(!cfg!(feature = "simd"));
+                assert!(e.to_string().contains("--features simd"), "{e}");
+            }
+        }
+    }
+
+    #[test]
+    fn handles_name_their_backend() {
+        assert_eq!(scalar().name(), "scalar");
+        assert_eq!(simd().name(), "simd");
+    }
+}

@@ -1,0 +1,240 @@
+//! The scalar reference backend: the canonical hot-loop implementations.
+//!
+//! Every loop here is **the** determinism reference — `linalg::dense` and
+//! `linalg::sparse` delegate their public functions to these free
+//! functions, so there is exactly one implementation of each hot loop in
+//! the crate and [`ScalarKernel`] is bit-for-bit the pre-refactor
+//! behavior. The bitwise `Parallel ≡ Sequential` equivalence contract
+//! (`rust/tests/scheduler_equivalence.rs`) is stated over this backend.
+//!
+//! The element-wise functions ([`axpy`], [`scale_add`], [`axpy_sparse`],
+//! [`gemv_panel`]) are also shared by the SIMD backend verbatim: with one
+//! evaluation order per output element there is nothing to reassociate, so
+//! sharing is what *guarantees* those operations stay bitwise
+//! backend-invariant (pinned by `rust/tests/kernel_equivalence.rs`).
+
+use super::Kernel;
+use crate::linalg::SparseVec;
+
+/// The scalar reference backend (stateless; use [`super::scalar()`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarKernel;
+
+impl Kernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dot(&self, x: &[f64], y: &[f64]) -> f64 {
+        dot(x, y)
+    }
+
+    fn dot_sparse(&self, x: &SparseVec, w: &[f64]) -> f64 {
+        dot_sparse(x, w)
+    }
+    // axpy / scale_add / axpy_sparse / gemv_panel / hinge_subgrad_accum /
+    // score_rows: the trait's provided bodies already are the canonical
+    // scalar implementations.
+}
+
+/// Dot product `xᵀy` — four-way unrolled accumulation: breaks the serial
+/// FP dependence chain so LLVM emits vector FMAs (see EXPERIMENTS.md
+/// §Perf). The reduction order — `(s0+s1) + (s2+s3) + tail` — is the
+/// reference order every bitwise test pins.
+///
+/// # Panics
+/// Panics if `x.len() != y.len()`.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = 4 * i;
+        s0 += x[j] * y[j];
+        s1 += x[j + 1] * y[j + 1];
+        s2 += x[j + 2] * y[j + 2];
+        s3 += x[j + 3] * y[j + 3];
+    }
+    let mut tail = 0.0;
+    for j in 4 * chunks..n {
+        tail += x[j] * y[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Sparse–dense dot `⟨x, w⟩`: a single sequential accumulator over the
+/// stored entries (the gather pattern auto-vectorizes poorly, and this
+/// order is the reference the solvers' trajectories depend on).
+#[inline]
+pub fn dot_sparse(x: &SparseVec, w: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (&i, &v) in x.indices.iter().zip(&x.values) {
+        s += w[i as usize] * v as f64;
+    }
+    s
+}
+
+/// `y ← y + a·x` (element-wise).
+///
+/// # Panics
+/// Panics if `x.len() != y.len()`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y ← a·y + b·x` (element-wise).
+///
+/// # Panics
+/// Panics if `x.len() != y.len()`.
+#[inline]
+pub fn scale_add(a: f64, y: &mut [f64], b: f64, x: &[f64]) {
+    assert_eq!(x.len(), y.len(), "scale_add: length mismatch");
+    for i in 0..x.len() {
+        y[i] = a * y[i] + b * x[i];
+    }
+}
+
+/// `w ← w + a·x` for sparse `x` (scatter, element-wise).
+#[inline]
+pub fn axpy_sparse(a: f64, x: &SparseVec, w: &mut [f64]) {
+    for (&i, &v) in x.indices.iter().zip(&x.values) {
+        w[i as usize] += a * v as f64;
+    }
+}
+
+/// One destination panel of the blocked `Bᵀ`-apply (see
+/// [`Kernel::gemv_panel`] for the contract): ascending-`i` accumulation,
+/// zero coefficients skipped, the inner `k` loop a dense axpy over the
+/// panel.
+#[inline]
+pub fn gemv_panel(
+    dst: &mut [f64],
+    coeffs: &[f64],
+    coeff_stride: usize,
+    rows: usize,
+    src: &[f64],
+    src_stride: usize,
+    src_off: usize,
+) {
+    let width = dst.len();
+    for i in 0..rows {
+        let c = coeffs[i * coeff_stride];
+        if c == 0.0 {
+            continue;
+        }
+        let base = i * src_stride + src_off;
+        let panel = &src[base..base + width];
+        for (o, &s) in dst.iter_mut().zip(panel) {
+            *o += c * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kernel::Kernel;
+
+    #[test]
+    fn trait_methods_match_free_functions_bitwise() {
+        let k = ScalarKernel;
+        let x: Vec<f64> = (0..19).map(|i| (i as f64 * 0.37).sin()).collect();
+        let y: Vec<f64> = (0..19).map(|i| (i as f64 * 0.61).cos()).collect();
+        assert_eq!(k.dot(&x, &y).to_bits(), dot(&x, &y).to_bits());
+        let sp = SparseVec::new(vec![1, 4, 17], vec![0.5, -2.0, 3.25]);
+        assert_eq!(k.dot_sparse(&sp, &x).to_bits(), dot_sparse(&sp, &x).to_bits());
+        let mut a = y.clone();
+        let mut b = y.clone();
+        k.axpy(0.3, &x, &mut a);
+        axpy(0.3, &x, &mut b);
+        assert_eq!(a, b);
+        k.scale_add(0.9, &mut a, -0.2, &x);
+        scale_add(0.9, &mut b, -0.2, &x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dot_matches_reference_order() {
+        // length 7 exercises both the unrolled body and the tail loop
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let y = [1.0; 7];
+        assert_eq!(dot(&x, &y), 28.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn scale_add_blends() {
+        let mut y = vec![1.0, 2.0];
+        scale_add(0.5, &mut y, 2.0, &[3.0, -1.0]);
+        assert_eq!(y, vec![6.5, -1.0]);
+    }
+
+    #[test]
+    fn gemv_panel_accumulates_ascending_rows() {
+        // src: 3 rows × stride 4, panel = columns 1..3
+        let src = vec![
+            1.0, 2.0, 3.0, 4.0, //
+            5.0, 6.0, 7.0, 8.0, //
+            9.0, 10.0, 11.0, 12.0,
+        ];
+        // coeffs with stride 2: rows 0/1/2 → 0.5, 0.0 (skipped), 2.0
+        let coeffs = vec![0.5, 99.0, 0.0, 99.0, 2.0];
+        let mut dst = vec![100.0, 200.0];
+        gemv_panel(&mut dst, &coeffs, 2, 3, &src, 4, 1);
+        // dst += 0.5·[2,3] + 2·[10,11]
+        assert_eq!(dst, vec![100.0 + 1.0 + 20.0, 200.0 + 1.5 + 22.0]);
+    }
+
+    #[test]
+    fn gemv_panel_matches_naive_double_loop_bitwise() {
+        let mut rng = crate::rng::Rng::new(7);
+        let (rows, stride, off, width) = (5usize, 11usize, 3usize, 6usize);
+        let src: Vec<f64> = (0..rows * stride).map(|_| rng.normal()).collect();
+        let coeffs: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let mut dst = vec![0.0f64; width];
+        gemv_panel(&mut dst, &coeffs, 1, rows, &src, stride, off);
+        let mut expect = vec![0.0f64; width];
+        for i in 0..rows {
+            for k in 0..width {
+                expect[k] += coeffs[i] * src[i * stride + off + k];
+            }
+        }
+        for (a, b) in dst.iter().zip(&expect) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn hinge_provided_method_flags_violators() {
+        let k = ScalarKernel;
+        let rows = vec![
+            SparseVec::new(vec![0], vec![1.0]),  // margin 1·2 = 2 (ok)
+            SparseVec::new(vec![1], vec![1.0]),  // margin 1·0.5 (violator)
+            SparseVec::new(vec![0], vec![-1.0]), // label −1 ⇒ margin 2 (ok)
+        ];
+        let labels = vec![1i8, 1, -1];
+        let v = vec![4.0, 1.0];
+        let mut violators = Vec::new();
+        k.hinge_subgrad_accum(&v, 0.5, &rows, &labels, &[0, 1, 2, 1], &mut violators);
+        assert_eq!(violators, vec![1, 1]); // duplicates preserved in draw order
+    }
+
+    #[test]
+    fn score_rows_provided_method() {
+        let k = ScalarKernel;
+        let rows = vec![
+            SparseVec::new(vec![0, 2], vec![1.0, 2.0]),
+            SparseVec::default(),
+        ];
+        let w = vec![1.0, 0.0, -0.5];
+        let mut out = vec![0.0; 2];
+        k.score_rows(&w, 0.25, &rows, &mut out);
+        assert_eq!(out, vec![1.0 - 1.0 + 0.25, 0.25]);
+    }
+}

@@ -5,12 +5,22 @@
 //! sparse-dense products over LIBSVM-style index/value pairs. They are kept
 //! here — allocation-free and `#[inline]`-friendly — so the per-cycle hot
 //! loop never allocates (see DESIGN.md §Perf).
+//!
+//! Since the kernel-layer refactor the *implementations* of every hot loop
+//! live in [`kernel`] (one object-safe [`kernel::Kernel`] trait, a scalar
+//! reference backend and an opt-in lane-split SIMD backend); the free
+//! functions in [`dense`] and [`sparse`] are thin delegates onto the
+//! scalar reference so non-hot callers keep their ergonomic API and
+//! bit-for-bit behavior. Hot paths hold a `&'static dyn Kernel` and
+//! dispatch through it — see DESIGN.md §Kernel backends.
 
 pub mod dense;
+pub mod kernel;
 pub mod sparse;
 
 pub use dense::{
     add_assign, axpy, dot, l1_norm, l2_norm, l2_norm_sq, linf_dist, project_to_ball, scale,
     scale_assign, sub_assign,
 };
+pub use kernel::{Kernel, KernelKind};
 pub use sparse::SparseVec;

@@ -53,22 +53,19 @@ impl SparseVec {
         self.indices.last().map_or(0, |&i| i as usize + 1)
     }
 
-    /// Sparse–dense dot product `⟨self, w⟩`. Out-of-range indices panic.
+    /// Sparse–dense dot product `⟨self, w⟩` — the scalar reference
+    /// reduction ([`crate::linalg::kernel::scalar::dot_sparse`]).
+    /// Out-of-range indices panic.
     #[inline]
     pub fn dot_dense(&self, w: &[f64]) -> f64 {
-        let mut s = 0.0;
-        for (&i, &v) in self.indices.iter().zip(&self.values) {
-            s += w[i as usize] * v as f64;
-        }
-        s
+        crate::linalg::kernel::scalar::dot_sparse(self, w)
     }
 
-    /// `w ← w + a·self` (scatter-add).
+    /// `w ← w + a·self` (scatter-add; element-wise, identical in every
+    /// kernel backend).
     #[inline]
     pub fn axpy_into(&self, a: f64, w: &mut [f64]) {
-        for (&i, &v) in self.indices.iter().zip(&self.values) {
-            w[i as usize] += a * v as f64;
-        }
+        crate::linalg::kernel::scalar::axpy_sparse(a, self, w)
     }
 
     /// Squared Euclidean norm.

@@ -65,13 +65,14 @@ fn print_help() {
          \x20              --topology complete|ring|torus|k-regular|small-world\n\
          \x20              --backend native|xla --batch-size N --local-steps N --seed N\n\
          \x20              --scheduler sequential|parallel|async --threads N\n\
+         \x20              --kernel scalar|simd|auto (simd needs --features simd)\n\
          \x20              --save FILE to persist the consensus model artifact)\n\
          \x20 serve        batch-score stdin rows against a saved model\n\
          \x20              (--model FILE required; --shards N --batch N\n\
-         \x20              --format auto|libsvm|dense --scores; one prediction\n\
-         \x20              per input line on stdout)\n\
+         \x20              --format auto|libsvm|dense --kernel scalar|simd|auto\n\
+         \x20              --scores; one prediction per input line on stdout)\n\
          \x20 baseline     run a solver centrally (--solver pegasos|svm-sgd|svm-perf|dcd,\n\
-         \x20              same dataset options)\n\
+         \x20              --kernel scalar|simd|auto, same dataset options)\n\
          \x20 experiment   regenerate paper artifacts: table3 | table4 | table5 | figures |\n\
          \x20              mixing | bound | rounds | topology | churn  (--scale F --nodes N --trials N\n\
          \x20              --only a,b,... --out DIR --max-iterations N)\n\
@@ -114,6 +115,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.scheduler = s.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     }
     cfg.threads = args.get_parsed("threads", cfg.threads).map_err(err)?;
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = k.parse().map_err(|e: String| anyhow::anyhow!("--kernel: {e}"))?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -126,8 +130,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let scale = cfg.scale;
     println!(
-        "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} trials={}",
-        cfg.dataset, cfg.scale, cfg.nodes, cfg.topology, cfg.backend, cfg.scheduler, cfg.trials
+        "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} kernel={} trials={}",
+        cfg.dataset,
+        cfg.scale,
+        cfg.nodes,
+        cfg.topology,
+        cfg.backend,
+        cfg.scheduler,
+        cfg.kernel,
+        cfg.trials
     );
     let runner = GadgetRunner::new(cfg)?;
     println!(
@@ -187,8 +198,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .parse()
             .map_err(|e: String| anyhow::anyhow!("--format: {e}"))?,
         emit_scores: args.has_flag("scores"),
+        kernel: match args.get("kernel") {
+            Some(k) => k.parse().map_err(|e: String| anyhow::anyhow!("--kernel: {e}"))?,
+            None => cfg.kernel,
+        },
     };
     let artifact = gadget::serve::ModelArtifact::load(model_path)?;
+    // (run_serve emits the self-describing startup line on stderr — it is
+    // where shards/kernel are resolved; only the path is known just here.)
+    eprintln!("serve: model={model_path}");
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let stats = gadget::serve::run_serve(
@@ -211,26 +229,41 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     let lambda = runner.lambda();
     let train = runner.train_data();
     let test = runner.test_data();
+    // `--kernel` reaches the centralized baselines too, so kernel A/B
+    // numbers can be taken on the exact solvers the tables use.
+    let kernel = cfg.kernel.build()?;
     let mut solver: Box<dyn Solver> = match which.as_str() {
-        "pegasos" => Box::new(gadget::solver::Pegasos::new(gadget::solver::PegasosParams {
-            lambda,
-            iterations: experiments::table3::centralized_iterations(train.len()),
-            batch_size: cfg.batch_size,
-            project: true,
-            seed: cfg.seed,
-        })),
-        "svm-sgd" => Box::new(gadget::solver::SvmSgd::new(gadget::solver::SvmSgdParams {
-            lambda,
-            epochs: 10,
-            seed: cfg.seed,
-        })),
-        "svm-perf" => Box::new(gadget::solver::SvmPerf::new(gadget::solver::SvmPerfParams {
-            lambda,
-            ..Default::default()
-        })),
-        "dcd" => {
-            Box::new(gadget::solver::DualCoordinateDescent::new(lambda, 200, 1e-8, cfg.seed))
+        "pegasos" => Box::new(gadget::solver::Pegasos::with_kernel(
+            gadget::solver::PegasosParams {
+                lambda,
+                iterations: experiments::table3::centralized_iterations(train.len()),
+                batch_size: cfg.batch_size,
+                project: true,
+                seed: cfg.seed,
+            },
+            kernel,
+        )),
+        "svm-sgd" => Box::new(gadget::solver::SvmSgd::with_kernel(
+            gadget::solver::SvmSgdParams { lambda, epochs: 10, seed: cfg.seed },
+            kernel,
+        )),
+        "svm-perf" => {
+            // The cutting-plane solver runs on the scalar reference loops;
+            // accepting --kernel simd here would silently measure scalar —
+            // the fallback the kernel layer forbids.
+            anyhow::ensure!(
+                kernel.name() == "scalar",
+                "--solver svm-perf supports only --kernel scalar"
+            );
+            Box::new(gadget::solver::SvmPerf::new(gadget::solver::SvmPerfParams {
+                lambda,
+                ..Default::default()
+            }))
         }
+        "dcd" => Box::new(
+            gadget::solver::DualCoordinateDescent::new(lambda, 200, 1e-8, cfg.seed)
+                .with_kernel(kernel),
+        ),
         other => anyhow::bail!("unknown solver {other:?}"),
     };
     let sw = Stopwatch::new();

@@ -32,7 +32,7 @@
 //! a hand-edited artifact fails loudly rather than scoring garbage.
 
 use crate::coordinator::{GadgetReport, MulticlassReport};
-use crate::linalg::SparseVec;
+use crate::linalg::{Kernel, SparseVec};
 use crate::solver::multiclass::{argmax_decode, ovr_code_matrix};
 use crate::util::Json;
 use crate::Result;
@@ -166,7 +166,9 @@ impl ModelArtifact {
     /// Scores one row: per-class margins `⟨w_k, x⟩ + b_k`, decoded by
     /// sign (binary) or the shared argmax decoder (multiclass). The row
     /// must satisfy `x.min_dim() ≤ self.dim` — [`super::ShardedScorer`]
-    /// validates batches up front with row-indexed errors.
+    /// validates batches up front with row-indexed errors. Runs on the
+    /// scalar reference kernel; the batched hot path is
+    /// [`Self::predict_batch_with`].
     pub fn predict(&self, x: &SparseVec) -> Prediction {
         if !self.is_multiclass() {
             let score = x.dot_dense(&self.weights[0]) + self.bias[0];
@@ -179,6 +181,53 @@ impl ModelArtifact {
             .map(|(w, &b)| x.dot_dense(w) + b);
         let (label, score) = argmax_decode(scores).expect("validate() guarantees K ≥ 1");
         Prediction { label: label as i64, score }
+    }
+
+    /// Scores a batch of rows on an explicit kernel backend, one
+    /// [`Prediction`] per row in order — the [`super::ShardedScorer`] hot
+    /// path. Margins go through [`Kernel::score_rows`] class-major (one
+    /// batched sweep per weight row); decoding is sign (binary) or the
+    /// shared [`argmax_decode`] (multiclass), exactly as
+    /// [`Self::predict`]. On the scalar kernel every prediction is
+    /// bitwise identical to the per-row `predict` loop; on the SIMD
+    /// kernel scores differ within the kernel's documented ULP bound
+    /// (`rust/tests/kernel_equivalence.rs` pins both statements).
+    ///
+    /// # Panics
+    /// Panics if `rows.len() != out.len()`.
+    pub fn predict_batch_with(
+        &self,
+        kernel: &'static dyn Kernel,
+        rows: &[SparseVec],
+        out: &mut [Prediction],
+    ) {
+        assert_eq!(rows.len(), out.len(), "predict_batch_with: length mismatch");
+        let n = rows.len();
+        if n == 0 {
+            return;
+        }
+        // One margins allocation per *chunk* (not per row), amortized over
+        // the whole batched sweep — the shard tasks that call this are
+        // transient per-request closures, so there is no longer-lived home
+        // for the scratch without adding per-shard mutable state.
+        if !self.is_multiclass() {
+            let mut margins = vec![0.0f64; n];
+            kernel.score_rows(&self.weights[0], self.bias[0], rows, &mut margins);
+            for (o, &score) in out.iter_mut().zip(&margins) {
+                *o = Prediction { label: if score >= 0.0 { 1 } else { -1 }, score };
+            }
+            return;
+        }
+        let k = self.classes();
+        let mut margins = vec![0.0f64; k * n];
+        for (c, (w, &b)) in self.weights.iter().zip(&self.bias).enumerate() {
+            kernel.score_rows(w, b, rows, &mut margins[c * n..(c + 1) * n]);
+        }
+        for (r, o) in out.iter_mut().enumerate() {
+            let (label, score) = argmax_decode((0..k).map(|c| margins[c * n + r]))
+                .expect("validate() guarantees K ≥ 1");
+            *o = Prediction { label: label as i64, score };
+        }
     }
 
     /// Serializes to the version-2 JSON document.

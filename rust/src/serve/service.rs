@@ -60,7 +60,7 @@ impl std::str::FromStr for RowFormat {
 }
 
 /// Service configuration (the `[serve]` config section / `--shards`
-/// `--batch` CLI flags resolve into this).
+/// `--batch` `--kernel` CLI flags resolve into this).
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Shard replica count (0 = one per available core).
@@ -71,11 +71,21 @@ pub struct ServeOptions {
     pub format: RowFormat,
     /// Emit the raw winning score as a second output column.
     pub emit_scores: bool,
+    /// Kernel backend for the margin dots (`simd` requires `--features
+    /// simd`; scores then differ from scalar within the kernel's ULP
+    /// bound, decoded labels agree except on knife-edge margins).
+    pub kernel: crate::linalg::KernelKind,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { shards: 0, batch: 256, format: RowFormat::Auto, emit_scores: false }
+        Self {
+            shards: 0,
+            batch: 256,
+            format: RowFormat::Auto,
+            emit_scores: false,
+            kernel: crate::linalg::KernelKind::Scalar,
+        }
     }
 }
 
@@ -188,9 +198,21 @@ pub fn run_serve(
 ) -> Result<ServeStats> {
     ensure!(opts.batch >= 1, "serve: batch must be ≥ 1");
     let shards = crate::coordinator::sched::resolve_threads(opts.shards);
+    let kernel = opts.kernel.build()?;
     let multiclass = model.is_multiclass();
     let dim = model.dim;
-    let scorer = ShardedScorer::new(model, shards);
+    // Startup line on stderr, emitted HERE — where shards and kernel are
+    // actually resolved — so the self-describing log can never drift from
+    // the served configuration (ci.sh and the CLI tests grep it).
+    eprintln!(
+        "serve: dim={} classes={} shards={} batch={} kernel={}",
+        dim,
+        model.classes(),
+        shards,
+        opts.batch,
+        kernel.name()
+    );
+    let scorer = ShardedScorer::with_kernel(model, shards, kernel);
     let mut stats = ServeStats { rows: 0, batches: 0, shards: scorer.shards() };
 
     let mut pending: Vec<SparseVec> = Vec::with_capacity(opts.batch);

@@ -20,7 +20,7 @@
 //! scheduler-equivalence matrix.
 
 use super::artifact::{ModelArtifact, Prediction};
-use crate::linalg::SparseVec;
+use crate::linalg::{Kernel, SparseVec};
 use crate::pool::{ParallelExec, Task, WorkerPool, SERIAL_EXEC};
 use crate::Result;
 use anyhow::ensure;
@@ -35,20 +35,38 @@ pub struct ShardedScorer {
     /// The dispatch pool; `None` at one shard — scoring runs inline on
     /// the caller thread with no worker threads spawned at all.
     pool: Option<WorkerPool>,
+    /// The kernel backend every shard task's margin dots run on.
+    kernel: &'static dyn Kernel,
 }
 
 impl ShardedScorer {
     /// Builds a scorer with `shards` shard slots (clamped to ≥ 1) and,
-    /// for `shards > 1`, the worker pool they score on.
+    /// for `shards > 1`, the worker pool they score on; margins run on
+    /// the scalar reference kernel (see [`Self::with_kernel`]).
     pub fn new(model: ModelArtifact, shards: usize) -> Self {
+        Self::with_kernel(model, shards, crate::linalg::kernel::scalar())
+    }
+
+    /// [`Self::new`] with an explicit kernel backend (`[serve]` /
+    /// `--kernel` resolve here via [`super::run_serve`]).
+    pub fn with_kernel(
+        model: ModelArtifact,
+        shards: usize,
+        kernel: &'static dyn Kernel,
+    ) -> Self {
         let shards = shards.max(1);
         let pool = if shards > 1 { Some(WorkerPool::new(shards)) } else { None };
-        Self { model, shards, pool }
+        Self { model, shards, pool, kernel }
     }
 
     /// Shard count.
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// The kernel backend scoring runs on.
+    pub fn kernel(&self) -> &'static dyn Kernel {
+        self.kernel
     }
 
     /// The model being served.
@@ -85,15 +103,14 @@ impl ShardedScorer {
             return Ok(out);
         }
         let model = &self.model;
+        let kernel = self.kernel;
         let chunk = (rows.len() + self.shards - 1) / self.shards;
         let tasks: Vec<Task<'_>> = rows
             .chunks(chunk)
             .zip(out.chunks_mut(chunk))
             .map(|(row_chunk, out_chunk)| {
                 Box::new(move || -> Result<()> {
-                    for (o, r) in out_chunk.iter_mut().zip(row_chunk) {
-                        *o = model.predict(r);
-                    }
+                    model.predict_batch_with(kernel, row_chunk, out_chunk);
                     Ok(())
                 }) as Task<'_>
             })
@@ -160,6 +177,40 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("row 1"), "{msg}");
         assert!(msg.contains("model dim 4"), "{msg}");
+    }
+
+    #[test]
+    fn batched_scoring_matches_per_row_predict_bitwise() {
+        // The kernel-batched chunk scorer must reproduce the per-row
+        // `predict` loop exactly on the scalar (default) backend.
+        let batch = rows(17, 7);
+        let scorer = ShardedScorer::new(model(7), 3);
+        assert_eq!(scorer.kernel().name(), "scalar");
+        let got = scorer.score_batch(&batch).unwrap();
+        for (g, r) in got.iter().zip(&batch) {
+            let p = scorer.model().predict(r);
+            assert_eq!(g.label, p.label);
+            assert_eq!(g.score.to_bits(), p.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn simd_kernel_scorer_agrees_on_labels() {
+        // Cross-backend smoke: scores may differ in low bits, decoded
+        // labels on comfortably-margined rows may not.
+        let batch = rows(29, 7);
+        let scalar = ShardedScorer::new(model(7), 2);
+        let simd =
+            ShardedScorer::with_kernel(model(7), 2, crate::linalg::kernel::simd());
+        assert_eq!(simd.kernel().name(), "simd");
+        let a = scalar.score_batch(&batch).unwrap();
+        let b = simd.score_batch(&batch).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            // every margin in `rows()` is far from the decision boundary
+            assert!(x.score.abs() > 1e-6);
+            assert_eq!(x.label, y.label);
+            assert!((x.score - y.score).abs() <= 1e-9 * (1.0 + x.score.abs()));
+        }
     }
 
     #[test]

@@ -23,15 +23,32 @@ pub struct DualCoordinateDescent {
     seed: u64,
     /// Filled by `fit`: number of epochs actually run.
     pub epochs_run: usize,
+    /// Kernel backend for the coordinate dots/axpys (scalar by default —
+    /// DCD is the reference optimizer, so swapping its kernel moves the
+    /// "exact optimum" within the kernel's ULP bound too).
+    kernel: &'static dyn crate::linalg::Kernel,
 }
 
 impl DualCoordinateDescent {
     /// Creates a solver for regularization `lambda`, stopping after
     /// `max_epochs` or when the maximal projected-gradient violation over
-    /// an epoch falls below `tol`.
+    /// an epoch falls below `tol` (scalar kernel).
     pub fn new(lambda: f64, max_epochs: usize, tol: f64, seed: u64) -> Self {
         assert!(lambda > 0.0, "DCD: lambda must be positive");
-        Self { lambda, max_epochs, tol, seed, epochs_run: 0 }
+        Self {
+            lambda,
+            max_epochs,
+            tol,
+            seed,
+            epochs_run: 0,
+            kernel: crate::linalg::kernel::scalar(),
+        }
+    }
+
+    /// Switches the coordinate dots/axpys onto `kernel`.
+    pub fn with_kernel(mut self, kernel: &'static dyn crate::linalg::Kernel) -> Self {
+        self.kernel = kernel;
+        self
     }
 }
 
@@ -57,7 +74,7 @@ impl Solver for DualCoordinateDescent {
                 }
                 let (x, y) = ds.sample(i);
                 // G = y·⟨w,x⟩ − 1 (gradient of the dual coordinate)
-                let g = y * x.dot_dense(&w) - 1.0;
+                let g = y * self.kernel.dot_sparse(x, &w) - 1.0;
                 // projected gradient
                 let pg = if alpha[i] <= 0.0 {
                     g.min(0.0)
@@ -72,7 +89,7 @@ impl Solver for DualCoordinateDescent {
                     let new = (old - g / qii[i]).clamp(0.0, c_upper);
                     if (new - old).abs() > 0.0 {
                         alpha[i] = new;
-                        x.axpy_into((new - old) * y, &mut w);
+                        self.kernel.axpy_sparse((new - old) * y, x, &mut w);
                     }
                 }
             }

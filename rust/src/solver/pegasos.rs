@@ -43,12 +43,19 @@ impl Default for PegasosParams {
 pub struct Pegasos {
     /// Parameters.
     pub params: PegasosParams,
+    /// Kernel backend for the margin dots (scalar reference by default).
+    kernel: &'static dyn crate::linalg::Kernel,
 }
 
 impl Pegasos {
-    /// Creates a solver with the given parameters.
+    /// Creates a solver with the given parameters (scalar kernel).
     pub fn new(params: PegasosParams) -> Self {
-        Self { params }
+        Self { params, kernel: crate::linalg::kernel::scalar() }
+    }
+
+    /// Creates a solver whose margin dots run on `kernel`.
+    pub fn with_kernel(params: PegasosParams, kernel: &'static dyn crate::linalg::Kernel) -> Self {
+        Self { params, kernel }
     }
 
     /// Runs `fit` but also invokes `snapshot(t, w)` every `every` steps —
@@ -67,18 +74,20 @@ impl Pegasos {
         let mut rng = Rng::new(p.seed);
         let mut w = ScaledVector::zeros(ds.dim);
         let radius = 1.0 / p.lambda.sqrt();
+        // Batch scratch reused across iterations (allocation-free loop).
+        let mut batch_idx: Vec<usize> = Vec::with_capacity(p.batch_size);
+        let mut violators: Vec<usize> = Vec::with_capacity(p.batch_size);
 
         for t in 1..=p.iterations {
             let alpha = 1.0 / (p.lambda * t as f64);
             // Accumulate the violator sub-gradient for this batch *before*
             // shrinking (the update uses wₜ, not the shrunk vector).
-            // We gather (index, margin) first to avoid borrowing issues.
             let shrink = 1.0 - p.lambda * alpha; // = 1 - 1/t
             let step = alpha / p.batch_size as f64;
             if p.batch_size == 1 {
                 let i = rng.below(ds.len());
                 let (x, y) = ds.sample(i);
-                let margin = y * w.dot_sparse(x);
+                let margin = y * w.dot_sparse_k(x, self.kernel);
                 if shrink != 0.0 {
                     w.scale_by(shrink);
                 } else {
@@ -88,15 +97,21 @@ impl Pegasos {
                     w.add_sparse(step * y, x);
                 }
             } else {
-                // batch: record violator indices at wₜ, then update
-                let mut violators: Vec<usize> = Vec::with_capacity(p.batch_size);
+                // batch: sample indices (same draw order as the per-sample
+                // loop), flag violators at wₜ in one kernel call, update.
+                batch_idx.clear();
                 for _ in 0..p.batch_size {
-                    let i = rng.below(ds.len());
-                    let (x, y) = ds.sample(i);
-                    if y * w.dot_sparse(x) < 1.0 {
-                        violators.push(i);
-                    }
+                    batch_idx.push(rng.below(ds.len()));
                 }
+                violators.clear();
+                self.kernel.hinge_subgrad_accum(
+                    w.storage(),
+                    w.scale(),
+                    &ds.rows,
+                    &ds.labels,
+                    &batch_idx,
+                    &mut violators,
+                );
                 if shrink != 0.0 {
                     w.scale_by(shrink);
                 } else {

@@ -42,10 +42,25 @@ impl ScaledVector {
         self.scale * self.scale * self.norm_sq_v
     }
 
-    /// `⟨w, x⟩` for sparse `x` — O(nnz).
+    /// `⟨w, x⟩` for sparse `x` — O(nnz), on the scalar reference kernel.
     #[inline]
     pub fn dot_sparse(&self, x: &crate::linalg::SparseVec) -> f64 {
         self.scale * x.dot_dense(&self.v)
+    }
+
+    /// `⟨w, x⟩` on an explicit kernel backend — the hot-path variant the
+    /// solvers use ([`Self::dot_sparse`] ≡ this on the scalar kernel).
+    #[inline]
+    pub fn dot_sparse_k(&self, x: &crate::linalg::SparseVec, kernel: &dyn crate::linalg::Kernel) -> f64 {
+        self.scale * kernel.dot_sparse(x, &self.v)
+    }
+
+    /// The raw (unscaled) dense storage `v` — what kernel-backed batch
+    /// operations (e.g. [`crate::linalg::Kernel::hinge_subgrad_accum`])
+    /// read together with [`Self::scale`].
+    #[inline]
+    pub fn storage(&self) -> &[f64] {
+        &self.v
     }
 
     /// `w ← c·w` — O(1). Re-densifies if the scale underflows (the

@@ -35,12 +35,19 @@ impl Default for SvmSgdParams {
 pub struct SvmSgd {
     /// Parameters.
     pub params: SvmSgdParams,
+    /// Kernel backend for the margin dots (scalar reference by default).
+    kernel: &'static dyn crate::linalg::Kernel,
 }
 
 impl SvmSgd {
-    /// Creates a solver with the given parameters.
+    /// Creates a solver with the given parameters (scalar kernel).
     pub fn new(params: SvmSgdParams) -> Self {
-        Self { params }
+        Self { params, kernel: crate::linalg::kernel::scalar() }
+    }
+
+    /// Creates a solver whose margin dots run on `kernel`.
+    pub fn with_kernel(params: SvmSgdParams, kernel: &'static dyn crate::linalg::Kernel) -> Self {
+        Self { params, kernel }
     }
 
     /// Bottou's skip-ahead heuristic for `t₀`: pick it so the initial step
@@ -74,7 +81,7 @@ impl Solver for SvmSgd {
             for &i in &order {
                 let eta = 1.0 / (p.lambda * (t + t0));
                 let (x, y) = ds.sample(i);
-                let margin = y * w.dot_sparse(x);
+                let margin = y * w.dot_sparse_k(x, self.kernel);
                 // regularization shrink: w ← (1 − ηλ)·w
                 let shrink = 1.0 - eta * p.lambda;
                 if shrink > 0.0 {

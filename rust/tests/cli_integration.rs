@@ -282,6 +282,48 @@ fn train_save_then_serve_scores_a_piped_batch() {
 }
 
 #[test]
+fn serve_kernel_flag_reports_backend_and_gates_simd() {
+    let dir = std::env::temp_dir().join(format!("gadget-serve-k-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    let model_path = model.to_str().unwrap();
+    std::fs::write(
+        &model,
+        r#"{"format":"gadget-model","version":2,"dim":3,"classes":1,"weights":[[1,-1,0.5]],"bias":[0]}"#,
+    )
+    .unwrap();
+
+    // the startup line names the active backend (self-describing logs)
+    let (ok, out, stderr) =
+        run_piped(&["serve", "--model", model_path, "--kernel", "scalar"], "1:2\n");
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(out, "+1\n");
+    assert!(stderr.contains("kernel=scalar"), "{stderr}");
+
+    // --kernel simd: selectable exactly when the feature is compiled in,
+    // a clear error naming the missing feature otherwise (never a silent
+    // scalar fallback)
+    let (ok, out, stderr) =
+        run_piped(&["serve", "--model", model_path, "--kernel", "simd"], "1:2\n");
+    if cfg!(feature = "simd") {
+        assert!(ok, "stderr: {stderr}");
+        assert_eq!(out, "+1\n");
+        assert!(stderr.contains("kernel=simd"), "{stderr}");
+    } else {
+        assert!(!ok, "simd selection must fail without --features simd");
+        assert!(stderr.contains("--features simd"), "{stderr}");
+    }
+
+    // unknown kernel name: parse error listing the choices
+    let (ok, _, stderr) =
+        run_piped(&["serve", "--model", model_path, "--kernel", "warp"], "");
+    assert!(!ok);
+    assert!(stderr.contains("scalar | simd | auto"), "{stderr}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn serve_rejects_malformed_input_and_bad_artifacts() {
     let dir = std::env::temp_dir().join(format!("gadget-serve-neg-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

@@ -1,0 +1,334 @@
+//! The two-tier kernel equivalence contract (`linalg::kernel`).
+//!
+//! Tier 1 — **bitwise**: the scalar backend is bit-for-bit the reference
+//! loops (pinned transitively by `scheduler_equivalence`), and the
+//! element-wise operations (`axpy`, `scale_add`, `axpy_sparse`,
+//! `gemv_panel`) are bitwise identical on *every* backend because they
+//! have exactly one evaluation order per output element.
+//!
+//! Tier 2 — **ULP-bounded**: the SIMD backend's reductions (`dot`,
+//! `dot_sparse`, and everything built on them) reassociate, so instead of
+//! bit equality they carry the documented bound
+//!
+//! ```text
+//! |simd − scalar| ≤ 4·n·ε·Σ|products|        (ε = f64::EPSILON)
+//! ```
+//!
+//! — within `4n` ulps of the absolute-product mass (see
+//! `rust/src/linalg/kernel/simd.rs` for the derivation). This suite pins
+//! both tiers on adversarial inputs: denormals, `-0.0`, mixed magnitudes
+//! with heavy cancellation, and non-multiple-of-lane lengths. It runs in
+//! the default build too — the SIMD *type* always compiles; only runtime
+//! selection is feature-gated — so `--features simd` and the default
+//! tier-1 run exercise identical arithmetic.
+
+use gadget::linalg::kernel;
+use gadget::linalg::SparseVec;
+use gadget::rng::Rng;
+use gadget::serve::{ModelArtifact, ScalingMeta, ShardedScorer};
+
+/// The documented reduction bound: |a − b| ≤ 4·n·ε·mass (plus one
+/// denormal quantum so zero-mass cases compare exactly-equal-or-equal).
+fn assert_dot_bound(label: &str, n: usize, simd: f64, scalar: f64, abs_mass: f64) {
+    let tol = 4.0 * n as f64 * f64::EPSILON * abs_mass + f64::MIN_POSITIVE;
+    assert!(
+        (simd - scalar).abs() <= tol,
+        "{label}: n={n} |{simd} − {scalar}| = {} > {tol}",
+        (simd - scalar).abs()
+    );
+}
+
+/// Adversarial dense vector families, keyed by `family`.
+fn adversarial(n: usize, family: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n)
+        .map(|i| match family {
+            // plain gaussian
+            0 => rng.normal(),
+            // mixed magnitudes with cancellation pressure
+            1 => rng.normal() * 10f64.powi((i as i32 % 13) * 47 - 280),
+            // denormals and negative zero interleaved
+            2 => match i % 4 {
+                0 => f64::MIN_POSITIVE * rng.normal(),
+                1 => -0.0,
+                2 => f64::MIN_POSITIVE / 8.0,
+                _ => rng.normal() * 1e-300,
+            },
+            // alternating huge/tiny so lane partial sums straddle scales
+            _ => {
+                if i % 2 == 0 {
+                    rng.normal() * 1e150
+                } else {
+                    rng.normal() * 1e-150
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn dense_dot_within_ulp_bound_on_adversarial_inputs() {
+    let (s, v) = (kernel::scalar(), kernel::simd());
+    let mut rng = Rng::new(41);
+    // lengths straddle every lane phase of both backends (4- and 8-lane)
+    for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100, 1021] {
+        for family in 0..4 {
+            let x = adversarial(n, family, &mut rng);
+            let y = adversarial(n, (family + 1) % 4, &mut rng);
+            let mass: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+            assert_dot_bound(
+                &format!("dot family {family}"),
+                n,
+                v.dot(&x, &y),
+                s.dot(&x, &y),
+                mass,
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_dot_within_ulp_bound_on_adversarial_inputs() {
+    let (s, v) = (kernel::scalar(), kernel::simd());
+    let mut rng = Rng::new(43);
+    for nnz in [0usize, 1, 3, 4, 5, 7, 8, 9, 13, 40, 77] {
+        for family in 0..4 {
+            let dim = (nnz * 3).max(8);
+            let w = adversarial(dim, family, &mut rng);
+            let idx: Vec<u32> = if nnz == 0 {
+                Vec::new()
+            } else {
+                rng.sorted_subset(dim, nnz)
+            };
+            let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+            let x = SparseVec::new(idx.clone(), vals.clone());
+            let mass: f64 = idx
+                .iter()
+                .zip(&vals)
+                .map(|(&i, &val)| (w[i as usize] * val as f64).abs())
+                .sum();
+            assert_dot_bound(
+                &format!("dot_sparse family {family}"),
+                nnz,
+                v.dot_sparse(&x, &w),
+                s.dot_sparse(&x, &w),
+                mass,
+            );
+        }
+    }
+}
+
+#[test]
+fn element_wise_ops_are_bitwise_backend_invariant() {
+    let (s, v) = (kernel::scalar(), kernel::simd());
+    let mut rng = Rng::new(47);
+    for n in [1usize, 7, 8, 23, 129] {
+        for family in 0..4 {
+            let x = adversarial(n, family, &mut rng);
+            let base = adversarial(n, (family + 2) % 4, &mut rng);
+            let (mut ys, mut yv) = (base.clone(), base.clone());
+            s.axpy(-1.75, &x, &mut ys);
+            v.axpy(-1.75, &x, &mut yv);
+            for (a, b) in ys.iter().zip(&yv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy n={n} family={family}");
+            }
+            s.scale_add(0.3, &mut ys, 2.5, &x);
+            v.scale_add(0.3, &mut yv, 2.5, &x);
+            for (a, b) in ys.iter().zip(&yv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "scale_add n={n} family={family}");
+            }
+            let nnz = (n / 2).max(1).min(n);
+            let idx = rng.sorted_subset(n, nnz);
+            let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+            let sp = SparseVec::new(idx, vals);
+            s.axpy_sparse(0.6, &sp, &mut ys);
+            v.axpy_sparse(0.6, &sp, &mut yv);
+            for (a, b) in ys.iter().zip(&yv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy_sparse n={n} family={family}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemv_panel_is_bitwise_backend_invariant() {
+    let (s, v) = (kernel::scalar(), kernel::simd());
+    let mut rng = Rng::new(53);
+    let (rows, stride) = (6usize, 64usize);
+    let src: Vec<f64> = (0..rows * stride).map(|_| rng.normal()).collect();
+    // strided coefficient view with embedded zeros (the skip path)
+    let mut coeffs: Vec<f64> = (0..rows * 3).map(|_| rng.normal()).collect();
+    coeffs[3] = 0.0; // row 1 at stride 3
+    for (off, width) in [(0usize, 64usize), (5, 17), (40, 24), (63, 1)] {
+        let mut ds = vec![1.0f64; width];
+        let mut dv = vec![1.0f64; width];
+        s.gemv_panel(&mut ds, &coeffs, 3, rows, &src, stride, off);
+        v.gemv_panel(&mut dv, &coeffs, 3, rows, &src, stride, off);
+        for (a, b) in ds.iter().zip(&dv) {
+            assert_eq!(a.to_bits(), b.to_bits(), "gemv_panel off={off} width={width}");
+        }
+    }
+}
+
+#[test]
+fn hinge_violator_sets_agree_away_from_the_threshold() {
+    // Margins are reductions, so the two backends may disagree on a
+    // violator only when its margin sits within the dot bound of exactly
+    // 1 — on generic data that band is empty and the sets must be equal.
+    let (s, v) = (kernel::scalar(), kernel::simd());
+    let mut rng = Rng::new(59);
+    for case in 0..20 {
+        let dim = rng.range(4, 40);
+        let n = rng.range(3, 30);
+        let rows: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let nnz = rng.range(1, dim.min(9));
+                let idx = rng.sorted_subset(dim, nnz);
+                let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+                SparseVec::new(idx, vals)
+            })
+            .collect();
+        let labels: Vec<i8> = (0..n).map(|_| if rng.below(2) == 0 { 1 } else { -1 }).collect();
+        let w: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let scale = 0.75;
+        let batch: Vec<usize> = (0..n * 2).map(|_| rng.below(n)).collect();
+        let (mut viol_s, mut viol_v) = (Vec::new(), Vec::new());
+        s.hinge_subgrad_accum(&w, scale, &rows, &labels, &batch, &mut viol_s);
+        v.hinge_subgrad_accum(&w, scale, &rows, &labels, &batch, &mut viol_v);
+        // knife-edge guard: only accept a set mismatch if some margin is
+        // within 1e-9 of the threshold (never happens on this data)
+        if viol_s != viol_v {
+            let near_edge = batch.iter().any(|&i| {
+                let m = labels[i] as f64 * (scale * s.dot_sparse(&rows[i], &w));
+                (m - 1.0).abs() < 1e-9
+            });
+            assert!(near_edge, "case {case}: violator sets diverged off-threshold");
+        }
+    }
+}
+
+fn toy_model(dim: usize, classes: usize, rng: &mut Rng) -> ModelArtifact {
+    let weights: Vec<Vec<f64>> = (0..classes)
+        .map(|_| (0..dim).map(|_| rng.normal()).collect())
+        .collect();
+    let bias = vec![0.0; classes];
+    ModelArtifact::new(dim, weights, bias, ScalingMeta::default()).unwrap()
+}
+
+#[test]
+fn serve_predictions_agree_across_kernels_on_synthetic_rows() {
+    // The serve smoke contract: `--kernel scalar` and `--kernel simd`
+    // decode the same labels on the synthetic corpus (scores differ only
+    // within the dot bound; label flips require a knife-edge margin).
+    let mut rng = Rng::new(61);
+    for &classes in &[1usize, 3] {
+        let model = toy_model(24, classes, &mut rng);
+        let rows: Vec<SparseVec> = (0..60)
+            .map(|_| {
+                let nnz = rng.range(1, 10);
+                let idx = rng.sorted_subset(24, nnz);
+                let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+                SparseVec::new(idx, vals)
+            })
+            .collect();
+        let scalar = ShardedScorer::new(model.clone(), 2);
+        let simd = ShardedScorer::with_kernel(model, 3, kernel::simd());
+        let a = scalar.score_batch(&rows).unwrap();
+        let b = simd.score_batch(&rows).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            if x.label != y.label && classes == 1 {
+                // a binary flip requires a margin within the dot bound of 0
+                assert!(x.score.abs() < 1e-9, "row {i}: label flipped at |score| {}", x.score);
+            }
+            // Winning scores stay within the bound. (When multiclass labels
+            // differ the winners are near-tied classes, so this covers the
+            // "no flip on a clear margin" claim there too.)
+            assert!(
+                (x.score - y.score).abs() <= 1e-9 * (1.0 + x.score.abs()),
+                "row {i}: score drift {} vs {}",
+                x.score,
+                y.score
+            );
+        }
+    }
+}
+
+#[test]
+fn scalar_backend_is_bitwise_the_reference_loops() {
+    // ScalarKernel::dot/dot_sparse must be the exact free functions the
+    // rest of the crate (linalg::dense::dot, SparseVec::dot_dense) runs —
+    // the anchor of the tier-1 bitwise contract.
+    let s = kernel::scalar();
+    let mut rng = Rng::new(67);
+    for n in [0usize, 1, 5, 7, 64, 257] {
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        assert_eq!(s.dot(&x, &y).to_bits(), gadget::linalg::dot(&x, &y).to_bits());
+        if n > 0 {
+            let nnz = (n / 2).max(1);
+            let idx = rng.sorted_subset(n, nnz);
+            let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+            let sp = SparseVec::new(idx, vals);
+            assert_eq!(s.dot_sparse(&sp, &x).to_bits(), sp.dot_dense(&x).to_bits());
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+mod simd_selected_end_to_end {
+    //! Runs only under `--features simd`: the full trainer with
+    //! `[runtime] kernel = "simd"` selected the supported way.
+
+    use gadget::config::{ExperimentConfig, KernelKind, SchedulerKind};
+    use gadget::coordinator::GadgetRunner;
+
+    fn cfg(kernel: KernelKind) -> ExperimentConfig {
+        ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(0.05)
+            .nodes(4)
+            .trials(1)
+            .max_iterations(80)
+            .epsilon(5e-3)
+            .seed(7)
+            .kernel(kernel)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn simd_kernel_trains_end_to_end_and_tracks_scalar() {
+        let scalar = GadgetRunner::new(cfg(KernelKind::Scalar)).unwrap().run().unwrap();
+        let simd = GadgetRunner::new(cfg(KernelKind::Simd)).unwrap().run().unwrap();
+        // Different association ⇒ not bitwise; but the trajectory must
+        // stay statistically equivalent on a learnable problem.
+        assert!(simd.test_accuracy > 0.75, "simd accuracy {}", simd.test_accuracy);
+        assert!(
+            (simd.test_accuracy - scalar.test_accuracy).abs() < 0.1,
+            "simd {} vs scalar {}",
+            simd.test_accuracy,
+            scalar.test_accuracy
+        );
+    }
+
+    #[test]
+    fn simd_parallel_is_bitwise_identical_to_simd_sequential() {
+        // The Parallel ≡ Sequential contract holds per-kernel: parallelism
+        // only moves work, whichever backend computes it.
+        let seq = GadgetRunner::new(cfg(KernelKind::Simd)).unwrap().run().unwrap();
+        let par_cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Parallel,
+            threads: 3,
+            ..cfg(KernelKind::Simd)
+        };
+        let par = GadgetRunner::new(par_cfg).unwrap().run().unwrap();
+        assert_eq!(seq.iterations, par.iterations);
+        for (a, b) in seq.trials[0].consensus_w.iter().zip(&par.trials[0].consensus_w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn auto_resolves_to_simd_under_the_feature() {
+        assert_eq!(KernelKind::Auto.build().unwrap().name(), "simd");
+    }
+}

@@ -27,8 +27,24 @@ fn base_cfg() -> ExperimentConfig {
         .max_iterations(150)
         .epsilon(5e-3)
         .seed(23)
+        .kernel(test_kernel())
         .build()
         .unwrap()
+}
+
+/// Kernel backend the sweep trains on. `GADGET_KERNEL=scalar|simd|auto`
+/// pins it (`ci.sh` re-runs the suite under `scalar` explicitly, and may
+/// run `simd` on `--features simd` builds); default scalar. The
+/// `Parallel ≡ Sequential` bitwise contract holds **per kernel** — both
+/// schedulers compute on the same backend, and parallelism only moves
+/// work — so every equivalence assertion below is valid for any pinned
+/// kernel, even though cross-kernel results differ (that contract lives
+/// in `kernel_equivalence.rs`).
+fn test_kernel() -> gadget::config::KernelKind {
+    match std::env::var("GADGET_KERNEL") {
+        Ok(v) => v.parse().expect("GADGET_KERNEL must be scalar|simd|auto"),
+        Err(_) => gadget::config::KernelKind::Scalar,
+    }
 }
 
 fn bits(w: &[f64]) -> Vec<u64> {
