@@ -18,9 +18,8 @@ use gadget::coordinator::sched::{
 };
 use gadget::pool::WorkerPool;
 use gadget::coordinator::NodeState;
-use gadget::data::partition::horizontal_split;
 use gadget::data::synthetic::{generate, DatasetSpec};
-use gadget::data::Dataset;
+use gadget::data::{Dataset, ShardStore, StaticStore};
 use gadget::gossip::PushVector;
 use gadget::harness::{bench, print_header};
 use gadget::linalg;
@@ -75,7 +74,7 @@ fn main() {
         let mut backend_native = NativeBackend::default();
         let res = bench(&format!("native step d={d} nnz={nnz}"), 5, 300, || {
             let mut ctx = StepContext {
-                shard: &shard,
+                shard: shard.view(),
                 t,
                 lambda: 1e-4,
                 batch_size: 8,
@@ -103,24 +102,22 @@ fn main() {
             project_consensus: true,
             epsilon: 1e-3,
         });
+        let store = StaticStore::split(&full, m, 5).unwrap();
         let make_nodes = || -> Vec<NodeState> {
             let root = Rng::new(5);
-            horizontal_split(&full, m, 5)
-                .into_iter()
-                .enumerate()
-                .map(|(i, sh)| {
-                    NodeState::new(i, sh, Dataset::default(), d, root.substream(i as u64))
-                })
+            (0..m)
+                .map(|i| NodeState::new(i, Dataset::default(), d, root.substream(i as u64)))
                 .collect()
         };
         let ids: Vec<usize> = (0..m).collect();
+        let store_ref: &dyn ShardStore = &store;
         let run_phase = |sched: &mut dyn Scheduler, label: &str| {
             let mut nodes = make_nodes();
             let mut t = 1usize;
             let res = bench(label, 3, 100, || {
                 sched
                     .for_each_node(&mut nodes, &ids, &|backend, _id, node| {
-                        proto.local_step(backend, node, t)
+                        proto.local_step(backend, store_ref.shard(node.id), node, t)
                     })
                     .unwrap();
                 t += 1;
@@ -274,7 +271,7 @@ fn main() {
                 let mut backend_native = NativeBackend::default();
                 let res = bench(&format!("native  b={bsz} s={steps} d=784"), 5, 200, || {
                     let mut ctx = StepContext {
-                        shard: &shard,
+                        shard: shard.view(),
                         t,
                         lambda: 1e-4,
                         batch_size: bsz,
@@ -297,7 +294,7 @@ fn main() {
                         let res =
                             bench(&format!("xla/pjrt b={bsz} s={steps} d=784"), 5, 100, || {
                                 let mut ctx = StepContext {
-                                    shard: &shard,
+                                    shard: shard.view(),
                                     t,
                                     lambda: 1e-4,
                                     batch_size: bsz,

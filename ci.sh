@@ -70,6 +70,16 @@ run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test sch
 run_hard env GADGET_POOL_THREADS=1 cargo test -q --test property_invariants prop_sharded
 run_hard env GADGET_POOL_THREADS=4 cargo test -q --test property_invariants prop_sharded
 
+# Streaming data plane: the equivalence contract extends to seeded
+# arrival schedules (ingestion is store-internal and deterministic) —
+# re-run the streaming suite at the same degenerate/multi-worker pool
+# sizes, and pin the static path against the pre-refactor reference loop
+# explicitly (store_equivalence also runs in the full suite above; the
+# explicit run keeps a filter typo elsewhere from silently skipping it).
+run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test scheduler_equivalence streaming
+run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test scheduler_equivalence streaming
+run_hard cargo test -q --test store_equivalence
+
 # Kernel-layer matrix. The feature compiles identical arithmetic — it
 # only unlocks runtime selection — so the simd build re-runs just the
 # surfaces that actually differ under the feature (the feature-gated
@@ -120,6 +130,20 @@ serve_smoke() (
     grep -q 'kernel=simd' "$tmp/err_simd.txt"
 )
 run_hard serve_smoke
+
+# Streaming smoke: `train --stream` end to end — the startup line names
+# the resolved [stream] section and the run reports accuracy. Exercises
+# the online-ingestion path through the real binary (the bitwise
+# contract for it ran above).
+stream_smoke() (
+    set -e
+    out="$(./target/release/gadget train --dataset synthetic-usps --scale 0.05 \
+        --nodes 3 --trials 1 --max-iterations 80 \
+        --stream-rate 2 --stream-max-rows 20)"
+    echo "$out" | grep -q 'stream: rate=2'
+    echo "$out" | grep -q 'test accuracy'
+)
+run_hard stream_smoke
 
 echo
 if [ "$fail" -ne 0 ]; then

@@ -59,7 +59,7 @@ fn main() -> gadget::Result<()> {
     println!("== asynchronous engine: one thread per sensor, no round barrier ==\n");
     let spec = spec_by_name("usps").unwrap();
     let split = generate(&spec, 3 ^ 0xda7a, 0.25);
-    let shards = partition::horizontal_split(&split.train, nodes, 3);
+    let shards = partition::horizontal_split(&split.train, nodes, 3)?;
     let graph = Graph::generate(TopologyKind::SmallWorld, nodes, 3);
     let engine = AsyncGossipEngine::new(AsyncParams {
         lambda: spec.lambda,

@@ -65,8 +65,8 @@ fn main() -> gadget::Result<()> {
         let central_acc = metrics::accuracy(&central.w, runner.test_data());
 
         // per-node SVM-SGD, no communication: mean node accuracy
-        let shards = partition::horizontal_split(runner.train_data(), 10, 7);
-        let test_shards = partition::horizontal_split(runner.test_data(), 10, 7 ^ 0x7e57);
+        let shards = partition::horizontal_split(runner.train_data(), 10, 7)?;
+        let test_shards = partition::horizontal_split(runner.test_data(), 10, 7 ^ 0x7e57)?;
         let mut acc_sum = 0.0;
         for (tr, te) in shards.iter().zip(&test_shards) {
             let mut sgd =

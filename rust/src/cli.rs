@@ -20,7 +20,8 @@ pub struct Args {
 
 /// Boolean switches — needed to disambiguate `--flag positional` from
 /// `--option value` without a full schema.
-pub const KNOWN_FLAGS: &[&str] = &["help", "verbose", "artifacts", "quiet", "csv", "scores"];
+pub const KNOWN_FLAGS: &[&str] =
+    &["help", "verbose", "artifacts", "quiet", "csv", "scores", "stream"];
 
 impl Args {
     /// Parses an argument vector (without `argv[0]`).

@@ -14,6 +14,7 @@ use crate::topology::TopologyKind;
 use crate::Result;
 use anyhow::{bail, Context};
 
+pub use crate::data::StreamSchedule;
 pub use crate::linalg::KernelKind;
 
 /// Compute backend for the local Pegasos step.
@@ -144,6 +145,24 @@ pub struct ExperimentConfig {
     /// Rows per scoring batch for the inference service (`[serve]`
     /// section: `batch = N`).
     pub serve_batch: usize,
+    /// Streaming ingestion rate in rows per GADGET iteration, network
+    /// wide (`[stream]` section: `rate = F`). `0` (the default) disables
+    /// streaming — the classic load-once/partition-once static path.
+    /// Fractional rates accumulate (0.5 ⇒ one row every other iteration).
+    pub stream_rate: f64,
+    /// Arrival schedule (`[stream] schedule = "uniform" | "random" |
+    /// "tail:<file>"`): round-robin or seeded-random assignment from a
+    /// held-out pool, or tailing a line-delimited LIBSVM file.
+    pub stream_schedule: StreamSchedule,
+    /// Cap on total ingested rows (`[stream] max-rows = N`; 0 =
+    /// unlimited — the pool or file bounds the stream naturally).
+    pub stream_max_rows: usize,
+    /// Fraction of the training set dealt to the nodes before iteration
+    /// 1 (`[stream] initial = F`, in (0, 1) for the pool schedules); the
+    /// remainder is the arrival pool. The `tail:` schedule deals the
+    /// full set up front and rejects a non-default value (it would be
+    /// silently ignored otherwise).
+    pub stream_initial: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -172,6 +191,10 @@ impl Default for ExperimentConfig {
             kernel: KernelKind::Scalar,
             serve_shards: 0,
             serve_batch: 256,
+            stream_rate: 0.0,
+            stream_schedule: StreamSchedule::Uniform,
+            stream_max_rows: 0,
+            stream_initial: 0.5,
         }
     }
 }
@@ -216,7 +239,58 @@ impl ExperimentConfig {
         if self.serve_batch == 0 {
             bail!("config: serve batch must be ≥ 1");
         }
+        if !(self.stream_rate.is_finite() && self.stream_rate >= 0.0) {
+            bail!("config: stream rate must be ≥ 0 and finite (0 = static)");
+        }
+        if !(self.stream_initial > 0.0 && self.stream_initial <= 1.0) {
+            bail!("config: stream initial fraction must be in (0, 1]");
+        }
+        if self.stream_rate == 0.0
+            && (self.stream_schedule != StreamSchedule::Uniform || self.stream_max_rows != 0)
+        {
+            bail!(
+                "config: [stream] schedule/max-rows are set but rate = 0, so \
+                 streaming is off and they would be silently ignored — set \
+                 [stream] rate > 0 (or pass --stream / --stream-rate)"
+            );
+        }
+        if self.stream_rate > 0.0 {
+            match self.stream_schedule {
+                // Pool schedules hold out (1 − initial) of the data as
+                // the arrival stream: initial = 1 would leave an empty
+                // pool — a run labeled "streaming" that never ingests.
+                StreamSchedule::Uniform | StreamSchedule::Random => {
+                    if self.stream_initial >= 1.0 {
+                        bail!(
+                            "config: [stream] initial must be < 1 for the pool \
+                             schedules (1.0 leaves an empty arrival pool — a \
+                             streaming run that never ingests a row)"
+                        );
+                    }
+                }
+                // The tail schedule deals the full training set up front
+                // and streams from the file; a non-default initial would
+                // be silently ignored — reject instead.
+                StreamSchedule::Tail(_) => {
+                    if self.stream_initial != 0.5 {
+                        bail!(
+                            "config: [stream] initial is ignored by the tail: \
+                             schedule (the full training set is dealt before \
+                             iteration 1) — remove it"
+                        );
+                    }
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// True when the `[stream]` section turned the streaming data plane
+    /// on (`rate > 0`): the runner then builds a
+    /// [`crate::data::StreamingStore`] per trial instead of the static
+    /// split.
+    pub fn streaming_enabled(&self) -> bool {
+        self.stream_rate > 0.0
     }
 
     /// Loads from a TOML file (see `configs/*.toml` for examples).
@@ -284,6 +358,18 @@ impl ExperimentConfig {
                 // `[serve]` section (flat spellings accepted too).
                 "serve.shards" | "shards" => cfg.serve_shards = value.as_usize_or(k)?,
                 "serve.batch" | "batch" => cfg.serve_batch = value.as_usize_or(k)?,
+                // `[stream]` section (flat spellings accepted too).
+                "stream.rate" | "rate" => cfg.stream_rate = value.as_f64_or(k)?,
+                "stream.schedule" | "schedule" => {
+                    cfg.stream_schedule = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                "stream.max-rows" | "stream.max_rows" | "max-rows" | "max_rows" => {
+                    cfg.stream_max_rows = value.as_usize_or(k)?
+                }
+                "stream.initial" | "initial" => cfg.stream_initial = value.as_f64_or(k)?,
                 other => bail!("config: unknown key {other:?}"),
             }
         }
@@ -410,6 +496,30 @@ impl ConfigBuilder {
     /// Sets the inference service's rows-per-batch.
     pub fn serve_batch(mut self, b: usize) -> Self {
         self.cfg.serve_batch = b;
+        self
+    }
+
+    /// Sets the streaming ingestion rate (rows/iteration; 0 = static).
+    pub fn stream_rate(mut self, r: f64) -> Self {
+        self.cfg.stream_rate = r;
+        self
+    }
+
+    /// Sets the streaming arrival schedule.
+    pub fn stream_schedule(mut self, s: StreamSchedule) -> Self {
+        self.cfg.stream_schedule = s;
+        self
+    }
+
+    /// Sets the total-ingest cap (0 = unlimited).
+    pub fn stream_max_rows(mut self, n: usize) -> Self {
+        self.cfg.stream_max_rows = n;
+        self
+    }
+
+    /// Sets the initial split fraction for the pool schedules.
+    pub fn stream_initial(mut self, f: f64) -> Self {
+        self.cfg.stream_initial = f;
         self
     }
 
@@ -563,6 +673,69 @@ snapshot_every = 10
         // resolution, not here — a scalar-build must still *parse* simd
         // configs so the error can name the missing feature)
         assert!(ExperimentConfig::from_toml("[runtime]\nkernel = \"avx\"").is_err());
+    }
+
+    #[test]
+    fn stream_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml(
+            "dataset = \"synthetic-usps\"\n[stream]\nrate = 2.5\nschedule = \"random\"\n\
+             max-rows = 500\ninitial = 0.25\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.stream_rate, 2.5);
+        assert_eq!(cfg.stream_schedule, StreamSchedule::Random);
+        assert_eq!(cfg.stream_max_rows, 500);
+        assert_eq!(cfg.stream_initial, 0.25);
+        assert!(cfg.streaming_enabled());
+        // tail schedule carries its path
+        let tail = ExperimentConfig::from_toml(
+            "[stream]\nrate = 1\nschedule = \"tail:feed.libsvm\"\n",
+        )
+        .unwrap();
+        assert_eq!(tail.stream_schedule, StreamSchedule::Tail("feed.libsvm".into()));
+        // defaults: streaming off, uniform schedule, half-initial
+        let d = ExperimentConfig::default();
+        assert_eq!(d.stream_rate, 0.0);
+        assert!(!d.streaming_enabled());
+        assert_eq!(d.stream_schedule, StreamSchedule::Uniform);
+        assert_eq!(d.stream_max_rows, 0);
+        assert_eq!(d.stream_initial, 0.5);
+        // builder setters
+        let b = ExperimentConfig::builder()
+            .stream_rate(1.5)
+            .stream_schedule(StreamSchedule::Random)
+            .stream_max_rows(9)
+            .stream_initial(0.75)
+            .build()
+            .unwrap();
+        assert_eq!(b.stream_rate, 1.5);
+        assert_eq!(b.stream_schedule, StreamSchedule::Random);
+        assert_eq!(b.stream_max_rows, 9);
+        assert_eq!(b.stream_initial, 0.75);
+        // invalid values rejected
+        assert!(ExperimentConfig::from_toml("[stream]\nrate = -1").is_err());
+        assert!(ExperimentConfig::from_toml("[stream]\nschedule = \"poisson\"").is_err());
+        assert!(ExperimentConfig::from_toml("[stream]\ninitial = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[stream]\ninitial = 1.5").is_err());
+        // stream options without a rate would be silently ignored —
+        // rejected loudly instead of running an unlabeled static pipeline
+        let e = ExperimentConfig::from_toml("[stream]\nschedule = \"random\"").unwrap_err();
+        assert!(e.to_string().contains("rate = 0"), "{e}");
+        assert!(ExperimentConfig::from_toml("[stream]\nmax-rows = 10").is_err());
+        // initial = 1 with a pool schedule leaves an empty arrival pool
+        let e1 = ExperimentConfig::from_toml("[stream]\nrate = 2\ninitial = 1.0").unwrap_err();
+        assert!(e1.to_string().contains("empty arrival pool"), "{e1}");
+        // a non-default initial is ignored by tail: — rejected, not dropped
+        let e2 = ExperimentConfig::from_toml(
+            "[stream]\nrate = 1\nschedule = \"tail:f.libsvm\"\ninitial = 0.25\n",
+        )
+        .unwrap_err();
+        assert!(e2.to_string().contains("ignored by the tail"), "{e2}");
+        // the default initial is fine with tail (nothing was overridden)
+        assert!(ExperimentConfig::from_toml(
+            "[stream]\nrate = 1\nschedule = \"tail:f.libsvm\"\n"
+        )
+        .is_ok());
     }
 
     #[test]

@@ -14,15 +14,19 @@
 //! rounding in the artifact) — the cross-backend equivalence test in
 //! `rust/tests/` relies on this.
 
-use crate::data::Dataset;
+use crate::data::ShardView;
 use crate::linalg::Kernel;
 use crate::rng::Rng;
 use crate::Result;
 
 /// Everything a backend needs for one node-iteration.
 pub struct StepContext<'a> {
-    /// The node's training shard.
-    pub shard: &'a Dataset,
+    /// Borrowed window onto the node's current training shard. A view
+    /// (not an owned `Dataset`) so the same step code runs over static
+    /// and streaming shards — the [`crate::data::ShardStore`] owns the
+    /// rows and only grows them at the ingestion boundary *between*
+    /// iterations, never while a step borrows this.
+    pub shard: ShardView<'a>,
     /// Global GADGET iteration `t` (1-based) — sets `αₜ = 1/(λ·t_eff)`.
     pub t: usize,
     /// Regularization λ.
@@ -115,8 +119,8 @@ impl LocalBackend for NativeBackend {
             self.kernel.hinge_subgrad_accum(
                 sv.storage(),
                 sv.scale(),
-                &ctx.shard.rows,
-                &ctx.shard.labels,
+                ctx.shard.rows,
+                ctx.shard.labels,
                 &self.batch,
                 &mut self.violators,
             );
@@ -146,6 +150,7 @@ impl LocalBackend for NativeBackend {
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::data::Dataset;
 
     fn shard() -> Dataset {
         let spec = DatasetSpec {
@@ -170,7 +175,7 @@ mod tests {
         let lambda = 1e-2;
         let mut w = vec![0.0; ds.dim];
         let mut ctx = StepContext {
-            shard: &ds,
+            shard: ds.view(),
             t: 1,
             lambda,
             batch_size: 1,
@@ -201,7 +206,7 @@ mod tests {
             let mut rng = Rng::new(1);
             let mut w = vec![0.0; ds.dim];
             let mut ctx = StepContext {
-                shard: &ds,
+                shard: ds.view(),
                 t: 1,
                 lambda,
                 batch_size: 2,
@@ -226,7 +231,7 @@ mod tests {
             let mut w = vec![0.0; ds.dim];
             for t in 1..=40 {
                 let mut ctx = StepContext {
-                    shard: &ds,
+                    shard: ds.view(),
                     t,
                     lambda,
                     batch_size: 1,

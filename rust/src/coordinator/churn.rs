@@ -21,7 +21,7 @@ use super::backend::NativeBackend;
 use super::node::NodeState;
 use super::sched::{GossipProtocol, Parallel, ProtocolParams, Scheduler, Sequential};
 use crate::config::{ExperimentConfig, SchedulerKind};
-use crate::data::partition;
+use crate::data::{partition, ShardStore};
 use crate::gossip::PushVector;
 use crate::metrics;
 use crate::rng::Rng;
@@ -119,14 +119,19 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     let d = train.dim;
 
     let full_graph = Graph::generate(cfg.topology, m, cfg.seed ^ 0x6772_6170_6800);
-    let train_shards = partition::horizontal_split(&train, m, cfg.seed);
-    let test_shards = partition::horizontal_split(&test, m, cfg.seed ^ 0x7e57);
+    // Churn rides the same data plane as the plain runner: training rows
+    // live in the shard store ([stream] selects static vs streaming), so
+    // node failures and ingestion compose — a failed node's buffer keeps
+    // accumulating arrivals (data reaches a down site; it processes the
+    // backlog on recovery), and the Push-Sum weights below always reflect
+    // the *current* shard sizes of the alive set.
+    let mut store = super::gadget::build_store(cfg, &train, cfg.seed)?;
+    let test_shards = partition::horizontal_split(&test, m, cfg.seed ^ 0x7e57)?;
     let root = Rng::new(cfg.seed);
-    let mut nodes: Vec<NodeState> = train_shards
+    let mut nodes: Vec<NodeState> = test_shards
         .into_iter()
-        .zip(test_shards)
         .enumerate()
-        .map(|(i, (tr, te))| NodeState::new(i, tr, te, d, root.substream(i as u64)))
+        .map(|(i, te)| NodeState::new(i, te, d, root.substream(i as u64)))
         .collect();
 
     let protocol = GossipProtocol::new(ProtocolParams::from_config(cfg, lambda));
@@ -161,6 +166,7 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     let mut events_applied = 0usize;
     let mut min_alive = m;
     let mut iterations = 0usize;
+    let mut added = vec![0usize; m];
     // rebuilt on membership change
     let mut membership_dirty = true;
     let mut alive_ids: Vec<usize> = Vec::new();
@@ -173,6 +179,13 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
 
     for t in 1..=cfg.max_iterations {
         iterations = t;
+        // ingestion boundary first (both churn events and arrivals mutate
+        // the alive/weight state; arrivals land regardless of aliveness)
+        protocol.ingest_boundary(&mut *store, t, &mut added)?;
+        // while the stream can still deliver, convergence is vetoed
+        // network-wide (fractional-rate gap iterations and arrivals that
+        // all landed on dead nodes must not end the run early)
+        let stream_live = !store.stream_exhausted();
         // apply due events
         while next_event < schedule.events.len() && schedule.events[next_event].at_iter <= t {
             let e = schedule.events[next_event];
@@ -211,7 +224,7 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
                 b = Some(tm);
                 pv = Some(PushVector::new_weighted(
                     &vec![vec![0.0; d]; alive_ids.len()],
-                    &alive_ids.iter().map(|&i| nodes[i].n_local() as f64).collect::<Vec<_>>(),
+                    &alive_ids.iter().map(|&i| store.shard_len(i) as f64).collect::<Vec<_>>(),
                 ));
             } else {
                 b = None;
@@ -220,15 +233,19 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
             membership_dirty = false;
         }
 
-        // (a)–(f): local steps on alive nodes, fanned out by the scheduler
+        // (a)–(f): local steps on alive nodes, fanned out by the
+        // scheduler; shards are borrowed from the store at dispatch time.
+        let store_ref: &dyn ShardStore = &*store;
         sched.for_each_node(&mut nodes, &alive_ids, &|backend, _id, node| {
-            protocol.local_step(backend, node, t)
+            protocol.local_step(backend, store_ref.shard(node.id), node, t)
         })?;
         // (g): gossip among alive nodes (disconnected components mix
-        // internally)
+        // internally). Weights are re-read from the store every iteration
+        // — the re-weight rule — so ingestion-grown shards pull the
+        // consensus target toward the sites that received data.
         if let (Some(tm), Some(pv)) = (&b, &mut pv) {
             let weights: Vec<f64> =
-                alive_ids.iter().map(|&i| nodes[i].n_local() as f64).collect();
+                alive_ids.iter().map(|&i| store.shard_len(i) as f64).collect();
             pv.reset_weighted(alive_ids.iter().map(|&i| nodes[i].w.as_slice()), &weights);
             // Bᵀ-apply column panels fan over the scheduler's executor
             // (the worker pool when `[runtime] scheduler = "parallel"`)
@@ -237,18 +254,23 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
             pv.run_rounds_with(tm, rounds, sched.panel_exec(), sched.kernel());
             // (g)-consume/(h)/ε via the shared protocol; the scheduler
             // hands each closure the node's position within `alive_ids`,
-            // which is exactly the Push-Vector slot.
+            // which is exactly the Push-Vector slot. The convergence test
+            // is drift-aware: a node that ingested this iteration cannot
+            // declare convergence.
             let pv_ref: &PushVector = pv;
+            let added_ref: &[usize] = &added;
             sched.for_each_node(&mut nodes, &alive_ids, &|_backend, slot, node| {
                 protocol.apply_estimate(pv_ref, slot, node);
-                protocol.check_convergence(node);
+                protocol
+                    .check_convergence_drift(node, stream_live || added_ref[node.id] > 0);
                 Ok(())
             })?;
         } else {
             // isolated survivor (or empty alive set): no gossip, still run
             // the ε bookkeeping so convergence can terminate the run
             for &i in &alive_ids {
-                protocol.check_convergence(&mut nodes[i]);
+                let drifted = stream_live || added[i] > 0;
+                protocol.check_convergence_drift(&mut nodes[i], drifted);
             }
         }
         let all = alive_ids.iter().all(|&i| nodes[i].converged);
@@ -386,6 +408,28 @@ mod tests {
         let report = run_with_churn(&par_cfg, &ChurnSchedule::new(events)).unwrap();
         assert_eq!(report.min_alive, 0);
         assert_eq!(report.events_applied, 6);
+    }
+
+    #[test]
+    fn streaming_ingestion_composes_with_churn_and_stays_scheduler_invariant() {
+        // Both churn events and arrivals mutate the alive/weight state;
+        // composed, the run must still learn, terminate, and stay
+        // identical across schedulers (ingestion is store-internal and
+        // deterministic, so Parallel ≡ Sequential extends to it).
+        let base = ExperimentConfig { stream_rate: 2.0, stream_max_rows: 30, ..cfg() };
+        let schedule = ChurnSchedule::new(vec![
+            ChurnEvent { at_iter: 10, node: 2, kind: ChurnKind::Fail },
+            ChurnEvent { at_iter: 40, node: 2, kind: ChurnKind::Recover },
+        ]);
+        let seq = run_with_churn(&base, &schedule).unwrap();
+        assert_eq!(seq.events_applied, 2);
+        assert!(seq.test_accuracy > 0.6, "accuracy {}", seq.test_accuracy);
+        let par_cfg =
+            ExperimentConfig { scheduler: SchedulerKind::Parallel, threads: 3, ..base };
+        let par = run_with_churn(&par_cfg, &schedule).unwrap();
+        assert_eq!(seq.iterations, par.iterations);
+        assert_eq!(seq.test_accuracy, par.test_accuracy);
+        assert_eq!(seq.disagreement, par.disagreement);
     }
 
     #[test]

@@ -55,7 +55,7 @@ mod tests {
             lambda: 1e-2,
         };
         let s = generate(&spec, 77, 1.0);
-        (horizontal_split(&s.train, 4, 1), s.test)
+        (horizontal_split(&s.train, 4, 1).unwrap(), s.test)
     }
 
     #[test]

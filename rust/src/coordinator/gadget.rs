@@ -41,7 +41,7 @@ use super::sched::{
 use crate::config::{Backend, ExperimentConfig, SchedulerKind};
 use crate::data::synthetic::{generate, spec_by_name};
 use crate::linalg::Kernel;
-use crate::data::{partition, Dataset};
+use crate::data::{partition, Dataset, ShardStore, StaticStore, StreamSchedule, StreamingStore};
 use crate::gossip::{GossipStats, PushVector};
 use crate::metrics::{self, node_trial_std, Trace, TracePoint};
 use crate::pool::{Task, WorkerPool};
@@ -230,6 +230,19 @@ impl GadgetRunner {
         // construction (local-step margin dots) so one selection governs
         // every hot loop of the run.
         let kernel = self.cfg.kernel.build()?;
+        // Streaming ingestion happens at the global iteration boundary —
+        // which the asynchronous engine deliberately does not have.
+        // Silently training on a frozen snapshot while the report claims
+        // streaming would be the mislabeled-run case this codebase
+        // forbids everywhere else: reject loudly.
+        if self.cfg.streaming_enabled() {
+            anyhow::ensure!(
+                self.cfg.scheduler != SchedulerKind::Async,
+                "scheduler = \"async\" does not support [stream] ingestion (the \
+                 thread-per-node engine has no global iteration boundary to \
+                 ingest at); use the sequential or parallel scheduler"
+            );
+        }
         match self.cfg.scheduler {
             SchedulerKind::Sequential => {
                 let mut backend = self.make_backend(kernel)?;
@@ -386,20 +399,19 @@ impl GadgetRunner {
         }
     }
 
-    /// Builds the per-trial node set (shards, RNG substreams, zero
-    /// weights) — shared by the cycle and async paths.
-    fn build_nodes(&self, seed: u64) -> Vec<NodeState> {
+    /// Builds the per-trial node set (test shards, RNG substreams, zero
+    /// weights). Training rows live in the trial's [`ShardStore`]
+    /// ([`build_store`]), not on the nodes.
+    fn build_nodes(&self, seed: u64) -> Result<Vec<NodeState>> {
         let m = self.cfg.nodes;
         let d = self.train.dim;
-        let train_shards = partition::horizontal_split(&self.train, m, seed);
-        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57);
+        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57)?;
         let root = Rng::new(seed);
-        train_shards
+        Ok(test_shards
             .into_iter()
-            .zip(test_shards)
             .enumerate()
-            .map(|(i, (tr, te))| NodeState::new(i, tr, te, d, root.substream(i as u64)))
-            .collect()
+            .map(|(i, te)| NodeState::new(i, te, d, root.substream(i as u64)))
+            .collect())
     }
 
     /// Per-node evaluation shared by both execution paths.
@@ -436,8 +448,16 @@ impl GadgetRunner {
         };
 
         // --- data distribution ---------------------------------------------
-        let mut nodes = self.build_nodes(seed);
-        let shard_sizes: Vec<f64> = nodes.iter().map(|n| n.n_local() as f64).collect();
+        // The shard store owns the per-node training rows: the static
+        // store is exactly the old one-shot horizontal split (bitwise
+        // reference — pinned by rust/tests/store_equivalence.rs), the
+        // streaming store additionally grows its shards at the ingestion
+        // boundary below.
+        let mut store = build_store(cfg, &self.train, seed)?;
+        let mut nodes = self.build_nodes(seed)?;
+        let mut shard_sizes = vec![0.0f64; m];
+        store.sizes_into(&mut shard_sizes);
+        let mut added = vec![0usize; m];
         let ids: Vec<usize> = (0..m).collect();
         let protocol = GossipProtocol::new(ProtocolParams::from_config(cfg, self.lambda));
 
@@ -454,25 +474,47 @@ impl GadgetRunner {
 
         for t in 1..=cfg.max_iterations {
             iterations = t;
+            // Ingestion boundary: append this iteration's arrivals before
+            // any node steps, then refresh the Push-Sum weights so the
+            // consensus target re-weights to the new nᵢ (static stores
+            // return 0 and the sizes never move).
+            if protocol.ingest_boundary(&mut *store, t, &mut added)? > 0 {
+                store.sizes_into(&mut shard_sizes);
+            }
+            // While the stream can still deliver (pool rows remain, the
+            // cap is unreached, a tailed file is not at EOF) convergence
+            // is vetoed network-wide — otherwise a fractional rate's gap
+            // iterations (carry < 1 ⇒ zero arrivals) could end the run
+            // with rows still undelivered.
+            let stream_live = !store.stream_exhausted();
             // (a)–(f): local sub-gradient step at every node, fanned out
-            // by the scheduler.
+            // by the scheduler; each node borrows its current shard window
+            // from the store at dispatch time.
+            let store_ref: &dyn ShardStore = &*store;
             sched.for_each_node(&mut nodes, &ids, &|backend, _id, node| {
-                protocol.local_step(backend, node, t)
+                protocol.local_step(backend, store_ref.shard(node.id), node, t)
             })?;
             // (g): Push-Vector consensus on the shard-weighted vectors;
             // the Bᵀ-apply fans its column panels over the scheduler's
             // executor (inline for sequential, the worker pool for
             // parallel) on the scheduler's kernel — bitwise identical for
             // every executor and kernel backend (the panel apply is
-            // element-wise).
+            // element-wise). `reset_weighted` rebuilds (Σnᵢwᵢ, Σnᵢ) from
+            // the *current* sizes, so re-weighting after ingestion
+            // conserves the mass identity exactly (the re-weight rule).
             pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
             pv.run_rounds_with(&b, rounds, sched.panel_exec(), sched.kernel());
             gossip_total.merge(pv.stats());
             // (g)-consume/(h)/ε: estimate, optional projection and the
-            // convergence test, per node (slot == id here since ids = 0..m).
+            // drift-aware convergence test, per node (slot == id here
+            // since ids = 0..m). A node that ingested this iteration may
+            // not declare convergence — ε on a changed shard measures
+            // staleness, not consensus.
+            let added_ref: &[usize] = &added;
             sched.for_each_node(&mut nodes, &ids, &|_backend, slot, node| {
                 protocol.apply_estimate(&pv, slot, node);
-                protocol.check_convergence(node);
+                protocol
+                    .check_convergence_drift(node, stream_live || added_ref[node.id] > 0);
                 Ok(())
             })?;
             let all = nodes.iter().all(|n| n.converged);
@@ -529,8 +571,8 @@ impl GadgetRunner {
         let cfg = &self.cfg;
         let m = cfg.nodes;
         let graph = Graph::generate(cfg.topology, m, seed ^ GRAPH_SEED);
-        let train_shards = partition::horizontal_split(&self.train, m, seed);
-        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57);
+        let train_shards = partition::horizontal_split(&self.train, m, seed)?;
+        let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57)?;
         let params = AsyncParams {
             lambda: self.lambda,
             batch_size: cfg.batch_size,
@@ -606,6 +648,68 @@ fn average_w(nodes: &[NodeState]) -> Vec<f64> {
     crate::linalg::scale_assign(1.0 / nodes.len() as f64, &mut avg);
     avg
 }
+
+/// Builds the per-trial shard store from the config's `[stream]`
+/// section — the one data-plane decision point shared by the plain
+/// runner and the churn engine:
+///
+/// * streaming off (`rate = 0`) → [`StaticStore`] over the classic
+///   seeded horizontal split (the bitwise pre-refactor path);
+/// * `schedule = "uniform" | "random"` → hold out `1 − initial` of the
+///   training rows as the arrival pool and stream them in at `rate`
+///   rows/iteration;
+/// * `schedule = "tail:<file>"` → full split up front, arrivals tailed
+///   from the line-delimited LIBSVM file.
+pub(crate) fn build_store(
+    cfg: &ExperimentConfig,
+    train: &Dataset,
+    seed: u64,
+) -> Result<Box<dyn ShardStore>> {
+    let m = cfg.nodes;
+    if !cfg.streaming_enabled() {
+        return Ok(Box::new(StaticStore::split(train, m, seed)?));
+    }
+    match &cfg.stream_schedule {
+        StreamSchedule::Tail(path) => {
+            let initial = partition::horizontal_split(train, m, seed)?;
+            Ok(Box::new(StreamingStore::tail(
+                initial,
+                path,
+                cfg.stream_rate,
+                cfg.stream_max_rows,
+                seed,
+            )?))
+        }
+        schedule => {
+            // Seeded holdout: the head is iteration 1's split, the tail
+            // streams in. Each trial rebuilds this from its own seed, so
+            // trials stay independent and reproducible.
+            let (head, pool) =
+                partition::train_test_split(train, cfg.stream_initial, seed ^ STREAM_SEED);
+            anyhow::ensure!(
+                head.len() >= m,
+                "stream: initial fraction {} leaves {} rows for {} nodes — raise \
+                 [stream] initial or shrink the network",
+                cfg.stream_initial,
+                head.len(),
+                m
+            );
+            let initial = partition::horizontal_split(&head, m, seed)?;
+            Ok(Box::new(StreamingStore::from_pool(
+                initial,
+                pool,
+                cfg.stream_rate,
+                cfg.stream_max_rows,
+                *schedule == StreamSchedule::Random,
+                seed,
+            )?))
+        }
+    }
+}
+
+/// Seed-mixing label for the streaming holdout (distinct from the graph,
+/// partition and test-split labels).
+const STREAM_SEED: u64 = 0x57f2_ea4d;
 
 /// Dataset loading shared by the runner and the experiment harness:
 /// `synthetic-*` names hit the Table-2 generators; `path:<file>` reads
@@ -789,6 +893,77 @@ mod tests {
             assert_eq!(a.consensus_w, b.consensus_w);
             assert_eq!(a.iterations, b.iterations);
         }
+    }
+
+    #[test]
+    fn streaming_run_learns_and_stops_only_after_arrivals_end() {
+        // rate 4, cap 40 ⇒ arrivals at iterations 2..=11. The drift-aware
+        // ε test vetoes convergence on any ingesting node, so the run
+        // cannot stop before the stream dries up at t = 11.
+        let cfg = ExperimentConfig {
+            stream_rate: 4.0,
+            stream_max_rows: 40,
+            trials: 1,
+            ..small_cfg()
+        };
+        let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        for t in &report.trials {
+            assert!(
+                t.iterations > 11,
+                "stopped at {} while rows were still arriving",
+                t.iterations
+            );
+        }
+        assert!(report.test_accuracy > 0.7, "accuracy {}", report.test_accuracy);
+        assert!(report.epsilon_final.is_finite());
+    }
+
+    #[test]
+    fn fractional_rate_gap_iterations_cannot_end_the_run() {
+        // rate ½ delivers on every other boundary (gap iterations have
+        // zero arrivals, so the per-node "ingested this iteration" veto
+        // alone would not fire); with a very generous ε the static
+        // problem converges almost immediately, so only the network-wide
+        // stream-live veto can hold the run open until the cap is
+        // reached at iteration 9 (arrivals at t = 3, 5, 7, 9).
+        let cfg = ExperimentConfig {
+            epsilon: 5e-2,
+            stream_rate: 0.5,
+            stream_max_rows: 4,
+            trials: 1,
+            ..small_cfg()
+        };
+        let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert!(
+            report.trials[0].iterations >= 9,
+            "stopped at {} with stream rows still undelivered",
+            report.trials[0].iterations
+        );
+    }
+
+    #[test]
+    fn streaming_is_deterministic_across_runs() {
+        let cfg = || ExperimentConfig {
+            stream_rate: 3.0,
+            stream_max_rows: 24,
+            trials: 1,
+            ..small_cfg()
+        };
+        let a = GadgetRunner::new(cfg()).unwrap().run().unwrap();
+        let b = GadgetRunner::new(cfg()).unwrap().run().unwrap();
+        assert_eq!(a.trials[0].consensus_w, b.trials[0].consensus_w);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn async_rejects_streaming_config_loudly() {
+        let cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Async,
+            stream_rate: 1.0,
+            ..small_cfg()
+        };
+        let err = GadgetRunner::new(cfg).unwrap().run().unwrap_err();
+        assert!(err.to_string().contains("stream"), "{err}");
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! * [`backend`] — the local-learner abstraction: one trait, two
 //!   implementations (native rust sparse path; PJRT-executed JAX/Pallas
 //!   artifact in [`crate::runtime`]).
-//! * [`node`] — per-site state: shard, weight vector, RNG stream,
-//!   convergence bookkeeping.
+//! * [`node`] — per-site state: weight vector, RNG stream, convergence
+//!   bookkeeping (training rows live in the [`crate::data::ShardStore`]
+//!   and are borrowed per step as [`crate::data::ShardView`]s).
 //! * [`sched`] — the unified node-parallel execution runtime: the shared
 //!   per-node protocol step (Algorithm 2 (a)–(h) + ε-check) behind one
 //!   `Scheduler` abstraction with sequential, parallel (persistent

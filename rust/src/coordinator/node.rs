@@ -1,4 +1,12 @@
 //! Per-site state for the GADGET network.
+//!
+//! Since the streaming data plane landed, a node no longer *owns* its
+//! training shard: the rows live in a [`crate::data::ShardStore`] and the
+//! per-node step borrows them through a [`crate::data::ShardView`] at
+//! dispatch time. `NodeState` carries only what is genuinely per-node and
+//! mutable across iterations — the weight vectors, the RNG substream and
+//! the ε-convergence bookkeeping (plus the local test shard, which stays
+//! fixed).
 
 use crate::data::Dataset;
 use crate::rng::Rng;
@@ -8,8 +16,6 @@ use crate::rng::Rng;
 pub struct NodeState {
     /// Node id in `[0, m)`.
     pub id: usize,
-    /// Local training shard `Mᵢ` (nᵢ × d).
-    pub shard: Dataset,
     /// Local test shard (the paper splits the test set across nodes too).
     pub test_shard: Dataset,
     /// Current weight vector `ŵᵢ^(t)`.
@@ -27,10 +33,9 @@ pub struct NodeState {
 
 impl NodeState {
     /// Initializes a node with zero weights.
-    pub fn new(id: usize, shard: Dataset, test_shard: Dataset, dim: usize, rng: Rng) -> Self {
+    pub fn new(id: usize, test_shard: Dataset, dim: usize, rng: Rng) -> Self {
         Self {
             id,
-            shard,
             test_shard,
             w: vec![0.0; dim],
             w_prev: vec![0.0; dim],
@@ -38,11 +43,6 @@ impl NodeState {
             last_delta: f64::INFINITY,
             converged: false,
         }
-    }
-
-    /// Shard size `nᵢ`.
-    pub fn n_local(&self) -> usize {
-        self.shard.len()
     }
 
     /// Runs the ε-convergence test against the previous consensus vector,
@@ -71,7 +71,7 @@ mod tests {
 
     #[test]
     fn convergence_threshold_behaviour() {
-        let mut n = NodeState::new(0, tiny_ds(), tiny_ds(), 2, Rng::new(0));
+        let mut n = NodeState::new(0, tiny_ds(), 2, Rng::new(0));
         n.w = vec![0.1, 0.0];
         assert!(!n.check_convergence(0.05)); // delta 0.1 ≥ ε
         assert!((n.last_delta - 0.1).abs() < 1e-12);
@@ -82,7 +82,7 @@ mod tests {
 
     #[test]
     fn w_prev_rolls_forward() {
-        let mut n = NodeState::new(0, tiny_ds(), tiny_ds(), 2, Rng::new(0));
+        let mut n = NodeState::new(0, tiny_ds(), 2, Rng::new(0));
         n.w = vec![1.0, 2.0];
         n.check_convergence(1e-3);
         assert_eq!(n.w_prev, vec![1.0, 2.0]);

@@ -184,10 +184,12 @@ impl AsyncScheduler {
                     };
                     let n_i = shard.len() as f64;
                     let mut backend = NativeBackend::default();
-                    // The node state carries the shard, the RNG substream
-                    // and the working estimate; the test shard is unused
-                    // here (evaluation happens in the coordinator).
-                    let mut node = NodeState::new(i, shard, Dataset::default(), d, rng);
+                    // The thread owns its shard outright (the async engine
+                    // has no ingestion boundary — a fixed snapshot moves in
+                    // here); the node state carries the RNG substream and
+                    // the working estimate. The test shard is unused
+                    // (evaluation happens in the coordinator).
+                    let mut node = NodeState::new(i, Dataset::default(), d, rng);
                     let mut mass = MassState::new(d, n_i);
                     let active = p.cycles.saturating_sub(p.cooldown);
                     let mut sent = 0usize;
@@ -208,7 +210,9 @@ impl AsyncScheduler {
                         }
                         if t <= active {
                             // (1) protocol local step on the current estimate
-                            if let Err(e) = protocol.local_step(&mut backend, &mut node, t) {
+                            if let Err(e) =
+                                protocol.local_step(&mut backend, shard.view(), &mut node, t)
+                            {
                                 // Record and unblock peers: the barrier
                                 // below must still be reached by everyone.
                                 failure = Some(e);
@@ -300,7 +304,7 @@ mod tests {
             lambda: 1e-2,
         };
         let s = generate(&spec, 91, 1.0);
-        (horizontal_split(&s.train, m, 2), s.test)
+        (horizontal_split(&s.train, m, 2).unwrap(), s.test)
     }
 
     fn params(cycles: usize, cooldown: usize) -> AsyncParams {

@@ -375,12 +375,11 @@ impl Scheduler for ScopedSpawn {
 mod tests {
     use super::*;
     use crate::coordinator::backend::NativeBackend;
-    use crate::data::partition::horizontal_split;
     use crate::data::synthetic::{generate, DatasetSpec};
-    use crate::data::Dataset;
+    use crate::data::{Dataset, ShardStore, StaticStore};
     use crate::rng::Rng;
 
-    fn nodes(m: usize, seed: u64) -> Vec<NodeState> {
+    fn nodes(m: usize, seed: u64) -> (StaticStore, Vec<NodeState>) {
         let spec = DatasetSpec {
             name: "sched".into(),
             train_size: 240,
@@ -393,14 +392,19 @@ mod tests {
         };
         let ds = generate(&spec, seed, 1.0).train;
         let root = Rng::new(seed);
-        horizontal_split(&ds, m, seed)
-            .into_iter()
-            .enumerate()
-            .map(|(i, sh)| NodeState::new(i, sh, Dataset::default(), 16, root.substream(i as u64)))
-            .collect()
+        let store = StaticStore::split(&ds, m, seed).unwrap();
+        let nodes = (0..m)
+            .map(|i| NodeState::new(i, Dataset::default(), 16, root.substream(i as u64)))
+            .collect();
+        (store, nodes)
     }
 
-    fn step_all(sched: &mut dyn Scheduler, nodes: &mut [NodeState], iters: usize) {
+    fn step_all(
+        sched: &mut dyn Scheduler,
+        store: &StaticStore,
+        nodes: &mut [NodeState],
+        iters: usize,
+    ) {
         let proto = GossipProtocol::new(ProtocolParams {
             lambda: 1e-2,
             batch_size: 2,
@@ -410,10 +414,11 @@ mod tests {
             epsilon: 1e-3,
         });
         let ids: Vec<usize> = (0..nodes.len()).collect();
+        let store_ref: &dyn ShardStore = store;
         for t in 1..=iters {
             sched
                 .for_each_node(nodes, &ids, &|backend, _id, node| {
-                    proto.local_step(backend, node, t)
+                    proto.local_step(backend, store_ref.shard(node.id), node, t)
                 })
                 .unwrap();
         }
@@ -422,14 +427,14 @@ mod tests {
     #[test]
     fn parallel_matches_sequential_bitwise() {
         for threads in [1usize, 2, 3, 8] {
-            let mut seq_nodes = nodes(6, 42);
+            let (seq_store, mut seq_nodes) = nodes(6, 42);
             let mut backend = NativeBackend::default();
             let mut seq = Sequential::new(&mut backend);
-            step_all(&mut seq, &mut seq_nodes, 12);
+            step_all(&mut seq, &seq_store, &mut seq_nodes, 12);
 
-            let mut par_nodes = nodes(6, 42);
+            let (par_store, mut par_nodes) = nodes(6, 42);
             let mut par = Parallel::native(threads);
-            step_all(&mut par, &mut par_nodes, 12);
+            step_all(&mut par, &par_store, &mut par_nodes, 12);
 
             for (a, b) in seq_nodes.iter().zip(&par_nodes) {
                 assert_eq!(a.w, b.w, "threads={threads} node {}", a.id);
@@ -439,7 +444,7 @@ mod tests {
 
     #[test]
     fn id_subset_touches_only_selected_nodes() {
-        let mut ns = nodes(5, 7);
+        let (_store, mut ns) = nodes(5, 7);
         let before: Vec<Vec<f64>> = ns.iter().map(|n| n.w.clone()).collect();
         let mut par = Parallel::native(2);
         let ids = [1usize, 3];
@@ -459,7 +464,7 @@ mod tests {
 
     #[test]
     fn out_of_range_and_unsorted_ids_rejected() {
-        let mut ns = nodes(3, 1);
+        let (_store, mut ns) = nodes(3, 1);
         let mut par = Parallel::native(2);
         assert!(par.for_each_node(&mut ns, &[5], &|_b, _i, _n| Ok(())).is_err());
         // descending ids violate the strictly-increasing contract
@@ -477,7 +482,7 @@ mod tests {
         // `validate_ids` helper must make every scheduler enforce the
         // documented "strictly increasing, visited exactly once" contract
         // identically.
-        let mut ns = nodes(4, 9);
+        let (_store, mut ns) = nodes(4, 9);
         let w_before: Vec<Vec<f64>> = ns.iter().map(|n| n.w.clone()).collect();
         fn bump(_b: &mut dyn LocalBackend, _i: usize, n: &mut NodeState) -> crate::Result<()> {
             n.w[0] += 1.0;
@@ -511,14 +516,14 @@ mod tests {
     fn scoped_spawn_matches_sequential_bitwise() {
         // The retained PR-1 baseline must stay equivalent too — it is the
         // control arm of the dispatch-overhead bench.
-        let mut seq_nodes = nodes(5, 11);
+        let (seq_store, mut seq_nodes) = nodes(5, 11);
         let mut backend = NativeBackend::default();
         let mut seq = Sequential::new(&mut backend);
-        step_all(&mut seq, &mut seq_nodes, 8);
+        step_all(&mut seq, &seq_store, &mut seq_nodes, 8);
 
-        let mut sc_nodes = nodes(5, 11);
+        let (sc_store, mut sc_nodes) = nodes(5, 11);
         let mut scoped = ScopedSpawn::native(3);
-        step_all(&mut scoped, &mut sc_nodes, 8);
+        step_all(&mut scoped, &sc_store, &mut sc_nodes, 8);
         for (a, b) in seq_nodes.iter().zip(&sc_nodes) {
             assert_eq!(a.w, b.w, "node {}", a.id);
         }
@@ -528,15 +533,15 @@ mod tests {
     fn pool_larger_than_node_count_matches_sequential() {
         // threads ≫ nodes: surplus workers stay parked and the result is
         // unchanged.
-        let mut seq_nodes = nodes(3, 21);
+        let (seq_store, mut seq_nodes) = nodes(3, 21);
         let mut backend = NativeBackend::default();
         let mut seq = Sequential::new(&mut backend);
-        step_all(&mut seq, &mut seq_nodes, 6);
+        step_all(&mut seq, &seq_store, &mut seq_nodes, 6);
 
-        let mut par_nodes = nodes(3, 21);
+        let (par_store, mut par_nodes) = nodes(3, 21);
         let mut par = Parallel::native(16);
         assert_eq!(par.threads(), 16);
-        step_all(&mut par, &mut par_nodes, 6);
+        step_all(&mut par, &par_store, &mut par_nodes, 6);
         for (a, b) in seq_nodes.iter().zip(&par_nodes) {
             assert_eq!(a.w, b.w, "node {}", a.id);
         }
@@ -546,7 +551,7 @@ mod tests {
     fn empty_id_set_is_a_noop_dispatch() {
         // The churn path hands the scheduler an empty alive set when every
         // node is down — must be a clean no-op, not a hang or error.
-        let mut ns = nodes(3, 2);
+        let (_store, mut ns) = nodes(3, 2);
         let before: Vec<Vec<f64>> = ns.iter().map(|n| n.w.clone()).collect();
         let mut par = Parallel::native(4);
         par.for_each_node(&mut ns, &[], &|_b, _i, n| {
@@ -588,7 +593,7 @@ mod tests {
 
     #[test]
     fn worker_errors_propagate() {
-        let mut ns = nodes(4, 2);
+        let (_store, mut ns) = nodes(4, 2);
         let mut par = Parallel::native(4);
         let err = par
             .for_each_node(&mut ns, &[0, 1, 2, 3], &|_b, id, _n| {

@@ -20,6 +20,7 @@
 use crate::config::ExperimentConfig;
 use crate::coordinator::backend::{LocalBackend, StepContext};
 use crate::coordinator::node::NodeState;
+use crate::data::{ShardStore, ShardView};
 use crate::gossip::PushVector;
 use crate::Result;
 
@@ -74,19 +75,21 @@ impl GossipProtocol {
     }
 
     /// Algorithm 2 steps (a)–(f): advances `node.w` in place by the
-    /// backend's local sub-gradient step(s), sampling batches from the
-    /// node's own RNG stream (which is what makes the result independent
-    /// of *which* worker executes the node — see the scheduler
-    /// equivalence test).
+    /// backend's local sub-gradient step(s) on `shard` (the node's
+    /// current [`ShardView`], borrowed from the run's
+    /// [`ShardStore`]), sampling batches from the node's own RNG stream
+    /// (which is what makes the result independent of *which* worker
+    /// executes the node — see the scheduler equivalence test).
     pub fn local_step(
         &self,
         backend: &mut dyn LocalBackend,
+        shard: ShardView<'_>,
         node: &mut NodeState,
         t: usize,
     ) -> Result<()> {
         let p = &self.params;
         let mut ctx = StepContext {
-            shard: &node.shard,
+            shard,
             t,
             lambda: p.lambda,
             batch_size: p.batch_size,
@@ -95,6 +98,46 @@ impl GossipProtocol {
             rng: &mut node.rng,
         };
         backend.local_step(&mut ctx, &mut node.w)
+    }
+
+    /// The **ingestion boundary** between iterations: lets the shard
+    /// store append iteration `t`'s arrivals *before* any node steps, so
+    /// every view taken during the iteration sees one consistent shard
+    /// size. Fills `added[i]` with per-node arrival counts and returns
+    /// the total; `t = 1` is defined as 0 arrivals (the initial shards
+    /// *are* iteration 1's data). After a non-empty boundary the caller
+    /// must re-read [`ShardStore::sizes_into`] and hand the new `nᵢ` to
+    /// `PushVector::reset_weighted` — the re-weight rule that keeps the
+    /// consensus target the Theorem-1 average over the *current* data
+    /// (DESIGN.md §Streaming data plane).
+    pub fn ingest_boundary(
+        &self,
+        store: &mut dyn ShardStore,
+        t: usize,
+        added: &mut [usize],
+    ) -> Result<usize> {
+        if t <= 1 {
+            added.fill(0);
+            return Ok(0);
+        }
+        store.ingest(added)
+    }
+
+    /// Drift-aware ε-convergence: runs the standard test (rolling
+    /// `w_prev` forward) but refuses to *declare* convergence on a node
+    /// that ingested new rows this iteration — `‖ŵ^(t) − ŵ^(t−1)‖ < ε`
+    /// on a shard that just changed measures staleness, not consensus.
+    /// A run therefore cannot stop while data still arrives; once the
+    /// stream dries up the ordinary anytime criterion takes over. With
+    /// `drifted = false` this is exactly [`Self::check_convergence`]
+    /// (the static path is bit-for-bit unchanged).
+    pub fn check_convergence_drift(&self, node: &mut NodeState, drifted: bool) -> bool {
+        let converged = node.check_convergence(self.params.epsilon);
+        if drifted {
+            node.converged = false;
+            return false;
+        }
+        converged
     }
 
     /// Steps (g)/(h) consume side: writes Push-Vector slot `slot`'s
@@ -229,10 +272,10 @@ mod tests {
         // StepContext construction: identical bits either way.
         let ds = shard();
         let proto = GossipProtocol::new(params());
-        let mut node = NodeState::new(0, ds.clone(), Dataset::default(), ds.dim, Rng::new(3));
+        let mut node = NodeState::new(0, Dataset::default(), ds.dim, Rng::new(3));
         let mut backend = NativeBackend::default();
         for t in 1..=5 {
-            proto.local_step(&mut backend, &mut node, t).unwrap();
+            proto.local_step(&mut backend, ds.view(), &mut node, t).unwrap();
         }
 
         let mut rng = Rng::new(3);
@@ -240,7 +283,7 @@ mod tests {
         let mut backend2 = NativeBackend::default();
         for t in 1..=5 {
             let mut ctx = StepContext {
-                shard: &ds,
+                shard: ds.view(),
                 t,
                 lambda: 1e-2,
                 batch_size: 2,
@@ -259,10 +302,50 @@ mod tests {
         p.lambda = 1.0; // radius 1
         let proto = GossipProtocol::new(p);
         let pv = PushVector::new(&[vec![3.0, 4.0], vec![3.0, 4.0]]);
-        let mut node = NodeState::new(0, shard(), Dataset::default(), 2, Rng::new(0));
+        let mut node = NodeState::new(0, Dataset::default(), 2, Rng::new(0));
         proto.apply_estimate(&pv, 0, &mut node);
         let norm = crate::linalg::l2_norm(&node.w);
         assert!(norm <= 1.0 + 1e-12, "norm {norm}");
+    }
+
+    #[test]
+    fn drift_gating_suppresses_convergence_only_while_drifting() {
+        let proto = GossipProtocol::new(params()); // ε = 1e-3
+        let mut node = NodeState::new(0, Dataset::default(), 2, Rng::new(0));
+        node.w = vec![1.0, 0.0];
+        // first check rolls w_prev forward; big delta ⇒ not converged
+        assert!(!proto.check_convergence_drift(&mut node, false));
+        // unchanged w would converge — but a drifting shard vetoes it
+        assert!(!proto.check_convergence_drift(&mut node, true));
+        assert!(!node.converged);
+        // the delta bookkeeping still ran (w_prev rolled forward)
+        assert_eq!(node.last_delta, 0.0);
+        // stream dried up ⇒ the ordinary anytime criterion takes over
+        assert!(proto.check_convergence_drift(&mut node, false));
+        assert!(node.converged);
+    }
+
+    #[test]
+    fn ingest_boundary_is_zero_at_iteration_one_and_delegates_after() {
+        use crate::data::{StaticStore, StreamingStore};
+        let ds = shard();
+        let proto = GossipProtocol::new(params());
+        let mut st = StaticStore::split(&ds, 2, 3).unwrap();
+        let mut added = vec![7usize; 2];
+        assert_eq!(proto.ingest_boundary(&mut st, 1, &mut added).unwrap(), 0);
+        assert_eq!(added, vec![0, 0]);
+        assert_eq!(proto.ingest_boundary(&mut st, 2, &mut added).unwrap(), 0);
+
+        let initial = crate::data::partition::horizontal_split(&ds, 2, 3).unwrap();
+        let mut stream =
+            StreamingStore::from_pool(initial, shard(), 2.0, 0, false, 5).unwrap();
+        let n0 = stream.shard_len(0) + stream.shard_len(1);
+        // t = 1: defined as no arrivals (initial shards are iteration 1)
+        assert_eq!(proto.ingest_boundary(&mut stream, 1, &mut added).unwrap(), 0);
+        assert_eq!(stream.shard_len(0) + stream.shard_len(1), n0);
+        // t = 2: the store's schedule takes over
+        assert_eq!(proto.ingest_boundary(&mut stream, 2, &mut added).unwrap(), 2);
+        assert_eq!(stream.shard_len(0) + stream.shard_len(1), n0 + 2);
     }
 
     #[test]

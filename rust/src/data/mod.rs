@@ -11,7 +11,10 @@
 pub mod libsvm;
 pub mod partition;
 pub mod rff;
+pub mod store;
 pub mod synthetic;
+
+pub use store::{ShardStore, ShardView, StaticStore, StreamSchedule, StreamingStore};
 
 use crate::linalg::SparseVec;
 
@@ -99,6 +102,13 @@ impl Dataset {
     #[inline]
     pub fn sample(&self, i: usize) -> (&SparseVec, f64) {
         (&self.rows[i], self.labels[i] as f64)
+    }
+
+    /// The whole dataset as a borrowed [`ShardView`] — what the solvers
+    /// and local-step backends iterate (see [`store`]).
+    #[inline]
+    pub fn view(&self) -> ShardView<'_> {
+        ShardView { dim: self.dim, rows: &self.rows, labels: &self.labels }
     }
 }
 

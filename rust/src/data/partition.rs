@@ -7,14 +7,27 @@
 
 use super::Dataset;
 use crate::rng::Rng;
+use crate::Result;
+
+/// Shared shard-count validation: `m` must be in `[1, rows]` so every
+/// shard receives at least one sample. One rule for every split site
+/// (the runner, churn, the Table-4 per-node baselines, the shard
+/// stores) — callers used to enforce this individually, and a missed
+/// check turned into a panic deep inside the round-robin deal.
+pub fn validate_split(m: usize, rows: usize) -> Result<()> {
+    anyhow::ensure!(m > 0, "partition: shard count m must be ≥ 1");
+    anyhow::ensure!(
+        m <= rows,
+        "partition: more shards than samples (m = {m}, rows = {rows})"
+    );
+    Ok(())
+}
 
 /// Splits `ds` into `m` shards of near-equal size after a seeded shuffle.
 ///
-/// # Panics
-/// Panics if `m == 0` or `m > ds.len()`.
-pub fn horizontal_split(ds: &Dataset, m: usize, seed: u64) -> Vec<Dataset> {
-    assert!(m > 0, "horizontal_split: m must be positive");
-    assert!(m <= ds.len(), "horizontal_split: more shards than samples");
+/// Errors when `m == 0` or `m > ds.len()` (see [`validate_split`]).
+pub fn horizontal_split(ds: &Dataset, m: usize, seed: u64) -> Result<Vec<Dataset>> {
+    validate_split(m, ds.len())?;
     let mut order: Vec<usize> = (0..ds.len()).collect();
     let mut rng = Rng::new(seed);
     rng.shuffle(&mut order);
@@ -25,13 +38,13 @@ pub fn horizontal_split(ds: &Dataset, m: usize, seed: u64) -> Vec<Dataset> {
         shards[s].0.push(ds.rows[i].clone());
         shards[s].1.push(ds.labels[i]);
     }
-    shards
+    Ok(shards
         .into_iter()
         .enumerate()
         .map(|(s, (rows, labels))| {
             Dataset::new(format!("{}-shard{}", ds.name, s), ds.dim, rows, labels)
         })
-        .collect()
+        .collect())
 }
 
 /// Splits into train/test with the given train fraction (seeded shuffle).
@@ -68,7 +81,7 @@ mod tests {
 
     #[test]
     fn shard_sizes_balanced() {
-        let shards = horizontal_split(&ds(10), 3, 0);
+        let shards = horizontal_split(&ds(10), 3, 0).unwrap();
         let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
         assert_eq!(sizes.iter().sum::<usize>(), 10);
         assert!(sizes.iter().all(|&s| s == 3 || s == 4));
@@ -77,7 +90,7 @@ mod tests {
     #[test]
     fn shards_preserve_all_samples() {
         let base = ds(17);
-        let shards = horizontal_split(&base, 4, 42);
+        let shards = horizontal_split(&base, 4, 42).unwrap();
         let mut seen: Vec<f32> =
             shards.iter().flat_map(|s| s.rows.iter().map(|r| r.values[0])).collect();
         seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -88,9 +101,9 @@ mod tests {
     #[test]
     fn split_is_seeded() {
         let base = ds(20);
-        let a = horizontal_split(&base, 4, 1);
-        let b = horizontal_split(&base, 4, 1);
-        let c = horizontal_split(&base, 4, 2);
+        let a = horizontal_split(&base, 4, 1).unwrap();
+        let b = horizontal_split(&base, 4, 1).unwrap();
+        let c = horizontal_split(&base, 4, 2).unwrap();
         assert_eq!(a[0].rows, b[0].rows);
         assert_ne!(a[0].rows, c[0].rows);
     }
@@ -103,8 +116,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "more shards than samples")]
-    fn too_many_shards_panics() {
-        horizontal_split(&ds(2), 3, 0);
+    fn degenerate_shard_counts_are_clean_errors() {
+        // The shared validation turns the old caller-discipline panics
+        // into uniform, descriptive errors at every split site.
+        let err = horizontal_split(&ds(2), 3, 0).unwrap_err();
+        assert!(err.to_string().contains("more shards than samples"), "{err}");
+        let err0 = horizontal_split(&ds(2), 0, 0).unwrap_err();
+        assert!(err0.to_string().contains("must be ≥ 1"), "{err0}");
+        assert!(validate_split(1, 1).is_ok());
+        assert!(validate_split(4, 4).is_ok());
+        assert!(validate_split(5, 4).is_err());
+        assert!(validate_split(0, 10).is_err());
+        // m == rows: every shard gets exactly one sample
+        let singles = horizontal_split(&ds(3), 3, 0).unwrap();
+        assert!(singles.iter().all(|s| s.len() == 1));
     }
 }

@@ -71,7 +71,7 @@ pub fn run_dataset(cfg: &ExperimentConfig) -> Result<FigureSeries> {
     });
     let mut pegasos = Trace::new(format!("pegasos-{}", cfg.dataset));
     let sw = Stopwatch::new();
-    peg.fit_with_snapshots(train, (iters / 40).max(1), |step, w| {
+    peg.fit_with_snapshots(train.view(), (iters / 40).max(1), |step, w| {
         pegasos.push(TracePoint {
             time_secs: sw.secs(),
             step,

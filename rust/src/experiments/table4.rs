@@ -9,7 +9,7 @@ use super::ExperimentOpts;
 use crate::config::ExperimentConfig;
 use crate::coordinator::GadgetRunner;
 use crate::data::synthetic::paper_specs;
-use crate::data::partition;
+use crate::data::{partition, ShardStore, StaticStore};
 use crate::metrics::{self, node_trial_std};
 use crate::solver::{Solver, SvmPerf, SvmPerfParams, SvmSgd, SvmSgdParams};
 use crate::util::table::{pm, TextTable};
@@ -49,28 +49,29 @@ pub fn run(opts: &ExperimentOpts) -> Result<Vec<Table4Row>> {
     Ok(rows)
 }
 
-/// Per-node baseline protocol: split train/test across `m` nodes, fit the
-/// solver on each shard, evaluate on the node's test shard. Returns
-/// `(time mean, time std, acc mean, acc std)` with the paper's
-/// node+trial variance rule for accuracy.
+/// Per-node baseline protocol: split train/test across `m` nodes (one
+/// [`StaticStore`] per trial — the same shared `validate_split` rule as
+/// the runner), fit the solver on each shard *view*, evaluate on the
+/// node's test shard. Returns `(time mean, time std, acc mean, acc std)`
+/// with the paper's node+trial variance rule for accuracy.
 fn per_node_baseline<S: Solver>(
     make: impl Fn(u64) -> S,
     runner: &GadgetRunner,
     cfg: &ExperimentConfig,
-) -> (f64, f64, f64, f64) {
+) -> Result<(f64, f64, f64, f64)> {
     let mut acc_matrix: Vec<Vec<f64>> = Vec::new();
     let mut times: Vec<f64> = Vec::new();
     for trial in 0..cfg.trials {
         let seed = cfg.seed.wrapping_add(trial as u64 * 0x51);
-        let train_shards = partition::horizontal_split(runner.train_data(), cfg.nodes, seed);
+        let train_store = StaticStore::split(runner.train_data(), cfg.nodes, seed)?;
         let test_shards =
-            partition::horizontal_split(runner.test_data(), cfg.nodes, seed ^ 0x7e57);
+            partition::horizontal_split(runner.test_data(), cfg.nodes, seed ^ 0x7e57)?;
         let mut node_acc = Vec::with_capacity(cfg.nodes);
         let mut node_secs = Vec::with_capacity(cfg.nodes);
-        for (tr, te) in train_shards.iter().zip(&test_shards) {
+        for (node, te) in test_shards.iter().enumerate() {
             let mut solver = make(seed);
             let sw = Stopwatch::new();
-            let model = solver.fit(tr);
+            let model = solver.fit_view(train_store.shard(node));
             node_secs.push(sw.secs());
             node_acc.push(100.0 * metrics::accuracy(&model.w, te));
         }
@@ -79,7 +80,7 @@ fn per_node_baseline<S: Solver>(
     }
     let (t_mean, t_std) = crate::util::timer::mean_std(&times);
     let (a_mean, a_std) = node_trial_std(&acc_matrix);
-    (t_mean, t_std, a_mean, a_std)
+    Ok((t_mean, t_std, a_mean, a_std))
 }
 
 /// Runs one dataset's three-way comparison.
@@ -99,12 +100,12 @@ pub fn run_dataset(cfg: &ExperimentConfig) -> Result<Table4Row> {
         },
         &runner,
         cfg,
-    );
+    )?;
     let sgd = per_node_baseline(
         |seed| SvmSgd::new(SvmSgdParams { lambda, epochs: 10, seed }),
         &runner,
         cfg,
-    );
+    )?;
 
     Ok(Table4Row {
         dataset: cfg.dataset.clone(),

@@ -273,6 +273,19 @@ impl PushVector {
         self.stats.bytes += msgs * 8 * (self.d + 1);
     }
 
+    /// Node `i`'s current Push-Sum weight.
+    pub fn weight(&self, i: usize) -> f64 {
+        self.w[i]
+    }
+
+    /// Total Push-Sum weight `Σᵢ wᵢ` (ascending-`i` summation). Rounds
+    /// conserve this up to f64 re-association; `reset_weighted` re-seeds
+    /// it to exactly `Σ nᵢ` of the weights passed in — the streaming
+    /// re-weight invariant the property suite pins.
+    pub fn total_weight(&self) -> f64 {
+        self.w.iter().sum()
+    }
+
     /// Writes node `i`'s current estimate `v_i / w_i` into `out`.
     pub fn estimate_into(&self, i: usize, out: &mut [f64]) {
         assert_eq!(out.len(), self.d);

@@ -23,7 +23,11 @@
 //! * [`topology`] — overlay graphs and doubly-stochastic transition
 //!   matrices `B`, with spectral mixing-time estimates.
 //! * [`data`] — sample storage (dense + sparse), LIBSVM I/O, synthetic
-//!   stand-ins for the paper's corpora, horizontal partitioning.
+//!   stand-ins for the paper's corpora, horizontal partitioning, and
+//!   the streaming data plane: one `ShardStore` abstraction (static
+//!   bitwise-reference split, or per-node append buffers fed by a
+//!   seeded arrival schedule / tailed LIBSVM file) behind every
+//!   consumer of training rows.
 //! * [`solver`] — native baselines: centralized Pegasos, SVM-SGD,
 //!   a cutting-plane SVM-Perf equivalent, and a dual coordinate-descent
 //!   reference optimizer.

@@ -66,6 +66,9 @@ fn print_help() {
          \x20              --backend native|xla --batch-size N --local-steps N --seed N\n\
          \x20              --scheduler sequential|parallel|async --threads N\n\
          \x20              --kernel scalar|simd|auto (simd needs --features simd)\n\
+         \x20              --stream (or --stream-rate F --stream-schedule\n\
+         \x20              uniform|random|tail:<file> --stream-max-rows N\n\
+         \x20              --stream-initial F) for online per-node ingestion\n\
          \x20              --save FILE to persist the consensus model artifact)\n\
          \x20 serve        batch-score stdin rows against a saved model\n\
          \x20              (--model FILE required; --shards N --batch N\n\
@@ -118,6 +121,38 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(k) = args.get("kernel") {
         cfg.kernel = k.parse().map_err(|e: String| anyhow::anyhow!("--kernel: {e}"))?;
     }
+    // `[stream]` section: `--stream` alone enables the streaming data
+    // plane at the default rate; the explicit options override.
+    let explicit_rate = args.get("stream-rate").is_some();
+    cfg.stream_rate = args.get_parsed("stream-rate", cfg.stream_rate).map_err(err)?;
+    if let Some(s) = args.get("stream-schedule") {
+        cfg.stream_schedule =
+            s.parse().map_err(|e: String| anyhow::anyhow!("--stream-schedule: {e}"))?;
+    }
+    cfg.stream_max_rows =
+        args.get_parsed("stream-max-rows", cfg.stream_max_rows).map_err(err)?;
+    cfg.stream_initial =
+        args.get_parsed("stream-initial", cfg.stream_initial).map_err(err)?;
+    if args.has_flag("stream") && cfg.stream_rate == 0.0 {
+        // `--stream --stream-rate 0` is a contradiction, not a default.
+        anyhow::ensure!(
+            !explicit_rate,
+            "--stream contradicts --stream-rate 0 (drop one of them)"
+        );
+        cfg.stream_rate = 1.0;
+    }
+    // Stream options without a rate would silently run the static
+    // pipeline while the user believes they benchmarked online
+    // ingestion — the mislabeled-run case this codebase forbids.
+    if cfg.stream_rate == 0.0 {
+        for opt in ["stream-schedule", "stream-max-rows", "stream-initial"] {
+            anyhow::ensure!(
+                args.get(opt).is_none(),
+                "--{opt} has no effect while streaming is off — pass --stream \
+                 or --stream-rate F to enable the streaming data plane"
+            );
+        }
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -140,6 +175,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.kernel,
         cfg.trials
     );
+    if cfg.streaming_enabled() {
+        println!(
+            "stream: rate={} schedule={} max-rows={} initial={}",
+            cfg.stream_rate,
+            cfg.stream_schedule,
+            cfg.stream_max_rows,
+            cfg.stream_initial
+        );
+    }
     let runner = GadgetRunner::new(cfg)?;
     println!(
         "data: {} train / {} test samples, d={}, lambda={:.3e}",

@@ -190,7 +190,7 @@ mod tests {
         let mut w = vec![0.0; ds.dim];
         for t in 1..=iters {
             let mut ctx = StepContext {
-                shard: ds,
+                shard: ds.view(),
                 t,
                 lambda: 1e-2,
                 batch_size: batch,
@@ -262,7 +262,7 @@ mod tests {
             let mut rng = Rng::new(0);
             let mut w = vec![0.0; ds.dim];
             let mut ctx = StepContext {
-                shard: &ds,
+                shard: ds.view(),
                 t: 1,
                 lambda: 1e-2,
                 batch_size: 2, // != compiled batch

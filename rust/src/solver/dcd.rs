@@ -11,7 +11,7 @@
 //! `Q_ij = yᵢyⱼ xᵢᵀxⱼ` — solved coordinate-wise keeping `w = Σ αᵢyᵢxᵢ`.
 
 use super::{LinearModel, Solver};
-use crate::data::Dataset;
+use crate::data::ShardView;
 use crate::rng::Rng;
 
 /// Dual coordinate-descent solver.
@@ -53,7 +53,7 @@ impl DualCoordinateDescent {
 }
 
 impl Solver for DualCoordinateDescent {
-    fn fit(&mut self, ds: &Dataset) -> LinearModel {
+    fn fit_view(&mut self, ds: ShardView<'_>) -> LinearModel {
         assert!(!ds.is_empty(), "DCD: empty dataset");
         let n = ds.len();
         let c_upper = 1.0 / (self.lambda * n as f64);

@@ -29,7 +29,7 @@ pub use scaled::ScaledVector;
 pub use svm_perf::{SvmPerf, SvmPerfParams};
 pub use svm_sgd::{SvmSgd, SvmSgdParams};
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShardView};
 
 /// A trained linear model `f(x) = ⟨w, x⟩` (the paper's formulation carries
 /// no intercept; the synthetic generators plant the bias into the data).
@@ -103,9 +103,19 @@ impl LinearModel {
 
 /// Common interface over the native solvers (used by the Table-4 harness to
 /// run each baseline per node under an identical protocol).
+///
+/// Solvers iterate a borrowed [`ShardView`] — the streaming data plane's
+/// row window — so the same implementation trains on an owned `Dataset`,
+/// a static shard, or a snapshot of a streaming shard without cloning.
 pub trait Solver {
-    /// Trains on `ds` and returns the model.
-    fn fit(&mut self, ds: &Dataset) -> LinearModel;
+    /// Trains on the borrowed row window and returns the model.
+    fn fit_view(&mut self, view: ShardView<'_>) -> LinearModel;
+
+    /// Convenience: trains on a whole dataset (borrows it as a view).
+    fn fit(&mut self, ds: &Dataset) -> LinearModel {
+        self.fit_view(ds.view())
+    }
+
     /// Human-readable solver name for reports.
     fn name(&self) -> &'static str;
 }

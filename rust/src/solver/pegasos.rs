@@ -14,7 +14,7 @@
 //! step costs `O(k·nnz)` independent of `d`.
 
 use super::{LinearModel, ScaledVector, Solver};
-use crate::data::Dataset;
+use crate::data::ShardView;
 use crate::rng::Rng;
 
 /// Pegasos hyper-parameters.
@@ -60,10 +60,11 @@ impl Pegasos {
 
     /// Runs `fit` but also invokes `snapshot(t, w)` every `every` steps —
     /// how the figure harness collects objective-vs-time traces without
-    /// re-training.
+    /// re-training. Iterates a borrowed [`ShardView`] (pass
+    /// `ds.view()` for a whole dataset).
     pub fn fit_with_snapshots<F: FnMut(usize, &[f64])>(
         &self,
-        ds: &Dataset,
+        ds: ShardView<'_>,
         every: usize,
         mut snapshot: F,
     ) -> LinearModel {
@@ -107,8 +108,8 @@ impl Pegasos {
                 self.kernel.hinge_subgrad_accum(
                     w.storage(),
                     w.scale(),
-                    &ds.rows,
-                    &ds.labels,
+                    ds.rows,
+                    ds.labels,
                     &batch_idx,
                     &mut violators,
                 );
@@ -134,8 +135,8 @@ impl Pegasos {
 }
 
 impl Solver for Pegasos {
-    fn fit(&mut self, ds: &Dataset) -> LinearModel {
-        self.fit_with_snapshots(ds, 0, |_, _| {})
+    fn fit_view(&mut self, view: ShardView<'_>) -> LinearModel {
+        self.fit_with_snapshots(view, 0, |_, _| {})
     }
 
     fn name(&self) -> &'static str {
@@ -195,7 +196,7 @@ mod tests {
         let radius = 1.0 / p.lambda.sqrt();
         let s = Pegasos::new(p);
         let mut max_norm = 0.0f64;
-        s.fit_with_snapshots(&train, 100, |_, w| {
+        s.fit_with_snapshots(train.view(), 100, |_, w| {
             max_norm = max_norm.max(crate::linalg::l2_norm(w));
         });
         assert!(max_norm <= radius * (1.0 + 1e-9), "norm {max_norm} > radius {radius}");
@@ -213,7 +214,7 @@ mod tests {
     fn snapshots_fire_at_requested_cadence() {
         let (train, _) = easy_problem(6);
         let mut steps = Vec::new();
-        Pegasos::new(params(1000)).fit_with_snapshots(&train, 250, |t, _| steps.push(t));
+        Pegasos::new(params(1000)).fit_with_snapshots(train.view(), 250, |t, _| steps.push(t));
         assert_eq!(steps, vec![250, 500, 750, 1000]);
     }
 

@@ -19,7 +19,7 @@
 //! large sparse corpora (each iteration is a full pass to find the cut).
 
 use super::{LinearModel, Solver};
-use crate::data::Dataset;
+use crate::data::ShardView;
 use crate::linalg;
 
 /// Cutting-plane hyper-parameters.
@@ -60,7 +60,7 @@ impl SvmPerf {
 
     /// Most-violated constraint at `w`: select every sample with margin < 1.
     /// Returns `(g_c, Δ_c, violation ξ_c(w))`.
-    fn most_violated(&self, ds: &Dataset, w: &[f64]) -> (Vec<f64>, f64, f64) {
+    fn most_violated(&self, ds: ShardView<'_>, w: &[f64]) -> (Vec<f64>, f64, f64) {
         let n = ds.len() as f64;
         let mut g = vec![0.0; ds.dim];
         let mut delta = 0.0;
@@ -155,7 +155,7 @@ impl SvmPerf {
 }
 
 impl Solver for SvmPerf {
-    fn fit(&mut self, ds: &Dataset) -> LinearModel {
+    fn fit_view(&mut self, ds: ShardView<'_>) -> LinearModel {
         let p = self.params.clone();
         assert!(p.lambda > 0.0, "SvmPerf: lambda must be positive");
         assert!(!ds.is_empty(), "SvmPerf: empty dataset");

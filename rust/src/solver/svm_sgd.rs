@@ -10,7 +10,7 @@
 //!   than i.i.d. draws.
 
 use super::{LinearModel, ScaledVector, Solver};
-use crate::data::Dataset;
+use crate::data::ShardView;
 use crate::rng::Rng;
 
 /// SVM-SGD hyper-parameters.
@@ -54,7 +54,7 @@ impl SvmSgd {
     /// size `η₀ = 1/(λ·t₀)` is about 1 / (typical ‖x‖²) — keeping the first
     /// update from overshooting. We estimate the typical squared row norm
     /// from ≤ 64 samples.
-    fn calibrate_t0(&self, ds: &Dataset, rng: &mut Rng) -> f64 {
+    fn calibrate_t0(&self, ds: ShardView<'_>, rng: &mut Rng) -> f64 {
         let probes = ds.len().min(64);
         let mut s = 0.0;
         for _ in 0..probes {
@@ -67,7 +67,7 @@ impl SvmSgd {
 }
 
 impl Solver for SvmSgd {
-    fn fit(&mut self, ds: &Dataset) -> LinearModel {
+    fn fit_view(&mut self, ds: ShardView<'_>) -> LinearModel {
         let p = &self.params;
         assert!(p.lambda > 0.0, "SvmSgd: lambda must be positive");
         assert!(!ds.is_empty(), "SvmSgd: empty dataset");

@@ -79,6 +79,92 @@ fn train_small_run_reports_accuracy() {
 }
 
 #[test]
+fn train_stream_smoke_and_flag_defaults() {
+    // Explicit streaming options: the startup line echoes the resolved
+    // [stream] section and the run completes with a report.
+    let (ok, stdout, stderr) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.05",
+        "--nodes",
+        "3",
+        "--trials",
+        "1",
+        "--max-iterations",
+        "120",
+        "--stream-rate",
+        "2",
+        "--stream-max-rows",
+        "20",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(
+        stdout.contains("stream: rate=2 schedule=uniform max-rows=20 initial=0.5"),
+        "{stdout}"
+    );
+    assert!(stdout.contains("test accuracy"), "{stdout}");
+
+    // `--stream` alone enables the data plane at the default rate.
+    let (ok2, stdout2, stderr2) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.05",
+        "--nodes",
+        "3",
+        "--trials",
+        "1",
+        "--max-iterations",
+        "60",
+        "--stream",
+        "--stream-max-rows",
+        "10",
+    ]);
+    assert!(ok2, "stderr: {stderr2}");
+    assert!(stdout2.contains("stream: rate=1"), "{stdout2}");
+
+    // bad schedule is a clear error, not a silent static run
+    let (ok3, _, stderr3) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--stream-rate",
+        "1",
+        "--stream-schedule",
+        "poisson",
+    ]);
+    assert!(!ok3);
+    assert!(stderr3.contains("stream-schedule"), "{stderr3}");
+
+    // stream options without a rate are rejected, not silently ignored
+    // (a "streaming" benchmark must never secretly run the static path)
+    let (ok4, _, stderr4) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--stream-schedule",
+        "uniform",
+    ]);
+    assert!(!ok4);
+    assert!(stderr4.contains("streaming is off"), "{stderr4}");
+
+    // `--stream` + an explicit zero rate is a contradiction
+    let (ok5, _, stderr5) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--stream",
+        "--stream-rate",
+        "0",
+    ]);
+    assert!(!ok5);
+    assert!(stderr5.contains("contradicts"), "{stderr5}");
+}
+
+#[test]
 fn train_from_config_file() {
     let dir = std::env::temp_dir().join(format!("gadget-cli-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

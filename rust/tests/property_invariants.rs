@@ -132,6 +132,70 @@ fn prop_randomized_gossip_mass_conservation() {
     }
 }
 
+/// Property: `reset_weighted` with *grown* shard sizes — the streaming
+/// data plane's re-weight rule — re-seeds the Push-Sum mass exactly:
+/// Σwᵢ equals the new Σnᵢ bit for bit (both are the same ascending-`i`
+/// summation of the same values), and estimates stay finite through any
+/// interleaving of mixing rounds and re-weights. Extends the
+/// `MassState::estimate_into` guard suite to the synchronous engine.
+#[test]
+fn prop_reset_weighted_reweight_conserves_mass_and_stays_finite() {
+    let mut rng = Rng::new(4500);
+    for case in 0..CASES {
+        let g = random_connected_graph(&mut rng);
+        let m = g.n;
+        let d = rng.range(1, 8);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let mut sizes: Vec<f64> = (0..m).map(|_| rng.range(1, 40) as f64).collect();
+        let vectors: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let mut pv = PushVector::new_weighted(&vectors, &sizes);
+        for round in 0..rng.range(1, 5) {
+            // mix, then "ingest": some shards grow, and the next
+            // iteration re-weights the mass with the new sizes
+            pv.run_rounds(&b, rng.range(1, 6));
+            for s in sizes.iter_mut() {
+                if rng.flip(0.5) {
+                    *s += rng.range(1, 20) as f64;
+                }
+            }
+            let fresh: Vec<Vec<f64>> =
+                (0..m).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+            pv.reset_weighted(fresh.iter().map(|v| v.as_slice()), &sizes);
+            // exact mass re-conservation across the re-weight
+            let expect: f64 = sizes.iter().sum();
+            assert_eq!(
+                pv.total_weight().to_bits(),
+                expect.to_bits(),
+                "case {case} round {round}: Σnᵢ not re-seeded exactly"
+            );
+            // the re-weighted target is the new-size weighted mean
+            let mut want = vec![0.0; d];
+            for (v, &a) in fresh.iter().zip(&sizes) {
+                for k in 0..d {
+                    want[k] += a * v[k] / expect;
+                }
+            }
+            let target = pv.target();
+            for k in 0..d {
+                assert!(
+                    (target[k] - want[k]).abs() < 1e-9 * (1.0 + want[k].abs()),
+                    "case {case} round {round}: target mismatch at {k}"
+                );
+            }
+            // estimates remain finite after further mixing
+            pv.run_rounds(&b, 3);
+            for i in 0..m {
+                assert!(
+                    pv.estimate(i).iter().all(|x| x.is_finite()),
+                    "case {case} round {round}: node {i} estimate not finite"
+                );
+                assert!(pv.weight(i).is_finite());
+            }
+        }
+    }
+}
+
 /// Property: horizontal partitioning is a permutation — every sample
 /// appears exactly once across shards, shard sizes differ by ≤ 1.
 #[test]
@@ -144,7 +208,7 @@ fn prop_partition_is_permutation() {
             (0..n).map(|i| SparseVec::new(vec![0], vec![i as f32])).collect();
         let labels: Vec<i8> = (0..n).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
         let ds = Dataset::new("p", 1, rows, labels);
-        let shards = partition::horizontal_split(&ds, m, rng.next_u64());
+        let shards = partition::horizontal_split(&ds, m, rng.next_u64()).unwrap();
         let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
         assert_eq!(sizes.iter().sum::<usize>(), n, "case {case}");
         let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
@@ -400,7 +464,8 @@ fn prop_async_runs_never_emit_non_finite_weights() {
             lambda: 1e-2,
         };
         let shards =
-            partition::horizontal_split(&generate(&spec, rng.next_u64(), 1.0).train, m, case);
+            partition::horizontal_split(&generate(&spec, rng.next_u64(), 1.0).train, m, case)
+                .unwrap();
         let cycles = rng.range(50, 300);
         let res = AsyncScheduler::new(AsyncParams {
             lambda: 1e-2,

@@ -10,7 +10,7 @@
 //!   that makes each node's estimate converge to the shard-weighted
 //!   average.
 
-use gadget::config::{ExperimentConfig, SchedulerKind};
+use gadget::config::{ExperimentConfig, SchedulerKind, StreamSchedule};
 use gadget::coordinator::sched::{AsyncParams, AsyncScheduler};
 use gadget::coordinator::{GadgetRunner, MassState};
 use gadget::data::partition::horizontal_split;
@@ -178,6 +178,92 @@ fn trial_fanout_is_bitwise_identical() {
     }
 }
 
+/// The streaming arrival schedule the equivalence sweep extends to:
+/// rate 3 with a 36-row cap over the usps stand-in means arrivals land at
+/// iterations 2..=13 and then the pool-fed stream dries up.
+fn streaming_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        stream_rate: 3.0,
+        stream_max_rows: 36,
+        stream_initial: 0.5,
+        ..base_cfg()
+    }
+}
+
+#[test]
+fn streaming_parallel_is_bitwise_identical_to_sequential() {
+    // Arrivals are store-internal and seeded — a pure function of the
+    // trial seed, never of worker interleaving — so the bitwise
+    // `Parallel ≡ Sequential` contract extends verbatim to streaming
+    // runs. trials (2) ≥ threads also sweeps the trial fan-out path with
+    // per-trial store reconstruction.
+    let seq = GadgetRunner::new(streaming_cfg()).unwrap().run().unwrap();
+    for threads in pool_threads() {
+        let cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Parallel,
+            threads,
+            ..streaming_cfg()
+        };
+        let par = GadgetRunner::new(cfg).unwrap().run().unwrap();
+        assert_eq!(seq.trials.len(), par.trials.len());
+        for (ts, tp) in seq.trials.iter().zip(&par.trials) {
+            assert_eq!(ts.iterations, tp.iterations, "threads={threads}");
+            assert_eq!(
+                bits(&ts.consensus_w),
+                bits(&tp.consensus_w),
+                "threads={threads}: streaming consensus_w diverged"
+            );
+            assert_eq!(
+                bits(&ts.node_accuracy),
+                bits(&tp.node_accuracy),
+                "threads={threads}: streaming node accuracies diverged"
+            );
+        }
+        assert_eq!(seq.test_accuracy.to_bits(), par.test_accuracy.to_bits());
+    }
+}
+
+#[test]
+fn streaming_random_schedule_is_bitwise_scheduler_invariant() {
+    // The random node-assignment schedule draws from the store's own
+    // seeded RNG — still deterministic, still scheduler-invariant.
+    let mk = |scheduler, threads| {
+        let cfg = ExperimentConfig {
+            stream_schedule: StreamSchedule::Random,
+            scheduler,
+            threads,
+            max_iterations: 80,
+            trials: 1,
+            ..streaming_cfg()
+        };
+        GadgetRunner::new(cfg).unwrap().run().unwrap()
+    };
+    let seq = mk(SchedulerKind::Sequential, 0);
+    let par = mk(SchedulerKind::Parallel, 4);
+    assert_eq!(seq.iterations, par.iterations);
+    assert_eq!(bits(&seq.trials[0].consensus_w), bits(&par.trials[0].consensus_w));
+}
+
+#[test]
+fn streaming_convergence_is_drift_aware() {
+    // The ε test may not declare convergence while rows still arrive:
+    // with arrivals at iterations 2..=13, every one of those iterations
+    // has at least one ingesting (vetoed) node, so the earliest
+    // all-converged stop is t = 14. Once the stream dries up the anytime
+    // criterion takes over and the run still terminates inside the
+    // budget with a finite ε.
+    let report = GadgetRunner::new(streaming_cfg()).unwrap().run().unwrap();
+    for t in &report.trials {
+        assert!(
+            t.iterations > 13,
+            "run stopped at iteration {} while rows were still arriving",
+            t.iterations
+        );
+        assert!(t.epsilon_final.is_finite());
+    }
+    assert!(report.test_accuracy > 0.7, "accuracy {}", report.test_accuracy);
+}
+
 fn async_problem(m: usize, seed: u64) -> (Vec<gadget::data::Dataset>, f64) {
     let spec = DatasetSpec {
         name: "mass".into(),
@@ -189,7 +275,7 @@ fn async_problem(m: usize, seed: u64) -> (Vec<gadget::data::Dataset>, f64) {
         positive_rate: 0.5,
         lambda: 1e-2,
     };
-    let shards = horizontal_split(&generate(&spec, seed, 1.0).train, m, seed);
+    let shards = horizontal_split(&generate(&spec, seed, 1.0).train, m, seed).unwrap();
     let total_n: f64 = shards.iter().map(|s| s.len() as f64).sum();
     (shards, total_n)
 }

@@ -1,0 +1,157 @@
+#!/usr/bin/env bash
+# fetch_corpora.sh — map the seven paper corpora onto the `path:` loader.
+#
+# The GADGET paper (Table 2) evaluates on Adult, CCAT (RCV1), MNIST,
+# Reuters-21578, USPS, Webspam and Gisette. The repo ships synthetic
+# stand-ins matched on shape statistics (DESIGN.md §Substitutions); this
+# script downloads the freely-redistributable LIBSVM-format copies where
+# they exist so runs can use the *real* data:
+#
+#   ./scripts/fetch_corpora.sh [corpus...]       # default: all seven
+#   cargo run --release -- train \
+#       --dataset path:corpora/a9a --nodes 10
+#
+# Offline-graceful: a corpus that cannot be downloaded is reported and
+# skipped — the script never fails the build, and already-present files
+# are only checksum-verified, not re-fetched.
+#
+# Integrity: checksums are recorded on first successful fetch into
+# corpora/SHA256SUMS (trust-on-first-use — the upstream mirrors publish
+# no signed digests) and verified on every later run, so a silently
+# corrupted or truncated re-download cannot masquerade as the corpus a
+# result was measured on. EXPERIMENTS.md §Real corpora has the recipe.
+
+set -u
+cd "$(dirname "$0")/.."
+
+DEST="${GADGET_CORPORA_DIR:-corpora}"
+SUMS="$DEST/SHA256SUMS"
+MIRROR="https://www.csie.ntu.edu.tw/~cjlin/libsvmtools/datasets"
+mkdir -p "$DEST"
+
+# corpus -> URL (bz2-compressed LIBSVM where upstream ships that).
+# Notes on the mapping:
+#  * adult    -> a9a           (the standard LIBSVM Adult encoding, 123 feats;
+#                               binary ±1 labels — trains directly)
+#  * ccat     -> rcv1.binary   (CCAT/ECAT vs GCAT/MCAT split of RCV1; binary)
+#  * mnist    -> mnist.scale   (MULTICLASS, labels 0..9 — must be relabelled
+#                               to ±1 before training, see below)
+#  * usps     -> usps          (MULTICLASS, labels 1..10 — must be relabelled)
+#  * webspam  -> webspam unigram (normalized; binary)
+#  * gisette  -> gisette_scale (binary)
+#  * reuters  -> no LIBSVM mirror exists; Reuters-21578 must be converted
+#                locally (see EXPERIMENTS.md) — listed so the skip is loud.
+#
+# IMPORTANT: the `path:` loader maps any label > 0 to +1 and the rest to
+# −1 (rust/src/data/libsvm.rs). Feeding a raw MULTICLASS file therefore
+# degenerates (usps's 1..10 all collapse to +1 — a single-class dataset
+# with trivially perfect accuracy). Relabel one class against the rest
+# first, e.g. digit 3 vs rest:
+#   awk '{ $1 = ($1 == "3") ? "+1" : "-1"; print }' corpora/usps \
+#       > corpora/usps-3vr && gadget train --dataset path:corpora/usps-3vr ...
+corpus_url() {
+    case "$1" in
+        a9a)      echo "$MIRROR/binary/a9a" ;;
+        rcv1)     echo "$MIRROR/binary/rcv1_train.binary.bz2" ;;
+        mnist)    echo "$MIRROR/multiclass/mnist.scale.bz2" ;;
+        usps)     echo "$MIRROR/multiclass/usps.bz2" ;;
+        webspam)  echo "$MIRROR/binary/webspam_wc_normalized_unigram.svm.bz2" ;;
+        gisette)  echo "$MIRROR/binary/gisette_scale.bz2" ;;
+        reuters)  echo "" ;;  # no public LIBSVM copy — handled below
+        *)        return 1 ;;
+    esac
+}
+
+# corpora whose labels are multiclass and need a ±1 reduction first
+is_multiclass() { case "$1" in mnist|usps) return 0 ;; *) return 1 ;; esac; }
+
+ALL="a9a rcv1 mnist usps webspam gisette reuters"
+WANT="${*:-$ALL}"
+
+have_cmd() { command -v "$1" >/dev/null 2>&1; }
+
+sha256_of() {
+    if have_cmd sha256sum; then sha256sum "$1" | awk '{print $1}';
+    elif have_cmd shasum; then shasum -a 256 "$1" | awk '{print $1}';
+    else echo ""; fi
+}
+
+verify_or_record() { # $1 = file (relative to $DEST)
+    local f="$DEST/$1"
+    local sum; sum="$(sha256_of "$f")"
+    if [ -z "$sum" ]; then
+        echo "  (no sha256 tool available — skipping integrity check)"
+        return 0
+    fi
+    if [ -f "$SUMS" ] && grep -q "  $1\$" "$SUMS"; then
+        if grep -q "^$sum  $1\$" "$SUMS"; then
+            echo "  checksum OK: $1"
+        else
+            echo "  CHECKSUM MISMATCH: $1 (recorded vs downloaded differ)" >&2
+            echo "  delete $f and the $1 line in $SUMS to re-fetch" >&2
+            return 1
+        fi
+    else
+        echo "$sum  $1" >> "$SUMS"
+        echo "  checksum recorded (trust-on-first-use): $1"
+    fi
+}
+
+fetched=0 skipped=0 failed=0
+for c in $WANT; do
+    url="$(corpus_url "$c")" || { echo "unknown corpus: $c" >&2; failed=$((failed+1)); continue; }
+    echo "== $c =="
+    if [ -z "$url" ]; then
+        echo "  no public LIBSVM mirror (Reuters-21578 licensing); convert locally:"
+        echo "  see EXPERIMENTS.md §Real corpora for the write_libsvm recipe"
+        skipped=$((skipped+1))
+        continue
+    fi
+    file="${url##*/}"
+    plain="${file%.bz2}"
+    if [ -f "$DEST/$plain" ]; then
+        echo "  already present: $DEST/$plain"
+        verify_or_record "$plain" || failed=$((failed+1))
+        continue
+    fi
+    if ! have_cmd curl && ! have_cmd wget; then
+        echo "  neither curl nor wget available — skipping (offline build?)"
+        skipped=$((skipped+1))
+        continue
+    fi
+    ok=1
+    if have_cmd curl; then
+        curl -fsSL --connect-timeout 10 -o "$DEST/$file.part" "$url" || ok=0
+    else
+        wget -q -T 10 -O "$DEST/$file.part" "$url" || ok=0
+    fi
+    if [ "$ok" -ne 1 ]; then
+        rm -f "$DEST/$file.part"
+        echo "  download failed (offline or mirror moved) — skipping"
+        skipped=$((skipped+1))
+        continue
+    fi
+    mv "$DEST/$file.part" "$DEST/$file"
+    if [ "$file" != "$plain" ]; then
+        if have_cmd bunzip2; then
+            bunzip2 -f "$DEST/$file" || { echo "  decompress failed" >&2; failed=$((failed+1)); continue; }
+        else
+            echo "  bunzip2 unavailable — leaving compressed copy at $DEST/$file"
+            skipped=$((skipped+1))
+            continue
+        fi
+    fi
+    verify_or_record "$plain" || { failed=$((failed+1)); continue; }
+    if is_multiclass "$c"; then
+        echo "  fetched: $DEST/$plain has MULTICLASS labels — relabel to ±1"
+        echo "  before training (one-vs-rest awk recipe in this script's header)"
+    else
+        echo "  ready: train --dataset path:$DEST/$plain"
+    fi
+    fetched=$((fetched+1))
+done
+
+echo
+echo "fetch_corpora: $fetched fetched, $skipped skipped, $failed failed"
+# Offline-graceful: skips never fail the script; checksum mismatches do.
+[ "$failed" -eq 0 ]
