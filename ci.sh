@@ -80,6 +80,13 @@ run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test sch
 run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test scheduler_equivalence streaming
 run_hard cargo test -q --test store_equivalence
 
+# Out-of-core data plane: the mmap≡static bitwise contract must also be
+# worker-count-invariant (the store is consulted inside the pooled
+# per-node phases) — re-run the mmap tier at the same degenerate and
+# multi-worker pool sizes as the other equivalence gates.
+run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test store_equivalence mmap
+run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test store_equivalence mmap
+
 # Kernel-layer matrix. The feature compiles identical arithmetic — it
 # only unlocks runtime selection — so the simd build re-runs just the
 # surfaces that actually differ under the feature (the feature-gated
@@ -144,6 +151,34 @@ stream_smoke() (
     echo "$out" | grep -q 'test accuracy'
 )
 run_hard stream_smoke
+
+# Out-of-core smoke: pack a LIBSVM file, inspect the artifact, train off
+# it with --store mmap and --store static, and byte-compare the persisted
+# consensus models — the end-to-end (through-the-binary) form of the
+# mmap≡static bitwise contract that tests/store_equivalence.rs pins
+# in-process. The model artifact holds only weights + provenance (no
+# timings), so `cmp` is the whole assertion.
+pack_smoke() (
+    set -e
+    tmp="$(mktemp -d)"
+    trap 'rm -rf "$tmp"' EXIT
+    # tiny separable corpus: class decided by which of features 1/2 fires
+    for i in $(seq 1 24); do
+        if [ $((i % 2)) -eq 0 ]; then
+            echo "+1 1:1.0 3:0.$i 7:0.25"
+        else
+            echo "-1 2:1.0 4:0.$i 7:0.25"
+        fi
+    done > "$tmp/toy.libsvm"
+    ./target/release/gadget pack --input "$tmp/toy.libsvm" --output "$tmp/toy.gpack"
+    ./target/release/gadget inspect --dataset "pack:$tmp/toy.gpack" --lambda 1e-3
+    ./target/release/gadget train --dataset "pack:$tmp/toy.gpack" --lambda 1e-3 \
+        --nodes 3 --trials 1 --max-iterations 60 --store mmap --save "$tmp/mmap.json"
+    ./target/release/gadget train --dataset "pack:$tmp/toy.gpack" --lambda 1e-3 \
+        --nodes 3 --trials 1 --max-iterations 60 --store static --save "$tmp/static.json"
+    cmp "$tmp/mmap.json" "$tmp/static.json"
+)
+run_hard pack_smoke
 
 echo
 if [ "$fail" -ne 0 ]; then

@@ -14,7 +14,7 @@ use crate::topology::TopologyKind;
 use crate::Result;
 use anyhow::{bail, Context};
 
-pub use crate::data::StreamSchedule;
+pub use crate::data::{StoreKind, StreamSchedule};
 pub use crate::linalg::KernelKind;
 
 /// Compute backend for the local Pegasos step.
@@ -163,6 +163,12 @@ pub struct ExperimentConfig {
     /// full set up front and rejects a non-default value (it would be
     /// silently ignored otherwise).
     pub stream_initial: f64,
+    /// Shard-store backend (`[data]` section: `store = "auto" | "static"
+    /// | "mmap"`). `auto` picks `mmap` for `pack:` datasets and `static`
+    /// otherwise; `mmap` requires a `pack:` dataset; `static` on a
+    /// `pack:` dataset materializes the same contiguous windows onto the
+    /// heap (the bitwise A/B of the out-of-core plane).
+    pub store: StoreKind,
 }
 
 impl Default for ExperimentConfig {
@@ -195,6 +201,7 @@ impl Default for ExperimentConfig {
             stream_schedule: StreamSchedule::Uniform,
             stream_max_rows: 0,
             stream_initial: 0.5,
+            store: StoreKind::Auto,
         }
     }
 }
@@ -281,6 +288,28 @@ impl ExperimentConfig {
                     }
                 }
             }
+        }
+        let packed = self.dataset.starts_with("pack:");
+        if self.store == StoreKind::Mmap && !packed {
+            bail!(
+                "config: store = \"mmap\" requires a pack: dataset (the mmap \
+                 store serves windows of a pre-parsed artifact — run `gadget \
+                 pack` first and point dataset at pack:<file>)"
+            );
+        }
+        if packed && self.streaming_enabled() {
+            bail!(
+                "config: pack: datasets are the static out-of-core plane and \
+                 cannot stream — drop the [stream] section, or stream from \
+                 the original text file instead"
+            );
+        }
+        if packed && self.scheduler == SchedulerKind::Async {
+            bail!(
+                "config: the async scheduler does not support pack: datasets \
+                 yet (its nodes own their shards) — use the sequential or \
+                 parallel scheduler"
+            );
         }
         Ok(())
     }
@@ -370,6 +399,13 @@ impl ExperimentConfig {
                     cfg.stream_max_rows = value.as_usize_or(k)?
                 }
                 "stream.initial" | "initial" => cfg.stream_initial = value.as_f64_or(k)?,
+                // `[data]` section (flat spelling accepted too).
+                "data.store" | "store" => {
+                    cfg.store = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
                 other => bail!("config: unknown key {other:?}"),
             }
         }
@@ -520,6 +556,12 @@ impl ConfigBuilder {
     /// Sets the initial split fraction for the pool schedules.
     pub fn stream_initial(mut self, f: f64) -> Self {
         self.cfg.stream_initial = f;
+        self
+    }
+
+    /// Sets the shard-store backend.
+    pub fn store(mut self, s: StoreKind) -> Self {
+        self.cfg.store = s;
         self
     }
 
@@ -736,6 +778,48 @@ snapshot_every = 10
             "[stream]\nrate = 1\nschedule = \"tail:f.libsvm\"\n"
         )
         .is_ok());
+    }
+
+    #[test]
+    fn data_store_key_round_trips() {
+        // auto is the default and parses from both spellings
+        assert_eq!(ExperimentConfig::default().store, StoreKind::Auto);
+        let cfg = ExperimentConfig::from_toml(
+            "dataset = \"pack:train.gpack\"\n[data]\nstore = \"mmap\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.store, StoreKind::Mmap);
+        let flat = ExperimentConfig::from_toml("store = \"auto\"").unwrap();
+        assert_eq!(flat.store, StoreKind::Auto);
+        // static on a pack is the bitwise A/B side — allowed
+        let ab = ExperimentConfig::from_toml(
+            "dataset = \"pack:train.gpack\"\nstore = \"static\"\n",
+        )
+        .unwrap();
+        assert_eq!(ab.store, StoreKind::Static);
+        // builder setter
+        let b = ExperimentConfig::builder()
+            .dataset("pack:train.gpack")
+            .store(StoreKind::Mmap)
+            .build()
+            .unwrap();
+        assert_eq!(b.store, StoreKind::Mmap);
+        // bad value rejected at parse
+        assert!(ExperimentConfig::from_toml("store = \"disk\"").is_err());
+        // mmap without a pack: dataset has nothing to map
+        let e = ExperimentConfig::from_toml("store = \"mmap\"").unwrap_err();
+        assert!(e.to_string().contains("pack:"), "{e}");
+        // pack datasets are the static plane: streaming and async rejected
+        let e = ExperimentConfig::from_toml(
+            "dataset = \"pack:t.gpack\"\n[stream]\nrate = 1\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("cannot stream"), "{e}");
+        let e = ExperimentConfig::from_toml(
+            "dataset = \"pack:t.gpack\"\nscheduler = \"async\"\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("async"), "{e}");
     }
 
     #[test]

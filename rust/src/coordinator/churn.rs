@@ -116,7 +116,7 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
         .ok_or_else(|| anyhow::anyhow!("churn: lambda required"))?;
     let m = cfg.nodes;
     anyhow::ensure!(m <= train.len(), "more nodes than samples");
-    let d = train.dim;
+    let d = train.dim();
 
     let full_graph = Graph::generate(cfg.topology, m, cfg.seed ^ 0x6772_6170_6800);
     // Churn rides the same data plane as the plain runner: training rows

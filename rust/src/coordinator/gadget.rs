@@ -41,7 +41,10 @@ use super::sched::{
 use crate::config::{Backend, ExperimentConfig, SchedulerKind};
 use crate::data::synthetic::{generate, spec_by_name};
 use crate::linalg::Kernel;
-use crate::data::{partition, Dataset, ShardStore, StaticStore, StreamSchedule, StreamingStore};
+use crate::data::{
+    partition, Dataset, MmapStore, PackFile, ShardStore, ShardView, StaticStore, StoreKind,
+    StreamSchedule, StreamingStore,
+};
 use crate::gossip::{GossipStats, PushVector};
 use crate::metrics::{self, node_trial_std, Trace, TracePoint};
 use crate::pool::{Task, WorkerPool};
@@ -50,6 +53,8 @@ use crate::topology::{mixing_time, Graph, TransitionMatrix};
 use crate::util::Stopwatch;
 use crate::Result;
 use anyhow::{bail, Context};
+use std::ops::Range;
+use std::sync::Arc;
 
 /// Result of one GADGET trial.
 #[derive(Clone, Debug)]
@@ -118,9 +123,67 @@ impl GadgetReport {
 pub struct GadgetRunner {
     cfg: ExperimentConfig,
     lambda: f64,
-    train: Dataset,
+    train: TrainPlane,
     test: Dataset,
     load_secs: f64,
+}
+
+/// Where a runner's training rows live: on the heap (synthetic
+/// generators, `path:` LIBSVM files) or on disk behind a memory-mapped
+/// pack window (`pack:` artifacts — rows are served page-by-page and
+/// never materialized network-wide).
+pub(crate) enum TrainPlane {
+    /// Heap-resident training set.
+    Heap(Dataset),
+    /// Rows `rows` of a mapped pack artifact (the trailing rows past the
+    /// window are the held-out test split).
+    Pack {
+        /// The opened artifact, shared with every trial's shard store.
+        pack: Arc<PackFile>,
+        /// The training window.
+        rows: Range<usize>,
+    },
+}
+
+impl TrainPlane {
+    /// Feature dimension.
+    pub(crate) fn dim(&self) -> usize {
+        match self {
+            Self::Heap(ds) => ds.dim,
+            Self::Pack { pack, .. } => pack.dim(),
+        }
+    }
+
+    /// Number of training rows.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            Self::Heap(ds) => ds.len(),
+            Self::Pack { rows, .. } => rows.end - rows.start,
+        }
+    }
+
+    /// The whole training plane as a borrowed view — zero-copy for both
+    /// variants, so evaluation never materializes a pack.
+    pub(crate) fn view(&self) -> ShardView<'_> {
+        match self {
+            Self::Heap(ds) => ds.view(),
+            Self::Pack { pack, rows } => pack.view_range(rows.clone()),
+        }
+    }
+
+    /// The heap dataset, for consumers that need `&Dataset` semantics
+    /// (the async engine's owned shards, legacy accessors). Pack-backed
+    /// planes fail loudly instead of silently materializing.
+    pub(crate) fn heap(&self) -> Result<&Dataset> {
+        match self {
+            Self::Heap(ds) => Ok(ds),
+            Self::Pack { pack, .. } => bail!(
+                "{}: this path needs a heap training set, but the dataset is \
+                 a mapped pack artifact (rows stay on disk)",
+                pack.name()
+            ),
+        }
+    }
 }
 
 /// Result of [`run_on_datasets`]: one GADGET training on explicit data.
@@ -152,7 +215,7 @@ pub fn run_on_datasets(
     let runner = GadgetRunner {
         cfg: base.clone(),
         lambda,
-        train,
+        train: TrainPlane::Heap(train),
         test,
         load_secs: 0.0,
     };
@@ -181,9 +244,32 @@ impl GadgetRunner {
         Ok(Self { cfg, lambda, train, test, load_secs })
     }
 
-    /// Accessor: the loaded training set.
+    /// Accessor: the loaded training set (heap planes only — a `pack:`
+    /// dataset keeps its training rows on disk; use
+    /// [`GadgetRunner::train_view`] there).
+    ///
+    /// # Panics
+    /// Panics on a pack-backed runner.
     pub fn train_data(&self) -> &Dataset {
-        &self.train
+        self.train
+            .heap()
+            .expect("train_data() on a pack-backed runner — use train_view()")
+    }
+
+    /// Accessor: the training rows as a borrowed view — works for every
+    /// plane, including mapped `pack:` artifacts.
+    pub fn train_view(&self) -> ShardView<'_> {
+        self.train.view()
+    }
+
+    /// Accessor: number of training rows.
+    pub fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    /// Accessor: the training feature dimension.
+    pub fn train_dim(&self) -> usize {
+        self.train.dim()
     }
 
     /// Accessor: the loaded test set.
@@ -214,7 +300,7 @@ impl GadgetRunner {
                      layer reserves the XLA path a future implementation slot)"
                 );
                 Box::new(crate::runtime::XlaBackend::from_default_artifacts(
-                    self.train.dim,
+                    self.train.dim(),
                     self.cfg.batch_size,
                     self.cfg.local_steps,
                     self.lambda,
@@ -404,7 +490,7 @@ impl GadgetRunner {
     /// ([`build_store`]), not on the nodes.
     fn build_nodes(&self, seed: u64) -> Result<Vec<NodeState>> {
         let m = self.cfg.nodes;
-        let d = self.train.dim;
+        let d = self.train.dim();
         let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57)?;
         let root = Rng::new(seed);
         Ok(test_shards
@@ -427,7 +513,7 @@ impl GadgetRunner {
             .collect();
         let node_objective: Vec<f64> = nodes
             .iter()
-            .map(|n| metrics::objective(&n.w, &self.train, self.lambda))
+            .map(|n| metrics::objective_view(&n.w, self.train.view(), self.lambda))
             .collect();
         (node_accuracy, node_objective)
     }
@@ -436,7 +522,7 @@ impl GadgetRunner {
     fn run_trial(&self, seed: u64, sched: &mut dyn Scheduler) -> Result<TrialResult> {
         let cfg = &self.cfg;
         let m = cfg.nodes;
-        let d = self.train.dim;
+        let d = self.train.dim();
 
         // --- network setup -------------------------------------------------
         let graph = Graph::generate(cfg.topology, m, seed ^ GRAPH_SEED);
@@ -524,7 +610,7 @@ impl GadgetRunner {
                 trace.push(TracePoint {
                     time_secs: sw.secs(),
                     step: t,
-                    objective: metrics::objective(&w_avg, &self.train, self.lambda),
+                    objective: metrics::objective_view(&w_avg, self.train.view(), self.lambda),
                     test_error: metrics::zero_one_error(&w_avg, &self.test),
                 });
             }
@@ -570,8 +656,11 @@ impl GadgetRunner {
     fn run_async_trial(&self, seed: u64) -> Result<TrialResult> {
         let cfg = &self.cfg;
         let m = cfg.nodes;
+        // config validation rejects async + pack:, so the heap plane is
+        // always present here.
+        let train = self.train.heap()?;
         let graph = Graph::generate(cfg.topology, m, seed ^ GRAPH_SEED);
-        let train_shards = partition::horizontal_split(&self.train, m, seed)?;
+        let train_shards = partition::horizontal_split(train, m, seed)?;
         let test_shards = partition::horizontal_split(&self.test, m, seed ^ 0x7e57)?;
         let params = AsyncParams {
             lambda: self.lambda,
@@ -598,9 +687,9 @@ impl GadgetRunner {
         let node_objective: Vec<f64> = result
             .estimates
             .iter()
-            .map(|w| metrics::objective(w, &self.train, self.lambda))
+            .map(|w| metrics::objective(w, train, self.lambda))
             .collect();
-        let d = self.train.dim;
+        let d = self.train.dim();
         let mut consensus_w = vec![0.0; d];
         for w in &result.estimates {
             crate::linalg::add_assign(w, &mut consensus_w);
@@ -649,10 +738,13 @@ fn average_w(nodes: &[NodeState]) -> Vec<f64> {
     avg
 }
 
-/// Builds the per-trial shard store from the config's `[stream]`
-/// section — the one data-plane decision point shared by the plain
-/// runner and the churn engine:
+/// Builds the per-trial shard store from the config's `[data]` and
+/// `[stream]` sections — the one data-plane decision point shared by the
+/// plain runner and the churn engine:
 ///
+/// * `pack:` dataset → [`MmapStore`] windows over the mapped artifact
+///   (`store = "static"` materializes the same windows into a
+///   [`StaticStore`] for bitwise A/B against the heap plane);
 /// * streaming off (`rate = 0`) → [`StaticStore`] over the classic
 ///   seeded horizontal split (the bitwise pre-refactor path);
 /// * `schedule = "uniform" | "random"` → hold out `1 − initial` of the
@@ -662,10 +754,29 @@ fn average_w(nodes: &[NodeState]) -> Vec<f64> {
 ///   from the line-delimited LIBSVM file.
 pub(crate) fn build_store(
     cfg: &ExperimentConfig,
-    train: &Dataset,
+    train: &TrainPlane,
     seed: u64,
 ) -> Result<Box<dyn ShardStore>> {
     let m = cfg.nodes;
+    let train = match train {
+        TrainPlane::Pack { pack, rows } => {
+            // Pack shards are contiguous row windows, not the seeded
+            // shuffle: the whole point of the mapped plane is that rows
+            // never leave the artifact, and a shuffle would force a copy.
+            // The static/mmap A/B below therefore compares the *same*
+            // windows, which is what makes it bitwise.
+            return match cfg.store {
+                StoreKind::Auto | StoreKind::Mmap => {
+                    Ok(Box::new(MmapStore::over_range(pack.clone(), rows.clone(), m)?))
+                }
+                StoreKind::Static => {
+                    let mm = MmapStore::over_range(pack.clone(), rows.clone(), m)?;
+                    Ok(Box::new(StaticStore::from_shards(mm.materialize_shards())))
+                }
+            };
+        }
+        TrainPlane::Heap(ds) => ds,
+    };
     if !cfg.streaming_enabled() {
         return Ok(Box::new(StaticStore::split(train, m, seed)?));
     }
@@ -713,19 +824,67 @@ const STREAM_SEED: u64 = 0x57f2_ea4d;
 
 /// Dataset loading shared by the runner and the experiment harness:
 /// `synthetic-*` names hit the Table-2 generators; `path:<file>` reads
-/// LIBSVM (splitting 2:1 when no test file is given).
+/// LIBSVM (splitting 2:1 when no test file is given); `pack:<file>` maps
+/// a `gadget pack` artifact and keeps the training rows on disk.
+///
+/// For file-backed corpora the Table-2 λ resolves from the file stem
+/// ([`lambda_for_corpus`]) so `--dataset path:a9a.txt` trains with the
+/// paper's `adult` regularizer out of the box; `lambda = ...` in the
+/// config still overrides.
 pub(crate) fn load_dataset(
     cfg: &ExperimentConfig,
-) -> Result<(Dataset, Dataset, Option<f64>)> {
+) -> Result<(TrainPlane, Dataset, Option<f64>)> {
     if let Some(path) = cfg.dataset.strip_prefix("path:") {
         let ds = crate::data::libsvm::read_libsvm(path, 0)?;
         let (train, test) = partition::train_test_split(&ds, 2.0 / 3.0, cfg.seed);
-        return Ok((train, test, None));
+        return Ok((TrainPlane::Heap(train), test, lambda_for_corpus(path)));
+    }
+    if let Some(path) = cfg.dataset.strip_prefix("pack:") {
+        let pack = Arc::new(PackFile::open(path)?);
+        let n = pack.len();
+        // Contiguous 2:1 split — leading two thirds train *in place* (no
+        // index indirection, so shard windows stay zero-copy), trailing
+        // third materializes as the heap test set. Pack order is the
+        // artifact's row order; shuffle at pack time if that matters.
+        let n_train = n * 2 / 3;
+        anyhow::ensure!(
+            n_train >= 1 && n_train < n,
+            "pack `{path}`: {n} rows cannot give a non-empty 2:1 train/test split"
+        );
+        let test = pack.materialize_range(n_train..n);
+        let lambda = lambda_for_corpus(path);
+        return Ok((TrainPlane::Pack { pack, rows: 0..n_train }, test, lambda));
     }
     let spec = spec_by_name(&cfg.dataset)
         .with_context(|| format!("unknown dataset {:?} (try synthetic-adult, …)", cfg.dataset))?;
     let split = generate(&spec, cfg.seed ^ 0xda7a, cfg.scale);
-    Ok((split.train, split.test, Some(spec.lambda)))
+    Ok((TrainPlane::Heap(split.train), split.test, Some(spec.lambda)))
+}
+
+/// Maps a corpus file name to its Table-2 λ by stem: `path:a9a.txt` and
+/// `pack:rcv1_ccat.gpack` train with the paper's `adult` / `ccat`
+/// regularizers without a `lambda = ...` line. Returns `None` for stems
+/// the paper doesn't cover (the config then requires an explicit λ).
+pub fn lambda_for_corpus(path: &str) -> Option<f64> {
+    // Alias → Table-2 name; longest-useful aliases first so e.g.
+    // "rcv1_ccat" resolves before a hypothetical bare "ccat" check matters.
+    const ALIASES: &[(&str, &str)] = &[
+        ("a9a", "adult"),
+        ("adult", "adult"),
+        ("rcv1", "ccat"),
+        ("ccat", "ccat"),
+        ("mnist", "mnist"),
+        ("reuters", "reuters"),
+        ("usps", "usps"),
+        ("webspam", "webspam"),
+        ("gisette", "gisette"),
+    ];
+    let stem = std::path::Path::new(path)
+        .file_stem()?
+        .to_string_lossy()
+        .to_ascii_lowercase();
+    let (_, name) = ALIASES.iter().find(|(alias, _)| stem.contains(alias))?;
+    spec_by_name(name).map(|s| s.lambda)
 }
 
 /// Seed-mixing label for graph construction (avoids colliding with the
@@ -964,6 +1123,45 @@ mod tests {
         };
         let err = GadgetRunner::new(cfg).unwrap().run().unwrap_err();
         assert!(err.to_string().contains("stream"), "{err}");
+    }
+
+    #[test]
+    fn lambda_for_corpus_maps_table2_stems() {
+        let spec = |name: &str| spec_by_name(name).map(|s| s.lambda);
+        assert_eq!(lambda_for_corpus("data/a9a.txt"), spec("adult"));
+        assert_eq!(lambda_for_corpus("/tmp/rcv1_ccat.gpack"), spec("ccat"));
+        assert_eq!(lambda_for_corpus("corpus/WEBSPAM-trigram.pack"), spec("webspam"));
+        assert_eq!(lambda_for_corpus("usps.gpack"), spec("usps"));
+        assert_eq!(lambda_for_corpus("mystery.bin"), None);
+    }
+
+    #[test]
+    fn pack_dataset_trains_end_to_end_and_static_ab_is_bitwise() {
+        // Pack the synthetic usps training rows, then train straight off
+        // the artifact (`pack:`): λ resolves from the "usps" stem, the
+        // mapped plane converges, and `store = "static"` (materialized
+        // copies of the same windows) is bitwise identical.
+        let spec = spec_by_name("synthetic-usps").unwrap();
+        let split = generate(&spec, 3 ^ 0xda7a, 0.05);
+        let td = crate::util::TempDir::new().unwrap();
+        let path = td.path().join("usps.gpack");
+        crate::data::pack::pack_dataset(&split.train, &path).unwrap();
+
+        let cfg = |store: StoreKind| ExperimentConfig {
+            dataset: format!("pack:{}", path.display()),
+            store,
+            trials: 1,
+            ..small_cfg()
+        };
+        let mmap = GadgetRunner::new(cfg(StoreKind::Mmap)).unwrap().run().unwrap();
+        assert_eq!(mmap.lambda, spec.lambda, "λ must resolve from the file stem");
+        assert!(mmap.test_accuracy > 0.75, "pack accuracy {}", mmap.test_accuracy);
+        assert!(!mmap.trials[0].trace.points.is_empty());
+
+        let stat = GadgetRunner::new(cfg(StoreKind::Static)).unwrap().run().unwrap();
+        assert_eq!(mmap.trials[0].consensus_w, stat.trials[0].consensus_w);
+        assert_eq!(mmap.iterations, stat.iterations);
+        assert_eq!(mmap.test_accuracy.to_bits(), stat.test_accuracy.to_bits());
     }
 
     #[test]

@@ -30,7 +30,9 @@ pub mod sched;
 pub use backend::{LocalBackend, NativeBackend, StepContext};
 pub use churn::{run_with_churn, ChurnEvent, ChurnKind, ChurnReport, ChurnSchedule};
 pub use engine::{AsyncGossipEngine, AsyncParams};
-pub use gadget::{run_on_datasets, DatasetRunReport, GadgetReport, GadgetRunner, TrialResult};
+pub use gadget::{
+    lambda_for_corpus, run_on_datasets, DatasetRunReport, GadgetReport, GadgetRunner, TrialResult,
+};
 pub use multiclass::{MulticlassGadget, MulticlassReport};
 pub use node::NodeState;
 pub use sched::{

@@ -9,14 +9,16 @@
 //! LIBSVM format drop in through [`libsvm::read_libsvm`].
 
 pub mod libsvm;
+pub mod pack;
 pub mod partition;
 pub mod rff;
 pub mod store;
 pub mod synthetic;
 
+pub use pack::{MmapStore, PackFile, StoreKind};
 pub use store::{ShardStore, ShardView, StaticStore, StreamSchedule, StreamingStore};
 
-use crate::linalg::SparseVec;
+use crate::linalg::{RowsView, SparseVec};
 
 /// A labelled binary-classification dataset with sparse rows.
 ///
@@ -108,7 +110,7 @@ impl Dataset {
     /// and local-step backends iterate (see [`store`]).
     #[inline]
     pub fn view(&self) -> ShardView<'_> {
-        ShardView { dim: self.dim, rows: &self.rows, labels: &self.labels }
+        ShardView { dim: self.dim, rows: RowsView::Vecs(&self.rows), labels: &self.labels }
     }
 }
 

@@ -1,0 +1,787 @@
+//! The out-of-core data plane: pre-parsed columnar CSR pack files and the
+//! mmap-backed [`MmapStore`].
+//!
+//! `gadget pack` converts a LIBSVM text corpus **once** into a binary
+//! artifact holding four columnar arrays — `indptr` (u64 row boundaries),
+//! `indices` (u32), `values` (f32), `labels` (i8) — behind a versioned,
+//! checksummed 64-byte header. Training then memory-maps the artifact
+//! ([`PackFile`]) and serves borrowed [`ShardView`] windows straight out
+//! of the page cache: row `i` of a shard is two subslices of the mapped
+//! arrays ([`crate::linalg::RowsView::Csr`]), so node count × shard size
+//! can exceed RAM (the kernel pages windows in and out) and a cold start
+//! pays a checksum scan instead of a text parse.
+//!
+//! ## File layout (version 1, native-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "GDGTPACK"
+//! 8       4     version (u32, = 1)
+//! 12      4     endianness marker (u32, = 0x01020304 in writer byte order)
+//! 16      8     feature dimension d (u64)
+//! 24      8     row count n (u64)
+//! 32      8     total non-zeros nnz (u64)
+//! 40      8     FNV-1a-64 checksum of the payload (u64)
+//! 48      8     payload length in bytes (u64)
+//! 56      8     reserved (zero)
+//! 64      …     payload: indptr (n+1)×u64 | indices nnz×u32 |
+//!               values nnz×f32 | labels n×i8 | zero pad to 8-byte multiple
+//! ```
+//!
+//! Section order is by descending alignment, and the payload starts at the
+//! 8-aligned offset 64, so every section is naturally aligned inside the
+//! mapping — the reader casts with `align_to` and *asserts* the empty
+//! prefix rather than copying. The file is native-endian; the marker field
+//! makes a foreign-endian pack fail loudly at open instead of decoding
+//! garbage. [`PackFile::open`] validates everything up front — magic,
+//! version, endianness, exact file size, checksum, `indptr` monotonicity,
+//! per-row strictly-increasing indices `< d`, labels `±1` — so a
+//! truncated or corrupt pack can never silently train on partial data.
+
+use super::{libsvm, Dataset, ShardStore, ShardView};
+use crate::linalg::RowsView;
+use crate::util::Mmap;
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::Arc;
+
+/// File magic.
+pub const PACK_MAGIC: [u8; 8] = *b"GDGTPACK";
+/// Current format version.
+pub const PACK_VERSION: u32 = 1;
+/// Endianness marker value (in writer byte order).
+pub const PACK_ENDIAN_MARK: u32 = 0x0102_0304;
+/// Header size in bytes.
+pub const PACK_HEADER_LEN: usize = 64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// What `gadget pack` reports after writing an artifact.
+#[derive(Clone, Debug)]
+pub struct PackSummary {
+    /// Rows written.
+    pub rows: usize,
+    /// Feature dimension recorded in the header.
+    pub dim: usize,
+    /// Total stored non-zeros.
+    pub nnz: usize,
+    /// Artifact size in bytes (header + payload).
+    pub bytes: u64,
+}
+
+fn payload_sizes(n: u64, nnz: u64) -> Result<(u64, u64, u64, u64, u64)> {
+    // Section byte sizes with overflow checks (a hostile header must not
+    // wrap the arithmetic into a plausible-looking layout).
+    let indptr = (n + 1).checked_mul(8).context("pack: indptr size overflow")?;
+    let indices = nnz.checked_mul(4).context("pack: indices size overflow")?;
+    let values = nnz.checked_mul(4).context("pack: values size overflow")?;
+    let labels = n;
+    let raw = indptr
+        .checked_add(indices)
+        .and_then(|s| s.checked_add(values))
+        .and_then(|s| s.checked_add(labels))
+        .context("pack: payload size overflow")?;
+    let padded = raw.checked_add(7).context("pack: payload size overflow")? & !7;
+    Ok((indptr, indices, values, labels, padded))
+}
+
+fn write_pack(
+    path: &Path,
+    dim: usize,
+    indptr: &[u64],
+    indices: &[u32],
+    values: &[f32],
+    labels: &[i8],
+) -> Result<PackSummary> {
+    let n = labels.len();
+    let nnz = indices.len();
+    assert_eq!(indptr.len(), n + 1, "write_pack: indptr length");
+    assert_eq!(values.len(), nnz, "write_pack: values length");
+    ensure!(n > 0, "pack: refusing to write an empty corpus");
+    let (_, _, _, _, payload_len) = payload_sizes(n as u64, nnz as u64)?;
+    let raw_len =
+        8 * (n as u64 + 1) + 4 * nnz as u64 + 4 * nnz as u64 + n as u64;
+    let pad = (payload_len - raw_len) as usize;
+
+    // Pass 1: checksum over the exact payload byte stream (pad included).
+    let mut sum = FNV_OFFSET;
+    for v in indptr {
+        fnv1a(&mut sum, &v.to_ne_bytes());
+    }
+    for v in indices {
+        fnv1a(&mut sum, &v.to_ne_bytes());
+    }
+    for v in values {
+        fnv1a(&mut sum, &v.to_ne_bytes());
+    }
+    for &v in labels {
+        fnv1a(&mut sum, &[v as u8]);
+    }
+    fnv1a(&mut sum, &[0u8; 7][..pad]);
+
+    let mut header = [0u8; PACK_HEADER_LEN];
+    header[0..8].copy_from_slice(&PACK_MAGIC);
+    header[8..12].copy_from_slice(&PACK_VERSION.to_ne_bytes());
+    header[12..16].copy_from_slice(&PACK_ENDIAN_MARK.to_ne_bytes());
+    header[16..24].copy_from_slice(&(dim as u64).to_ne_bytes());
+    header[24..32].copy_from_slice(&(n as u64).to_ne_bytes());
+    header[32..40].copy_from_slice(&(nnz as u64).to_ne_bytes());
+    header[40..48].copy_from_slice(&sum.to_ne_bytes());
+    header[48..56].copy_from_slice(&payload_len.to_ne_bytes());
+
+    // Pass 2: write.
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create pack {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(&header)?;
+    for v in indptr {
+        w.write_all(&v.to_ne_bytes())?;
+    }
+    for v in indices {
+        w.write_all(&v.to_ne_bytes())?;
+    }
+    for v in values {
+        w.write_all(&v.to_ne_bytes())?;
+    }
+    for &v in labels {
+        w.write_all(&[v as u8])?;
+    }
+    w.write_all(&[0u8; 7][..pad])?;
+    w.flush().with_context(|| format!("write pack {}", path.display()))?;
+    Ok(PackSummary {
+        rows: n,
+        dim,
+        nnz,
+        bytes: PACK_HEADER_LEN as u64 + payload_len,
+    })
+}
+
+/// Converts a LIBSVM text file into a pack artifact — the one-time
+/// `gadget pack` step. `dim` forces the feature dimension (0 infers the
+/// max index seen, like [`libsvm::read_libsvm`]). Rows accumulate
+/// straight into the columnar arrays; per-row `SparseVec`s exist only
+/// transiently during parsing.
+pub fn pack_libsvm(input: &Path, output: &Path, dim: usize) -> Result<PackSummary> {
+    let file = std::fs::File::open(input)
+        .with_context(|| format!("open {}", input.display()))?;
+    let mut indptr: Vec<u64> = vec![0];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut labels: Vec<i8> = Vec::new();
+    let mut max_dim = 0usize;
+    for (ln, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let (y, row) = libsvm::parse_line(trimmed)
+            .with_context(|| format!("{}:{}", input.display(), ln + 1))?;
+        max_dim = max_dim.max(row.min_dim());
+        indices.extend_from_slice(&row.indices);
+        values.extend_from_slice(&row.values);
+        indptr.push(indices.len() as u64);
+        labels.push(y);
+    }
+    ensure!(!labels.is_empty(), "pack: {} holds no samples", input.display());
+    let dim = if dim == 0 { max_dim } else { dim };
+    ensure!(
+        max_dim <= dim,
+        "pack: {} has feature index {max_dim} > declared dim {dim}",
+        input.display()
+    );
+    write_pack(output, dim, &indptr, &indices, &values, &labels)
+}
+
+/// Packs an in-memory dataset — the test/CI convenience twin of
+/// [`pack_libsvm`] (byte-identical output for the same rows).
+pub fn pack_dataset(ds: &Dataset, output: &Path) -> Result<PackSummary> {
+    let mut indptr: Vec<u64> = Vec::with_capacity(ds.len() + 1);
+    indptr.push(0);
+    let nnz = ds.total_nnz();
+    let mut indices: Vec<u32> = Vec::with_capacity(nnz);
+    let mut values: Vec<f32> = Vec::with_capacity(nnz);
+    for r in &ds.rows {
+        indices.extend_from_slice(&r.indices);
+        values.extend_from_slice(&r.values);
+        indptr.push(indices.len() as u64);
+    }
+    write_pack(output, ds.dim, &indptr, &indices, &values, &ds.labels)
+}
+
+/// A validated, memory-mapped pack artifact.
+///
+/// All accessors are zero-copy borrows into the mapping; a [`ShardView`]
+/// window over a row range is two slice borrows ([`Self::view_range`]),
+/// never an allocation. The full file is validated at open (checksum and
+/// structure), so every later access may assume well-formed data.
+#[derive(Debug)]
+pub struct PackFile {
+    map: Mmap,
+    name: String,
+    dim: usize,
+    n_rows: usize,
+    nnz: usize,
+    indices_off: usize,
+    values_off: usize,
+    labels_off: usize,
+}
+
+impl PackFile {
+    /// Opens and fully validates a pack artifact. Every malformation —
+    /// truncation, version or endianness mismatch, checksum failure,
+    /// non-monotone row boundaries, out-of-range or unsorted indices,
+    /// bad labels — is a loud error here; there is no partial-read mode.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let map = Mmap::open(path)?;
+        let b = map.bytes();
+        ensure!(
+            b.len() >= PACK_HEADER_LEN,
+            "{}: truncated pack (only {} bytes, header needs {PACK_HEADER_LEN})",
+            path.display(),
+            b.len()
+        );
+        ensure!(
+            b[0..8] == PACK_MAGIC,
+            "{}: not a gadget pack (bad magic {:?}; expected {:?})",
+            path.display(),
+            &b[0..8],
+            &PACK_MAGIC[..]
+        );
+        let u32_at = |off: usize| u32::from_ne_bytes(b[off..off + 4].try_into().unwrap());
+        let u64_at = |off: usize| u64::from_ne_bytes(b[off..off + 8].try_into().unwrap());
+        let version = u32_at(8);
+        ensure!(
+            version == PACK_VERSION,
+            "{}: unsupported pack version {version} (this build reads version \
+             {PACK_VERSION}; re-run `gadget pack`)",
+            path.display()
+        );
+        ensure!(
+            u32_at(12) == PACK_ENDIAN_MARK,
+            "{}: pack was written on a machine with different endianness — \
+             re-run `gadget pack` on this machine",
+            path.display()
+        );
+        let dim64 = u64_at(16);
+        let n64 = u64_at(24);
+        let nnz64 = u64_at(32);
+        let checksum = u64_at(40);
+        let payload_len = u64_at(48);
+        ensure!(n64 > 0, "{}: pack holds zero rows", path.display());
+        let (indptr_b, indices_b, values_b, _labels_b, expect_payload) =
+            payload_sizes(n64, nnz64)?;
+        ensure!(
+            payload_len == expect_payload,
+            "{}: header payload length {payload_len} does not match the \
+             declared shape (n = {n64}, nnz = {nnz64} ⇒ {expect_payload} \
+             bytes) — corrupt header",
+            path.display()
+        );
+        let expect_file = PACK_HEADER_LEN as u64 + payload_len;
+        ensure!(
+            b.len() as u64 == expect_file,
+            "{}: file is {} bytes but the header declares {expect_file} — \
+             truncated or trailing garbage",
+            path.display(),
+            b.len()
+        );
+        let mut sum = FNV_OFFSET;
+        fnv1a(&mut sum, &b[PACK_HEADER_LEN..]);
+        ensure!(
+            sum == checksum,
+            "{}: payload checksum mismatch (stored {checksum:#018x}, \
+             computed {sum:#018x}) — the pack is corrupt",
+            path.display()
+        );
+        let dim = usize::try_from(dim64).context("pack: dim overflows usize")?;
+        let n_rows = usize::try_from(n64).context("pack: row count overflows usize")?;
+        let nnz = usize::try_from(nnz64).context("pack: nnz overflows usize")?;
+        let indices_off = PACK_HEADER_LEN + indptr_b as usize;
+        let values_off = indices_off + indices_b as usize;
+        let labels_off = values_off + values_b as usize;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("pack")
+            .to_string();
+        let pf = Self { map, name, dim, n_rows, nnz, indices_off, values_off, labels_off };
+
+        // Structural validation: row boundaries and per-row indices. This
+        // (like the checksum) is one sequential scan — still far cheaper
+        // than a text parse, and it is what lets every later access skip
+        // bounds reasoning.
+        let indptr = pf.indptr();
+        ensure!(
+            indptr[0] == 0 && indptr[n_rows] == nnz as u64,
+            "{}: indptr endpoints [{}, {}] do not match [0, nnz = {nnz}]",
+            path.display(),
+            indptr[0],
+            indptr[n_rows]
+        );
+        for (i, w) in indptr.windows(2).enumerate() {
+            ensure!(
+                w[0] <= w[1],
+                "{}: indptr decreases at row {i} ({} → {})",
+                path.display(),
+                w[0],
+                w[1]
+            );
+        }
+        let idx = pf.indices();
+        for i in 0..n_rows {
+            let row = &idx[indptr[i] as usize..indptr[i + 1] as usize];
+            for (k, &j) in row.iter().enumerate() {
+                ensure!(
+                    (j as usize) < dim,
+                    "{}: row {i} has feature index {j} ≥ dim {dim}",
+                    path.display()
+                );
+                ensure!(
+                    k == 0 || row[k - 1] < j,
+                    "{}: row {i} indices are not strictly increasing",
+                    path.display()
+                );
+            }
+        }
+        for (i, &y) in pf.labels().iter().enumerate() {
+            ensure!(
+                y == 1 || y == -1,
+                "{}: row {i} label {y} is not ±1",
+                path.display()
+            );
+        }
+        Ok(pf)
+    }
+
+    fn section<T: Copy>(&self, off: usize, len: usize) -> &[T] {
+        let bytes = &self.map.bytes()[off..off + len * std::mem::size_of::<T>()];
+        // SAFETY: T is a plain number type (u64/u32/f32/i8 — every bit
+        // pattern valid) and the layout guarantees natural alignment
+        // (asserted, not assumed).
+        let (pre, mid, post) = unsafe { bytes.align_to::<T>() };
+        assert!(pre.is_empty() && post.is_empty() && mid.len() == len, "pack section misaligned");
+        mid
+    }
+
+    /// Absolute row boundaries, length `n + 1`.
+    #[inline]
+    pub fn indptr(&self) -> &[u64] {
+        self.section::<u64>(PACK_HEADER_LEN, self.n_rows + 1)
+    }
+
+    /// All column indices.
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        self.section::<u32>(self.indices_off, self.nnz)
+    }
+
+    /// All values.
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        self.section::<f32>(self.values_off, self.nnz)
+    }
+
+    /// All labels.
+    #[inline]
+    pub fn labels(&self) -> &[i8] {
+        self.section::<i8>(self.labels_off, self.n_rows)
+    }
+
+    /// Corpus name (the artifact's file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Feature dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n_rows
+    }
+
+    /// True when the pack holds no rows (never after a successful open).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    /// Total stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// A zero-copy window over rows `r` — the page-serving primitive:
+    /// the `indptr` subslice plus the *untouched* index/value arrays
+    /// (offsets are absolute, so no rebasing, no allocation).
+    ///
+    /// # Panics
+    /// Panics if `r` is out of range.
+    pub fn view_range(&self, r: Range<usize>) -> ShardView<'_> {
+        assert!(r.start <= r.end && r.end <= self.n_rows, "view_range: out of range");
+        ShardView {
+            dim: self.dim,
+            rows: RowsView::Csr {
+                indptr: &self.indptr()[r.start..=r.end],
+                indices: self.indices(),
+                values: self.values(),
+            },
+            labels: &self.labels()[r],
+        }
+    }
+
+    /// The whole pack as one view.
+    pub fn view(&self) -> ShardView<'_> {
+        self.view_range(0..self.n_rows)
+    }
+
+    /// Copies rows `r` into a heap [`Dataset`] — for consumers that need
+    /// ownership (the held-out test split, the `--store static` on-pack
+    /// path). Row order is preserved, so training on the materialized
+    /// copy is bitwise identical to training on the window.
+    pub fn materialize_range(&self, r: Range<usize>) -> Dataset {
+        let view = self.view_range(r.clone());
+        let rows = view.rows.iter().map(|row| row.to_owned()).collect();
+        Dataset::new(self.name.clone(), self.dim, rows, view.labels.to_vec())
+    }
+}
+
+/// Splits `rows` into `m` contiguous blocks: the first `len % m` blocks
+/// get one extra row. This — not `horizontal_split`'s seeded shuffle —
+/// is the mmap partition: contiguity is what makes a shard a *window*
+/// (one `indptr` subslice) instead of a gather. The `--store static`
+/// on-pack path materializes these same ranges, so the two stores train
+/// on identical shards and the bitwise equivalence tier can pin them
+/// against each other.
+pub fn contiguous_ranges(rows: Range<usize>, m: usize) -> Vec<Range<usize>> {
+    assert!(m > 0, "contiguous_ranges: need at least one shard");
+    let total = rows.end - rows.start;
+    let base = total / m;
+    let extra = total % m;
+    let mut out = Vec::with_capacity(m);
+    let mut at = rows.start;
+    for i in 0..m {
+        let len = base + usize::from(i < extra);
+        out.push(at..at + len);
+        at += len;
+    }
+    out
+}
+
+/// The mmap-backed shard store: `m` contiguous row windows over one
+/// [`PackFile`]. Serving a shard is two slice borrows into the mapping —
+/// the OS pages the windows in on demand, so the working set is bounded
+/// by what training touches, not by corpus size. Static (no ingestion);
+/// the streaming plane stays heap-backed.
+#[derive(Debug)]
+pub struct MmapStore {
+    pack: Arc<PackFile>,
+    ranges: Vec<Range<usize>>,
+}
+
+impl MmapStore {
+    /// Shards rows `rows` of `pack` into `m` contiguous windows.
+    pub fn over_range(pack: Arc<PackFile>, rows: Range<usize>, m: usize) -> Result<Self> {
+        ensure!(m > 0, "mmap store: need at least one node");
+        ensure!(
+            rows.start <= rows.end && rows.end <= pack.len(),
+            "mmap store: row range {rows:?} exceeds pack rows {}",
+            pack.len()
+        );
+        ensure!(
+            rows.end - rows.start >= m,
+            "mmap store: {} rows cannot fill {m} shards (every node needs \
+             at least one row)",
+            rows.end - rows.start
+        );
+        let ranges = contiguous_ranges(rows, m);
+        Ok(Self { pack, ranges })
+    }
+
+    /// Shards the whole pack.
+    pub fn new(pack: Arc<PackFile>, m: usize) -> Result<Self> {
+        let n = pack.len();
+        Self::over_range(pack, 0..n, m)
+    }
+
+    /// The per-node row windows.
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// The underlying pack.
+    pub fn pack(&self) -> &Arc<PackFile> {
+        &self.pack
+    }
+
+    /// Materializes every shard window as a heap [`Dataset`] — the
+    /// `--store static` on-pack path (identical rows and order, so the
+    /// resulting [`super::StaticStore`] trains bitwise-identically).
+    pub fn materialize_shards(&self) -> Vec<Dataset> {
+        self.ranges.iter().map(|r| self.pack.materialize_range(r.clone())).collect()
+    }
+}
+
+impl ShardStore for MmapStore {
+    fn nodes(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.pack.dim()
+    }
+
+    fn shard(&self, node: usize) -> ShardView<'_> {
+        self.pack.view_range(self.ranges[node].clone())
+    }
+
+    fn shard_len(&self, node: usize) -> usize {
+        let r = &self.ranges[node];
+        r.end - r.start
+    }
+
+    fn ingest(&mut self, added: &mut [usize]) -> Result<usize> {
+        added.fill(0);
+        Ok(0)
+    }
+}
+
+/// Which [`ShardStore`] backend the runner builds (`[data] store` /
+/// `--store`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StoreKind {
+    /// `mmap` for `pack:` datasets, `static` otherwise (streaming config
+    /// still selects the streaming store — see the runner).
+    #[default]
+    Auto,
+    /// Heap shards. On a `pack:` dataset this *materializes the same
+    /// contiguous windows* the mmap store would serve — the A/B side of
+    /// the bitwise equivalence pin.
+    Static,
+    /// Memory-mapped pack windows; requires a `pack:` dataset.
+    Mmap,
+}
+
+impl std::str::FromStr for StoreKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "static" => Ok(Self::Static),
+            "mmap" => Ok(Self::Mmap),
+            other => Err(format!("unknown store {other:?} (auto | static | mmap)")),
+        }
+    }
+}
+
+impl std::fmt::Display for StoreKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Auto => "auto",
+            Self::Static => "static",
+            Self::Mmap => "mmap",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SparseVec;
+
+    fn toy(n: usize, dim: usize) -> Dataset {
+        let mut rows = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let j = (i % dim) as u32;
+            let last = (dim - 1) as u32;
+            if j < last {
+                rows.push(SparseVec::new(vec![j, last], vec![i as f32 + 0.5, -1.0]));
+            } else {
+                rows.push(SparseVec::new(vec![last], vec![1.5]));
+            }
+            labels.push(if i % 3 == 0 { 1 } else { -1 });
+        }
+        Dataset::new("toy", dim, rows, labels)
+    }
+
+    #[test]
+    fn pack_roundtrips_bitwise() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("toy.gpack");
+        let ds = toy(13, 5);
+        let summary = pack_dataset(&ds, &p).unwrap();
+        assert_eq!(summary.rows, 13);
+        assert_eq!(summary.dim, 5);
+        assert_eq!(summary.nnz, ds.total_nnz());
+        assert_eq!(summary.bytes, std::fs::metadata(&p).unwrap().len());
+        let pf = PackFile::open(&p).unwrap();
+        assert_eq!((pf.len(), pf.dim(), pf.nnz()), (13, 5, ds.total_nnz()));
+        assert_eq!(pf.name(), "toy");
+        let v = pf.view();
+        assert_eq!(v.len(), 13);
+        for i in 0..13 {
+            let (x, y) = v.sample(i);
+            assert_eq!(x.to_owned(), ds.rows[i], "row {i}");
+            assert_eq!(y, ds.labels[i] as f64, "label {i}");
+        }
+    }
+
+    #[test]
+    fn pack_of_libsvm_matches_pack_of_parsed_dataset() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let text = dir.path().join("c.libsvm");
+        std::fs::write(&text, "# hdr\n+1 1:0.5 3:2\n\n-1 2:1\n+1 1:1 2:1 3:1\n").unwrap();
+        let via_text = dir.path().join("a.gpack");
+        let via_ds = dir.path().join("b.gpack");
+        pack_libsvm(&text, &via_text, 0).unwrap();
+        let ds = libsvm::read_libsvm(&text, 0).unwrap();
+        pack_dataset(&ds, &via_ds).unwrap();
+        assert_eq!(
+            std::fs::read(&via_text).unwrap(),
+            std::fs::read(&via_ds).unwrap(),
+            "text and dataset packing must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn view_range_windows_are_absolute() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("w.gpack");
+        let ds = toy(10, 4);
+        pack_dataset(&ds, &p).unwrap();
+        let pf = PackFile::open(&p).unwrap();
+        let v = pf.view_range(4..9);
+        assert_eq!(v.len(), 5);
+        for (k, i) in (4..9).enumerate() {
+            assert_eq!(v.sample(k).0.to_owned(), ds.rows[i]);
+            assert_eq!(v.labels[k], ds.labels[i]);
+        }
+        let m = pf.materialize_range(4..9);
+        assert_eq!(m.rows, ds.rows[4..9]);
+        assert_eq!(m.labels, ds.labels[4..9]);
+    }
+
+    #[test]
+    fn truncated_pack_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("t.gpack");
+        pack_dataset(&toy(8, 3), &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        // header-level truncation
+        std::fs::write(&p, &full[..32]).unwrap();
+        let e = PackFile::open(&p).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+        // payload-level truncation
+        std::fs::write(&p, &full[..full.len() - 8]).unwrap();
+        let e = PackFile::open(&p).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn corrupt_payload_rejected_by_checksum() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("c.gpack");
+        pack_dataset(&toy(8, 3), &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = PACK_HEADER_LEN + (bytes.len() - PACK_HEADER_LEN) / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let e = PackFile::open(&p).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+    }
+
+    #[test]
+    fn wrong_version_and_magic_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("v.gpack");
+        pack_dataset(&toy(8, 3), &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        let mut bad = good.clone();
+        bad[8] = 99; // version field
+        std::fs::write(&p, &bad).unwrap();
+        let e = PackFile::open(&p).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+        let mut bad = good;
+        bad[0] = b'X'; // magic
+        std::fs::write(&p, &bad).unwrap();
+        let e = PackFile::open(&p).unwrap_err();
+        assert!(e.to_string().contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn mmap_store_windows_partition_the_pack() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("s.gpack");
+        let ds = toy(11, 4);
+        pack_dataset(&ds, &p).unwrap();
+        let pack = Arc::new(PackFile::open(&p).unwrap());
+        let store = MmapStore::new(pack, 3).unwrap();
+        assert_eq!(store.nodes(), 3);
+        assert_eq!(store.dim(), 4);
+        // 11 rows over 3 nodes: 4, 4, 3 — contiguous and exhaustive
+        assert_eq!(store.ranges(), &[0..4, 4..8, 8..11]);
+        let mut seen = 0usize;
+        for node in 0..3 {
+            let v = store.shard(node);
+            assert_eq!(v.len(), store.shard_len(node));
+            for k in 0..v.len() {
+                assert_eq!(v.sample(k).0.to_owned(), ds.rows[seen]);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 11);
+        // static ingestion contract
+        let mut store = store;
+        let mut added = vec![7usize; 3];
+        assert_eq!(store.ingest(&mut added).unwrap(), 0);
+        assert_eq!(added, vec![0, 0, 0]);
+        assert!(store.stream_exhausted());
+        // materialized shards are the same rows in the same order
+        let shards = store.materialize_shards();
+        let flat: Vec<_> = shards.iter().flat_map(|s| s.rows.iter().cloned()).collect();
+        assert_eq!(flat, ds.rows);
+    }
+
+    #[test]
+    fn too_few_rows_for_nodes_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("few.gpack");
+        pack_dataset(&toy(2, 3), &p).unwrap();
+        let pack = Arc::new(PackFile::open(&p).unwrap());
+        let e = MmapStore::new(pack, 5).unwrap_err();
+        assert!(e.to_string().contains("cannot fill"), "{e}");
+    }
+
+    #[test]
+    fn store_kind_parses_and_displays() {
+        assert_eq!("auto".parse::<StoreKind>().unwrap(), StoreKind::Auto);
+        assert_eq!("static".parse::<StoreKind>().unwrap(), StoreKind::Static);
+        assert_eq!("mmap".parse::<StoreKind>().unwrap(), StoreKind::Mmap);
+        assert!("disk".parse::<StoreKind>().is_err());
+        assert_eq!(StoreKind::Auto.to_string(), "auto");
+        assert_eq!(StoreKind::Static.to_string(), "static");
+        assert_eq!(StoreKind::Mmap.to_string(), "mmap");
+        assert_eq!(StoreKind::default(), StoreKind::Auto);
+    }
+}

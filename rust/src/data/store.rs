@@ -33,7 +33,7 @@
 //! (DESIGN.md §Streaming data plane has the re-weight rule).
 
 use super::{partition, Dataset};
-use crate::linalg::SparseVec;
+use crate::linalg::{RowRef, RowsView, SparseVec};
 use crate::rng::Rng;
 use crate::Result;
 use anyhow::{bail, Context};
@@ -43,14 +43,17 @@ use std::io::BufRead;
 ///
 /// Everything a local learner needs — rows, labels, the feature
 /// dimension — without ownership, so the same `StepContext` drives
-/// static shards, streaming shards and plain `Dataset`s
-/// ([`Dataset::view`]).
+/// static shards, streaming shards, memory-mapped pack windows
+/// ([`super::pack::MmapStore`]) and plain `Dataset`s ([`Dataset::view`]).
+/// Rows are a layout-agnostic [`RowsView`]: heap `SparseVec` slices and
+/// zero-copy CSR windows present identically, so every consumer
+/// downstream is out-of-core-ready.
 #[derive(Clone, Copy, Debug)]
 pub struct ShardView<'a> {
     /// Feature dimension (shared by every row).
     pub dim: usize,
     /// Feature vectors.
-    pub rows: &'a [SparseVec],
+    pub rows: RowsView<'a>,
     /// Labels in {-1, +1}, aligned with `rows`.
     pub labels: &'a [i8],
 }
@@ -69,10 +72,11 @@ impl<'a> ShardView<'a> {
     }
 
     /// Borrowing view of one sample (same convention as
-    /// [`Dataset::sample`]).
+    /// [`Dataset::sample`], but the row comes back as a zero-copy
+    /// [`RowRef`]).
     #[inline]
-    pub fn sample(&self, i: usize) -> (&'a SparseVec, f64) {
-        (&self.rows[i], self.labels[i] as f64)
+    pub fn sample(&self, i: usize) -> (RowRef<'a>, f64) {
+        (self.rows.row(i), self.labels[i] as f64)
     }
 }
 
@@ -552,7 +556,8 @@ mod tests {
         assert_eq!(store.dim(), 3);
         for i in 0..3 {
             let v = store.shard(i);
-            assert_eq!(v.rows, &shards[i].rows[..], "node {i} rows");
+            let rows: Vec<SparseVec> = v.rows.iter().map(|r| r.to_owned()).collect();
+            assert_eq!(rows, shards[i].rows, "node {i} rows");
             assert_eq!(v.labels, &shards[i].labels[..], "node {i} labels");
             assert_eq!(store.shard_len(i), shards[i].len());
             assert_eq!(store.shard_data(i).rows, shards[i].rows);
@@ -602,13 +607,16 @@ mod tests {
         // bitwise unchanged after it.
         let mut store =
             StreamingStore::from_pool(split2(4), ds(5, 3), 2.0, 0, false, 3).unwrap();
-        let before: Vec<Vec<SparseVec>> =
-            (0..2).map(|i| store.shard(i).rows.to_vec()).collect();
+        let before: Vec<Vec<SparseVec>> = (0..2)
+            .map(|i| store.shard(i).rows.iter().map(|r| r.to_owned()).collect())
+            .collect();
         let mut added = vec![0usize; 2];
         store.ingest(&mut added).unwrap();
         for i in 0..2 {
             let now = store.shard(i);
-            assert_eq!(&now.rows[..before[i].len()], &before[i][..], "node {i} prefix");
+            let prefix: Vec<SparseVec> =
+                now.rows.iter().take(before[i].len()).map(|r| r.to_owned()).collect();
+            assert_eq!(prefix, before[i], "node {i} prefix");
         }
     }
 
@@ -622,9 +630,9 @@ mod tests {
         // round-robin: node0 gets pool rows 0,2; node1 gets 1,3 — appended
         // after the two initial rows each node holds.
         let tail0: Vec<f32> =
-            store.shard(0).rows[2..].iter().map(|r| r.values[0]).collect();
+            store.shard(0).rows.iter().skip(2).map(|r| r.values[0]).collect();
         let tail1: Vec<f32> =
-            store.shard(1).rows[2..].iter().map(|r| r.values[0]).collect();
+            store.shard(1).rows.iter().skip(2).map(|r| r.values[0]).collect();
         assert_eq!(tail0, vec![0.0, 2.0]);
         assert_eq!(tail1, vec![1.0, 3.0]);
     }
@@ -708,9 +716,9 @@ mod tests {
         drop(f);
         assert_eq!(store.ingest(&mut added).unwrap(), 1);
         let v = store.shard(1); // round-robin: node 0 got line 1, node 1 line 2
-        let last = &v.rows[v.len() - 1];
-        assert_eq!(last.indices, vec![1, 2]);
-        assert_eq!(last.values, vec![0.25, 1.0]);
+        let last = v.rows.row(v.len() - 1);
+        assert_eq!(last.indices, &[1u32, 2][..]);
+        assert_eq!(last.values, &[0.25f32, 1.0][..]);
         assert_eq!(v.labels[v.len() - 1], -1);
     }
 

@@ -23,16 +23,27 @@
 //! ## Which operations diverge between backends
 //!
 //! Only **reductions** have ordering freedom: [`Kernel::dot`] and
-//! [`Kernel::dot_sparse`] (and the provided methods built on them —
+//! [`Kernel::dot_row`] (plus its owned-row delegate [`Kernel::dot_sparse`]
+//! and the provided methods built on them —
 //! [`Kernel::hinge_subgrad_accum`], [`Kernel::score_rows`]) may reassociate
 //! and therefore differ between backends by a documented ULP bound (see
 //! [`simd`]). The element-wise operations — [`Kernel::axpy`],
-//! [`Kernel::scale_add`], [`Kernel::axpy_sparse`], [`Kernel::gemv_panel`] —
-//! have exactly one evaluation order per output element, so they are
-//! **bitwise backend-invariant** by construction and share the canonical
-//! loops in [`scalar`]. This split is what keeps the Push-Vector mixing
-//! round (pure `gemv_panel`) bitwise identical under *every* backend while
-//! the margin dots legitimately differ.
+//! [`Kernel::scale_add`], [`Kernel::axpy_row`]/[`Kernel::axpy_sparse`],
+//! [`Kernel::gemv_panel`] — have exactly one evaluation order per output
+//! element, so they are **bitwise backend-invariant** by construction and
+//! share the canonical loops in [`scalar`]. This split is what keeps the
+//! Push-Vector mixing round (pure `gemv_panel`) bitwise identical under
+//! *every* backend while the margin dots legitimately differ.
+//!
+//! ## Zero-copy rows
+//!
+//! Since the out-of-core data plane, the sparse entry points take borrowed
+//! [`crate::linalg::RowRef`] slices (and [`crate::linalg::RowsView`] row
+//! batches) rather than requiring owned [`SparseVec`]s: a row coming off a
+//! memory-mapped CSR pack flows into the same hot loop as a heap row, with
+//! no per-row materialization. `dot_sparse`/`axpy_sparse` survive as thin
+//! borrowing delegates, so owned-row call sites are unchanged and
+//! bit-for-bit equivalent.
 //!
 //! ## Selection
 //!
@@ -52,7 +63,7 @@ pub mod simd;
 pub use scalar::ScalarKernel;
 pub use simd::SimdKernel;
 
-use crate::linalg::SparseVec;
+use crate::linalg::{RowRef, RowsView, SparseVec};
 
 /// The object-safe kernel interface behind every hot loop.
 ///
@@ -70,9 +81,20 @@ pub trait Kernel: Send + Sync + std::fmt::Debug {
     /// Panics if `x.len() != y.len()`.
     fn dot(&self, x: &[f64], y: &[f64]) -> f64;
 
-    /// Sparse–dense dot `⟨x, w⟩` (gather reduction; order
-    /// backend-defined). Out-of-range indices panic.
-    fn dot_sparse(&self, x: &SparseVec, w: &[f64]) -> f64;
+    /// Sparse–dense dot `⟨x, w⟩` over a *borrowed* row — index/value
+    /// slices straight out of a heap `SparseVec` or a memory-mapped CSR
+    /// pack, with no per-row materialization (gather reduction; order
+    /// backend-defined). This is the required zero-copy entry point every
+    /// hot loop bottoms out in; [`Kernel::dot_sparse`] is a provided
+    /// delegate. Out-of-range indices panic.
+    fn dot_row(&self, x: RowRef<'_>, w: &[f64]) -> f64;
+
+    /// Sparse–dense dot `⟨x, w⟩` for an owned row. Provided: borrows and
+    /// delegates to [`Kernel::dot_row`], so it is bit-for-bit the same
+    /// reduction.
+    fn dot_sparse(&self, x: &SparseVec, w: &[f64]) -> f64 {
+        self.dot_row(x.as_row(), w)
+    }
 
     /// `y ← y + a·x`. Element-wise: bitwise identical across backends.
     ///
@@ -96,6 +118,13 @@ pub trait Kernel: Send + Sync + std::fmt::Debug {
     /// Panics if `x.len() != y.len()`.
     fn scale_add(&self, a: f64, y: &mut [f64], b: f64, x: &[f64]) {
         scalar::scale_add(a, y, b, x);
+    }
+
+    /// `w ← w + a·x` for a borrowed sparse row (scatter). Element-wise:
+    /// bitwise identical across backends — the zero-copy twin of
+    /// [`Kernel::axpy_sparse`].
+    fn axpy_row(&self, a: f64, x: RowRef<'_>, w: &mut [f64]) {
+        scalar::axpy_row(a, x, w);
     }
 
     /// `w ← w + a·x` for sparse `x` (scatter). Element-wise: bitwise
@@ -135,19 +164,20 @@ pub trait Kernel: Send + Sync + std::fmt::Debug {
     /// scaled weight representation `w = scale·v`: for each sampled row
     /// index `i` in `batch` (in order, duplicates allowed), computes the
     /// margin `labels[i] · scale·⟨v, rows[i]⟩` and appends `i` to
-    /// `violators` when it is `< 1`. Built on [`Kernel::dot_sparse`], so
-    /// backends may differ for margins within the dot's ULP bound of 1.
+    /// `violators` when it is `< 1`. Takes a [`RowsView`] so the heap and
+    /// mmap data planes share one hot loop; built on [`Kernel::dot_row`],
+    /// so backends may differ for margins within the dot's ULP bound of 1.
     fn hinge_subgrad_accum(
         &self,
         v: &[f64],
         scale: f64,
-        rows: &[SparseVec],
+        rows: RowsView<'_>,
         labels: &[i8],
         batch: &[usize],
         violators: &mut Vec<usize>,
     ) {
         for &i in batch {
-            let margin = labels[i] as f64 * (scale * self.dot_sparse(&rows[i], v));
+            let margin = labels[i] as f64 * (scale * self.dot_row(rows.row(i), v));
             if margin < 1.0 {
                 violators.push(i);
             }

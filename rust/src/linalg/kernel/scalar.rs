@@ -14,7 +14,7 @@
 //! backend-invariant (pinned by `rust/tests/kernel_equivalence.rs`).
 
 use super::Kernel;
-use crate::linalg::SparseVec;
+use crate::linalg::{RowRef, SparseVec};
 
 /// The scalar reference backend (stateless; use [`super::scalar()`]).
 #[derive(Clone, Copy, Debug, Default)]
@@ -29,12 +29,12 @@ impl Kernel for ScalarKernel {
         dot(x, y)
     }
 
-    fn dot_sparse(&self, x: &SparseVec, w: &[f64]) -> f64 {
-        dot_sparse(x, w)
+    fn dot_row(&self, x: RowRef<'_>, w: &[f64]) -> f64 {
+        dot_row(x, w)
     }
-    // axpy / scale_add / axpy_sparse / gemv_panel / hinge_subgrad_accum /
-    // score_rows: the trait's provided bodies already are the canonical
-    // scalar implementations.
+    // dot_sparse / axpy / axpy_row / scale_add / axpy_sparse / gemv_panel /
+    // hinge_subgrad_accum / score_rows: the trait's provided bodies already
+    // are the canonical scalar implementations.
 }
 
 /// Dot product `xᵀy` — four-way unrolled accumulation: breaks the serial
@@ -64,16 +64,25 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     (s0 + s1) + (s2 + s3) + tail
 }
 
-/// Sparse–dense dot `⟨x, w⟩`: a single sequential accumulator over the
-/// stored entries (the gather pattern auto-vectorizes poorly, and this
-/// order is the reference the solvers' trajectories depend on).
+/// Sparse–dense dot `⟨x, w⟩` over borrowed index/value slices: a single
+/// sequential accumulator over the stored entries (the gather pattern
+/// auto-vectorizes poorly, and this order is the reference the solvers'
+/// trajectories depend on). The canonical loop; [`dot_sparse`] borrows
+/// and delegates here.
 #[inline]
-pub fn dot_sparse(x: &SparseVec, w: &[f64]) -> f64 {
+pub fn dot_row(x: RowRef<'_>, w: &[f64]) -> f64 {
     let mut s = 0.0;
-    for (&i, &v) in x.indices.iter().zip(&x.values) {
+    for (&i, &v) in x.indices.iter().zip(x.values) {
         s += w[i as usize] * v as f64;
     }
     s
+}
+
+/// Sparse–dense dot `⟨x, w⟩` for an owned row — delegates to [`dot_row`]
+/// (bit-for-bit the same reduction).
+#[inline]
+pub fn dot_sparse(x: &SparseVec, w: &[f64]) -> f64 {
+    dot_row(x.as_row(), w)
 }
 
 /// `y ← y + a·x` (element-wise).
@@ -100,12 +109,20 @@ pub fn scale_add(a: f64, y: &mut [f64], b: f64, x: &[f64]) {
     }
 }
 
-/// `w ← w + a·x` for sparse `x` (scatter, element-wise).
+/// `w ← w + a·x` for a borrowed sparse row (scatter, element-wise). The
+/// canonical loop; [`axpy_sparse`] borrows and delegates here.
 #[inline]
-pub fn axpy_sparse(a: f64, x: &SparseVec, w: &mut [f64]) {
-    for (&i, &v) in x.indices.iter().zip(&x.values) {
+pub fn axpy_row(a: f64, x: RowRef<'_>, w: &mut [f64]) {
+    for (&i, &v) in x.indices.iter().zip(x.values) {
         w[i as usize] += a * v as f64;
     }
+}
+
+/// `w ← w + a·x` for sparse `x` (scatter, element-wise) — delegates to
+/// [`axpy_row`].
+#[inline]
+pub fn axpy_sparse(a: f64, x: &SparseVec, w: &mut [f64]) {
+    axpy_row(a, x.as_row(), w)
 }
 
 /// One destination panel of the blocked `Bᵀ`-apply (see
@@ -221,7 +238,14 @@ mod tests {
         let labels = vec![1i8, 1, -1];
         let v = vec![4.0, 1.0];
         let mut violators = Vec::new();
-        k.hinge_subgrad_accum(&v, 0.5, &rows, &labels, &[0, 1, 2, 1], &mut violators);
+        k.hinge_subgrad_accum(
+            &v,
+            0.5,
+            crate::linalg::RowsView::Vecs(&rows),
+            &labels,
+            &[0, 1, 2, 1],
+            &mut violators,
+        );
         assert_eq!(violators, vec![1, 1]); // duplicates preserved in draw order
     }
 

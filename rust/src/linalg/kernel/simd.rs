@@ -47,7 +47,7 @@
 //! the scalar backend — see the module docs of [`super`].
 
 use super::Kernel;
-use crate::linalg::SparseVec;
+use crate::linalg::RowRef;
 
 /// Accumulator lanes for the dense dot (wide enough for two 4-wide FMA
 /// pipes on current x86/ARM cores).
@@ -85,9 +85,9 @@ impl Kernel for SimdKernel {
         (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
     }
 
-    fn dot_sparse(&self, x: &SparseVec, w: &[f64]) -> f64 {
-        let idx = &x.indices;
-        let val = &x.values;
+    fn dot_row(&self, x: RowRef<'_>, w: &[f64]) -> f64 {
+        let idx = x.indices;
+        let val = x.values;
         let n = idx.len();
         let chunks = n / SPARSE_LANES;
         let mut acc = [0.0f64; SPARSE_LANES];
@@ -103,17 +103,21 @@ impl Kernel for SimdKernel {
         }
         ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
     }
-    // axpy / scale_add / axpy_sparse / gemv_panel: element-wise — the
-    // provided trait bodies (the canonical scalar loops) are already
+    // dot_sparse: the provided borrow-and-delegate body routes owned rows
+    // through this backend's `dot_row` — same lane split, bit for bit.
+    // axpy / axpy_row / scale_add / axpy_sparse / gemv_panel: element-wise
+    // — the provided trait bodies (the canonical scalar loops) are already
     // optimal shapes for the auto-vectorizer, and sharing them is what
     // keeps these operations bitwise backend-invariant by construction.
     // hinge_subgrad_accum / score_rows: the provided bodies route through
-    // this backend's `dot_sparse`, inheriting the lane split.
+    // this backend's `dot_row`, inheriting the lane split.
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::kernel::Kernel;
+    use crate::linalg::SparseVec;
 
     fn ramp(n: usize, seed: u64) -> Vec<f64> {
         let mut r = crate::rng::Rng::new(seed);

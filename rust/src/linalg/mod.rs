@@ -23,4 +23,4 @@ pub use dense::{
     scale_assign, sub_assign,
 };
 pub use kernel::{Kernel, KernelKind};
-pub use sparse::SparseVec;
+pub use sparse::{RowRef, RowsView, SparseVec};

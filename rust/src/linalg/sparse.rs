@@ -93,6 +93,140 @@ impl SparseVec {
             *v *= a;
         }
     }
+
+    /// Borrows this vector as a zero-copy [`RowRef`].
+    #[inline]
+    pub fn as_row(&self) -> RowRef<'_> {
+        RowRef { indices: &self.indices, values: &self.values }
+    }
+}
+
+/// A borrowed sparse row: index/value slices with no owning allocation.
+///
+/// This is the zero-copy unit of the out-of-core data plane: a row of a
+/// memory-mapped CSR pack *and* a borrowed view of a heap [`SparseVec`]
+/// both present as `RowRef`, so the kernel hot loops
+/// ([`crate::linalg::kernel::Kernel::dot_row`] and friends) never require
+/// per-row materialization. Invariants are those of [`SparseVec`]
+/// (strictly increasing indices, parallel slices); producers validate,
+/// consumers assume.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowRef<'a> {
+    /// Strictly increasing feature indices (0-based).
+    pub indices: &'a [u32],
+    /// Values aligned with `indices`.
+    pub values: &'a [f32],
+}
+
+impl<'a> RowRef<'a> {
+    /// Number of stored (non-zero) entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Smallest dense dimension that can hold this row.
+    #[inline]
+    pub fn min_dim(&self) -> usize {
+        self.indices.last().map_or(0, |&i| i as usize + 1)
+    }
+
+    /// Sparse–dense dot product `⟨self, w⟩` — the scalar reference
+    /// reduction ([`crate::linalg::kernel::scalar::dot_row`]).
+    /// Out-of-range indices panic.
+    #[inline]
+    pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        crate::linalg::kernel::scalar::dot_row(*self, w)
+    }
+
+    /// `w ← w + a·self` (scatter-add; element-wise, identical in every
+    /// kernel backend).
+    #[inline]
+    pub fn axpy_into(&self, a: f64, w: &mut [f64]) {
+        crate::linalg::kernel::scalar::axpy_row(a, *self, w)
+    }
+
+    /// Squared Euclidean norm (same accumulation order as
+    /// [`SparseVec::l2_norm_sq`]).
+    #[inline]
+    pub fn l2_norm_sq(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Copies into an owned [`SparseVec`].
+    pub fn to_owned(&self) -> SparseVec {
+        SparseVec { indices: self.indices.to_vec(), values: self.values.to_vec() }
+    }
+}
+
+impl<'a> From<&'a SparseVec> for RowRef<'a> {
+    #[inline]
+    fn from(x: &'a SparseVec) -> Self {
+        x.as_row()
+    }
+}
+
+/// A borrowed batch of sparse rows — either a slice of heap
+/// [`SparseVec`]s (the classic in-memory plane) or a CSR window over
+/// columnar index/value arrays (the mmap-backed plane). Both present rows
+/// as [`RowRef`], so every consumer downstream of
+/// [`crate::data::ShardView`] is layout-agnostic.
+#[derive(Clone, Copy, Debug)]
+pub enum RowsView<'a> {
+    /// Rows as individually-allocated sparse vectors.
+    Vecs(&'a [SparseVec]),
+    /// Rows as a CSR window: row `i` spans
+    /// `indices[indptr[i]..indptr[i+1]]` / `values[..]`. The `indptr`
+    /// offsets are **absolute** positions into the full arrays, so a
+    /// shard window is just `&indptr[r0..=r1]` plus the untouched
+    /// index/value arrays — no per-shard rebasing.
+    Csr {
+        /// Row-boundary offsets, length `rows + 1`, non-decreasing.
+        indptr: &'a [u64],
+        /// Column indices for all rows, strictly increasing within a row.
+        indices: &'a [u32],
+        /// Values aligned with `indices`.
+        values: &'a [f32],
+    },
+}
+
+impl<'a> RowsView<'a> {
+    /// Number of rows in the view.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Vecs(rows) => rows.len(),
+            Self::Csr { indptr, .. } => indptr.len().saturating_sub(1),
+        }
+    }
+
+    /// True when the view holds no rows.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrows row `i`.
+    ///
+    /// # Panics
+    /// Panics if `i >= self.len()`.
+    #[inline]
+    pub fn row(&self, i: usize) -> RowRef<'a> {
+        match self {
+            Self::Vecs(rows) => rows[i].as_row(),
+            Self::Csr { indptr, indices, values } => {
+                let lo = indptr[i] as usize;
+                let hi = indptr[i + 1] as usize;
+                RowRef { indices: &indices[lo..hi], values: &values[lo..hi] }
+            }
+        }
+    }
+
+    /// Iterates rows in order.
+    pub fn iter(&self) -> impl Iterator<Item = RowRef<'a>> {
+        let v = *self;
+        (0..v.len()).map(move |i| v.row(i))
+    }
 }
 
 #[cfg(test)]
@@ -143,5 +277,55 @@ mod tests {
         let mut s = SparseVec::new(vec![0], vec![2.0]);
         s.scale(2.5);
         assert_eq!(s.values, vec![5.0]);
+    }
+
+    #[test]
+    fn row_ref_matches_owned_vec() {
+        let s = SparseVec::new(vec![1, 3], vec![2.0, -1.0]);
+        let r = s.as_row();
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(r.nnz(), s.nnz());
+        assert_eq!(r.min_dim(), s.min_dim());
+        assert_eq!(r.dot_dense(&w).to_bits(), s.dot_dense(&w).to_bits());
+        assert_eq!(r.l2_norm_sq().to_bits(), s.l2_norm_sq().to_bits());
+        let mut wa = w.clone();
+        let mut wb = w.clone();
+        r.axpy_into(0.5, &mut wa);
+        s.axpy_into(0.5, &mut wb);
+        assert_eq!(wa, wb);
+        assert_eq!(r.to_owned(), s);
+        let via_from: RowRef<'_> = (&s).into();
+        assert_eq!(via_from, r);
+    }
+
+    #[test]
+    fn rows_view_vecs_and_csr_agree() {
+        let rows = vec![
+            SparseVec::new(vec![0, 2], vec![1.0, 2.0]),
+            SparseVec::default(),
+            SparseVec::new(vec![1], vec![-3.0]),
+        ];
+        // the same rows flattened into CSR arrays (absolute offsets)
+        let indptr: Vec<u64> = vec![0, 2, 2, 3];
+        let indices: Vec<u32> = vec![0, 2, 1];
+        let values: Vec<f32> = vec![1.0, 2.0, -3.0];
+        let vecs = RowsView::Vecs(&rows);
+        let csr = RowsView::Csr { indptr: &indptr, indices: &indices, values: &values };
+        assert_eq!(vecs.len(), 3);
+        assert_eq!(csr.len(), 3);
+        assert!(!csr.is_empty());
+        for i in 0..3 {
+            assert_eq!(vecs.row(i), csr.row(i), "row {i}");
+        }
+        // a window over the middle rows: slice indptr, keep the arrays
+        let window = RowsView::Csr { indptr: &indptr[1..=3], indices: &indices, values: &values };
+        assert_eq!(window.len(), 2);
+        assert_eq!(window.row(0), vecs.row(1));
+        assert_eq!(window.row(1), vecs.row(2));
+        let collected: Vec<_> = csr.iter().map(|r| r.to_owned()).collect();
+        assert_eq!(collected, rows);
+        let empty = RowsView::Csr { indptr: &indptr[..1], indices: &indices, values: &values };
+        assert_eq!(empty.len(), 0);
+        assert!(empty.is_empty());
     }
 }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train        run GADGET on one dataset, print the report (--save persists
 //!                the consensus model as a serve artifact)
+//!   pack         convert a LIBSVM text file into a mapped columnar artifact
+//!                (train on it out-of-core with --dataset pack:<file>)
 //!   serve        batch-score rows from stdin against a saved model artifact
 //!   baseline     run a centralized/per-node baseline solver
 //!   experiment   regenerate a paper table/figure (table3|table4|table5|figures|mixing|bound|rounds)
@@ -12,6 +14,8 @@
 //! Examples:
 //!   gadget train --dataset synthetic-usps --scale 0.1 --nodes 10
 //!   gadget train --config configs/reuters.toml --save model.json
+//!   gadget pack --input a9a.txt
+//!   gadget train --dataset pack:a9a.gpack --nodes 10
 //!   gadget serve --model model.json --shards 4 < batch.libsvm
 //!   gadget experiment table3 --scale 0.05 --out results
 //!   gadget experiment figures --only usps,reuters
@@ -41,6 +45,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv).map_err(|e| anyhow::anyhow!(e))?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "pack" => cmd_pack(&args),
         "serve" => cmd_serve(&args),
         "baseline" => cmd_baseline(&args),
         "experiment" => cmd_experiment(&args),
@@ -69,7 +74,12 @@ fn print_help() {
          \x20              --stream (or --stream-rate F --stream-schedule\n\
          \x20              uniform|random|tail:<file> --stream-max-rows N\n\
          \x20              --stream-initial F) for online per-node ingestion\n\
+         \x20              --store auto|static|mmap for the pack: data plane\n\
          \x20              --save FILE to persist the consensus model artifact)\n\
+         \x20 pack         convert LIBSVM text to a mapped columnar artifact\n\
+         \x20              (--input FILE required; --output FILE, default\n\
+         \x20              <input>.gpack; --dim N to fix the feature space,\n\
+         \x20              default infer; then train --dataset pack:<file>)\n\
          \x20 serve        batch-score stdin rows against a saved model\n\
          \x20              (--model FILE required; --shards N --batch N\n\
          \x20              --format auto|libsvm|dense --kernel scalar|simd|auto\n\
@@ -82,7 +92,10 @@ fn print_help() {
          \x20 inspect      print dataset statistics / topology spectra / artifact registry\n\
          \n\
          Datasets: synthetic-adult, synthetic-ccat, synthetic-mnist, synthetic-reuters,\n\
-         \x20        synthetic-usps, synthetic-webspam, synthetic-gisette, path:<libsvm file>\n"
+         \x20        synthetic-usps, synthetic-webspam, synthetic-gisette,\n\
+         \x20        path:<libsvm file>, pack:<gadget pack artifact>\n\
+         \x20        (file stems containing a9a/adult, rcv1/ccat, mnist, reuters,\n\
+         \x20        usps, webspam or gisette pick up the paper's Table-2 lambda)\n"
     );
 }
 
@@ -120,6 +133,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.threads = args.get_parsed("threads", cfg.threads).map_err(err)?;
     if let Some(k) = args.get("kernel") {
         cfg.kernel = k.parse().map_err(|e: String| anyhow::anyhow!("--kernel: {e}"))?;
+    }
+    if let Some(s) = args.get("store") {
+        cfg.store = s.parse().map_err(|e: String| anyhow::anyhow!("--store: {e}"))?;
     }
     // `[stream]` section: `--stream` alone enables the streaming data
     // plane at the default rate; the explicit options override.
@@ -187,9 +203,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let runner = GadgetRunner::new(cfg)?;
     println!(
         "data: {} train / {} test samples, d={}, lambda={:.3e}",
-        runner.train_data().len(),
+        runner.train_len(),
         runner.test_data().len(),
-        runner.train_data().dim,
+        runner.train_dim(),
         runner.lambda(),
     );
     let report = runner.run()?;
@@ -271,7 +287,9 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     let which = args.get("solver").unwrap_or("pegasos").to_string();
     let runner = GadgetRunner::new(cfg.clone())?;
     let lambda = runner.lambda();
-    let train = runner.train_data();
+    // The borrowed view works for every data plane — a `pack:` corpus
+    // trains the baselines straight off the mapped artifact.
+    let train = runner.train_view();
     let test = runner.test_data();
     // `--kernel` reaches the centralized baselines too, so kernel A/B
     // numbers can be taken on the exact solvers the tables use.
@@ -280,7 +298,7 @@ fn cmd_baseline(args: &Args) -> Result<()> {
         "pegasos" => Box::new(gadget::solver::Pegasos::with_kernel(
             gadget::solver::PegasosParams {
                 lambda,
-                iterations: experiments::table3::centralized_iterations(train.len()),
+                iterations: experiments::table3::centralized_iterations(runner.train_len()),
                 batch_size: cfg.batch_size,
                 project: true,
                 seed: cfg.seed,
@@ -311,15 +329,36 @@ fn cmd_baseline(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown solver {other:?}"),
     };
     let sw = Stopwatch::new();
-    let model = solver.fit(train);
+    let model = solver.fit_view(train);
     let secs = sw.secs();
     println!("== {} on {} ==", solver.name(), cfg.dataset);
     println!("train time      : {secs:.3}s");
     println!("test accuracy   : {:.2}%", 100.0 * gadget::metrics::accuracy(&model.w, test));
     println!(
         "primal objective: {:.6}",
-        gadget::metrics::objective(&model.w, train, lambda)
+        gadget::metrics::objective_view(&model.w, train, lambda)
     );
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let input = args
+        .get("input")
+        .ok_or_else(|| anyhow::anyhow!("pack: --input FILE (LIBSVM text) is required"))?;
+    let output = match args.get("output") {
+        Some(o) => std::path::PathBuf::from(o),
+        None => std::path::Path::new(input).with_extension("gpack"),
+    };
+    let dim = args.get_parsed("dim", 0usize).map_err(err)?;
+    let sw = Stopwatch::new();
+    let summary = gadget::data::pack::pack_libsvm(std::path::Path::new(input), &output, dim)?;
+    println!("packed {} -> {}", input, output.display());
+    println!("  rows     : {}", summary.rows);
+    println!("  features : {}", summary.dim);
+    println!("  nnz      : {}", summary.nnz);
+    println!("  bytes    : {} ({:.2} MB)", summary.bytes, summary.bytes as f64 / 1e6);
+    println!("  took     : {:.3}s", sw.secs());
+    println!("train with: gadget train --dataset pack:{}", output.display());
     Ok(())
 }
 
@@ -470,15 +509,37 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         }
     }
     let cfg = config_from_args(args)?;
-    let runner = GadgetRunner::new(cfg.clone())?;
-    let ds = runner.train_data();
-    println!("dataset {}:", ds.name);
-    println!("  train samples : {}", ds.len());
-    println!("  test samples  : {}", runner.test_data().len());
-    println!("  features      : {}", ds.dim);
-    println!("  density       : {:.4}%", 100.0 * ds.density());
-    println!("  positive rate : {:.3}", ds.positive_rate());
-    println!("  lambda        : {:.3e}", runner.lambda());
+    if let Some(path) = cfg.dataset.strip_prefix("pack:") {
+        // Inspect reads the artifact header + mapped columns directly —
+        // no training split is materialized.
+        let pack = gadget::data::PackFile::open(path)?;
+        let n = pack.len();
+        let n_train = n * 2 / 3;
+        let pos = pack.labels().iter().filter(|&&y| y > 0).count();
+        println!("pack {}:", pack.name());
+        println!("  rows          : {n} ({n_train} train / {} test, contiguous 2:1)", n - n_train);
+        println!("  features      : {}", pack.dim());
+        println!("  stored nnz    : {}", pack.nnz());
+        println!(
+            "  density       : {:.4}%",
+            100.0 * pack.nnz() as f64 / (n as f64 * pack.dim() as f64)
+        );
+        println!("  positive rate : {:.3}", pos as f64 / n as f64);
+        match cfg.lambda.or(gadget::coordinator::lambda_for_corpus(path)) {
+            Some(l) => println!("  lambda        : {l:.3e}"),
+            None => println!("  lambda        : none (stem not in Table 2 — pass --lambda)"),
+        }
+    } else {
+        let runner = GadgetRunner::new(cfg.clone())?;
+        let ds = runner.train_data();
+        println!("dataset {}:", ds.name);
+        println!("  train samples : {}", ds.len());
+        println!("  test samples  : {}", runner.test_data().len());
+        println!("  features      : {}", ds.dim);
+        println!("  density       : {:.4}%", 100.0 * ds.density());
+        println!("  positive rate : {:.3}", ds.positive_rate());
+        println!("  lambda        : {:.3e}", runner.lambda());
+    }
     let g = gadget::topology::Graph::generate(cfg.topology, cfg.nodes, cfg.seed);
     let b = gadget::topology::TransitionMatrix::from_graph(
         &g,

@@ -5,37 +5,63 @@
 //!   `σ = sqrt(Var(Nodes) + Var(Trials))`;
 //! * trace recording for the figures (objective / error vs wall-time).
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShardView};
 
-/// Average hinge loss `(1/N) Σ max{0, 1 − y⟨w,x⟩}`.
-pub fn hinge_loss(w: &[f64], ds: &Dataset) -> f64 {
-    assert!(!ds.is_empty(), "hinge_loss: empty dataset");
+/// Average hinge loss `(1/N) Σ max{0, 1 − y⟨w,x⟩}` over a borrowed row
+/// window. The view cores are the canonical loops — the `&Dataset`
+/// wrappers borrow the whole set as a view, so evaluating an out-of-core
+/// pack window and evaluating its heap materialization is the same
+/// arithmetic in the same order, bit for bit.
+pub fn hinge_loss_view(w: &[f64], v: ShardView<'_>) -> f64 {
+    assert!(!v.is_empty(), "hinge_loss: empty dataset");
     let mut s = 0.0;
-    for i in 0..ds.len() {
-        let (x, y) = ds.sample(i);
+    for i in 0..v.len() {
+        let (x, y) = v.sample(i);
         s += (1.0 - y * x.dot_dense(w)).max(0.0);
     }
-    s / ds.len() as f64
+    s / v.len() as f64
+}
+
+/// Average hinge loss of a whole dataset.
+pub fn hinge_loss(w: &[f64], ds: &Dataset) -> f64 {
+    hinge_loss_view(w, ds.view())
+}
+
+/// Primal SVM objective (paper Eq. 1) over a borrowed row window:
+/// `(λ/2)‖w‖² + hinge_loss`.
+pub fn objective_view(w: &[f64], v: ShardView<'_>, lambda: f64) -> f64 {
+    0.5 * lambda * crate::linalg::l2_norm_sq(w) + hinge_loss_view(w, v)
 }
 
 /// Primal SVM objective (paper Eq. 1): `(λ/2)‖w‖² + hinge_loss`.
 pub fn objective(w: &[f64], ds: &Dataset, lambda: f64) -> f64 {
-    0.5 * lambda * crate::linalg::l2_norm_sq(w) + hinge_loss(w, ds)
+    objective_view(w, ds.view(), lambda)
 }
 
-/// Fraction of misclassified samples (`sign(⟨w,x⟩) ≠ y`); zero scores count
-/// as positive predictions, matching `LinearModel::predict`.
-pub fn zero_one_error(w: &[f64], ds: &Dataset) -> f64 {
-    assert!(!ds.is_empty(), "zero_one_error: empty dataset");
+/// Fraction of misclassified samples (`sign(⟨w,x⟩) ≠ y`) over a borrowed
+/// row window; zero scores count as positive predictions, matching
+/// `LinearModel::predict`.
+pub fn zero_one_error_view(w: &[f64], v: ShardView<'_>) -> f64 {
+    assert!(!v.is_empty(), "zero_one_error: empty dataset");
     let mut wrong = 0usize;
-    for i in 0..ds.len() {
-        let (x, y) = ds.sample(i);
+    for i in 0..v.len() {
+        let (x, y) = v.sample(i);
         let pred = if x.dot_dense(w) >= 0.0 { 1.0 } else { -1.0 };
         if pred != y {
             wrong += 1;
         }
     }
-    wrong as f64 / ds.len() as f64
+    wrong as f64 / v.len() as f64
+}
+
+/// Fraction of misclassified samples of a whole dataset.
+pub fn zero_one_error(w: &[f64], ds: &Dataset) -> f64 {
+    zero_one_error_view(w, ds.view())
+}
+
+/// `1 − zero_one_error` over a borrowed row window.
+pub fn accuracy_view(w: &[f64], v: ShardView<'_>) -> f64 {
+    1.0 - zero_one_error_view(w, v)
 }
 
 /// `1 − zero_one_error`.

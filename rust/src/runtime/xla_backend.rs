@@ -109,7 +109,7 @@ impl LocalBackend for XlaBackend {
                 let i = ctx.rng.below(n);
                 let (x, y) = ctx.shard.sample(i);
                 let base = (s * self.batch + b) * self.d_pad;
-                for (&j, &v) in x.indices.iter().zip(&x.values) {
+                for (&j, &v) in x.indices.iter().zip(x.values) {
                     self.x_buf[base + j as usize] = v;
                 }
                 self.y_buf[s * self.batch + b] = y as f32;

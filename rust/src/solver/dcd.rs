@@ -74,7 +74,7 @@ impl Solver for DualCoordinateDescent {
                 }
                 let (x, y) = ds.sample(i);
                 // G = y·⟨w,x⟩ − 1 (gradient of the dual coordinate)
-                let g = y * self.kernel.dot_sparse(x, &w) - 1.0;
+                let g = y * self.kernel.dot_row(x, &w) - 1.0;
                 // projected gradient
                 let pg = if alpha[i] <= 0.0 {
                     g.min(0.0)
@@ -89,7 +89,7 @@ impl Solver for DualCoordinateDescent {
                     let new = (old - g / qii[i]).clamp(0.0, c_upper);
                     if (new - old).abs() > 0.0 {
                         alpha[i] = new;
-                        self.kernel.axpy_sparse((new - old) * y, x, &mut w);
+                        self.kernel.axpy_row((new - old) * y, x, &mut w);
                     }
                 }
             }

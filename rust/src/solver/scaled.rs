@@ -43,16 +43,21 @@ impl ScaledVector {
     }
 
     /// `⟨w, x⟩` for sparse `x` — O(nnz), on the scalar reference kernel.
+    /// Accepts `&SparseVec` or a zero-copy [`crate::linalg::RowRef`].
     #[inline]
-    pub fn dot_sparse(&self, x: &crate::linalg::SparseVec) -> f64 {
-        self.scale * x.dot_dense(&self.v)
+    pub fn dot_sparse<'a>(&self, x: impl Into<crate::linalg::RowRef<'a>>) -> f64 {
+        self.scale * x.into().dot_dense(&self.v)
     }
 
     /// `⟨w, x⟩` on an explicit kernel backend — the hot-path variant the
     /// solvers use ([`Self::dot_sparse`] ≡ this on the scalar kernel).
     #[inline]
-    pub fn dot_sparse_k(&self, x: &crate::linalg::SparseVec, kernel: &dyn crate::linalg::Kernel) -> f64 {
-        self.scale * kernel.dot_sparse(x, &self.v)
+    pub fn dot_sparse_k<'a>(
+        &self,
+        x: impl Into<crate::linalg::RowRef<'a>>,
+        kernel: &dyn crate::linalg::Kernel,
+    ) -> f64 {
+        self.scale * kernel.dot_row(x.into(), &self.v)
     }
 
     /// The raw (unscaled) dense storage `v` — what kernel-backed batch
@@ -75,9 +80,11 @@ impl ScaledVector {
     }
 
     /// `w ← w + c·x` for sparse `x` — O(nnz), maintaining the norm cache.
-    pub fn add_sparse(&mut self, c: f64, x: &crate::linalg::SparseVec) {
+    /// Accepts `&SparseVec` or a zero-copy [`crate::linalg::RowRef`].
+    pub fn add_sparse<'a>(&mut self, c: f64, x: impl Into<crate::linalg::RowRef<'a>>) {
+        let x = x.into();
         let ci = c / self.scale;
-        for (&i, &xv) in x.indices.iter().zip(&x.values) {
+        for (&i, &xv) in x.indices.iter().zip(x.values) {
             let slot = &mut self.v[i as usize];
             let old = *slot;
             let new = old + ci * xv as f64;

@@ -58,7 +58,7 @@ impl SvmSgd {
         let probes = ds.len().min(64);
         let mut s = 0.0;
         for _ in 0..probes {
-            s += ds.rows[rng.below(ds.len())].l2_norm_sq();
+            s += ds.rows.row(rng.below(ds.len())).l2_norm_sq();
         }
         let typical = (s / probes as f64).max(1e-12);
         // η₀ = 1/(λ t₀) = 1/typical  ⇒  t₀ = typical/λ

@@ -1,0 +1,239 @@
+//! Read-only file memory mapping for the out-of-core data plane.
+//!
+//! The offline build has no `memmap2`/`libc` crates, so the unix path
+//! declares the three syscalls it needs (`mmap`/`munmap`/`madvise`)
+//! directly and wraps them in an RAII [`Mmap`]. Non-unix targets fall
+//! back to reading the file into an 8-byte-aligned heap buffer — slower
+//! and RAM-bound, but semantically identical, so the pack reader
+//! ([`crate::data::pack`]) is portable while the paging win stays on the
+//! platforms that can deliver it.
+
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_long, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    /// `MADV_SEQUENTIAL` — shared by Linux and the BSDs.
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: c_long,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// A read-only memory-mapped file (unix) or an aligned heap copy
+/// (elsewhere). Dereferences to `&[u8]`; the mapping lives as long as
+/// the value, and the bytes never change (the map is `MAP_PRIVATE` over
+/// a file opened read-only), which is what makes sharing it across
+/// worker threads sound.
+pub struct Mmap {
+    state: State,
+}
+
+enum State {
+    #[cfg(unix)]
+    Mapped { ptr: *mut std::os::raw::c_void, len: usize },
+    /// Heap fallback: a `Vec<u64>` backing guarantees 8-byte alignment
+    /// for the pack's widest section type.
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+// SAFETY: the mapping is read-only for its entire lifetime (PROT_READ,
+// private, file opened read-only; the heap fallback is never written
+// after construction), so shared references from any thread are fine.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Maps the whole file at `path` read-only.
+    ///
+    /// Zero-length files are represented without a syscall (mmap rejects
+    /// length 0), so callers can rely on uniform error reporting from
+    /// their own header validation instead.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        let len = usize::try_from(len)
+            .map_err(|_| anyhow::anyhow!("{}: file too large to map", path.display()))?;
+        if len == 0 {
+            return Ok(Self { state: State::Heap { buf: Vec::new(), len: 0 } });
+        }
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            // SAFETY: fd is a valid open file descriptor, len > 0, and we
+            // request a fresh private read-only mapping at a kernel-chosen
+            // address.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED {
+                anyhow::bail!(
+                    "mmap {} ({} bytes) failed: {}",
+                    path.display(),
+                    len,
+                    std::io::Error::last_os_error()
+                );
+            }
+            // Training scans shards front to back; tell the kernel so
+            // readahead works for us. Purely advisory — ignore failures.
+            // SAFETY: ptr/len describe the mapping we just created.
+            unsafe {
+                let _ = sys::madvise(ptr, len, sys::MADV_SEQUENTIAL);
+            }
+            Ok(Self { state: State::Mapped { ptr, len } })
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::Read;
+            let mut buf = vec![0u64; (len + 7) / 8];
+            // SAFETY: u64 → u8 reinterpretation of an owned, fully
+            // initialized buffer; lengths match the allocation.
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
+            };
+            let mut file = file;
+            file.read_exact(bytes)
+                .with_context(|| format!("read {}", path.display()))?;
+            Ok(Self { state: State::Heap { buf, len } })
+        }
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        match &self.state {
+            #[cfg(unix)]
+            // SAFETY: ptr/len describe a live read-only mapping owned by
+            // self; the borrow ties the slice to the mapping's lifetime.
+            State::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr as *const u8, *len)
+            },
+            State::Heap { buf, len } => {
+                // SAFETY: reinterpreting the owned u64 buffer's first
+                // `len` bytes; the allocation is at least that large.
+                unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+
+    /// Mapped length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match &self.state {
+            #[cfg(unix)]
+            State::Mapped { len, .. } => *len,
+            State::Heap { len, .. } => *len,
+        }
+    }
+
+    /// True for a zero-length mapping.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let State::Mapped { ptr, len } = self.state {
+            // SAFETY: unmapping the exact region mmap returned; the value
+            // is being dropped so no borrow of the bytes can outlive this.
+            unsafe {
+                let _ = sys::munmap(ptr, len);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_file_contents() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("blob.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&p, &payload).unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(&m[..], &payload[..]);
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), b"");
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("no-such-file");
+        assert!(Mmap::open(&p).is_err());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("shared.bin");
+        std::fs::write(&p, vec![7u8; 4096]).unwrap();
+        let m = std::sync::Arc::new(Mmap::open(&p).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || m.iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+    }
+}

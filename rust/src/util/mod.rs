@@ -1,13 +1,16 @@
 //! Small self-contained utilities: JSON emission, scoped temp dirs, timers,
-//! aligned text tables, and CSV writing. The offline build has no serde /
-//! tempfile / prettytable, so these substrates live in-tree.
+//! aligned text tables, CSV writing, and read-only file memory mapping.
+//! The offline build has no serde / tempfile / prettytable / memmap2, so
+//! these substrates live in-tree.
 
 pub mod json;
+pub mod mmap;
 pub mod table;
 pub mod tempdir;
 pub mod timer;
 
 pub use json::Json;
+pub use mmap::Mmap;
 pub use table::TextTable;
 pub use tempdir::TempDir;
 pub use timer::Stopwatch;

@@ -192,8 +192,9 @@ fn hinge_violator_sets_agree_away_from_the_threshold() {
         let scale = 0.75;
         let batch: Vec<usize> = (0..n * 2).map(|_| rng.below(n)).collect();
         let (mut viol_s, mut viol_v) = (Vec::new(), Vec::new());
-        s.hinge_subgrad_accum(&w, scale, &rows, &labels, &batch, &mut viol_s);
-        v.hinge_subgrad_accum(&w, scale, &rows, &labels, &batch, &mut viol_v);
+        let rv = gadget::linalg::RowsView::Vecs(&rows);
+        s.hinge_subgrad_accum(&w, scale, rv, &labels, &batch, &mut viol_s);
+        v.hinge_subgrad_accum(&w, scale, rv, &labels, &batch, &mut viol_v);
         // knife-edge guard: only accept a set mismatch if some margin is
         // within 1e-9 of the threshold (never happens on this data)
         if viol_s != viol_v {

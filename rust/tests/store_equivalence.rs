@@ -158,11 +158,109 @@ fn static_store_shards_are_exactly_the_horizontal_split() {
     let mut total = 0usize;
     for (i, sh) in shards.iter().enumerate() {
         let v = store.shard(i);
-        assert_eq!(v.rows, &sh.rows[..], "node {i} rows");
+        let rows: Vec<_> = v.rows.iter().map(|r| r.to_owned()).collect();
+        assert_eq!(rows, sh.rows, "node {i} rows");
         assert_eq!(v.labels, &sh.labels[..], "node {i} labels");
         total += v.len();
     }
     assert_eq!(total, runner.train_data().len());
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core tier: the `pack:` data plane's bitwise contract.
+//
+// The mmap store serves borrowed CSR windows straight off the artifact;
+// `store = "static"` materializes those *same* windows into heap shards.
+// Training both on the same pack therefore pins the zero-copy kernels
+// against the materialized path bit for bit — the mmap analogue of the
+// pre-refactor golden above.
+// ---------------------------------------------------------------------------
+
+/// Packs the usps stand-in's training rows into a temp artifact, returning
+/// the directory guard alongside the path (dropping it deletes the file).
+fn packed_corpus() -> (gadget::util::TempDir, std::path::PathBuf) {
+    use gadget::data::synthetic::{generate, spec_by_name};
+    let spec = spec_by_name("synthetic-usps").unwrap();
+    // same generation the `synthetic-usps` loader performs for seed 11
+    let split = generate(&spec, 11 ^ 0xda7a, 0.05);
+    let td = gadget::util::TempDir::new().unwrap();
+    let path = td.path().join("usps.gpack");
+    gadget::data::pack::pack_dataset(&split.train, &path).unwrap();
+    (td, path)
+}
+
+fn pack_cfg(path: &std::path::Path, store: gadget::data::StoreKind) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: format!("pack:{}", path.display()),
+        store,
+        ..cfg()
+    }
+}
+
+#[test]
+fn mmap_store_training_is_bitwise_equal_to_materialized_static() {
+    use gadget::data::StoreKind;
+    let (_td, path) = packed_corpus();
+    let mm = GadgetRunner::new(pack_cfg(&path, StoreKind::Mmap)).unwrap().run().unwrap();
+    let st = GadgetRunner::new(pack_cfg(&path, StoreKind::Static)).unwrap().run().unwrap();
+    let (a, b) = (&mm.trials[0], &st.trials[0]);
+    assert_eq!(a.iterations, b.iterations, "iteration count diverged");
+    assert_eq!(
+        bits(&a.consensus_w),
+        bits(&b.consensus_w),
+        "mmap consensus_w diverged from the materialized static run"
+    );
+    assert_eq!(bits(&a.node_accuracy), bits(&b.node_accuracy), "node accuracies diverged");
+    assert_eq!(a.epsilon_final.to_bits(), b.epsilon_final.to_bits(), "epsilon diverged");
+    // `auto` on a pack resolves to the mmap plane
+    let auto = GadgetRunner::new(pack_cfg(&path, StoreKind::Auto)).unwrap().run().unwrap();
+    assert_eq!(bits(&auto.trials[0].consensus_w), bits(&a.consensus_w));
+    // and the run actually learned something
+    assert!(mm.test_accuracy > 0.7, "pack accuracy {}", mm.test_accuracy);
+}
+
+#[test]
+fn mmap_training_is_deterministic_across_reopens() {
+    use gadget::data::StoreKind;
+    let (_td, path) = packed_corpus();
+    let a = GadgetRunner::new(pack_cfg(&path, StoreKind::Mmap)).unwrap().run().unwrap();
+    let b = GadgetRunner::new(pack_cfg(&path, StoreKind::Mmap)).unwrap().run().unwrap();
+    assert_eq!(bits(&a.trials[0].consensus_w), bits(&b.trials[0].consensus_w));
+    assert_eq!(a.iterations, b.iterations);
+}
+
+#[test]
+fn damaged_packs_fail_loudly_not_quietly() {
+    use gadget::data::PackFile;
+    let (td, path) = packed_corpus();
+    let full = std::fs::read(&path).unwrap();
+
+    // truncated mid-payload: the header's byte count no longer matches
+    let t = td.path().join("truncated.gpack");
+    std::fs::write(&t, &full[..full.len() - 8]).unwrap();
+    let err = PackFile::open(&t).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+
+    // one flipped payload byte: caught by the checksum
+    let mut corrupt = full.clone();
+    let mid = 64 + (corrupt.len() - 64) / 2;
+    corrupt[mid] ^= 0x40;
+    let c = td.path().join("corrupt.gpack");
+    std::fs::write(&c, &corrupt).unwrap();
+    let err = PackFile::open(&c).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "unexpected error: {err}");
+
+    // future format version: refused with a re-pack hint
+    let mut vers = full.clone();
+    vers[8] = 99;
+    let v = td.path().join("version.gpack");
+    std::fs::write(&v, &vers).unwrap();
+    let err = PackFile::open(&v).unwrap_err().to_string();
+    assert!(err.contains("version"), "unexpected error: {err}");
+
+    // and a training run on a damaged pack dies at load, not mid-train
+    let run = GadgetRunner::new(pack_cfg(&c, gadget::data::StoreKind::Auto));
+    assert!(run.is_err(), "corrupt pack must fail at dataset load");
 }
 
 #[test]
