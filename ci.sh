@@ -87,6 +87,15 @@ run_hard cargo test -q --test store_equivalence
 run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test store_equivalence mmap
 run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test store_equivalence mmap
 
+# Mixer seam: `--mixer push-sum` must be a *pure refactor* of the old
+# inline Push-Vector sequence — bitwise on every scheduler and pool
+# size. Same matrix as the other equivalence gates (degenerate and
+# multi-worker pools, scalar kernel pinned), plus the topology-generator
+# contracts the overlay sweep builds on.
+run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test mixer_equivalence
+run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test mixer_equivalence
+run_hard cargo test -q --test topology_generators
+
 # Kernel-layer matrix. The feature compiles identical arithmetic — it
 # only unlocks runtime selection — so the simd build re-runs just the
 # surfaces that actually differ under the feature (the feature-gated
@@ -179,6 +188,19 @@ pack_smoke() (
     cmp "$tmp/mmap.json" "$tmp/static.json"
 )
 run_hard pack_smoke
+
+# Topology smoke: `train --topology ring` end to end through the real
+# binary — the startup line echoes the resolved mixer/topology/τ_mix
+# (so experiment logs are self-describing) and a 10-node ring still
+# converges to a reported accuracy.
+topology_smoke() (
+    set -e
+    out="$(./target/release/gadget train --dataset synthetic-usps --scale 0.05 \
+        --nodes 10 --trials 1 --max-iterations 150 --topology ring --mixer push-sum)"
+    echo "$out" | grep -q 'mixing: mixer=push-sum topology=ring'
+    echo "$out" | grep -q 'test accuracy'
+)
+run_hard topology_smoke
 
 echo
 if [ "$fail" -ne 0 ]; then

@@ -70,6 +70,8 @@ fn main() -> gadget::Result<()> {
         project: true,
         seed: 3,
         max_lag: 4,
+        link_latency: 0,
+        link_drop: 0.0,
     });
     let weights = engine.run(shards, &graph)?;
     let accs: Vec<f64> =

@@ -9,6 +9,7 @@
 
 pub mod toml;
 
+use crate::gossip::MixerKind;
 use crate::topology::stochastic::WeightScheme;
 use crate::topology::TopologyKind;
 use crate::Result;
@@ -169,6 +170,22 @@ pub struct ExperimentConfig {
     /// `pack:` dataset materializes the same contiguous windows onto the
     /// heap (the bitwise A/B of the out-of-core plane).
     pub store: StoreKind,
+    /// Consensus mixing backend (`[mixing]` section: `backend =
+    /// "push-sum" | "gradient-flow"`). `push-sum` is the paper's
+    /// Push-Vector protocol and the bitwise determinism reference;
+    /// `gradient-flow` is the primal-dual edge-flow alternative (see
+    /// `gossip::mixer`). The async scheduler supports `push-sum` only.
+    pub mixer: MixerKind,
+    /// Fixed per-link message latency in async cycles (`[mixing]`
+    /// section: `link-latency = N`; 0 = deliver immediately). Each
+    /// directed link draws its delay once from the seed, so a schedule
+    /// is reproducible. Async scheduler only.
+    pub link_latency: usize,
+    /// Per-message drop probability in `[0, 1)` (`[mixing]` section:
+    /// `link-drop = F`). Drops are counted in [`crate::gossip::
+    /// GossipStats::dropped`] and the sender reabsorbs the mass, so
+    /// conservation holds exactly. Async scheduler only.
+    pub link_drop: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -202,6 +219,9 @@ impl Default for ExperimentConfig {
             stream_max_rows: 0,
             stream_initial: 0.5,
             store: StoreKind::Auto,
+            mixer: MixerKind::PushSum,
+            link_latency: 0,
+            link_drop: 0.0,
         }
     }
 }
@@ -311,6 +331,18 @@ impl ExperimentConfig {
                  parallel scheduler"
             );
         }
+        if !(self.link_drop.is_finite() && (0.0..1.0).contains(&self.link_drop)) {
+            bail!("config: [mixing] link-drop must be in [0, 1)");
+        }
+        if (self.link_latency > 0 || self.link_drop > 0.0)
+            && self.scheduler != SchedulerKind::Async
+        {
+            bail!(
+                "config: [mixing] link-latency/link-drop model the async \
+                 engine's network and would be silently ignored by the \
+                 cycle-driven schedulers — set [runtime] scheduler = \"async\""
+            );
+        }
         Ok(())
     }
 
@@ -405,6 +437,27 @@ impl ExperimentConfig {
                         .as_str_or(k)?
                         .parse()
                         .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                // `[mixing]` section. The flat spelling for the backend is
+                // `mixer` — bare `backend` is the compute backend above.
+                "mixing.backend" | "mixer" => {
+                    cfg.mixer = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                // `[mixing] topology` aliases the top-level key so the
+                // consensus scenario can live in one section.
+                "mixing.topology" => {
+                    cfg.topology = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
+                "mixing.link-latency" | "mixing.link_latency" | "link-latency"
+                | "link_latency" => cfg.link_latency = value.as_usize_or(k)?,
+                "mixing.link-drop" | "mixing.link_drop" | "link-drop" | "link_drop" => {
+                    cfg.link_drop = value.as_f64_or(k)?
                 }
                 other => bail!("config: unknown key {other:?}"),
             }
@@ -562,6 +615,24 @@ impl ConfigBuilder {
     /// Sets the shard-store backend.
     pub fn store(mut self, s: StoreKind) -> Self {
         self.cfg.store = s;
+        self
+    }
+
+    /// Sets the consensus mixing backend.
+    pub fn mixer(mut self, m: MixerKind) -> Self {
+        self.cfg.mixer = m;
+        self
+    }
+
+    /// Sets the async engine's per-link latency in cycles.
+    pub fn link_latency(mut self, l: usize) -> Self {
+        self.cfg.link_latency = l;
+        self
+    }
+
+    /// Sets the async engine's per-message drop probability.
+    pub fn link_drop(mut self, p: f64) -> Self {
+        self.cfg.link_drop = p;
         self
     }
 
@@ -819,6 +890,58 @@ snapshot_every = 10
             "dataset = \"pack:t.gpack\"\nscheduler = \"async\"\n",
         )
         .unwrap_err();
+        assert!(e.to_string().contains("async"), "{e}");
+    }
+
+    #[test]
+    fn mixing_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml(
+            "dataset = \"synthetic-usps\"\n[mixing]\nbackend = \"gradient-flow\"\n\
+             topology = \"power-law\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.mixer, MixerKind::GradientFlow);
+        assert_eq!(cfg.topology, TopologyKind::PowerLaw);
+        // flat spelling: `mixer` (bare `backend` is the compute backend)
+        let flat = ExperimentConfig::from_toml("mixer = \"flow\"").unwrap();
+        assert_eq!(flat.mixer, MixerKind::GradientFlow);
+        let compute = ExperimentConfig::from_toml("backend = \"native\"").unwrap();
+        assert_eq!(compute.backend, Backend::Native);
+        assert_eq!(compute.mixer, MixerKind::PushSum);
+        // link schedules require the async scheduler
+        let link = ExperimentConfig::from_toml(
+            "scheduler = \"async\"\n[mixing]\nlink-latency = 3\nlink-drop = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(link.link_latency, 3);
+        assert_eq!(link.link_drop, 0.1);
+        // defaults
+        let d = ExperimentConfig::default();
+        assert_eq!(d.mixer, MixerKind::PushSum);
+        assert_eq!(d.link_latency, 0);
+        assert_eq!(d.link_drop, 0.0);
+        // builder setters
+        let b = ExperimentConfig::builder()
+            .mixer(MixerKind::GradientFlow)
+            .scheduler(SchedulerKind::Async)
+            .link_latency(2)
+            .link_drop(0.05)
+            .build()
+            .unwrap();
+        assert_eq!(b.mixer, MixerKind::GradientFlow);
+        assert_eq!((b.link_latency, b.link_drop), (2, 0.05));
+        // bad mixer name rejected at parse
+        assert!(ExperimentConfig::from_toml("[mixing]\nbackend = \"telepathy\"").is_err());
+        // drop probability outside [0, 1) rejected
+        assert!(ExperimentConfig::from_toml(
+            "scheduler = \"async\"\n[mixing]\nlink-drop = 1.0\n"
+        )
+        .is_err());
+        // link options on a cycle-driven scheduler would be silently
+        // ignored — rejected loudly instead
+        let e = ExperimentConfig::from_toml("[mixing]\nlink-latency = 3").unwrap_err();
+        assert!(e.to_string().contains("async"), "{e}");
+        let e = ExperimentConfig::from_toml("[mixing]\nlink-drop = 0.2").unwrap_err();
         assert!(e.to_string().contains("async"), "{e}");
     }
 

@@ -5,10 +5,12 @@
 //!
 //! Model: a failed node freezes (keeps its shard and weight vector but
 //! neither steps nor gossips); the overlay for each iteration is the
-//! subgraph induced by the alive set, with the doubly-stochastic `B`
-//! rebuilt on membership changes. A recovering node rejoins with its stale
-//! vector, which the shard-weighted Push-Vector consensus re-absorbs —
-//! no coordinator, no state transfer, exactly the gossip robustness story.
+//! subgraph induced by the alive set, with the consensus [`Mixer`]
+//! rebuilt on membership changes (`[mixing] backend` is honored; the
+//! push-sum reference additionally tolerates a disconnected alive set —
+//! components mix internally). A recovering node rejoins with its stale
+//! vector, which the shard-weighted consensus re-absorbs — no
+//! coordinator, no state transfer, exactly the gossip robustness story.
 //!
 //! Execution goes through the unified runtime: the per-node work is
 //! [`super::sched::GossipProtocol`] and the alive set is fanned out by the
@@ -18,11 +20,12 @@
 //! here).
 
 use super::backend::NativeBackend;
+use super::gadget::{build_mixer, GRAPH_SEED, MIXER_SEED};
 use super::node::NodeState;
 use super::sched::{GossipProtocol, Parallel, ProtocolParams, Scheduler, Sequential};
 use crate::config::{ExperimentConfig, SchedulerKind};
 use crate::data::{partition, ShardStore};
-use crate::gossip::PushVector;
+use crate::gossip::{Mixer, MixerKind};
 use crate::metrics;
 use crate::rng::Rng;
 use crate::topology::stochastic::WeightScheme;
@@ -118,7 +121,7 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     anyhow::ensure!(m <= train.len(), "more nodes than samples");
     let d = train.dim();
 
-    let full_graph = Graph::generate(cfg.topology, m, cfg.seed ^ 0x6772_6170_6800);
+    let full_graph = Graph::generate(cfg.topology, m, cfg.seed ^ GRAPH_SEED);
     // Churn rides the same data plane as the plain runner: training rows
     // live in the shard store ([stream] selects static vs streaming), so
     // node failures and ingestion compose — a failed node's buffer keeps
@@ -170,12 +173,10 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     // rebuilt on membership change
     let mut membership_dirty = true;
     let mut alive_ids: Vec<usize> = Vec::new();
-    let mut b: Option<TransitionMatrix> = None;
-    let mut rounds = 1usize;
-    // Push-Vector state, rebuilt only when the alive set changes (the
-    // reset_weighted path keeps the steady-state hot loop allocation-free,
+    // Consensus state, rebuilt only when the alive set changes (the
+    // per-mix reset keeps the steady-state hot loop allocation-free,
     // same as the plain runner — EXPERIMENTS.md §Perf).
-    let mut pv: Option<PushVector> = None;
+    let mut mixer: Option<Box<dyn Mixer>> = None;
 
     for t in 1..=cfg.max_iterations {
         iterations = t;
@@ -215,20 +216,40 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
                     }
                 }
                 let sub = Graph::from_edges(alive_ids.len(), &edges);
+                // Push-sum tolerates a fractured alive set (components mix
+                // internally); gradient-flow's edge duals can only enforce
+                // agreement along surviving paths — reject loudly instead
+                // of silently averaging per component.
+                if cfg.mixer != MixerKind::PushSum {
+                    anyhow::ensure!(
+                        sub.is_connected(),
+                        "churn: mixer {} requires the alive overlay to stay \
+                         connected (iteration {t}: the {} alive nodes induce a \
+                         disconnected subgraph) — use --mixer push-sum for \
+                         schedules that can fracture the overlay",
+                        cfg.mixer,
+                        alive_ids.len()
+                    );
+                }
                 let tm = TransitionMatrix::from_graph(&sub, WeightScheme::MetropolisHastings);
-                rounds = if cfg.gossip_rounds > 0 {
+                let rounds = if cfg.gossip_rounds > 0 {
                     cfg.gossip_rounds
                 } else {
                     crate::topology::mixing_time(&tm, cfg.gamma).min(10_000)
                 };
-                b = Some(tm);
-                pv = Some(PushVector::new_weighted(
-                    &vec![vec![0.0; d]; alive_ids.len()],
-                    &alive_ids.iter().map(|&i| store.shard_len(i) as f64).collect::<Vec<_>>(),
+                let weights: Vec<f64> =
+                    alive_ids.iter().map(|&i| store.shard_len(i) as f64).collect();
+                mixer = Some(build_mixer(
+                    cfg.mixer,
+                    &sub,
+                    tm,
+                    rounds,
+                    cfg.seed ^ MIXER_SEED,
+                    d,
+                    &weights,
                 ));
             } else {
-                b = None;
-                pv = None;
+                mixer = None;
             }
             membership_dirty = false;
         }
@@ -243,24 +264,28 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
         // internally). Weights are re-read from the store every iteration
         // — the re-weight rule — so ingestion-grown shards pull the
         // consensus target toward the sites that received data.
-        if let (Some(tm), Some(pv)) = (&b, &mut pv) {
+        if let Some(mx) = &mut mixer {
             let weights: Vec<f64> =
                 alive_ids.iter().map(|&i| store.shard_len(i) as f64).collect();
-            pv.reset_weighted(alive_ids.iter().map(|&i| nodes[i].w.as_slice()), &weights);
-            // Bᵀ-apply column panels fan over the scheduler's executor
+            // The mixer's inner panels fan over the scheduler's executor
             // (the worker pool when `[runtime] scheduler = "parallel"`)
             // on its kernel; bitwise identical to inline execution on
             // every backend.
-            pv.run_rounds_with(tm, rounds, sched.panel_exec(), sched.kernel());
+            mx.mix(
+                &mut alive_ids.iter().map(|&i| nodes[i].w.as_slice()),
+                &weights,
+                sched.panel_exec(),
+                sched.kernel(),
+            );
             // (g)-consume/(h)/ε via the shared protocol; the scheduler
             // hands each closure the node's position within `alive_ids`,
-            // which is exactly the Push-Vector slot. The convergence test
+            // which is exactly the mixer slot. The convergence test
             // is drift-aware: a node that ingested this iteration cannot
             // declare convergence.
-            let pv_ref: &PushVector = pv;
+            let mixer_ref: &dyn Mixer = &**mx;
             let added_ref: &[usize] = &added;
             sched.for_each_node(&mut nodes, &alive_ids, &|_backend, slot, node| {
-                protocol.apply_estimate(pv_ref, slot, node);
+                protocol.apply_estimate(mixer_ref, slot, node);
                 protocol
                     .check_convergence_drift(node, stream_live || added_ref[node.id] > 0);
                 Ok(())
@@ -376,6 +401,30 @@ mod tests {
         // among alive nodes is small
         assert!(report.disagreement < 0.5, "disagreement {}", report.disagreement);
         assert!(report.test_accuracy > 0.65);
+    }
+
+    #[test]
+    fn gradient_flow_churn_runs_and_fractured_overlay_rejected() {
+        // The mixer seam reaches churn: gradient-flow survives a failure
+        // that keeps the alive overlay connected...
+        let gf_cfg = ExperimentConfig { mixer: MixerKind::GradientFlow, ..cfg() };
+        let events = vec![ChurnEvent { at_iter: 30, node: 2, kind: ChurnKind::Fail }];
+        let report = run_with_churn(&gf_cfg, &ChurnSchedule::new(events)).unwrap();
+        assert_eq!(report.min_alive, 5);
+        assert!(report.test_accuracy > 0.6, "accuracy {}", report.test_accuracy);
+        // ...but a fractured ring is a loud error, not a silent
+        // per-component average (push-sum is the fracture-tolerant path).
+        let ring_cfg = ExperimentConfig {
+            topology: crate::topology::TopologyKind::Ring,
+            mixer: MixerKind::GradientFlow,
+            ..cfg()
+        };
+        let events = vec![
+            ChurnEvent { at_iter: 10, node: 2, kind: ChurnKind::Fail },
+            ChurnEvent { at_iter: 10, node: 4, kind: ChurnKind::Fail },
+        ];
+        let err = run_with_churn(&ring_cfg, &ChurnSchedule::new(events)).unwrap_err();
+        assert!(err.to_string().contains("connected"), "{err}");
     }
 
     #[test]

@@ -71,6 +71,8 @@ mod tests {
             project: true,
             seed: 5,
             max_lag: 4,
+            link_latency: 0,
+            link_drop: 0.0,
         });
         let ws = eng.run(shards, &g).unwrap();
         assert_eq!(ws.len(), 4);
@@ -93,6 +95,8 @@ mod tests {
             project: true,
             seed: 6,
             max_lag: 4,
+            link_latency: 0,
+            link_drop: 0.0,
         });
         let ws = eng.run(shards, &g).unwrap();
         // Pairwise distances bounded relative to the norm. The async engine
@@ -123,6 +127,8 @@ mod tests {
             project: true,
             seed: 0,
             max_lag: 4,
+            link_latency: 0,
+            link_drop: 0.0,
         });
         assert!(eng.run(shards, &g).is_err());
     }

@@ -45,7 +45,7 @@ use crate::data::{
     partition, Dataset, MmapStore, PackFile, ShardStore, ShardView, StaticStore, StoreKind,
     StreamSchedule, StreamingStore,
 };
-use crate::gossip::{GossipStats, PushVector};
+use crate::gossip::{GossipStats, GradientFlowMixer, Mixer, MixerKind, PushSumMixer};
 use crate::metrics::{self, node_trial_std, Trace, TracePoint};
 use crate::pool::{Task, WorkerPool};
 use crate::rng::Rng;
@@ -78,6 +78,62 @@ pub struct TrialResult {
     /// Convergence trace (non-empty when `snapshot_every > 0`; the async
     /// engine records no trace — there is no global iteration to snapshot).
     pub trace: Trace,
+    /// Per-node drift observations at streaming ingestion boundaries
+    /// (empty for static runs and the async engine, which has no
+    /// boundary).
+    pub drift: Vec<DriftEvent>,
+}
+
+/// One per-node drift observation at a streaming ingestion boundary:
+/// summary statistics of the rows that *arrived* at this node this
+/// iteration, so a drifting stream (label skew, feature-scale shift) is
+/// visible in the iteration log instead of silently bending the model.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftEvent {
+    /// GADGET iteration at whose boundary the rows arrived.
+    pub iteration: usize,
+    /// Node that ingested.
+    pub node: usize,
+    /// Rows ingested this boundary.
+    pub added: usize,
+    /// Fraction of +1 labels among the arriving rows.
+    pub label_balance: f64,
+    /// Mean ‖x‖₂ of the arriving rows.
+    pub mean_norm: f64,
+}
+
+/// Computes the per-node [`DriftEvent`]s for one non-empty ingestion
+/// boundary. The store contract is append-only, so the arrivals are
+/// exactly the shard suffix of length `added[i]`.
+fn drift_events(
+    store: &dyn ShardStore,
+    added: &[usize],
+    t: usize,
+    out: &mut Vec<DriftEvent>,
+) {
+    for (i, &a) in added.iter().enumerate() {
+        if a == 0 {
+            continue;
+        }
+        let shard = store.shard(i);
+        let n = shard.len();
+        let mut pos = 0usize;
+        let mut norm_sum = 0.0f64;
+        for r in n - a..n {
+            let (row, label) = shard.sample(r);
+            if label > 0.0 {
+                pos += 1;
+            }
+            norm_sum += row.l2_norm_sq().sqrt();
+        }
+        out.push(DriftEvent {
+            iteration: t,
+            node: i,
+            added: a,
+            label_balance: pos as f64 / a as f64,
+            mean_norm: norm_sum / a as f64,
+        });
+    }
 }
 
 /// Aggregated multi-trial report (one Table-3 row).
@@ -382,6 +438,17 @@ impl GadgetRunner {
                      learners); use the sequential or parallel scheduler \
                      for the simd kernel"
                 );
+                // The async engine *is* randomized push-sum — its mass
+                // exchange has no seam for an alternative mixer. Running
+                // it while the report claims mixer=gradient-flow would be
+                // the mislabeled-run case this codebase forbids.
+                anyhow::ensure!(
+                    self.cfg.mixer == MixerKind::PushSum,
+                    "scheduler = \"async\" supports only mixer = \"push-sum\" \
+                     (the thread-per-node engine is the randomized push-sum \
+                     mass exchange itself); use the sequential or parallel \
+                     scheduler for alternative mixers"
+                );
                 self.run_async()
             }
         }
@@ -552,20 +619,32 @@ impl GadgetRunner {
         let mut gossip_total = GossipStats::default();
         let mut trace = Trace::new(format!("gadget-{}", cfg.dataset));
         let mut iterations = 0usize;
-        // One Push-Vector state reused across iterations (reset_weighted is
-        // allocation-free; constructing it fresh allocates 4 m×d buffers
-        // per iteration — EXPERIMENTS.md §Perf).
-        let mut pv =
-            PushVector::new_weighted(&vec![vec![0.0; d]; m], &shard_sizes);
+        let mut drift: Vec<DriftEvent> = Vec::new();
+        // One mixer state reused across iterations (its per-mix reset is
+        // allocation-free; constructing it fresh allocates the m×d mass
+        // buffers per iteration — EXPERIMENTS.md §Perf). On the push-sum
+        // backend this holds exactly the old long-lived PushVector.
+        let mut mixer = build_mixer(
+            cfg.mixer,
+            &graph,
+            b,
+            rounds,
+            seed ^ MIXER_SEED,
+            d,
+            &shard_sizes,
+        );
 
         for t in 1..=cfg.max_iterations {
             iterations = t;
             // Ingestion boundary: append this iteration's arrivals before
             // any node steps, then refresh the Push-Sum weights so the
             // consensus target re-weights to the new nᵢ (static stores
-            // return 0 and the sizes never move).
+            // return 0 and the sizes never move). Arrivals also feed the
+            // drift log: per-node label balance and feature scale of the
+            // ingested suffix.
             if protocol.ingest_boundary(&mut *store, t, &mut added)? > 0 {
                 store.sizes_into(&mut shard_sizes);
+                drift_events(&*store, &added, t, &mut drift);
             }
             // While the stream can still deliver (pool rows remain, the
             // cap is unreached, a tailed file is not at EOF) convergence
@@ -580,25 +659,32 @@ impl GadgetRunner {
             sched.for_each_node(&mut nodes, &ids, &|backend, _id, node| {
                 protocol.local_step(backend, store_ref.shard(node.id), node, t)
             })?;
-            // (g): Push-Vector consensus on the shard-weighted vectors;
-            // the Bᵀ-apply fans its column panels over the scheduler's
-            // executor (inline for sequential, the worker pool for
-            // parallel) on the scheduler's kernel — bitwise identical for
-            // every executor and kernel backend (the panel apply is
-            // element-wise). `reset_weighted` rebuilds (Σnᵢwᵢ, Σnᵢ) from
-            // the *current* sizes, so re-weighting after ingestion
-            // conserves the mass identity exactly (the re-weight rule).
-            pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
-            pv.run_rounds_with(&b, rounds, sched.panel_exec(), sched.kernel());
-            gossip_total.merge(pv.stats());
+            // (g): mixer consensus on the shard-weighted vectors. On the
+            // push-sum backend this is bit-for-bit the old inline
+            // Push-Vector sequence: the Bᵀ-apply fans its column panels
+            // over the scheduler's executor (inline for sequential, the
+            // worker pool for parallel) on the scheduler's kernel, and
+            // the per-mix reset rebuilds (Σnᵢwᵢ, Σnᵢ) from the *current*
+            // sizes, so re-weighting after ingestion conserves the mass
+            // identity exactly (the re-weight rule). Alternative mixers
+            // realize the same weighted-average target through their own
+            // mechanism and report through the same GossipStats.
+            mixer.mix(
+                &mut nodes.iter().map(|n| n.w.as_slice()),
+                &shard_sizes,
+                sched.panel_exec(),
+                sched.kernel(),
+            );
+            gossip_total.merge(mixer.stats());
             // (g)-consume/(h)/ε: estimate, optional projection and the
             // drift-aware convergence test, per node (slot == id here
             // since ids = 0..m). A node that ingested this iteration may
             // not declare convergence — ε on a changed shard measures
             // staleness, not consensus.
             let added_ref: &[usize] = &added;
+            let mixer_ref: &dyn Mixer = &*mixer;
             sched.for_each_node(&mut nodes, &ids, &|_backend, slot, node| {
-                protocol.apply_estimate(&pv, slot, node);
+                protocol.apply_estimate(mixer_ref, slot, node);
                 protocol
                     .check_convergence_drift(node, stream_live || added_ref[node.id] > 0);
                 Ok(())
@@ -634,6 +720,7 @@ impl GadgetRunner {
             consensus_w: average_w(&nodes),
             gossip: gossip_total,
             trace,
+            drift,
         })
     }
 
@@ -671,6 +758,8 @@ impl GadgetRunner {
             project: cfg.project_local,
             seed,
             max_lag: ASYNC_MAX_LAG,
+            link_latency: cfg.link_latency,
+            link_drop: cfg.link_drop,
         };
         let sw = Stopwatch::new();
         let result = AsyncScheduler::new(params).run(train_shards, &graph)?;
@@ -718,6 +807,7 @@ impl GadgetRunner {
             consensus_w,
             gossip: result.stats,
             trace: Trace::new(format!("gadget-async-{}", cfg.dataset)),
+            drift: Vec::new(),
         })
     }
 }
@@ -888,8 +978,39 @@ pub fn lambda_for_corpus(path: &str) -> Option<f64> {
 }
 
 /// Seed-mixing label for graph construction (avoids colliding with the
-/// partition seeds).
-const GRAPH_SEED: u64 = 0x6772_6170_6800; // "graph"
+/// partition seeds). Public so the CLI startup echo can reconstruct the
+/// exact trial-0 graph for its τ_mix estimate.
+pub const GRAPH_SEED: u64 = 0x6772_6170_6800; // "graph"
+
+/// Seed-mixing label for mixer-internal randomness (the gradient-flow
+/// edge permutation; distinct from the graph and partition labels).
+pub const MIXER_SEED: u64 = 0x6d69_7865_7200; // "mixer"
+
+/// Builds the configured consensus backend — the one construction point
+/// shared by the plain runner and the churn engine (which rebuilds on
+/// membership change from the induced alive-subgraph).
+///
+/// * [`MixerKind::PushSum`] wraps the doubly-stochastic `B` it is handed
+///   in the long-lived Push-Vector state — the bitwise reference path;
+/// * [`MixerKind::GradientFlow`] takes the graph itself (its duals live
+///   on edges, not on `B`) plus the push-sum round count as its budget
+///   hint and `seed` for the edge permutation.
+pub(crate) fn build_mixer(
+    kind: MixerKind,
+    graph: &Graph,
+    b: TransitionMatrix,
+    rounds: usize,
+    seed: u64,
+    d: usize,
+    weights: &[f64],
+) -> Box<dyn Mixer> {
+    match kind {
+        MixerKind::PushSum => Box::new(PushSumMixer::new(b, rounds, d, weights)),
+        MixerKind::GradientFlow => {
+            Box::new(GradientFlowMixer::new(graph, rounds, seed, d))
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -1162,6 +1283,77 @@ mod tests {
         assert_eq!(mmap.trials[0].consensus_w, stat.trials[0].consensus_w);
         assert_eq!(mmap.iterations, stat.iterations);
         assert_eq!(mmap.test_accuracy.to_bits(), stat.test_accuracy.to_bits());
+    }
+
+    #[test]
+    fn gradient_flow_mixer_trains_on_ring_and_grid() {
+        // The non-push-sum backend must realize the same consensus target
+        // well enough to train: comparable accuracy on the slow-mixing
+        // ring and the torus ("grid").
+        use crate::topology::TopologyKind;
+        for topo in [TopologyKind::Ring, TopologyKind::Torus] {
+            let cfg = ExperimentConfig {
+                mixer: crate::gossip::MixerKind::GradientFlow,
+                topology: topo,
+                trials: 1,
+                ..small_cfg()
+            };
+            let report = GadgetRunner::new(cfg).unwrap().run().unwrap();
+            assert!(
+                report.test_accuracy > 0.75,
+                "{topo}: gradient-flow accuracy {}",
+                report.test_accuracy
+            );
+            let g = report.trials[0].gossip;
+            assert!(g.rounds > 0 && g.messages > 0 && g.bytes > 0);
+        }
+    }
+
+    #[test]
+    fn gradient_flow_mixer_is_deterministic_across_runs() {
+        let cfg = || ExperimentConfig {
+            mixer: crate::gossip::MixerKind::GradientFlow,
+            trials: 1,
+            ..small_cfg()
+        };
+        let a = GadgetRunner::new(cfg()).unwrap().run().unwrap();
+        let b = GadgetRunner::new(cfg()).unwrap().run().unwrap();
+        assert_eq!(a.trials[0].consensus_w, b.trials[0].consensus_w);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn async_rejects_non_push_sum_mixer_loudly() {
+        let cfg = ExperimentConfig {
+            scheduler: SchedulerKind::Async,
+            mixer: crate::gossip::MixerKind::GradientFlow,
+            ..small_cfg()
+        };
+        let err = GadgetRunner::new(cfg).unwrap().run().unwrap_err();
+        assert!(err.to_string().contains("push-sum"), "{err}");
+    }
+
+    #[test]
+    fn streaming_runs_record_drift_events_static_runs_do_not() {
+        let stream_cfg = ExperimentConfig {
+            stream_rate: 4.0,
+            stream_max_rows: 40,
+            trials: 1,
+            ..small_cfg()
+        };
+        let report = GadgetRunner::new(stream_cfg).unwrap().run().unwrap();
+        let drift = &report.trials[0].drift;
+        assert!(!drift.is_empty(), "streaming run must log drift events");
+        let total: usize = drift.iter().map(|e| e.added).sum();
+        assert_eq!(total, 40, "every arriving row is drift-accounted");
+        for e in drift {
+            assert!(e.iteration >= 2, "t=1 is defined as no arrivals");
+            assert!((0.0..=1.0).contains(&e.label_balance));
+            assert!(e.mean_norm.is_finite() && e.mean_norm > 0.0);
+        }
+        let static_report =
+            GadgetRunner::new(small_cfg()).unwrap().run().unwrap();
+        assert!(static_report.trials.iter().all(|t| t.drift.is_empty()));
     }
 
     #[test]

@@ -31,7 +31,8 @@ pub use backend::{LocalBackend, NativeBackend, StepContext};
 pub use churn::{run_with_churn, ChurnEvent, ChurnKind, ChurnReport, ChurnSchedule};
 pub use engine::{AsyncGossipEngine, AsyncParams};
 pub use gadget::{
-    lambda_for_corpus, run_on_datasets, DatasetRunReport, GadgetReport, GadgetRunner, TrialResult,
+    lambda_for_corpus, run_on_datasets, DatasetRunReport, DriftEvent, GadgetReport, GadgetRunner,
+    TrialResult, GRAPH_SEED, MIXER_SEED,
 };
 pub use multiclass::{MulticlassGadget, MulticlassReport};
 pub use node::NodeState;

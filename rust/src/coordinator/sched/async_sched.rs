@@ -89,7 +89,25 @@ pub struct AsyncParams {
     /// Bounded staleness: a node may run at most this many cycles ahead of
     /// the slowest peer. 0 = lock-step.
     pub max_lag: usize,
+    /// Per-link latency schedule: each directed link `(i, j)` gets a
+    /// fixed, seeded delay drawn uniformly from `0..=link_latency`
+    /// cycles; a message released on cycle `t` is delivered no earlier
+    /// than `t + delay`. 0 disables (the bitwise-unchanged fast path).
+    /// Delayed messages are held in a sender-side queue and always
+    /// flushed before the final-drain barrier, so mass conservation at
+    /// the report boundary is exact regardless of the schedule.
+    pub link_latency: usize,
+    /// Per-message delivery-failure probability in `[0, 1)`, drawn from
+    /// a dedicated seeded stream (the node's protocol RNG never sees
+    /// it). A failed message counts in `messages`/`bytes` *and*
+    /// `dropped` (it was sent), and its mass is reabsorbed by the sender
+    /// — delivery fails, conservation does not. 0.0 disables.
+    pub link_drop: f64,
 }
+
+/// Seed-mixing label for link schedules (latency draws and the drop
+/// stream; distinct from the node protocol substreams).
+const LINK_SEED: u64 = 0x6c69_6e6b; // "link"
 
 /// Everything an asynchronous run reports: per-node estimates plus the
 /// raw push-sum mass (for conservation checks) and communication totals.
@@ -132,6 +150,10 @@ impl AsyncScheduler {
         let m = shards.len();
         anyhow::ensure!(m == graph.n, "async scheduler: shard/graph size mismatch");
         anyhow::ensure!(m > 0, "async scheduler: no shards");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.params.link_drop),
+            "async scheduler: link_drop must be in [0, 1)"
+        );
         for (i, s) in shards.iter().enumerate() {
             anyhow::ensure!(!s.is_empty(), "async scheduler: shard {i} is empty");
         }
@@ -174,7 +196,7 @@ impl AsyncScheduler {
             let counters = counters.clone();
             let barrier = barrier.clone();
             handles.push(thread::spawn(
-                move || -> Result<(Vec<f64>, Vec<f64>, f64, usize)> {
+                move || -> Result<(Vec<f64>, Vec<f64>, f64, usize, usize)> {
                     let mut guard = ExitGuard {
                         counters: counters.clone(),
                         barrier: barrier.clone(),
@@ -184,6 +206,33 @@ impl AsyncScheduler {
                     };
                     let n_i = shard.len() as f64;
                     let mut backend = NativeBackend::default();
+                    // Link schedules (no-ops when both options are off —
+                    // the default path is bitwise-unchanged). Each
+                    // outgoing link's latency is a fixed seeded draw; the
+                    // drop stream is its own RNG so the node's protocol
+                    // substream never moves because of link options.
+                    let delays: Vec<usize> = nbrs
+                        .iter()
+                        .map(|&tgt| {
+                            if p.link_latency == 0 {
+                                0
+                            } else {
+                                let mut r = Rng::new(
+                                    p.seed
+                                        ^ LINK_SEED
+                                        ^ ((i as u64) << 32)
+                                        ^ tgt as u64,
+                                );
+                                r.below(p.link_latency + 1)
+                            }
+                        })
+                        .collect();
+                    let mut link_rng =
+                        Rng::new(p.seed ^ LINK_SEED).substream(i as u64);
+                    // (release_cycle, target, payload) — messages in
+                    // transit on this node's outgoing links
+                    let mut pending: Vec<(usize, usize, MassMsg)> = Vec::new();
+                    let mut dropped = 0usize;
                     // The thread owns its shard outright (the async engine
                     // has no ingestion boundary — a fixed snapshot moves in
                     // here); the node state carries the RNG substream and
@@ -222,17 +271,52 @@ impl AsyncScheduler {
                             // (2) fold the stepped estimate back into the mass
                             mass.fold(&node.w);
                         }
-                        // (3) halve and send
+                        // (3a) release in-transit messages whose latency
+                        // has elapsed (empty unless link_latency > 0)
+                        let mut k = 0;
+                        while k < pending.len() {
+                            if pending[k].0 <= t {
+                                let (_, tgt, msg) = pending.swap_remove(k);
+                                match txs[tgt].send(msg) {
+                                    Ok(()) => sent += 1,
+                                    Err(e) => {
+                                        let MassMsg { v: hv, w: hw } = e.0;
+                                        mass.absorb(&hv, hw);
+                                    }
+                                }
+                            } else {
+                                k += 1;
+                            }
+                        }
+                        // (3b) halve and send
                         if !nbrs.is_empty() {
-                            let tgt = nbrs[node.rng.below(nbrs.len())];
+                            let nk = node.rng.below(nbrs.len());
+                            let tgt = nbrs[nk];
                             let (half_v, half_w) = mass.split_half();
-                            // A send fails only if the peer already exited;
-                            // its inbox is gone, so keep the mass local.
-                            match txs[tgt].send(MassMsg { v: half_v, w: half_w }) {
-                                Ok(()) => sent += 1,
-                                Err(e) => {
-                                    let MassMsg { v: hv, w: hw } = e.0;
-                                    mass.absorb(&hv, hw);
+                            if p.link_drop > 0.0 && link_rng.flip(p.link_drop) {
+                                // lost in transit: it *was* sent (counts in
+                                // messages and dropped under the unified
+                                // stats definition), but delivery failed —
+                                // the sender reabsorbs, conserving mass.
+                                sent += 1;
+                                dropped += 1;
+                                mass.absorb(&half_v, half_w);
+                            } else if delays[nk] > 0 {
+                                pending.push((
+                                    t + delays[nk],
+                                    tgt,
+                                    MassMsg { v: half_v, w: half_w },
+                                ));
+                            } else {
+                                // A send fails only if the peer already
+                                // exited; its inbox is gone, so keep the
+                                // mass local.
+                                match txs[tgt].send(MassMsg { v: half_v, w: half_w }) {
+                                    Ok(()) => sent += 1,
+                                    Err(e) => {
+                                        let MassMsg { v: hv, w: hw } = e.0;
+                                        mass.absorb(&hv, hw);
+                                    }
                                 }
                             }
                         }
@@ -246,6 +330,19 @@ impl AsyncScheduler {
                         // ingesting inf/NaN — see MassState::estimate_into
                         mass.estimate_into(&mut node.w);
                         counters[i].store(t, Ordering::Release);
+                    }
+                    // Flush every still-pending delayed message *before*
+                    // the barrier — in-transit mass must reach an inbox
+                    // (or come home on a dead link) for the final drain
+                    // to conserve exactly.
+                    for (_, tgt, msg) in pending.drain(..) {
+                        match txs[tgt].send(msg) {
+                            Ok(()) => sent += 1,
+                            Err(e) => {
+                                let MassMsg { v: hv, w: hw } = e.0;
+                                mass.absorb(&hv, hw);
+                            }
+                        }
                     }
                     // Final drain: every send happens before this barrier,
                     // so draining to empty afterwards ingests all in-flight
@@ -262,7 +359,7 @@ impl AsyncScheduler {
                     if let Some(e) = failure {
                         return Err(e);
                     }
-                    Ok((node.w, mass.v, mass.w, sent))
+                    Ok((node.w, mass.v, mass.w, sent, dropped))
                 },
             ));
         }
@@ -273,13 +370,14 @@ impl AsyncScheduler {
         let mut mass_weights = Vec::with_capacity(m);
         let mut stats = GossipStats::default();
         for h in handles {
-            let (w, v, mw, sent) =
+            let (w, v, mw, sent, dropped) =
                 h.join().map_err(|_| anyhow::anyhow!("async scheduler: node thread panicked"))??;
             estimates.push(w);
             mass_v.push(v);
             mass_weights.push(mw);
             stats.messages += sent;
             stats.bytes += sent * 8 * (d + 1);
+            stats.dropped += dropped;
         }
         stats.rounds = p.cycles;
         Ok(AsyncRunResult { estimates, mass_v, mass_weights, stats })
@@ -317,6 +415,8 @@ mod tests {
             project: true,
             seed: 5,
             max_lag: 4,
+            link_latency: 0,
+            link_drop: 0.0,
         }
     }
 
@@ -336,6 +436,54 @@ mod tests {
         assert!((w_sum - total_n).abs() < 1e-9 * total_n, "weight drift {w_sum} vs {total_n}");
         assert!(res.stats.messages > 0);
         assert!(res.stats.bytes > res.stats.messages);
+    }
+
+    #[test]
+    fn link_latency_conserves_mass_and_still_learns() {
+        let (shards, test) = problem(4);
+        let total_n: f64 = shards.iter().map(|s| s.len() as f64).sum();
+        let g = Graph::complete(4);
+        let mut p = params(400, 50);
+        p.link_latency = 3;
+        let res = AsyncScheduler::new(p).run(shards, &g).unwrap();
+        // delayed messages are flushed before the barrier: conservation
+        // at the report boundary is exact regardless of the schedule
+        let w_sum: f64 = res.mass_weights.iter().sum();
+        assert!((w_sum - total_n).abs() < 1e-9 * total_n, "weight drift {w_sum}");
+        assert_eq!(res.stats.dropped, 0);
+        for w in &res.estimates {
+            let acc = crate::metrics::accuracy(w, &test);
+            assert!(acc > 0.75, "node accuracy {acc} under latency");
+        }
+    }
+
+    #[test]
+    fn link_drop_counts_losses_and_conserves_mass() {
+        let (shards, test) = problem(4);
+        let total_n: f64 = shards.iter().map(|s| s.len() as f64).sum();
+        let g = Graph::complete(4);
+        let mut p = params(400, 50);
+        p.link_drop = 0.2;
+        let res = AsyncScheduler::new(p).run(shards, &g).unwrap();
+        // drops are delivery failures, not mass destruction: the sender
+        // reabsorbs, so totals hold exactly
+        let w_sum: f64 = res.mass_weights.iter().sum();
+        assert!((w_sum - total_n).abs() < 1e-9 * total_n, "weight drift {w_sum}");
+        assert!(res.stats.dropped > 0, "a 20% drop rate must lose messages");
+        assert!(res.stats.dropped < res.stats.messages);
+        for w in &res.estimates {
+            let acc = crate::metrics::accuracy(w, &test);
+            assert!(acc > 0.75, "node accuracy {acc} under drops");
+        }
+    }
+
+    #[test]
+    fn invalid_link_drop_rejected() {
+        let (shards, _) = problem(3);
+        let g = Graph::complete(3);
+        let mut p = params(10, 0);
+        p.link_drop = 1.0;
+        assert!(AsyncScheduler::new(p).run(shards, &g).is_err());
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //!
 //! * steps (a)–(f): `local_steps` mini-batch Pegasos sub-gradient updates
 //!   on the node's shard, with optional `1/√λ`-ball projection;
-//! * step (g) consume side: replace the node vector with its Push-Vector
-//!   consensus estimate;
+//! * step (g) consume side: replace the node vector with its consensus
+//!   estimate from the configured [`Mixer`] backend;
 //! * step (h): optional consensus projection;
 //! * the ε-convergence test on `‖ŵ^(t) − ŵ^(t−1)‖`.
 //!
@@ -21,7 +21,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::backend::{LocalBackend, StepContext};
 use crate::coordinator::node::NodeState;
 use crate::data::{ShardStore, ShardView};
-use crate::gossip::PushVector;
+use crate::gossip::Mixer;
 use crate::Result;
 
 /// The Algorithm-2 parameters shared by every execution engine.
@@ -107,9 +107,9 @@ impl GossipProtocol {
     /// the total; `t = 1` is defined as 0 arrivals (the initial shards
     /// *are* iteration 1's data). After a non-empty boundary the caller
     /// must re-read [`ShardStore::sizes_into`] and hand the new `nᵢ` to
-    /// `PushVector::reset_weighted` — the re-weight rule that keeps the
-    /// consensus target the Theorem-1 average over the *current* data
-    /// (DESIGN.md §Streaming data plane).
+    /// the mixer's next [`Mixer::mix`] as weights — the re-weight rule
+    /// that keeps the consensus target the Theorem-1 average over the
+    /// *current* data (DESIGN.md §Streaming data plane).
     pub fn ingest_boundary(
         &self,
         store: &mut dyn ShardStore,
@@ -140,12 +140,14 @@ impl GossipProtocol {
         converged
     }
 
-    /// Steps (g)/(h) consume side: writes Push-Vector slot `slot`'s
+    /// Steps (g)/(h) consume side: writes the mixer's slot-`slot`
     /// consensus estimate into the node and applies the optional consensus
     /// projection. (`slot` is the node's index *within the gossiping set*,
-    /// which differs from `node.id` under churn.)
-    pub fn apply_estimate(&self, pv: &PushVector, slot: usize, node: &mut NodeState) {
-        pv.estimate_into(slot, &mut node.w);
+    /// which differs from `node.id` under churn.) This is the consume side
+    /// of the [`Mixer`] seam — which consensus mechanism produced the
+    /// estimate is invisible here.
+    pub fn apply_estimate(&self, mixer: &dyn Mixer, slot: usize, node: &mut NodeState) {
+        mixer.estimate_into(slot, &mut node.w);
         if self.params.project_consensus {
             crate::linalg::project_to_ball(&mut node.w, self.params.radius());
         }
@@ -298,12 +300,29 @@ mod tests {
 
     #[test]
     fn apply_estimate_projects_to_ball() {
+        use crate::gossip::{Mixer as _, PushSumMixer};
+        use crate::pool::SERIAL_EXEC;
+        use crate::topology::stochastic::WeightScheme;
+        use crate::topology::{Graph, TransitionMatrix};
         let mut p = params();
         p.lambda = 1.0; // radius 1
         let proto = GossipProtocol::new(p);
-        let pv = PushVector::new(&[vec![3.0, 4.0], vec![3.0, 4.0]]);
+        // 0 mixing rounds: each slot's estimate is exactly its own input,
+        // so only the consume-side projection is under test.
+        let b = TransitionMatrix::from_graph(
+            &Graph::complete(2),
+            WeightScheme::MetropolisHastings,
+        );
+        let mut mixer = PushSumMixer::new(b, 0, 2, &[1.0, 1.0]);
+        let vectors = [vec![3.0, 4.0], vec![3.0, 4.0]];
+        mixer.mix(
+            &mut vectors.iter().map(|v| v.as_slice()),
+            &[1.0, 1.0],
+            &SERIAL_EXEC,
+            crate::linalg::kernel::scalar(),
+        );
         let mut node = NodeState::new(0, Dataset::default(), 2, Rng::new(0));
-        proto.apply_estimate(&pv, 0, &mut node);
+        proto.apply_estimate(&mixer, 0, &mut node);
         let norm = crate::linalg::l2_norm(&node.w);
         assert!(norm <= 1.0 + 1e-12, "norm {norm}");
     }

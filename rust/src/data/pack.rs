@@ -23,7 +23,8 @@
 //! 32      8     total non-zeros nnz (u64)
 //! 40      8     FNV-1a-64 checksum of the payload (u64)
 //! 48      8     payload length in bytes (u64)
-//! 56      8     reserved (zero)
+//! 56      8     flags (u64; bit 0 = rows were shuffled at pack time —
+//!               `gadget pack --shuffle SEED`; other bits must be zero)
 //! 64      …     payload: indptr (n+1)×u64 | indices nnz×u32 |
 //!               values nnz×f32 | labels n×i8 | zero pad to 8-byte multiple
 //! ```
@@ -56,6 +57,17 @@ pub const PACK_VERSION: u32 = 1;
 pub const PACK_ENDIAN_MARK: u32 = 0x0102_0304;
 /// Header size in bytes.
 pub const PACK_HEADER_LEN: usize = 64;
+/// Header flag bit 0: the row order is a seeded permutation of the source
+/// order (`gadget pack --shuffle SEED`). Because contiguous pack shards
+/// are *windows*, an unshuffled pack of a sorted corpus would hand every
+/// node a label-skewed shard — the flag records that the skew was broken
+/// at conversion, as part of the experiment record.
+pub const PACK_FLAG_SHUFFLED: u64 = 1;
+/// All flag bits this build understands; anything else fails open.
+const PACK_FLAGS_KNOWN: u64 = PACK_FLAG_SHUFFLED;
+/// Seed label for the pack shuffle stream ("pack"), domain-separating it
+/// from the trainer's seed streams.
+const SHUFFLE_SEED: u64 = 0x7061_636b;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -100,6 +112,7 @@ fn payload_sizes(n: u64, nnz: u64) -> Result<(u64, u64, u64, u64, u64)> {
 fn write_pack(
     path: &Path,
     dim: usize,
+    flags: u64,
     indptr: &[u64],
     indices: &[u32],
     values: &[f32],
@@ -140,6 +153,7 @@ fn write_pack(
     header[32..40].copy_from_slice(&(nnz as u64).to_ne_bytes());
     header[40..48].copy_from_slice(&sum.to_ne_bytes());
     header[48..56].copy_from_slice(&payload_len.to_ne_bytes());
+    header[56..64].copy_from_slice(&flags.to_ne_bytes());
 
     // Pass 2: write.
     let file = std::fs::File::create(path)
@@ -168,12 +182,58 @@ fn write_pack(
     })
 }
 
+/// Gathers the columnar arrays in `perm` order (one pass, row slices
+/// copied via the row boundaries).
+fn permute_columnar(
+    perm: &[usize],
+    indptr: &[u64],
+    indices: &[u32],
+    values: &[f32],
+    labels: &[i8],
+) -> (Vec<u64>, Vec<u32>, Vec<f32>, Vec<i8>) {
+    let n = labels.len();
+    let mut p_indptr = Vec::with_capacity(n + 1);
+    p_indptr.push(0u64);
+    let mut p_indices = Vec::with_capacity(indices.len());
+    let mut p_values = Vec::with_capacity(values.len());
+    let mut p_labels = Vec::with_capacity(n);
+    for &r in perm {
+        let (a, b) = (indptr[r] as usize, indptr[r + 1] as usize);
+        p_indices.extend_from_slice(&indices[a..b]);
+        p_values.extend_from_slice(&values[a..b]);
+        p_indptr.push(p_indices.len() as u64);
+        p_labels.push(labels[r]);
+    }
+    (p_indptr, p_indices, p_values, p_labels)
+}
+
+/// The seeded row permutation `--shuffle SEED` applies at pack time.
+fn shuffle_permutation(n: usize, seed: u64) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..n).collect();
+    crate::rng::Rng::new(seed ^ SHUFFLE_SEED).shuffle(&mut perm);
+    perm
+}
+
 /// Converts a LIBSVM text file into a pack artifact — the one-time
 /// `gadget pack` step. `dim` forces the feature dimension (0 infers the
 /// max index seen, like [`libsvm::read_libsvm`]). Rows accumulate
 /// straight into the columnar arrays; per-row `SparseVec`s exist only
 /// transiently during parsing.
 pub fn pack_libsvm(input: &Path, output: &Path, dim: usize) -> Result<PackSummary> {
+    pack_libsvm_opts(input, output, dim, None)
+}
+
+/// [`pack_libsvm`] with options: `shuffle = Some(seed)` writes the rows
+/// in a seeded random permutation of the source order and sets
+/// [`PACK_FLAG_SHUFFLED`] in the header (contiguous shard windows then
+/// sample the corpus instead of inheriting its sort order).
+/// `shuffle = None` is byte-identical to [`pack_libsvm`].
+pub fn pack_libsvm_opts(
+    input: &Path,
+    output: &Path,
+    dim: usize,
+    shuffle: Option<u64>,
+) -> Result<PackSummary> {
     let file = std::fs::File::open(input)
         .with_context(|| format!("open {}", input.display()))?;
     let mut indptr: Vec<u64> = vec![0];
@@ -202,12 +262,30 @@ pub fn pack_libsvm(input: &Path, output: &Path, dim: usize) -> Result<PackSummar
         "pack: {} has feature index {max_dim} > declared dim {dim}",
         input.display()
     );
-    write_pack(output, dim, &indptr, &indices, &values, &labels)
+    match shuffle {
+        None => write_pack(output, dim, 0, &indptr, &indices, &values, &labels),
+        Some(seed) => {
+            let perm = shuffle_permutation(labels.len(), seed);
+            let (pi, px, pv, pl) = permute_columnar(&perm, &indptr, &indices, &values, &labels);
+            write_pack(output, dim, PACK_FLAG_SHUFFLED, &pi, &px, &pv, &pl)
+        }
+    }
 }
 
 /// Packs an in-memory dataset — the test/CI convenience twin of
 /// [`pack_libsvm`] (byte-identical output for the same rows).
 pub fn pack_dataset(ds: &Dataset, output: &Path) -> Result<PackSummary> {
+    pack_dataset_opts(ds, output, None)
+}
+
+/// [`pack_dataset`] with the same `shuffle` option as
+/// [`pack_libsvm_opts`] (same seed ⇒ same permutation ⇒ byte-identical
+/// artifact for the same rows).
+pub fn pack_dataset_opts(
+    ds: &Dataset,
+    output: &Path,
+    shuffle: Option<u64>,
+) -> Result<PackSummary> {
     let mut indptr: Vec<u64> = Vec::with_capacity(ds.len() + 1);
     indptr.push(0);
     let nnz = ds.total_nnz();
@@ -218,7 +296,15 @@ pub fn pack_dataset(ds: &Dataset, output: &Path) -> Result<PackSummary> {
         values.extend_from_slice(&r.values);
         indptr.push(indices.len() as u64);
     }
-    write_pack(output, ds.dim, &indptr, &indices, &values, &ds.labels)
+    match shuffle {
+        None => write_pack(output, ds.dim, 0, &indptr, &indices, &values, &ds.labels),
+        Some(seed) => {
+            let perm = shuffle_permutation(ds.len(), seed);
+            let (pi, px, pv, pl) =
+                permute_columnar(&perm, &indptr, &indices, &values, &ds.labels);
+            write_pack(output, ds.dim, PACK_FLAG_SHUFFLED, &pi, &px, &pv, &pl)
+        }
+    }
 }
 
 /// A validated, memory-mapped pack artifact.
@@ -234,6 +320,7 @@ pub struct PackFile {
     dim: usize,
     n_rows: usize,
     nnz: usize,
+    flags: u64,
     indices_off: usize,
     values_off: usize,
     labels_off: usize,
@@ -281,6 +368,16 @@ impl PackFile {
         let nnz64 = u64_at(32);
         let checksum = u64_at(40);
         let payload_len = u64_at(48);
+        let flags = u64_at(56);
+        ensure!(
+            flags & !PACK_FLAGS_KNOWN == 0,
+            "{}: pack header carries unknown flag bits {:#x} (this build \
+             understands {:#x}) — written by a newer tool; refusing to \
+             guess what they mean",
+            path.display(),
+            flags & !PACK_FLAGS_KNOWN,
+            PACK_FLAGS_KNOWN
+        );
         ensure!(n64 > 0, "{}: pack holds zero rows", path.display());
         let (indptr_b, indices_b, values_b, _labels_b, expect_payload) =
             payload_sizes(n64, nnz64)?;
@@ -318,7 +415,8 @@ impl PackFile {
             .and_then(|s| s.to_str())
             .unwrap_or("pack")
             .to_string();
-        let pf = Self { map, name, dim, n_rows, nnz, indices_off, values_off, labels_off };
+        let pf =
+            Self { map, name, dim, n_rows, nnz, flags, indices_off, values_off, labels_off };
 
         // Structural validation: row boundaries and per-row indices. This
         // (like the checksum) is one sequential scan — still far cheaper
@@ -428,6 +526,19 @@ impl PackFile {
     #[inline]
     pub fn nnz(&self) -> usize {
         self.nnz
+    }
+
+    /// Header flags (see [`PACK_FLAG_SHUFFLED`]).
+    #[inline]
+    pub fn flags(&self) -> u64 {
+        self.flags
+    }
+
+    /// True when the rows were written in a seeded shuffle of the source
+    /// order (`gadget pack --shuffle SEED`).
+    #[inline]
+    pub fn is_shuffled(&self) -> bool {
+        self.flags & PACK_FLAG_SHUFFLED != 0
     }
 
     /// A zero-copy window over rows `r` — the page-serving primitive:
@@ -662,6 +773,68 @@ mod tests {
             std::fs::read(&via_ds).unwrap(),
             "text and dataset packing must be byte-identical"
         );
+    }
+
+    #[test]
+    fn shuffled_pack_permutes_rows_deterministically() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let ds = toy(20, 5);
+        let (a, b, c) = (
+            dir.path().join("a.gpack"),
+            dir.path().join("b.gpack"),
+            dir.path().join("c.gpack"),
+        );
+        pack_dataset_opts(&ds, &a, Some(9)).unwrap();
+        pack_dataset_opts(&ds, &b, Some(9)).unwrap();
+        pack_dataset_opts(&ds, &c, Some(10)).unwrap();
+        // same seed ⇒ byte-identical artifact; different seed ⇒ different
+        // permutation
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        assert_ne!(std::fs::read(&a).unwrap(), std::fs::read(&c).unwrap());
+        let pf = PackFile::open(&a).unwrap();
+        assert!(pf.is_shuffled());
+        assert_eq!(pf.flags(), PACK_FLAG_SHUFFLED);
+        // the shuffle is a permutation: every source row appears exactly
+        // once (toy rows are pairwise distinct), in a changed order
+        let v = pf.view();
+        let packed: Vec<_> = (0..ds.len()).map(|i| v.sample(i).0.to_owned()).collect();
+        for (i, r) in ds.rows.iter().enumerate() {
+            assert_eq!(
+                packed.iter().filter(|p| *p == r).count(),
+                1,
+                "source row {i} lost or duplicated"
+            );
+        }
+        assert!(
+            (0..ds.len()).any(|i| packed[i] != ds.rows[i]),
+            "seed 9 left 20 rows in source order"
+        );
+        // labels moved with their rows
+        for i in 0..ds.len() {
+            let (row, y) = v.sample(i);
+            let src = ds.rows.iter().position(|r| *r == row.to_owned()).unwrap();
+            assert_eq!(y, ds.labels[src] as f64, "label detached from row {i}");
+        }
+        // the unshuffled writer stays flagless (and so byte-compatible
+        // with packs from before the flag existed)
+        let plain = dir.path().join("p.gpack");
+        pack_dataset(&ds, &plain).unwrap();
+        let pp = PackFile::open(&plain).unwrap();
+        assert!(!pp.is_shuffled());
+        assert_eq!(pp.flags(), 0);
+    }
+
+    #[test]
+    fn unknown_flag_bits_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("f.gpack");
+        pack_dataset(&toy(8, 3), &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // flags live at 56..64 (native-endian); bit 1 is not assigned
+        bytes[56] |= 0x02;
+        std::fs::write(&p, &bytes).unwrap();
+        let e = PackFile::open(&p).unwrap_err();
+        assert!(e.to_string().contains("flag"), "{e}");
     }
 
     #[test]

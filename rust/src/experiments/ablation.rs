@@ -188,68 +188,6 @@ pub fn render_sweep(rows: &[RoundsSweepRow]) -> TextTable {
     t
 }
 
-/// One row of the topology-impact study (paper §5: "impact of the
-/// underlying network structure on the convergence of the algorithm").
-#[derive(Clone, Debug)]
-pub struct TopologyRow {
-    /// Overlay family.
-    pub topology: TopologyKind,
-    /// λ₂ of the MH transition matrix.
-    pub lambda2: f64,
-    /// Push-Sum rounds per GADGET iteration (spectral sizing).
-    pub rounds_per_iter: usize,
-    /// Final mean test accuracy (%).
-    pub accuracy: f64,
-    /// Training seconds.
-    pub secs: f64,
-    /// Total gossip megabytes.
-    pub gossip_mb: f64,
-}
-
-/// Runs the same GADGET problem across overlay families.
-pub fn topology_impact(cfg_base: &ExperimentConfig) -> Result<Vec<TopologyRow>> {
-    let kinds = [
-        TopologyKind::Complete,
-        TopologyKind::KRegular,
-        TopologyKind::SmallWorld,
-        TopologyKind::Torus,
-        TopologyKind::Ring,
-    ];
-    let mut rows = Vec::new();
-    for kind in kinds {
-        let cfg = ExperimentConfig { topology: kind, trials: 1, ..cfg_base.clone() };
-        let g = Graph::generate(kind, cfg.nodes, cfg.seed ^ 0x6772_6170_6800);
-        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
-        let report = GadgetRunner::new(cfg.clone())?.run()?;
-        rows.push(TopologyRow {
-            topology: kind,
-            lambda2: second_eigenvalue(&b, 300),
-            rounds_per_iter: mixing_time(&b, cfg.gamma),
-            accuracy: 100.0 * report.test_accuracy,
-            secs: report.train_secs,
-            gossip_mb: report.trials[0].gossip.bytes as f64 / 1e6,
-        });
-    }
-    Ok(rows)
-}
-
-/// Renders the topology-impact table.
-pub fn render_topology(rows: &[TopologyRow]) -> TextTable {
-    let mut t =
-        TextTable::new(&["Overlay", "lambda2", "rounds/iter", "acc (%)", "time (s)", "gossip MB"]);
-    for r in rows {
-        t.row(vec![
-            r.topology.to_string(),
-            format!("{:.4}", r.lambda2),
-            r.rounds_per_iter.to_string(),
-            format!("{:.2}", r.accuracy),
-            format!("{:.3}", r.secs),
-            format!("{:.1}", r.gossip_mb),
-        ]);
-    }
-    t
-}
-
 /// One row of the churn-resilience study (paper §5: "resilience to node
 /// failures").
 #[derive(Clone, Debug)]
@@ -343,33 +281,6 @@ mod tests {
         }
         // gap shrinks (or stays) with bigger T
         assert!(checks[1].gap <= checks[0].gap + 0.05);
-    }
-
-    #[test]
-    fn topology_impact_accuracy_is_topology_robust() {
-        let cfg = ExperimentConfig::builder()
-            .dataset("synthetic-usps")
-            .scale(0.02)
-            .nodes(8)
-            .trials(1)
-            .max_iterations(120)
-            .seed(4)
-            .build()
-            .unwrap();
-        let rows = topology_impact(&cfg).unwrap();
-        assert_eq!(rows.len(), 5);
-        let accs: Vec<f64> = rows.iter().map(|r| r.accuracy).collect();
-        let (lo, hi) = (
-            accs.iter().cloned().fold(f64::INFINITY, f64::min),
-            accs.iter().cloned().fold(0.0f64, f64::max),
-        );
-        // consensus quality is topology-robust; cost is not
-        assert!(hi - lo < 15.0, "accuracy spread {lo}..{hi}");
-        let ring = rows.iter().find(|r| r.topology == TopologyKind::Ring).unwrap();
-        let complete =
-            rows.iter().find(|r| r.topology == TopologyKind::Complete).unwrap();
-        assert!(ring.rounds_per_iter > complete.rounds_per_iter);
-        assert!(render_topology(&rows).render().contains("Overlay"));
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //! * [`ablation`] — beyond-paper studies: Push-Sum rounds-to-γ vs topology
 //!   (validating the `O(τ_mix log 1/γ)` claim) and the Theorem-2
 //!   sub-optimality bound check against the DCD optimum.
+//! * [`topology`] — convergence vs topology: mixing backends (push-sum,
+//!   gradient-flow) swept over the overlay scenarios, with measured vs
+//!   spectrally-predicted rounds and message/byte budgets.
 //!
 //! Every driver prints the paper's rows as an aligned table and writes
 //! CSV/JSON under `results/`.
@@ -18,6 +21,7 @@ pub mod figures;
 pub mod table3;
 pub mod table4;
 pub mod table5;
+pub mod topology;
 
 use crate::Result;
 use std::path::{Path, PathBuf};

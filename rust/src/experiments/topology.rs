@@ -1,0 +1,213 @@
+//! Convergence vs topology: the mixer-seam sweep.
+//!
+//! Runs the same GADGET problem for every (overlay scenario × mixing
+//! backend) pair and reports what the consensus layer actually cost:
+//! GADGET iterations to ε, total consensus messages and bytes, and the
+//! measured mixing rounds per iteration next to the spectral prediction
+//! `τ(γ) = ln(m/γ)/(1 − λ₂)`. The overlay set deliberately spans the
+//! spectral range — complete (best mixing) through ring (worst) plus the
+//! adversarial families (`power-law` hubs, `partition` near-bisection) —
+//! so the table shows how each backend degrades as λ₂ → 1.
+//!
+//! `gadget experiment topology` renders the table and writes
+//! `results/topology.{csv,json}` (see EXPERIMENTS.md §Convergence vs
+//! topology for the recipe).
+
+use super::ExperimentOpts;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{GadgetRunner, GRAPH_SEED};
+use crate::gossip::MixerKind;
+use crate::topology::stochastic::WeightScheme;
+use crate::topology::{mixing_time, second_eigenvalue, Graph, TopologyKind, TransitionMatrix};
+use crate::util::table::TextTable;
+use crate::util::Json;
+use crate::Result;
+
+/// One (overlay, mixer) cell of the sweep.
+#[derive(Clone, Debug)]
+pub struct TopologySweepRow {
+    /// Overlay family.
+    pub topology: TopologyKind,
+    /// Mixing backend.
+    pub mixer: MixerKind,
+    /// λ₂ of the MH transition matrix on the trial-0 graph.
+    pub lambda2: f64,
+    /// Spectral prediction `τ(γ)` for the config's γ.
+    pub predicted_rounds: usize,
+    /// Mixing rounds per GADGET iteration actually executed (measured:
+    /// total consensus rounds / iterations).
+    pub measured_rounds: f64,
+    /// GADGET iterations to ε (mean over trials).
+    pub iterations: f64,
+    /// Final mean test accuracy (%).
+    pub accuracy: f64,
+    /// Total consensus messages in trial 0 (unified counting: one
+    /// directed payload per edge per round — see `gossip::GossipStats`).
+    pub messages: usize,
+    /// Total consensus bytes in trial 0.
+    pub bytes: usize,
+}
+
+/// The default overlay scenarios, ordered roughly best-to-worst mixing.
+pub const SWEEP_TOPOLOGIES: [TopologyKind; 6] = [
+    TopologyKind::Complete,
+    TopologyKind::SmallWorld,
+    TopologyKind::Torus,
+    TopologyKind::Ring,
+    TopologyKind::PowerLaw,
+    TopologyKind::Partition,
+];
+
+/// The mixing backends under comparison.
+pub const SWEEP_MIXERS: [MixerKind; 2] = [MixerKind::PushSum, MixerKind::GradientFlow];
+
+/// Runs the full sweep. `opts.only` filters overlay names (e.g.
+/// `--only ring,torus`), not datasets, for this experiment.
+pub fn run(opts: &ExperimentOpts) -> Result<Vec<TopologySweepRow>> {
+    sweep(opts, &SWEEP_TOPOLOGIES, &SWEEP_MIXERS)
+}
+
+/// Sweep driver over explicit scenario/backend sets (tests use a
+/// reduced grid; `run` passes the defaults).
+pub fn sweep(
+    opts: &ExperimentOpts,
+    topologies: &[TopologyKind],
+    mixers: &[MixerKind],
+) -> Result<Vec<TopologySweepRow>> {
+    let mut rows = Vec::new();
+    for &topo in topologies {
+        if !opts.selected(&topo.to_string()) {
+            continue;
+        }
+        // The spectral figures describe the trial-0 overlay, seeded
+        // exactly as the runner seeds it.
+        let cfg_probe = ExperimentConfig::builder()
+            .dataset("synthetic-usps")
+            .scale(opts.scale)
+            .nodes(opts.nodes)
+            .topology(topo)
+            .trials(1)
+            .max_iterations(opts.max_iterations.min(500))
+            .seed(opts.seed)
+            .build()?;
+        let g = Graph::generate(topo, cfg_probe.nodes, cfg_probe.seed ^ GRAPH_SEED);
+        let b = TransitionMatrix::from_graph(&g, WeightScheme::MetropolisHastings);
+        let lambda2 = second_eigenvalue(&b, 300);
+        let predicted = mixing_time(&b, cfg_probe.gamma);
+        for &mixer in mixers {
+            let cfg = ExperimentConfig { mixer, ..cfg_probe.clone() };
+            let report = GadgetRunner::new(cfg)?.run()?;
+            let gsp = report.trials[0].gossip;
+            let iters = report.iterations.max(1.0);
+            rows.push(TopologySweepRow {
+                topology: topo,
+                mixer,
+                lambda2,
+                predicted_rounds: predicted,
+                measured_rounds: gsp.rounds as f64 / iters,
+                iterations: report.iterations,
+                accuracy: 100.0 * report.test_accuracy,
+                messages: gsp.messages,
+                bytes: gsp.bytes,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Renders the sweep table.
+pub fn render(rows: &[TopologySweepRow]) -> TextTable {
+    let mut t = TextTable::new(&[
+        "Overlay",
+        "Mixer",
+        "lambda2",
+        "tau pred",
+        "rounds/iter",
+        "iterations",
+        "acc (%)",
+        "messages",
+        "gossip MB",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.topology.to_string(),
+            r.mixer.to_string(),
+            format!("{:.4}", r.lambda2),
+            r.predicted_rounds.to_string(),
+            format!("{:.1}", r.measured_rounds),
+            format!("{:.0}", r.iterations),
+            format!("{:.2}", r.accuracy),
+            r.messages.to_string(),
+            format!("{:.2}", r.bytes as f64 / 1e6),
+        ]);
+    }
+    t
+}
+
+/// JSON artifact for `results/topology.json`.
+pub fn to_json(rows: &[TopologySweepRow]) -> Json {
+    Json::obj(vec![(
+        "topology_sweep",
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("topology", Json::Str(r.topology.to_string())),
+                        ("mixer", Json::Str(r.mixer.to_string())),
+                        ("lambda2", Json::Num(r.lambda2)),
+                        ("predicted_rounds", Json::Num(r.predicted_rounds as f64)),
+                        ("measured_rounds", Json::Num(r.measured_rounds)),
+                        ("iterations", Json::Num(r.iterations)),
+                        ("accuracy", Json::Num(r.accuracy)),
+                        ("messages", Json::Num(r.messages as f64)),
+                        ("bytes", Json::Num(r.bytes as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ExperimentOpts {
+        ExperimentOpts {
+            scale: 0.02,
+            nodes: 6,
+            trials: 1,
+            seed: 9,
+            max_iterations: 150,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_compares_mixers_on_one_overlay() {
+        let rows = sweep(&opts(), &[TopologyKind::Ring], &SWEEP_MIXERS).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.accuracy > 70.0, "{}/{}: accuracy {}", r.topology, r.mixer, r.accuracy);
+            assert!(r.messages > 0 && r.bytes > r.messages);
+            assert!(r.measured_rounds > 0.0);
+        }
+        // both backends see the same overlay spectrum
+        assert_eq!(rows[0].lambda2, rows[1].lambda2);
+        assert_eq!(rows[0].predicted_rounds, rows[1].predicted_rounds);
+        let text = render(&rows).render();
+        assert!(text.contains("push-sum") && text.contains("gradient-flow"), "{text}");
+        let json = to_json(&rows).to_pretty();
+        assert!(json.contains("topology_sweep"), "{json}");
+    }
+
+    #[test]
+    fn only_filter_selects_overlays() {
+        let o = ExperimentOpts { only: vec!["ring".into()], ..opts() };
+        let rows =
+            sweep(&o, &[TopologyKind::Ring, TopologyKind::Complete], &[MixerKind::PushSum])
+                .unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].topology, TopologyKind::Ring);
+    }
+}

@@ -16,25 +16,48 @@
 //! Invariant maintained by every engine: **mass conservation** — the total
 //! sum `Σᵢ sᵢ` and total weight `Σᵢ wᵢ` never change, which is exactly why
 //! `sᵢ/wᵢ → (Σ s₀)/(Σ w₀) =` the true average at every node.
+//!
+//! The [`mixer`] module puts an object-safe seam ([`Mixer`]) in front of
+//! the engines so the GADGET runner can swap the consensus mechanism
+//! (Push-Vector, primal-dual gradient flow, …) by config while every
+//! backend reports through the same [`GossipStats`] definition.
 
+pub mod mixer;
 pub mod pushsum;
 pub mod pushvector;
 pub mod randomized;
 
+pub use mixer::{GradientFlowMixer, Mixer, MixerKind, PushSumMixer};
 pub use pushsum::PushSum;
 pub use pushvector::PushVector;
 pub use randomized::RandomizedGossip;
 
-/// Communication accounting shared by the engines: one "message" is one
-/// (sum, weight) or (vector, weight) payload sent over one edge.
+/// Communication accounting shared by every engine and mixer, under one
+/// definition so topology experiments compare backends apples to apples:
+///
+/// * one **message** = one *directed* node-to-node payload transfer over
+///   one edge in one round (a deterministic `Bᵀ` round on an `m`-node
+///   graph sends one message per off-diagonal entry; the randomized
+///   engine sends one per push; gradient flow sends two per undirected
+///   edge per round — one each way);
+/// * **bytes** = `messages × 8 × (payload f64 count)` — the payload is
+///   everything a transfer ships, e.g. `d + 1` for a Push-Vector
+///   (vector + weight), `2` for scalar Push-Sum (sum + weight), `d` for
+///   a gradient-flow iterate exchange;
+/// * **dropped** = messages lost in transit (async link-drop schedules,
+///   randomized-engine drops). Dropped messages are *also* counted in
+///   `messages`/`bytes` — they were sent; the field reports delivery
+///   failures, not a discount.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct GossipStats {
     /// Rounds executed.
     pub rounds: usize,
-    /// Messages sent (edge traversals).
+    /// Messages sent (directed edge traversals).
     pub messages: usize,
     /// Payload bytes (8 bytes per f64 shipped, including the weight).
     pub bytes: usize,
+    /// Messages lost in transit (drop schedules; 0 for lossless engines).
+    pub dropped: usize,
 }
 
 impl GossipStats {
@@ -43,5 +66,6 @@ impl GossipStats {
         self.rounds += other.rounds;
         self.messages += other.messages;
         self.bytes += other.bytes;
+        self.dropped += other.dropped;
     }
 }

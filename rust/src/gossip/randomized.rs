@@ -89,7 +89,9 @@ impl RandomizedGossip {
                 self.stats.messages += 1;
                 self.stats.bytes += 8 * (self.d + 1);
                 if self.drop_prob > 0.0 && self.rng.flip(self.drop_prob) {
-                    self.dropped += 1; // mass destroyed: the bias source
+                    // mass destroyed: the bias source
+                    self.dropped += 1;
+                    self.stats.dropped += 1;
                 } else {
                     let dst = send_to * self.d;
                     for k in 0..self.d {
@@ -231,6 +233,9 @@ mod tests {
             lossy.round(&g);
         }
         assert!(lossy.dropped > 0);
+        // losses surface through the unified stats definition too
+        assert_eq!(lossy.stats().dropped, lossy.dropped);
+        assert_eq!(lossless.stats().dropped, 0);
         // nodes still agree with each other…
         let e0 = lossy.estimate(0)[0];
         for i in 1..8 {

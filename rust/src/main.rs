@@ -67,9 +67,11 @@ fn print_help() {
          SUBCOMMANDS\n\
          \x20 train        run GADGET (options: --config FILE | --dataset NAME --scale F\n\
          \x20              --nodes N --lambda F --epsilon F --max-iterations N --trials N\n\
-         \x20              --topology complete|ring|torus|k-regular|small-world\n\
+         \x20              --topology complete|ring|torus|k-regular|small-world|\n\
+         \x20              power-law|partition --mixer push-sum|gradient-flow\n\
          \x20              --backend native|xla --batch-size N --local-steps N --seed N\n\
          \x20              --scheduler sequential|parallel|async --threads N\n\
+         \x20              --link-latency N --link-drop F (async network scenarios)\n\
          \x20              --kernel scalar|simd|auto (simd needs --features simd)\n\
          \x20              --stream (or --stream-rate F --stream-schedule\n\
          \x20              uniform|random|tail:<file> --stream-max-rows N\n\
@@ -79,7 +81,9 @@ fn print_help() {
          \x20 pack         convert LIBSVM text to a mapped columnar artifact\n\
          \x20              (--input FILE required; --output FILE, default\n\
          \x20              <input>.gpack; --dim N to fix the feature space,\n\
-         \x20              default infer; then train --dataset pack:<file>)\n\
+         \x20              default infer; --shuffle SEED for a seeded row\n\
+         \x20              permutation recorded in the header flags;\n\
+         \x20              then train --dataset pack:<file>)\n\
          \x20 serve        batch-score stdin rows against a saved model\n\
          \x20              (--model FILE required; --shards N --batch N\n\
          \x20              --format auto|libsvm|dense --kernel scalar|simd|auto\n\
@@ -137,6 +141,11 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(s) = args.get("store") {
         cfg.store = s.parse().map_err(|e: String| anyhow::anyhow!("--store: {e}"))?;
     }
+    if let Some(m) = args.get("mixer") {
+        cfg.mixer = m.parse().map_err(|e: String| anyhow::anyhow!("--mixer: {e}"))?;
+    }
+    cfg.link_latency = args.get_parsed("link-latency", cfg.link_latency).map_err(err)?;
+    cfg.link_drop = args.get_parsed("link-drop", cfg.link_drop).map_err(err)?;
     // `[stream]` section: `--stream` alone enables the streaming data
     // plane at the default rate; the explicit options override.
     let explicit_rate = args.get("stream-rate").is_some();
@@ -180,6 +189,7 @@ fn err(e: String) -> anyhow::Error {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let scale = cfg.scale;
+    let streaming = cfg.streaming_enabled();
     println!(
         "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} kernel={} trials={}",
         cfg.dataset,
@@ -191,6 +201,35 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.kernel,
         cfg.trials
     );
+    // Echo the resolved consensus scenario: the trial-0 overlay (seeded
+    // exactly as the runner seeds it), its spectral figures, and the
+    // mixing rounds each iteration will actually use.
+    {
+        let g = gadget::topology::Graph::generate(
+            cfg.topology,
+            cfg.nodes,
+            cfg.seed ^ gadget::coordinator::GRAPH_SEED,
+        );
+        let b = gadget::topology::TransitionMatrix::from_graph(&g, cfg.weights);
+        let tau = gadget::topology::mixing_time(&b, cfg.gamma);
+        let rounds =
+            if cfg.gossip_rounds > 0 { cfg.gossip_rounds } else { tau.min(10_000) };
+        println!(
+            "mixing: mixer={} topology={} rounds/iter={} tau(gamma={})={} lambda2={:.4}",
+            cfg.mixer,
+            cfg.topology,
+            rounds,
+            cfg.gamma,
+            tau,
+            gadget::topology::second_eigenvalue(&b, 300)
+        );
+        if cfg.link_latency > 0 || cfg.link_drop > 0.0 {
+            println!(
+                "links: latency<={} cycles, drop={:.3}",
+                cfg.link_latency, cfg.link_drop
+            );
+        }
+    }
     if cfg.streaming_enabled() {
         println!(
             "stream: rate={} schedule={} max-rows={} initial={}",
@@ -221,11 +260,29 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("eps@convergence : {:.6}", report.epsilon_final);
     let g = report.trials[0].gossip;
     println!(
-        "gossip (trial 0): {} rounds, {} messages, {:.2} MB",
+        "gossip (trial 0): {} rounds, {} messages, {:.2} MB{}",
         g.rounds,
         g.messages,
-        g.bytes as f64 / 1e6
+        g.bytes as f64 / 1e6,
+        if g.dropped > 0 { format!(", {} dropped", g.dropped) } else { String::new() }
     );
+    if streaming {
+        let drift = &report.trials[0].drift;
+        let total: usize = drift.iter().map(|e| e.added).sum();
+        match drift.last() {
+            Some(last) => println!(
+                "drift (trial 0) : {} arrival events, {} rows; last @iter {} node {}: \
+                 label-balance {:.2}, mean ||x|| {:.3}",
+                drift.len(),
+                total,
+                last.iteration,
+                last.node,
+                last.label_balance,
+                last.mean_norm
+            ),
+            None => println!("drift (trial 0) : no rows arrived"),
+        }
+    }
     if let Some(path) = args.get("save") {
         let artifact = gadget::serve::ModelArtifact::from_report(&report, scale)?;
         artifact.save(path)?;
@@ -350,13 +407,27 @@ fn cmd_pack(args: &Args) -> Result<()> {
         None => std::path::Path::new(input).with_extension("gpack"),
     };
     let dim = args.get_parsed("dim", 0usize).map_err(err)?;
+    let shuffle = match args.get("shuffle") {
+        Some(s) => {
+            Some(s.parse::<u64>().map_err(|e| anyhow::anyhow!("--shuffle: {e}"))?)
+        }
+        None => None,
+    };
     let sw = Stopwatch::new();
-    let summary = gadget::data::pack::pack_libsvm(std::path::Path::new(input), &output, dim)?;
+    let summary = gadget::data::pack::pack_libsvm_opts(
+        std::path::Path::new(input),
+        &output,
+        dim,
+        shuffle,
+    )?;
     println!("packed {} -> {}", input, output.display());
     println!("  rows     : {}", summary.rows);
     println!("  features : {}", summary.dim);
     println!("  nnz      : {}", summary.nnz);
     println!("  bytes    : {} ({:.2} MB)", summary.bytes, summary.bytes as f64 / 1e6);
+    if let Some(seed) = shuffle {
+        println!("  shuffle  : seeded row permutation (seed {seed}; header flag set)");
+    }
     println!("  took     : {:.3}s", sw.secs());
     println!("train with: gadget train --dataset pack:{}", output.display());
     Ok(())
@@ -437,16 +508,15 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             print!("{}", experiments::ablation::render_bound(&rows).render());
         }
         "topology" => {
-            let cfg = ExperimentConfig::builder()
-                .dataset(args.get("dataset").unwrap_or("synthetic-usps"))
-                .scale(opts.scale)
-                .nodes(args.get_parsed("m", 16usize).map_err(err)?)
-                .max_iterations(opts.max_iterations.min(500))
-                .seed(opts.seed)
-                .build()?;
-            let rows = experiments::ablation::topology_impact(&cfg)?;
-            println!("\nNetwork-structure impact (paper §5 future work)\n");
-            print!("{}", experiments::ablation::render_topology(&rows).render());
+            let rows = experiments::topology::run(&opts)?;
+            let table = experiments::topology::render(&rows);
+            println!("\nConvergence vs topology — mixing backends over overlay scenarios\n");
+            print!("{}", table.render());
+            experiments::write_output(&opts.out_file("topology.csv")?, &table.to_csv())?;
+            experiments::write_output(
+                &opts.out_file("topology.json")?,
+                &experiments::topology::to_json(&rows).to_pretty(),
+            )?;
         }
         "churn" => {
             let cfg = ExperimentConfig::builder()
@@ -520,6 +590,10 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         println!("  rows          : {n} ({n_train} train / {} test, contiguous 2:1)", n - n_train);
         println!("  features      : {}", pack.dim());
         println!("  stored nnz    : {}", pack.nnz());
+        println!(
+            "  row order     : {}",
+            if pack.is_shuffled() { "shuffled at pack time (header flag)" } else { "source order" }
+        );
         println!(
             "  density       : {:.4}%",
             100.0 * pack.nnz() as f64 / (n as f64 * pack.dim() as f64)

@@ -24,6 +24,14 @@ pub enum TopologyKind {
     SmallWorld,
     /// Erdős–Rényi G(n, p), retried until connected.
     ErdosRenyi,
+    /// Barabási–Albert preferential attachment (power-law degrees — the
+    /// "scale-free" overlays of real P2P deployments; a few hubs carry
+    /// most of the mixing).
+    PowerLaw,
+    /// Two dense clusters joined by exactly one bridge edge — the
+    /// partition-prone scenario: cut [`Graph::partition_bridge`] and the
+    /// network splits; re-add it and it heals.
+    Partition,
 }
 
 impl std::str::FromStr for TopologyKind {
@@ -38,6 +46,8 @@ impl std::str::FromStr for TopologyKind {
             "k-regular" | "kregular" | "expander" => Ok(Self::KRegular),
             "small-world" | "watts-strogatz" => Ok(Self::SmallWorld),
             "erdos-renyi" | "random" => Ok(Self::ErdosRenyi),
+            "power-law" | "powerlaw" | "scale-free" => Ok(Self::PowerLaw),
+            "partition" | "partition-prone" => Ok(Self::Partition),
             other => Err(format!("unknown topology {other:?}")),
         }
     }
@@ -52,6 +62,8 @@ impl std::fmt::Display for TopologyKind {
             Self::KRegular => "k-regular",
             Self::SmallWorld => "small-world",
             Self::ErdosRenyi => "erdos-renyi",
+            Self::PowerLaw => "power-law",
+            Self::Partition => "partition",
         };
         f.write_str(s)
     }
@@ -161,6 +173,8 @@ impl Graph {
                 let p = (2.0 * (n as f64).ln() / n as f64).min(1.0);
                 Self::erdos_renyi(n, p, seed)
             }
+            TopologyKind::PowerLaw => Self::power_law(n, seed),
+            TopologyKind::Partition => Self::partition_prone(n, seed),
         }
     }
 
@@ -262,6 +276,81 @@ impl Graph {
         panic!("small_world: failed to generate a connected graph");
     }
 
+    /// Barabási–Albert preferential attachment: start from the edge
+    /// `(0, 1)`, then each new node attaches to 2 *distinct* existing
+    /// nodes sampled degree-proportionally (via the stub list — every
+    /// edge endpoint appears once, so a uniform stub draw is exactly
+    /// preferential attachment). Connected by construction (every node
+    /// attaches to the existing component); no rejection loop needed.
+    /// `n ≤ 2` degenerates to the ring.
+    pub fn power_law(n: usize, seed: u64) -> Self {
+        if n <= 2 {
+            return Self::ring(n);
+        }
+        let mut rng = Rng::new(seed);
+        let mut edges = vec![(0usize, 1usize)];
+        let mut stubs = vec![0usize, 1];
+        for v in 2..n {
+            let mut targets: Vec<usize> = Vec::with_capacity(2);
+            while targets.len() < 2.min(v) {
+                let t = stubs[rng.below(stubs.len())];
+                if !targets.contains(&t) {
+                    targets.push(t);
+                }
+            }
+            for &t in &targets {
+                edges.push((v, t));
+                stubs.push(v);
+                stubs.push(t);
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Partition-prone overlay: two clusters `[0, n/2)` and `[n/2, n)` —
+    /// each a ring plus `len/4` seeded chords (a single edge for a
+    /// 2-node cluster) — joined by exactly **one** deterministic bridge
+    /// edge, [`Graph::partition_bridge`]. Removing the bridge partitions
+    /// the network (the failure scenario the gossip literature worries
+    /// about); re-adding it heals. `n < 4` degenerates to the ring
+    /// (too few nodes for two clusters).
+    pub fn partition_prone(n: usize, seed: u64) -> Self {
+        if n < 4 {
+            return Self::ring(n);
+        }
+        fn cluster(lo: usize, hi: usize, rng: &mut Rng, edges: &mut Vec<(usize, usize)>) {
+            let len = hi - lo;
+            if len == 2 {
+                edges.push((lo, lo + 1));
+                return;
+            }
+            for i in 0..len {
+                edges.push((lo + i, lo + (i + 1) % len));
+            }
+            for _ in 0..len / 4 {
+                let a = lo + rng.below(len);
+                let b = lo + rng.below(len);
+                if a != b {
+                    edges.push((a.min(b), a.max(b)));
+                }
+            }
+        }
+        let half = n / 2;
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        cluster(0, half, &mut rng, &mut edges);
+        cluster(half, n, &mut rng, &mut edges);
+        edges.push(Self::partition_bridge(n));
+        Self::from_edges(n, &edges)
+    }
+
+    /// The single inter-cluster edge of [`Graph::partition_prone`] —
+    /// deterministic (independent of the seed) so failure-scenario tests
+    /// and churn experiments can cut and heal exactly this link.
+    pub fn partition_bridge(n: usize) -> (usize, usize) {
+        (0, n / 2)
+    }
+
     /// Connected Erdős–Rényi G(n, p) by rejection.
     pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Self {
         for attempt in 0..1000u64 {
@@ -353,11 +442,39 @@ mod tests {
             TopologyKind::KRegular,
             TopologyKind::SmallWorld,
             TopologyKind::ErdosRenyi,
+            TopologyKind::PowerLaw,
+            TopologyKind::Partition,
         ] {
             let g = Graph::generate(kind, 10, 1);
             assert_eq!(g.n, 10);
             assert!(g.is_connected(), "{kind:?} not connected");
         }
+    }
+
+    #[test]
+    fn power_law_grows_hubs() {
+        let g = Graph::power_law(60, 7);
+        assert!(g.is_connected());
+        // every node past the seed pair attaches with 2 edges
+        assert_eq!(g.edge_count(), 1 + 2 * 58);
+        // preferential attachment concentrates degree: some hub must beat
+        // the attachment minimum by a wide margin
+        assert!(g.max_degree() >= 6, "max degree {}", g.max_degree());
+    }
+
+    #[test]
+    fn partition_prone_has_exactly_one_bridge() {
+        let n = 12;
+        let g = Graph::partition_prone(n, 3);
+        assert!(g.is_connected());
+        let (a, b) = Graph::partition_bridge(n);
+        // the bridge is the only inter-cluster edge
+        let half = n / 2;
+        let crossing: Vec<(usize, usize)> = (0..n)
+            .flat_map(|i| g.adj[i].iter().map(move |&j| (i, j)))
+            .filter(|&(i, j)| i < j && (i < half) != (j < half))
+            .collect();
+        assert_eq!(crossing, vec![(a, b)]);
     }
 
     #[test]

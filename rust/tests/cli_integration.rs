@@ -478,16 +478,28 @@ fn experiment_churn_and_topology_drivers() {
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("p_fail"), "{stdout}");
 
+    // the mixer-seam sweep: one overlay filtered via --only, both
+    // backends in the table, CSV/JSON artifacts written under --out
+    let dir = std::env::temp_dir().join(format!("gadget-topo-{}", std::process::id()));
     let (ok2, stdout2, stderr2) = run(&[
         "experiment",
         "topology",
         "--scale",
         "0.02",
-        "--m",
-        "8",
+        "--nodes",
+        "4",
         "--max-iterations",
         "80",
+        "--only",
+        "ring",
+        "--out",
+        dir.to_str().unwrap(),
     ]);
     assert!(ok2, "stderr: {stderr2}");
     assert!(stdout2.contains("Overlay"), "{stdout2}");
+    assert!(stdout2.contains("push-sum") && stdout2.contains("gradient-flow"), "{stdout2}");
+    let json = std::fs::read_to_string(dir.join("topology.json")).unwrap();
+    assert!(json.contains("topology_sweep"), "{json}");
+    assert!(dir.join("topology.csv").is_file());
+    let _ = std::fs::remove_dir_all(&dir);
 }

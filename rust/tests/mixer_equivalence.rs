@@ -1,0 +1,263 @@
+//! The Mixer-seam refactor's bitwise contract.
+//!
+//! PR history: the consensus step used to be an inline Push-Vector
+//! sequence inside the trial loop — `reset_weighted` / `run_rounds` /
+//! per-node `estimate_into` + projection. The Mixer refactor moved that
+//! sequence behind the object-safe [`gadget::gossip::Mixer`] trait so
+//! alternative backends (gradient-flow) plug into the same seam. The
+//! acceptance criterion is that the default backend is a **pure
+//! refactor**: `--mixer push-sum` must reproduce the pre-refactor
+//! pipeline bit for bit — same consensus weights, same iteration
+//! counts, same per-node accuracies — on every scheduler and pool size.
+//!
+//! Like `store_equivalence.rs`, the golden values are recomputed from a
+//! frozen reference loop built on public primitives, not from a number
+//! dump, so the pin survives refactors of the harness itself. `ci.sh`
+//! re-runs this suite with `GADGET_POOL_THREADS` pinned to 1 and 4.
+
+use gadget::config::{ExperimentConfig, SchedulerKind};
+use gadget::coordinator::{
+    GadgetRunner, GossipProtocol, NativeBackend, NodeState, ProtocolParams, GRAPH_SEED,
+};
+use gadget::data::partition::horizontal_split;
+use gadget::gossip::{MixerKind, PushVector};
+use gadget::metrics;
+use gadget::rng::Rng;
+use gadget::topology::{mixing_time, Graph, TopologyKind, TransitionMatrix};
+
+/// Seed label the runner mixes into the trial seed for graph generation
+/// (re-exported frozen constant of the trial loop).
+const TEST_SPLIT_LABEL: u64 = 0x7e57;
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .dataset("synthetic-usps")
+        .scale(0.05)
+        .nodes(5)
+        .trials(1)
+        .max_iterations(150)
+        .epsilon(5e-3)
+        .seed(29)
+        .build()
+        .unwrap()
+}
+
+/// Pool sizes the sweep runs at; `GADGET_POOL_THREADS=n` pins one size
+/// (`ci.sh` re-runs at 1 and 4).
+fn pool_threads() -> Vec<usize> {
+    match std::env::var("GADGET_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("GADGET_POOL_THREADS must be an integer")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn bits(w: &[f64]) -> Vec<u64> {
+    w.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The pre-refactor trial loop, reproduced from public primitives: the
+/// inline Push-Vector consensus sequence exactly as the runner executed
+/// it before the Mixer seam existed.
+/// Returns `(consensus_w, iterations, node_accuracy, epsilon_final)`.
+fn pre_refactor_reference(
+    cfg: &ExperimentConfig,
+) -> (Vec<f64>, usize, Vec<f64>, f64) {
+    let runner = GadgetRunner::new(cfg.clone()).unwrap();
+    let train = runner.train_data().clone();
+    let test = runner.test_data().clone();
+    let lambda = runner.lambda();
+    let m = cfg.nodes;
+    let d = train.dim;
+    let seed = cfg.seed; // trial 0's root seed
+
+    let graph = Graph::generate(cfg.topology, m, seed ^ GRAPH_SEED);
+    let b = TransitionMatrix::from_graph(&graph, cfg.weights);
+    let rounds = if cfg.gossip_rounds > 0 {
+        cfg.gossip_rounds
+    } else {
+        mixing_time(&b, cfg.gamma).min(10_000)
+    };
+
+    let train_shards = horizontal_split(&train, m, seed).unwrap();
+    let test_shards = horizontal_split(&test, m, seed ^ TEST_SPLIT_LABEL).unwrap();
+    let shard_sizes: Vec<f64> = train_shards.iter().map(|s| s.len() as f64).collect();
+    let root = Rng::new(seed);
+    let mut nodes: Vec<NodeState> = test_shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, te)| NodeState::new(i, te, d, root.substream(i as u64)))
+        .collect();
+
+    let protocol = GossipProtocol::new(ProtocolParams::from_config(cfg, lambda));
+    let mut backend = NativeBackend::default();
+    let mut pv = PushVector::new_weighted(&vec![vec![0.0; d]; m], &shard_sizes);
+    let mut iterations = 0usize;
+    for t in 1..=cfg.max_iterations {
+        iterations = t;
+        for i in 0..m {
+            protocol
+                .local_step(&mut backend, train_shards[i].view(), &mut nodes[i], t)
+                .unwrap();
+        }
+        // the pre-seam consensus step, inline: weighted reset, fixed
+        // synchronous rounds, per-node estimate + step-(h) projection
+        pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
+        pv.run_rounds(&b, rounds);
+        for (i, node) in nodes.iter_mut().enumerate() {
+            pv.estimate_into(i, &mut node.w);
+            if cfg.project_consensus {
+                gadget::linalg::project_to_ball(&mut node.w, 1.0 / lambda.sqrt());
+            }
+            node.check_convergence(cfg.epsilon);
+        }
+        if nodes.iter().all(|n| n.converged) {
+            break;
+        }
+    }
+
+    let node_accuracy: Vec<f64> = nodes
+        .iter()
+        .map(|n| {
+            metrics::accuracy(&n.w, if n.test_shard.is_empty() { &test } else { &n.test_shard })
+        })
+        .collect();
+    let epsilon_final = nodes.iter().map(|n| n.last_delta).fold(0.0f64, f64::max);
+    let mut consensus = vec![0.0; d];
+    for n in &nodes {
+        for (c, &x) in consensus.iter_mut().zip(&n.w) {
+            *c += 1.0 * x; // mirror linalg::add_assign (axpy with a = 1)
+        }
+    }
+    // mirror the runner's average_w: multiply by the reciprocal
+    let inv = 1.0 / m as f64;
+    for c in consensus.iter_mut() {
+        *c *= inv;
+    }
+    (consensus, iterations, node_accuracy, epsilon_final)
+}
+
+fn assert_matches_reference(
+    report: &gadget::coordinator::GadgetReport,
+    golden: &(Vec<f64>, usize, Vec<f64>, f64),
+    label: &str,
+) {
+    let t = &report.trials[0];
+    assert_eq!(t.iterations, golden.1, "{label}: iteration count diverged");
+    assert_eq!(
+        bits(&t.consensus_w),
+        bits(&golden.0),
+        "{label}: consensus_w diverged from the pre-refactor pipeline"
+    );
+    assert_eq!(
+        bits(&t.node_accuracy),
+        bits(&golden.2),
+        "{label}: node accuracies diverged"
+    );
+    assert_eq!(
+        t.epsilon_final.to_bits(),
+        golden.3.to_bits(),
+        "{label}: epsilon diverged"
+    );
+}
+
+#[test]
+fn push_sum_mixer_is_bitwise_the_pre_refactor_loop() {
+    // Sequential and parallel schedulers, explicit `--mixer push-sum`,
+    // every swept pool size: all bit-for-bit the inline reference.
+    let cfg = cfg();
+    let golden = pre_refactor_reference(&cfg);
+    let seq = GadgetRunner::new(ExperimentConfig {
+        mixer: MixerKind::PushSum,
+        ..cfg.clone()
+    })
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_matches_reference(&seq, &golden, "sequential");
+    for threads in pool_threads() {
+        let par = GadgetRunner::new(ExperimentConfig {
+            mixer: MixerKind::PushSum,
+            scheduler: SchedulerKind::Parallel,
+            threads,
+            ..cfg.clone()
+        })
+        .unwrap()
+        .run()
+        .unwrap();
+        assert_matches_reference(&par, &golden, &format!("parallel/threads={threads}"));
+    }
+}
+
+#[test]
+fn push_sum_pin_holds_on_the_ring() {
+    // The ring B has no rank-1 fast path and needs many rounds per
+    // iteration — the pin must not depend on the overlay's spectrum.
+    let cfg = ExperimentConfig {
+        topology: TopologyKind::Ring,
+        max_iterations: 80,
+        ..cfg()
+    };
+    let golden = pre_refactor_reference(&cfg);
+    let seq = GadgetRunner::new(cfg.clone()).unwrap().run().unwrap();
+    assert_matches_reference(&seq, &golden, "ring/sequential");
+    for threads in pool_threads() {
+        let par = GadgetRunner::new(ExperimentConfig {
+            scheduler: SchedulerKind::Parallel,
+            threads,
+            ..cfg.clone()
+        })
+        .unwrap()
+        .run()
+        .unwrap();
+        assert_matches_reference(&par, &golden, &format!("ring/parallel/threads={threads}"));
+    }
+}
+
+#[test]
+fn default_mixer_is_push_sum() {
+    // An unset `[mixing] backend` must mean "the paper's consensus":
+    // the default-config run and the explicit push-sum run are the same
+    // run, bit for bit.
+    assert_eq!(MixerKind::default(), MixerKind::PushSum);
+    let dflt = GadgetRunner::new(cfg()).unwrap().run().unwrap();
+    let expl = GadgetRunner::new(ExperimentConfig {
+        mixer: MixerKind::PushSum,
+        ..cfg()
+    })
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(dflt.iterations, expl.iterations);
+    assert_eq!(
+        bits(&dflt.trials[0].consensus_w),
+        bits(&expl.trials[0].consensus_w)
+    );
+}
+
+#[test]
+fn gradient_flow_genuinely_changes_the_consensus_path() {
+    // Sanity guard on the pin itself: swapping the backend must change
+    // the trajectory (so the equalities above are not vacuous), while
+    // both backends still drive the run to a comparable solution.
+    let cfg = ExperimentConfig { topology: TopologyKind::Ring, ..cfg() };
+    let ps = GadgetRunner::new(cfg.clone()).unwrap().run().unwrap();
+    let gf = GadgetRunner::new(ExperimentConfig {
+        mixer: MixerKind::GradientFlow,
+        ..cfg
+    })
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_ne!(
+        bits(&ps.trials[0].consensus_w),
+        bits(&gf.trials[0].consensus_w),
+        "gradient-flow run unexpectedly identical to push-sum"
+    );
+    assert!(gf.test_accuracy > 0.7, "gradient-flow accuracy {}", gf.test_accuracy);
+    assert!(
+        (ps.test_accuracy - gf.test_accuracy).abs() < 0.15,
+        "backends disagree too much: push-sum {} vs gradient-flow {}",
+        ps.test_accuracy,
+        gf.test_accuracy
+    );
+}

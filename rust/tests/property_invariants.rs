@@ -476,6 +476,8 @@ fn prop_async_runs_never_emit_non_finite_weights() {
             project: true,
             seed: rng.next_u64(),
             max_lag: rng.range(1, 6),
+            link_latency: 0,
+            link_drop: 0.0,
         })
         .run(shards, &g)
         .unwrap();

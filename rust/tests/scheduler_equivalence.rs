@@ -295,6 +295,8 @@ fn async_path_conserves_total_mass_across_drains() {
             project: true,
             seed: 11,
             max_lag: 4,
+            link_latency: 0,
+            link_drop: 0.0,
         })
         .run(shards, &topo)
         .unwrap();
@@ -337,6 +339,8 @@ fn pure_gossip_conserves_mass_vector_exactly() {
         project: true,
         seed: 3,
         max_lag: 2,
+        link_latency: 0,
+        link_drop: 0.0,
     })
     .run(shards, &g)
     .unwrap();

@@ -92,7 +92,12 @@ fn pre_refactor_reference(
         pv.reset_weighted(nodes.iter().map(|n| n.w.as_slice()), &shard_sizes);
         pv.run_rounds(&b, rounds);
         for (i, node) in nodes.iter_mut().enumerate() {
-            protocol.apply_estimate(&pv, i, node);
+            // inline consume side (the Mixer seam post-dates this frozen
+            // reference loop): estimate, then the step-(h) projection
+            pv.estimate_into(i, &mut node.w);
+            if cfg.project_consensus {
+                gadget::linalg::project_to_ball(&mut node.w, 1.0 / lambda.sqrt());
+            }
             node.check_convergence(cfg.epsilon);
         }
         if nodes.iter().all(|n| n.converged) {

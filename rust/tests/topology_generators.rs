@@ -1,0 +1,154 @@
+//! Contracts of the overlay generators behind `--topology`, including
+//! the adversarial families the mixer seam sweeps (`power-law`,
+//! `partition`).
+//!
+//! Three properties make a family usable as a gossip overlay scenario:
+//!
+//! * **seeded determinism** — the same `(n, seed)` must reproduce the
+//!   same wiring (trial reproducibility), and varying the seed must
+//!   actually vary the wiring for the random families;
+//! * **doubly-stochastic `B`** — Theorem 1 needs rows *and* columns of
+//!   the transition matrix to sum to one on whatever graph the
+//!   generator emits, for both general-graph weight schemes;
+//! * **spectral ordering** — the families must span the mixing range
+//!   they are advertised for (`λ₂` ring > complete), and the
+//!   partition-prone overlay must actually fracture when its single
+//!   bridge is cut and heal when it returns.
+
+use gadget::topology::stochastic::WeightScheme;
+use gadget::topology::{mixing_time, second_eigenvalue, Graph, TopologyKind, TransitionMatrix};
+
+/// Every family `Graph::generate` dispatches, including the seeded ones.
+const ALL_KINDS: [TopologyKind; 8] = [
+    TopologyKind::Complete,
+    TopologyKind::Ring,
+    TopologyKind::Torus,
+    TopologyKind::KRegular,
+    TopologyKind::SmallWorld,
+    TopologyKind::ErdosRenyi,
+    TopologyKind::PowerLaw,
+    TopologyKind::Partition,
+];
+
+/// The families whose wiring depends on the seed.
+const SEEDED_KINDS: [TopologyKind; 5] = [
+    TopologyKind::KRegular,
+    TopologyKind::SmallWorld,
+    TopologyKind::ErdosRenyi,
+    TopologyKind::PowerLaw,
+    TopologyKind::Partition,
+];
+
+#[test]
+fn generators_are_seed_deterministic_and_seed_sensitive() {
+    for kind in ALL_KINDS {
+        let a = Graph::generate(kind, 16, 42);
+        let b = Graph::generate(kind, 16, 42);
+        assert_eq!(a.adj, b.adj, "{kind}: same seed must reproduce the wiring");
+        assert!(a.is_connected(), "{kind}: generator must emit a connected graph");
+    }
+    // varying the seed varies the wiring — some seed in a small window
+    // must differ from seed 42's graph (a fixed pair could collide)
+    for kind in SEEDED_KINDS {
+        let base = Graph::generate(kind, 16, 42);
+        let differs = (0..20u64).any(|s| Graph::generate(kind, 16, s).adj != base.adj);
+        assert!(differs, "{kind}: 21 seeds produced identical wiring");
+    }
+}
+
+#[test]
+fn transition_matrices_are_doubly_stochastic_on_every_family() {
+    // Theorem 1's consensus target is the uniform average only when B is
+    // doubly stochastic — which MH and max-degree must deliver on *any*
+    // emitted graph, hubs and near-bisections included.
+    for kind in ALL_KINDS {
+        let g = Graph::generate(kind, 18, 7);
+        for scheme in [WeightScheme::MetropolisHastings, WeightScheme::MaxDegree] {
+            let b = TransitionMatrix::from_graph(&g, scheme);
+            assert!(
+                b.is_doubly_stochastic(1e-9),
+                "{kind}/{scheme:?}: row err {} col err {}",
+                b.row_error(),
+                b.col_error()
+            );
+            assert!(b.respects_graph(&g), "{kind}/{scheme:?}: B off the overlay support");
+        }
+    }
+}
+
+#[test]
+fn power_law_concentrates_degree() {
+    let g = Graph::power_law(80, 11);
+    assert!(g.is_connected());
+    // BA attachment: seed edge + 2 edges per arriving node
+    assert_eq!(g.edge_count(), 1 + 2 * 78);
+    // hubs exist: the max degree clears the attachment minimum widely,
+    // while ring/torus never exceed degree 4
+    assert!(g.max_degree() >= 8, "max degree {}", g.max_degree());
+}
+
+#[test]
+fn partition_prone_fractures_on_bridge_cut_and_heals() {
+    let n = 16;
+    let g = Graph::partition_prone(n, 5);
+    assert!(g.is_connected());
+    let bridge = Graph::partition_bridge(n);
+
+    // collect the undirected edge list, drop the bridge: disconnected
+    let edges: Vec<(usize, usize)> = (0..n)
+        .flat_map(|i| g.adj[i].iter().map(move |&j| (i, j)))
+        .filter(|&(i, j)| i < j)
+        .collect();
+    assert!(edges.contains(&bridge), "bridge edge missing from the overlay");
+    let cut: Vec<(usize, usize)> =
+        edges.iter().copied().filter(|&e| e != bridge).collect();
+    let fractured = Graph::from_edges(n, &cut);
+    assert!(!fractured.is_connected(), "cutting the bridge must partition");
+    // both halves stay internally connected (the damage is the cut, not
+    // a shattered cluster): each cluster's ring guarantees this
+    assert_eq!(fractured.diameter(), usize::MAX);
+
+    // heal: re-add exactly the bridge and connectivity returns
+    let mut healed = cut;
+    healed.push(bridge);
+    assert!(Graph::from_edges(n, &healed).is_connected(), "re-adding the bridge must heal");
+}
+
+#[test]
+fn spectral_ordering_ring_vs_complete() {
+    // the sweep's premise: ring is the worst mixer, complete the best
+    let mh = |g: &Graph| TransitionMatrix::from_graph(g, WeightScheme::MetropolisHastings);
+    let ring = mh(&Graph::ring(16));
+    let complete = mh(&Graph::complete(16));
+    let l2_ring = second_eigenvalue(&ring, 300);
+    let l2_complete = second_eigenvalue(&complete, 300);
+    assert!(
+        l2_ring > l2_complete,
+        "λ₂ ordering violated: ring {l2_ring} vs complete {l2_complete}"
+    );
+    assert!(l2_ring > 0.9 && l2_ring < 1.0, "ring λ₂ {l2_ring}");
+    assert!(mixing_time(&ring, 0.01) > mixing_time(&complete, 0.01));
+    // the adversarial families sit between the extremes but mix worse
+    // than the complete graph
+    for kind in [TopologyKind::PowerLaw, TopologyKind::Partition] {
+        let b = mh(&Graph::generate(kind, 16, 3));
+        let l2 = second_eigenvalue(&b, 300);
+        assert!(
+            l2 > l2_complete && l2 < 1.0,
+            "{kind}: λ₂ {l2} outside (complete {l2_complete}, 1)"
+        );
+    }
+}
+
+#[test]
+fn small_n_degenerate_cases_stay_sane() {
+    // the documented degenerations: BA needs ≥3 nodes, partition ≥4
+    for n in 1..4usize {
+        let pl = Graph::power_law(n, 1);
+        let pp = Graph::partition_prone(n, 1);
+        assert!(pl.is_connected(), "power-law n={n}");
+        assert!(pp.is_connected(), "partition n={n}");
+    }
+    // the bridge endpoint formula holds even on the smallest real case
+    assert_eq!(Graph::partition_bridge(4), (0, 2));
+}
