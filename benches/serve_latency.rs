@@ -1,0 +1,190 @@
+//! Bench: HTTP serving latency — closed-loop round-trip percentiles for
+//! `POST /score` against the in-process `score_batch` floor, so the
+//! number the transport adds (connection setup, request parsing, the
+//! bounded admission queue) is isolated from the scoring math itself.
+//!
+//! One client, one request per connection (the server's own contract:
+//! `Connection: close`), `GADGET_BENCH_SERVE_ROWS` rows per request.
+//! Closed-loop: the next request is not sent until the previous
+//! response is fully read, so queue-wait never contaminates the
+//! percentiles — this measures the per-request service path, not
+//! saturation behaviour (overflow/503 semantics are pinned by tests,
+//! not timed here).
+//!
+//! Output: `BENCH_serve_latency.json` — p50/p95/p99 round-trip, the
+//! in-process floor at the same batch size, and rows/sec throughput.
+
+use gadget::serve::{
+    parse_row, HttpConfig, HttpServer, ModelArtifact, RowFormat, ScalingMeta, ServeOptions,
+    ShardedScorer,
+};
+use gadget::util::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+const DIM: usize = 256;
+
+/// Deterministic dim-256 binary artifact — the bench times transport
+/// and dispatch, not training, so the weights only need to be fixed.
+fn artifact() -> ModelArtifact {
+    let w: Vec<f64> = (0..DIM).map(|j| ((j * 37 % 19) as f64 - 9.0) / 16.0).collect();
+    ModelArtifact::new(DIM, vec![w], vec![0.0], ScalingMeta::default())
+}
+
+/// One request body: `rows` LIBSVM lines, 8 features each, strictly
+/// ascending indices (the row grammar the stdin path accepts).
+fn score_body(rows: usize) -> String {
+    let mut body = String::new();
+    for r in 0..rows {
+        let mut line = String::new();
+        for k in 0..8 {
+            let idx = k * 32 + (r % 32) + 1; // 1-based, ascending in k
+            if k > 0 {
+                line.push(' ');
+            }
+            line.push_str(&format!("{idx}:{:.2}", 0.25 + 0.01 * (k as f64)));
+        }
+        body.push_str(&line);
+        body.push('\n');
+    }
+    body
+}
+
+/// One closed-loop round trip: connect, POST `/score`, drain the
+/// response (the server closes the connection after it).
+fn round_trip(addr: &str, body: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(
+        stream,
+        "POST /score HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("response");
+    response
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[idx.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+fn main() {
+    let requests = env_f64("GADGET_BENCH_SERVE_REQUESTS", 500.0) as usize;
+    let rows_per = env_f64("GADGET_BENCH_SERVE_ROWS", 16.0) as usize;
+    let shards = env_f64("GADGET_BENCH_SERVE_SHARDS", 4.0) as usize;
+    println!(
+        "Serve latency bench: {requests} requests x {rows_per} rows, dim {DIM}, \
+         {shards} shard replicas (closed-loop, one client)"
+    );
+
+    let body = score_body(rows_per);
+    let opts = ServeOptions { shards, batch: rows_per.max(1), ..ServeOptions::default() };
+
+    // ---- in-process floor: the same batch through score_batch ------------
+    let scorer = ShardedScorer::new(artifact(), shards);
+    let parsed: Vec<_> = body
+        .lines()
+        .map(|l| parse_row(l, RowFormat::Auto, DIM).expect("bench row"))
+        .collect();
+    for _ in 0..50 {
+        scorer.score_batch(&parsed).expect("warmup");
+    }
+    let mut floor = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let t = Instant::now();
+        scorer.score_batch(&parsed).expect("score");
+        floor.push(t.elapsed().as_secs_f64());
+    }
+    floor.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // ---- HTTP round trip -------------------------------------------------
+    let http = HttpConfig { queue_depth: 64, deadline_ms: 30_000 };
+    let server = HttpServer::start(
+        "127.0.0.1:0",
+        http,
+        Some((ShardedScorer::new(artifact(), shards), opts)),
+        None,
+    )
+    .expect("server");
+    let addr = server.local_addr().to_string();
+    for _ in 0..20 {
+        let warm = round_trip(&addr, &body);
+        assert!(warm.starts_with("HTTP/1.1 200 "), "warmup response: {warm}");
+    }
+    let mut rtt = Vec::with_capacity(requests);
+    let wall = Instant::now();
+    for _ in 0..requests {
+        let t = Instant::now();
+        let response = round_trip(&addr, &body);
+        rtt.push(t.elapsed().as_secs_f64());
+        assert!(response.starts_with("HTTP/1.1 200 "), "bad response: {response}");
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let stats = server.shutdown_and_join().expect("drain");
+    assert_eq!(
+        stats.scored_rows,
+        (requests + 20) * rows_per,
+        "every admitted row must be scored exactly once"
+    );
+    rtt.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let (f50, f99) = (percentile(&floor, 50.0), percentile(&floor, 99.0));
+    let (p50, p95, p99) =
+        (percentile(&rtt, 50.0), percentile(&rtt, 95.0), percentile(&rtt, 99.0));
+    let rows_per_sec = (requests * rows_per) as f64 / wall_secs.max(1e-12);
+    println!("  in-process floor  : p50 {:.1}us  p99 {:.1}us", 1e6 * f50, 1e6 * f99);
+    println!(
+        "  http round trip   : p50 {:.1}us  p95 {:.1}us  p99 {:.1}us",
+        1e6 * p50,
+        1e6 * p95,
+        1e6 * p99
+    );
+    println!("  transport overhead: p50 {:.1}us  ({rows_per_sec:.0} rows/sec)", 1e6 * (p50 - f50));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serve_latency".into())),
+        (
+            "note",
+            Json::Str(
+                "written by `cargo bench --bench serve_latency`; closed-loop \
+                 single-client POST /score round trips vs the in-process \
+                 score_batch floor at the same batch size (EXPERIMENTS.md, \
+                 Serving latency section)"
+                    .into(),
+            ),
+        ),
+        ("dim", Json::Num(DIM as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("rows_per_request", Json::Num(rows_per as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("queue_depth", Json::Num(64.0)),
+        (
+            "in_process",
+            Json::obj(vec![("p50_secs", Json::Num(f50)), ("p99_secs", Json::Num(f99))]),
+        ),
+        (
+            "http",
+            Json::obj(vec![
+                ("p50_secs", Json::Num(p50)),
+                ("p95_secs", Json::Num(p95)),
+                ("p99_secs", Json::Num(p99)),
+                ("rows_per_sec", Json::Num(rows_per_sec)),
+            ]),
+        ),
+        ("transport_overhead_p50_secs", Json::Num(p50 - f50)),
+    ]);
+    gadget::experiments::write_output(
+        std::path::Path::new("BENCH_serve_latency.json"),
+        &doc.to_pretty(),
+    )
+    .unwrap();
+    println!("\nwrote BENCH_serve_latency.json");
+}

@@ -202,6 +202,73 @@ topology_smoke() (
 )
 run_hard topology_smoke
 
+# HTTP smoke: the socket front end must answer POST /score with exactly
+# the bytes the stdin loop writes for the same batch — at a degenerate
+# (1) and a multi-worker (4) shard pool, mirroring the other
+# pool-size-invariance gates — and `train --http-ingest` must accept a
+# mid-run POST /ingest batch, drain on POST /shutdown, and report the
+# accepted rows. Raw HTTP/1.1 over bash's /dev/tcp: no client tooling
+# assumed; the ephemeral port comes from the unbuffered stderr startup
+# line (`http: listening on ADDR ...`).
+http_smoke() (
+    set -e
+    tmp="$(mktemp -d)"
+    trap 'rm -rf "$tmp"' EXIT
+    await_listen() { # FILE -> ADDR (polls the startup line)
+        for _ in $(seq 1 100); do
+            if grep -q 'listening on ' "$1"; then
+                sed -n 's/.*listening on \([^ ]*\).*/\1/p' "$1"
+                return 0
+            fi
+            sleep 0.1
+        done
+        echo "no startup line in $1" >&2
+        return 1
+    }
+    post() { # PORT PATH BODY_FILE -> full response on stdout
+        exec 3<>"/dev/tcp/127.0.0.1/$1"
+        printf 'POST %s HTTP/1.1\r\nHost: ci\r\nContent-Length: %s\r\n\r\n' \
+            "$2" "$(wc -c < "$3")" >&3
+        cat "$3" >&3
+        cat <&3
+        exec 3<&-
+    }
+    ./target/release/gadget train --dataset synthetic-usps --scale 0.02 \
+        --nodes 3 --trials 1 --max-iterations 60 --save "$tmp/model.json"
+    printf -- '+1 1:0.5 3:1.25\n2:0.75 5:0.5\n0.1 0.2 0.3\n' > "$tmp/batch.libsvm"
+    : > "$tmp/empty"
+    ./target/release/gadget serve --model "$tmp/model.json" --shards 1 --scores \
+        < "$tmp/batch.libsvm" > "$tmp/stdin.txt"
+    for shards in 1 4; do
+        ./target/release/gadget serve --model "$tmp/model.json" \
+            --http 127.0.0.1:0 --shards "$shards" --scores \
+            2> "$tmp/serve$shards.err" &
+        srv=$!
+        port="$(await_listen "$tmp/serve$shards.err")"; port="${port##*:}"
+        post "$port" /score "$tmp/batch.libsvm" > "$tmp/resp$shards.txt"
+        head -1 "$tmp/resp$shards.txt" | grep -q '200'
+        # body = everything after the blank separator line, byte-equal
+        # to the stdin path (scores included: textual == bitwise)
+        awk 'body{print} /^\r?$/{body=1}' "$tmp/resp$shards.txt" > "$tmp/http$shards.txt"
+        diff "$tmp/stdin.txt" "$tmp/http$shards.txt"
+        post "$port" /shutdown "$tmp/empty" | head -1 | grep -q '200'
+        wait "$srv"
+    done
+    # train-while-serving: ingest two labeled rows, then close the feed
+    ./target/release/gadget train --dataset synthetic-usps --scale 0.02 \
+        --nodes 3 --trials 1 --max-iterations 400 --http-ingest 127.0.0.1:0 \
+        > "$tmp/train.out" 2> "$tmp/train.err" &
+    trn=$!
+    port="$(await_listen "$tmp/train.err")"; port="${port##*:}"
+    printf -- '+1 1:0.5 3:0.25\n-1 2:0.75\n' > "$tmp/rows.libsvm"
+    post "$port" /ingest "$tmp/rows.libsvm" | grep -q 'accepted 2 rows'
+    post "$port" /shutdown "$tmp/empty" | head -1 | grep -q '200'
+    wait "$trn"
+    grep -q '2 rows accepted' "$tmp/train.out"
+    grep -q 'test accuracy' "$tmp/train.out"
+)
+run_hard http_smoke
+
 echo
 if [ "$fail" -ne 0 ]; then
     echo "ci: HARD GATE FAILED"

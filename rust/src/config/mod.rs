@@ -146,6 +146,20 @@ pub struct ExperimentConfig {
     /// Rows per scoring batch for the inference service (`[serve]`
     /// section: `batch = N`).
     pub serve_batch: usize,
+    /// Listen address for the HTTP front end (`[serve]` section:
+    /// `http = "127.0.0.1:8080"`; port 0 binds an ephemeral port). `None`
+    /// — the default — keeps `serve` on stdin/stdout; the `--http` /
+    /// `--http-ingest` CLI flags override.
+    pub serve_http: Option<String>,
+    /// Bound on HTTP requests admitted but not yet processed (`[serve]`
+    /// section: `queue-depth = N`, ≥ 1). Overflow answers `503` +
+    /// `Retry-After` — explicit backpressure, never a silent drop. Also
+    /// sizes the `--http-ingest` arrival buffer.
+    pub serve_queue_depth: usize,
+    /// Per-HTTP-request deadline budget in milliseconds (`[serve]`
+    /// section: `deadline-ms = N`, ≥ 1), counted from admission — time
+    /// spent queued counts against it.
+    pub serve_deadline_ms: u64,
     /// Streaming ingestion rate in rows per GADGET iteration, network
     /// wide (`[stream]` section: `rate = F`). `0` (the default) disables
     /// streaming — the classic load-once/partition-once static path.
@@ -214,6 +228,9 @@ impl Default for ExperimentConfig {
             kernel: KernelKind::Scalar,
             serve_shards: 0,
             serve_batch: 256,
+            serve_http: None,
+            serve_queue_depth: 64,
+            serve_deadline_ms: 5_000,
             stream_rate: 0.0,
             stream_schedule: StreamSchedule::Uniform,
             stream_max_rows: 0,
@@ -265,6 +282,20 @@ impl ExperimentConfig {
         }
         if self.serve_batch == 0 {
             bail!("config: serve batch must be ≥ 1");
+        }
+        if self.serve_queue_depth == 0 {
+            bail!(
+                "config: [serve] queue-depth must be ≥ 1 (0 would refuse every \
+                 request; to disable HTTP, drop [serve] http instead)"
+            );
+        }
+        if self.serve_deadline_ms == 0 {
+            bail!("config: [serve] deadline-ms must be ≥ 1");
+        }
+        if let Some(addr) = &self.serve_http {
+            if addr.trim().is_empty() {
+                bail!("config: [serve] http must be a bind address like \"127.0.0.1:8080\"");
+            }
         }
         if !(self.stream_rate.is_finite() && self.stream_rate >= 0.0) {
             bail!("config: stream rate must be ≥ 0 and finite (0 = static)");
@@ -419,6 +450,13 @@ impl ExperimentConfig {
                 // `[serve]` section (flat spellings accepted too).
                 "serve.shards" | "shards" => cfg.serve_shards = value.as_usize_or(k)?,
                 "serve.batch" | "batch" => cfg.serve_batch = value.as_usize_or(k)?,
+                "serve.http" | "http" => cfg.serve_http = Some(value.as_str_or(k)?),
+                "serve.queue-depth" | "serve.queue_depth" | "queue-depth" | "queue_depth" => {
+                    cfg.serve_queue_depth = value.as_usize_or(k)?
+                }
+                "serve.deadline-ms" | "serve.deadline_ms" | "deadline-ms" | "deadline_ms" => {
+                    cfg.serve_deadline_ms = value.as_usize_or(k)? as u64
+                }
                 // `[stream]` section (flat spellings accepted too).
                 "stream.rate" | "rate" => cfg.stream_rate = value.as_f64_or(k)?,
                 "stream.schedule" | "schedule" => {
@@ -585,6 +623,24 @@ impl ConfigBuilder {
     /// Sets the inference service's rows-per-batch.
     pub fn serve_batch(mut self, b: usize) -> Self {
         self.cfg.serve_batch = b;
+        self
+    }
+
+    /// Sets the HTTP front end's listen address.
+    pub fn serve_http(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.serve_http = Some(addr.into());
+        self
+    }
+
+    /// Sets the HTTP request-queue bound.
+    pub fn serve_queue_depth(mut self, n: usize) -> Self {
+        self.cfg.serve_queue_depth = n;
+        self
+    }
+
+    /// Sets the per-HTTP-request deadline budget in milliseconds.
+    pub fn serve_deadline_ms(mut self, ms: u64) -> Self {
+        self.cfg.serve_deadline_ms = ms;
         self
     }
 
@@ -967,5 +1023,42 @@ snapshot_every = 10
         // a zero-row batch can never make progress
         let err = ExperimentConfig::from_toml("[serve]\nbatch = 0").unwrap_err();
         assert!(err.to_string().contains("serve batch"), "{err}");
+    }
+
+    #[test]
+    fn serve_http_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml(
+            "[serve]\nhttp = \"127.0.0.1:8080\"\nqueue-depth = 8\ndeadline-ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve_http.as_deref(), Some("127.0.0.1:8080"));
+        assert_eq!(cfg.serve_queue_depth, 8);
+        assert_eq!(cfg.serve_deadline_ms, 250);
+        // flat and underscore spellings accepted too
+        let flat =
+            ExperimentConfig::from_toml("http = \"0.0.0.0:0\"\nqueue_depth = 2\ndeadline_ms = 9")
+                .unwrap();
+        assert_eq!(flat.serve_http.as_deref(), Some("0.0.0.0:0"));
+        assert_eq!((flat.serve_queue_depth, flat.serve_deadline_ms), (2, 9));
+        // defaults: stdin serving, depth 64, 5 s budget
+        let d = ExperimentConfig::default();
+        assert_eq!(d.serve_http, None);
+        assert_eq!((d.serve_queue_depth, d.serve_deadline_ms), (64, 5_000));
+        // builder setters
+        let b = ExperimentConfig::builder()
+            .serve_http("127.0.0.1:0")
+            .serve_queue_depth(3)
+            .serve_deadline_ms(77)
+            .build()
+            .unwrap();
+        assert_eq!(b.serve_http.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!((b.serve_queue_depth, b.serve_deadline_ms), (3, 77));
+        // degenerate transport knobs are rejected, not clamped
+        let e = ExperimentConfig::from_toml("[serve]\nqueue-depth = 0").unwrap_err();
+        assert!(e.to_string().contains("queue-depth"), "{e}");
+        let e = ExperimentConfig::from_toml("[serve]\ndeadline-ms = 0").unwrap_err();
+        assert!(e.to_string().contains("deadline-ms"), "{e}");
+        let e = ExperimentConfig::from_toml("[serve]\nhttp = \"\"").unwrap_err();
+        assert!(e.to_string().contains("bind address"), "{e}");
     }
 }

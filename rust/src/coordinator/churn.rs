@@ -128,7 +128,7 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     // accumulating arrivals (data reaches a down site; it processes the
     // backlog on recovery), and the Push-Sum weights below always reflect
     // the *current* shard sizes of the alive set.
-    let mut store = super::gadget::build_store(cfg, &train, cfg.seed)?;
+    let mut store = super::gadget::build_store(cfg, &train, cfg.seed, None)?;
     let test_shards = partition::horizontal_split(&test, m, cfg.seed ^ 0x7e57)?;
     let root = Rng::new(cfg.seed);
     let mut nodes: Vec<NodeState> = test_shards

@@ -42,8 +42,8 @@ use crate::config::{Backend, ExperimentConfig, SchedulerKind};
 use crate::data::synthetic::{generate, spec_by_name};
 use crate::linalg::Kernel;
 use crate::data::{
-    partition, Dataset, MmapStore, PackFile, ShardStore, ShardView, StaticStore, StoreKind,
-    StreamSchedule, StreamingStore,
+    partition, ArrivalQueue, Dataset, MmapStore, PackFile, ShardStore, ShardView, StaticStore,
+    StoreKind, StreamSchedule, StreamingStore,
 };
 use crate::gossip::{GossipStats, GradientFlowMixer, Mixer, MixerKind, PushSumMixer};
 use crate::metrics::{self, node_trial_std, Trace, TracePoint};
@@ -182,6 +182,11 @@ pub struct GadgetRunner {
     train: TrainPlane,
     test: Dataset,
     load_secs: f64,
+    /// Live HTTP arrival buffer (`train --http-ingest`): rows staged here
+    /// by the HTTP front end enter the shard store only at the ingestion
+    /// boundary ([`GossipProtocol::ingest_boundary`]). `None` for every
+    /// offline run.
+    http_ingest: Option<Arc<ArrivalQueue>>,
 }
 
 /// Where a runner's training rows live: on the heap (synthetic
@@ -274,6 +279,7 @@ pub fn run_on_datasets(
         train: TrainPlane::Heap(train),
         test,
         load_secs: 0.0,
+        http_ingest: None,
     };
     let report = runner.run()?;
     Ok(DatasetRunReport {
@@ -297,7 +303,24 @@ impl GadgetRunner {
         if cfg.nodes > train.len() {
             bail!("config: more nodes than training samples");
         }
-        Ok(Self { cfg, lambda, train, test, load_secs })
+        Ok(Self { cfg, lambda, train, test, load_secs, http_ingest: None })
+    }
+
+    /// Attaches a live HTTP arrival buffer (`train --http-ingest`): the
+    /// whole loaded training set becomes iteration 1's split, and rows
+    /// staged into `queue` by the HTTP front end join the shards at each
+    /// ingestion boundary — paced by `[stream] rate` (0 = drain the whole
+    /// buffer every boundary), capped by `[stream] max-rows`. The run
+    /// will not declare ε-convergence while the queue is open (the
+    /// convergence veto), so a `POST /shutdown` — which closes the
+    /// queue — is what lets a converged network actually stop. While the
+    /// feed is open but idle the loop *parks* at the ingestion boundary
+    /// ([`ArrivalQueue::wait_arrival_or_close`]) instead of spending
+    /// iterations: the `max_iterations` budget covers arrivals and the
+    /// post-close run to convergence, not wall-clock waiting.
+    pub fn with_http_ingest(mut self, queue: Arc<ArrivalQueue>) -> Self {
+        self.http_ingest = Some(queue);
+        self
     }
 
     /// Accessor: the loaded training set (heap planes only — a `pack:`
@@ -377,12 +400,22 @@ impl GadgetRunner {
         // Silently training on a frozen snapshot while the report claims
         // streaming would be the mislabeled-run case this codebase
         // forbids everywhere else: reject loudly.
-        if self.cfg.streaming_enabled() {
+        if self.cfg.streaming_enabled() || self.http_ingest.is_some() {
             anyhow::ensure!(
                 self.cfg.scheduler != SchedulerKind::Async,
-                "scheduler = \"async\" does not support [stream] ingestion (the \
-                 thread-per-node engine has no global iteration boundary to \
-                 ingest at); use the sequential or parallel scheduler"
+                "scheduler = \"async\" does not support [stream] or --http-ingest \
+                 ingestion (the thread-per-node engine has no global iteration \
+                 boundary to ingest at); use the sequential or parallel scheduler"
+            );
+        }
+        if self.http_ingest.is_some() {
+            // One live arrival buffer cannot feed several independent
+            // repetitions — each trial would drain a disjoint, timing-
+            // dependent subset and none would see the advertised stream.
+            anyhow::ensure!(
+                self.cfg.trials == 1,
+                "--http-ingest requires trials = 1 (a live arrival stream \
+                 cannot be replayed across independent trials)"
             );
         }
         match self.cfg.scheduler {
@@ -606,7 +639,7 @@ impl GadgetRunner {
         // reference — pinned by rust/tests/store_equivalence.rs), the
         // streaming store additionally grows its shards at the ingestion
         // boundary below.
-        let mut store = build_store(cfg, &self.train, seed)?;
+        let mut store = build_store(cfg, &self.train, seed, self.http_ingest.as_ref())?;
         let mut nodes = self.build_nodes(seed)?;
         let mut shard_sizes = vec![0.0f64; m];
         store.sizes_into(&mut shard_sizes);
@@ -636,6 +669,19 @@ impl GadgetRunner {
 
         for t in 1..=cfg.max_iterations {
             iterations = t;
+            // Interactive pacing: an HTTP-fed run parks here while the
+            // feed is open but idle, so the iteration budget is spent on
+            // arrivals (and on the post-close run to convergence) rather
+            // than burned at CPU speed in the milliseconds before the
+            // first request can land. The `stream_exhausted` guard keeps
+            // a `--stream-max-rows`-capped run from parking on a feed it
+            // can no longer drain. Pool/tail sources never park — their
+            // schedules are store-internal and deterministic.
+            if let Some(queue) = &self.http_ingest {
+                if !store.stream_exhausted() {
+                    queue.wait_arrival_or_close();
+                }
+            }
             // Ingestion boundary: append this iteration's arrivals before
             // any node steps, then refresh the Push-Sum weights so the
             // consensus target re-weights to the new nᵢ (static stores
@@ -846,8 +892,36 @@ pub(crate) fn build_store(
     cfg: &ExperimentConfig,
     train: &TrainPlane,
     seed: u64,
+    http: Option<&Arc<ArrivalQueue>>,
 ) -> Result<Box<dyn ShardStore>> {
     let m = cfg.nodes;
+    if let Some(queue) = http {
+        // Live HTTP ingestion: the whole loaded set is iteration 1's
+        // split and arrivals come off the wire — `[stream] initial` has
+        // nothing to hold out, and a `tail:` schedule would be a second
+        // arrival source fighting over the same boundary.
+        anyhow::ensure!(
+            !matches!(cfg.stream_schedule, StreamSchedule::Tail(_)),
+            "--http-ingest cannot combine with schedule = \"tail:...\" (two \
+             arrival sources would race for the ingestion boundary)"
+        );
+        let train = match train {
+            TrainPlane::Heap(ds) => ds,
+            TrainPlane::Pack { pack, .. } => bail!(
+                "{}: --http-ingest needs a heap training set (a mapped pack \
+                 artifact is immutable — its shards cannot grow)",
+                pack.name()
+            ),
+        };
+        let initial = partition::horizontal_split(train, m, seed)?;
+        return Ok(Box::new(StreamingStore::http(
+            initial,
+            Arc::clone(queue),
+            cfg.stream_rate,
+            cfg.stream_max_rows,
+            seed,
+        )?));
+    }
     let train = match train {
         TrainPlane::Pack { pack, rows } => {
             // Pack shards are contiguous row windows, not the seeded

@@ -284,7 +284,7 @@ impl Scheduler for Parallel {
         if ids.is_empty() {
             return Ok(());
         }
-        let Self { pool, backends } = self;
+        let Self { pool, backends, .. } = self;
         let mut refs = collect_node_refs(nodes, ids);
         let workers = backends.len().min(refs.len()).max(1);
         let chunk = (refs.len() + workers - 1) / workers;

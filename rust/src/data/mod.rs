@@ -16,7 +16,10 @@ pub mod store;
 pub mod synthetic;
 
 pub use pack::{MmapStore, PackFile, StoreKind};
-pub use store::{ShardStore, ShardView, StaticStore, StreamSchedule, StreamingStore};
+pub use store::{
+    ArrivalPushError, ArrivalQueue, ShardStore, ShardView, StaticStore, StreamSchedule,
+    StreamingStore,
+};
 
 use crate::linalg::{RowsView, SparseVec};
 

@@ -37,7 +37,9 @@ use crate::linalg::{RowRef, RowsView, SparseVec};
 use crate::rng::Rng;
 use crate::Result;
 use anyhow::{bail, Context};
+use std::collections::VecDeque;
 use std::io::BufRead;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A borrowed, read-only window onto one node's current shard.
 ///
@@ -249,6 +251,145 @@ impl std::fmt::Display for StreamSchedule {
     }
 }
 
+/// Why an [`ArrivalQueue`] push was refused (the rows come back so the
+/// transport can answer on the still-open connection — never a silent
+/// drop).
+#[derive(Debug)]
+pub enum ArrivalPushError {
+    /// The buffer is at capacity — the sender should retry after the
+    /// next ingestion boundary drains it (HTTP: `503` + `Retry-After`).
+    Full(Vec<(SparseVec, i8)>),
+    /// The queue is closed — the training run is draining/terminating.
+    Closed(Vec<(SparseVec, i8)>),
+}
+
+struct ArrivalInner {
+    rows: VecDeque<(SparseVec, i8)>,
+    closed: bool,
+    /// Rows ever admitted (monotonic; survives draining).
+    accepted: usize,
+}
+
+/// The network-side arrival buffer behind `train --http-ingest`: a
+/// bounded, thread-safe staging area between the HTTP front end (any
+/// thread, any time) and the training loop (which drains it **only** at
+/// [`crate::coordinator::sched::GossipProtocol::ingest_boundary`], via
+/// [`StreamingStore`]'s source hookup). The bound is the backpressure
+/// seam: a full buffer refuses the batch and returns it, so the
+/// transport answers `503` + `Retry-After` instead of buffering without
+/// limit or dropping rows on the floor.
+///
+/// Admission is all-or-nothing per batch — a request's rows either all
+/// enter the stream or none do, so a `503` can honestly mean "resend
+/// everything".
+pub struct ArrivalQueue {
+    inner: Mutex<ArrivalInner>,
+    /// Signalled on admission and on close — the training loop parks on
+    /// this between boundaries while the feed is open but idle.
+    arrivals: Condvar,
+    cap: usize,
+    dim: usize,
+}
+
+impl ArrivalQueue {
+    /// A queue staging at most `cap` rows (≥ 1) for a stream training at
+    /// feature dimension `dim`.
+    pub fn bounded(cap: usize, dim: usize) -> Arc<Self> {
+        assert!(cap >= 1, "ArrivalQueue: capacity must be ≥ 1");
+        Arc::new(Self {
+            inner: Mutex::new(ArrivalInner {
+                rows: VecDeque::new(),
+                closed: false,
+                accepted: 0,
+            }),
+            arrivals: Condvar::new(),
+            cap,
+            dim,
+        })
+    }
+
+    /// The training feature dimension rows must fit (transports validate
+    /// per row *before* pushing so errors can name the input line).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Admits `rows` atomically, or returns them all when capacity or
+    /// admission is gone. Never blocks, never partially admits.
+    pub fn push_batch(
+        &self,
+        rows: Vec<(SparseVec, i8)>,
+    ) -> std::result::Result<(), ArrivalPushError> {
+        let mut inner = self.inner.lock().expect("ArrivalQueue poisoned");
+        if inner.closed {
+            return Err(ArrivalPushError::Closed(rows));
+        }
+        if inner.rows.len() + rows.len() > self.cap {
+            return Err(ArrivalPushError::Full(rows));
+        }
+        inner.accepted += rows.len();
+        inner.rows.extend(rows);
+        self.arrivals.notify_all();
+        Ok(())
+    }
+
+    /// Blocks until at least one row is staged or the feed closes;
+    /// returns immediately when either already holds. This is the
+    /// interactive run's boundary pacing: an HTTP-fed training loop
+    /// parks here between boundaries, so iterations are spent on
+    /// arrivals (and on the post-close run to convergence) instead of
+    /// burning the whole `max_iterations` budget in the milliseconds
+    /// before the first request can land.
+    pub fn wait_arrival_or_close(&self) {
+        let mut inner = self.inner.lock().expect("ArrivalQueue poisoned");
+        while inner.rows.is_empty() && !inner.closed {
+            inner = self.arrivals.wait(inner).expect("ArrivalQueue poisoned");
+        }
+    }
+
+    /// Takes the oldest staged row, if any. Non-blocking — the ingestion
+    /// boundary drains what is there and moves on; rows landing a moment
+    /// later wait for the next boundary (boundary-only mutation).
+    fn pop(&self) -> Option<(SparseVec, i8)> {
+        self.inner.lock().expect("ArrivalQueue poisoned").rows.pop_front()
+    }
+
+    /// Stops admissions (staged rows still drain). This is the stream's
+    /// end-of-feed signal: once closed *and* drained the store reports
+    /// [`ShardStore::stream_exhausted`], lifting the network-wide
+    /// convergence veto so the run can terminate. Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().expect("ArrivalQueue poisoned").closed = true;
+        self.arrivals.notify_all();
+    }
+
+    /// True once [`Self::close`] has run.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("ArrivalQueue poisoned").closed
+    }
+
+    /// Currently staged (admitted, not yet drained) rows.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("ArrivalQueue poisoned").rows.len()
+    }
+
+    /// True when nothing is staged.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rows ever admitted (monotonic — unaffected by draining).
+    pub fn accepted(&self) -> usize {
+        self.inner.lock().expect("ArrivalQueue poisoned").accepted
+    }
+
+    /// Closed *and* drained — nothing more can ever arrive.
+    fn exhausted(&self) -> bool {
+        let inner = self.inner.lock().expect("ArrivalQueue poisoned");
+        inner.closed && inner.rows.is_empty()
+    }
+}
+
 /// Where arriving rows come from.
 enum StreamSource {
     /// A held-out pool, pre-ordered at construction; rows are stored
@@ -264,6 +405,14 @@ enum StreamSource {
         line: usize,
         at_eof: bool,
     },
+    /// A live network arrival buffer (`train --http-ingest`): rows staged
+    /// by the HTTP front end, drained here at the ingestion boundary.
+    /// Arrival *timing* is inherently wall-clock (like a concurrently
+    /// written tail file), so HTTP-fed runs sit outside the bitwise
+    /// determinism contracts; everything after admission — assignment,
+    /// re-weighting, the training trajectory given the arrivals — stays
+    /// deterministic.
+    Http(Arc<ArrivalQueue>),
 }
 
 impl StreamSource {
@@ -276,6 +425,10 @@ impl StreamSource {
                 (Some(r), Some(y)) => Ok(Some((r, y))),
                 _ => Ok(None),
             },
+            // Dimension was validated at admission (the transport knows
+            // the input line); an over-dim row here is a programming
+            // error, caught by the shard append's own invariants.
+            Self::Http(queue) => Ok(queue.pop()),
             Self::Tail { reader, path, line, at_eof } => {
                 let mut buf = String::new();
                 loop {
@@ -462,6 +615,38 @@ impl StreamingStore {
         )
     }
 
+    /// A store fed by a live [`ArrivalQueue`] (`train --http-ingest`);
+    /// assignment is round-robin. `rate = 0` means "drain everything
+    /// staged at each boundary": the effective per-iteration quota is
+    /// [`Self::DRAIN_ALL_RATE`] — a finite value exact in the f64 carry
+    /// arithmetic (`carry += r; carry -= ⌊carry⌋` stays exactly 0), kept
+    /// far above any plausible arrival burst, rather than an infinity
+    /// that would poison the accumulator. A positive `rate` paces
+    /// draining exactly like the pool schedules.
+    pub fn http(
+        initial: Vec<Dataset>,
+        queue: Arc<ArrivalQueue>,
+        rate: f64,
+        max_rows: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let dim = initial.first().map(|s| s.dim).unwrap_or(0);
+        anyhow::ensure!(
+            queue.dim() == dim,
+            "streaming store: arrival queue dim {} != shard dim {dim}",
+            queue.dim()
+        );
+        let rate = if rate == 0.0 { Self::DRAIN_ALL_RATE } else { rate };
+        // Reservation estimate: one boundary's worth of the queue bound.
+        let est = queue.cap;
+        Self::base(initial, StreamSource::Http(queue), rate, max_rows, false, seed, est)
+    }
+
+    /// The effective rate standing in for "unpaced — drain the whole
+    /// arrival buffer every boundary" (exactly representable in f64, so
+    /// the fractional-rate carry stays identically zero).
+    pub const DRAIN_ALL_RATE: f64 = 1e9;
+
     /// Rows ingested so far (across all nodes).
     pub fn ingested(&self) -> usize {
         self.ingested
@@ -526,6 +711,11 @@ impl ShardStore for StreamingStore {
             // A tail is "dried up" while its last read sat at EOF; a
             // grown file flips this back at the next delivering ingest.
             StreamSource::Tail { at_eof, .. } => *at_eof,
+            // A live queue can deliver until it is closed AND drained —
+            // so an open HTTP feed vetoes convergence network-wide, and
+            // `POST /shutdown` (which closes the queue) is what lets a
+            // serving-while-training run terminate.
+            StreamSource::Http(queue) => queue.exhausted(),
         }
     }
 }
@@ -772,6 +962,121 @@ mod tests {
         // inside the same quota, so the flag ends up dry once more)
         assert_eq!(tail.ingest(&mut added).unwrap(), 1);
         assert!(tail.stream_exhausted());
+    }
+
+    fn labeled(v: f32, y: i8) -> (SparseVec, i8) {
+        (SparseVec::new(vec![0], vec![v]), y)
+    }
+
+    #[test]
+    fn arrival_queue_admits_all_or_nothing_and_reports_overflow() {
+        let q = ArrivalQueue::bounded(3, 3);
+        assert_eq!(q.dim(), 3);
+        q.push_batch(vec![labeled(1.0, 1), labeled(2.0, -1)]).unwrap();
+        assert_eq!((q.len(), q.accepted()), (2, 2));
+        // a 2-row batch against 1 free slot is refused whole — a 503 can
+        // honestly mean "resend everything"
+        match q.push_batch(vec![labeled(3.0, 1), labeled(4.0, 1)]) {
+            Err(ArrivalPushError::Full(rows)) => assert_eq!(rows.len(), 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!((q.len(), q.accepted()), (2, 2));
+        q.push_batch(vec![labeled(3.0, 1)]).unwrap();
+        q.close();
+        match q.push_batch(vec![labeled(9.0, 1)]) {
+            Err(ArrivalPushError::Closed(rows)) => assert_eq!(rows.len(), 1),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // staged rows survive close and drain in admission order
+        assert_eq!(q.pop().unwrap().0.values[0], 1.0);
+        assert_eq!(q.accepted(), 3);
+    }
+
+    #[test]
+    fn arrival_wait_parks_until_admission_or_close() {
+        // staged rows: returns immediately
+        let q = ArrivalQueue::bounded(4, 3);
+        q.push_batch(vec![labeled(1.0, 1)]).unwrap();
+        q.wait_arrival_or_close();
+        // open + empty: parks until a concurrent push wakes it
+        let q = ArrivalQueue::bounded(4, 3);
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                q.wait_arrival_or_close();
+                q.len()
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push_batch(vec![labeled(2.0, -1)]).unwrap();
+        assert_eq!(waiter.join().unwrap(), 1);
+        // closed (even empty): returns immediately — the post-close
+        // free-run must never park
+        let q = ArrivalQueue::bounded(4, 3);
+        q.close();
+        q.wait_arrival_or_close();
+    }
+
+    #[test]
+    fn http_rows_enter_shards_only_at_the_ingestion_boundary() {
+        let queue = ArrivalQueue::bounded(16, 3);
+        let mut store =
+            StreamingStore::http(split2(4), Arc::clone(&queue), 0.0, 0, 7).unwrap();
+        let before: Vec<usize> = (0..2).map(|i| store.shard_len(i)).collect();
+        queue.push_batch(vec![labeled(1.0, 1), labeled(2.0, -1), labeled(3.0, 1)]).unwrap();
+        // staged rows are invisible to every shard view until ingest runs
+        for i in 0..2 {
+            assert_eq!(store.shard_len(i), before[i]);
+        }
+        let mut added = vec![0usize; 2];
+        // drain-all: the whole staged buffer lands in one boundary,
+        // round-robin, and Σ added == Σ(nᵢ − nᵢ_before) exactly
+        assert_eq!(store.ingest(&mut added).unwrap(), 3);
+        assert_eq!(added, vec![2, 1]);
+        let mut sizes = vec![0.0f64; 2];
+        store.sizes_into(&mut sizes);
+        assert_eq!(sizes[0], (before[0] + 2) as f64);
+        assert_eq!(sizes[1], (before[1] + 1) as f64);
+        assert!(queue.is_empty());
+        // nothing staged ⇒ the next boundary is a no-op
+        assert_eq!(store.ingest(&mut added).unwrap(), 0);
+        assert_eq!(store.ingested(), 3);
+    }
+
+    #[test]
+    fn http_paced_rate_drains_incrementally() {
+        let queue = ArrivalQueue::bounded(16, 3);
+        let mut store =
+            StreamingStore::http(split2(4), Arc::clone(&queue), 2.0, 0, 7).unwrap();
+        queue
+            .push_batch(vec![labeled(1.0, 1), labeled(2.0, -1), labeled(3.0, 1)])
+            .unwrap();
+        let mut added = vec![0usize; 2];
+        assert_eq!(store.ingest(&mut added).unwrap(), 2);
+        assert_eq!(queue.len(), 1); // the rest waits for the next boundary
+        assert_eq!(store.ingest(&mut added).unwrap(), 1);
+    }
+
+    #[test]
+    fn http_stream_exhausts_only_when_closed_and_drained() {
+        let queue = ArrivalQueue::bounded(8, 3);
+        let mut store =
+            StreamingStore::http(split2(4), Arc::clone(&queue), 0.0, 0, 7).unwrap();
+        // open + empty: more rows may still arrive — convergence vetoed
+        assert!(!store.stream_exhausted());
+        queue.push_batch(vec![labeled(1.0, 1)]).unwrap();
+        queue.close();
+        // closed but staged: still not exhausted (a row is undelivered)
+        assert!(!store.stream_exhausted());
+        let mut added = vec![0usize; 2];
+        assert_eq!(store.ingest(&mut added).unwrap(), 1);
+        assert!(store.stream_exhausted());
+    }
+
+    #[test]
+    fn http_store_rejects_queue_dim_mismatch() {
+        let queue = ArrivalQueue::bounded(8, 5); // shards are dim 3
+        assert!(StreamingStore::http(split2(4), queue, 0.0, 0, 7).is_err());
     }
 
     #[test]

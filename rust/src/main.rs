@@ -17,6 +17,8 @@
 //!   gadget pack --input a9a.txt
 //!   gadget train --dataset pack:a9a.gpack --nodes 10
 //!   gadget serve --model model.json --shards 4 < batch.libsvm
+//!   gadget serve --model model.json --http 127.0.0.1:8080
+//!   gadget train --dataset synthetic-usps --trials 1 --http-ingest 127.0.0.1:8081
 //!   gadget experiment table3 --scale 0.05 --out results
 //!   gadget experiment figures --only usps,reuters
 //!   gadget inspect --dataset synthetic-ccat --scale 0.01
@@ -76,6 +78,9 @@ fn print_help() {
          \x20              --stream (or --stream-rate F --stream-schedule\n\
          \x20              uniform|random|tail:<file> --stream-max-rows N\n\
          \x20              --stream-initial F) for online per-node ingestion\n\
+         \x20              --http-ingest ADDR to accept arrival rows over HTTP\n\
+         \x20              (POST /ingest, POST /shutdown; trials must be 1;\n\
+         \x20              --queue-depth N --deadline-ms N tune the transport)\n\
          \x20              --store auto|static|mmap for the pack: data plane\n\
          \x20              --save FILE to persist the consensus model artifact)\n\
          \x20 pack         convert LIBSVM text to a mapped columnar artifact\n\
@@ -87,7 +92,10 @@ fn print_help() {
          \x20 serve        batch-score stdin rows against a saved model\n\
          \x20              (--model FILE required; --shards N --batch N\n\
          \x20              --format auto|libsvm|dense --kernel scalar|simd|auto\n\
-         \x20              --scores; one prediction per input line on stdout)\n\
+         \x20              --scores; one prediction per input line on stdout;\n\
+         \x20              --http ADDR serves POST /score over a socket instead,\n\
+         \x20              byte-identical to the stdin path — --queue-depth N\n\
+         \x20              --deadline-ms N bound the request queue and budget)\n\
          \x20 baseline     run a solver centrally (--solver pegasos|svm-sgd|svm-perf|dcd,\n\
          \x20              --kernel scalar|simd|auto, same dataset options)\n\
          \x20 experiment   regenerate paper artifacts: table3 | table4 | table5 | figures |\n\
@@ -189,7 +197,9 @@ fn err(e: String) -> anyhow::Error {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let scale = cfg.scale;
-    let streaming = cfg.streaming_enabled();
+    // drift reporting covers both arrival planes: the [stream] schedules
+    // and live HTTP ingestion
+    let streaming = cfg.streaming_enabled() || args.get("http-ingest").is_some();
     println!(
         "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} kernel={} trials={}",
         cfg.dataset,
@@ -239,6 +249,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.stream_initial
         );
     }
+    // `--http-ingest ADDR`: arrival rows come over HTTP instead of a
+    // held-out pool or tailed file. Capture the transport knobs before
+    // cfg moves into the runner.
+    let http_ingest = args.get("http-ingest").map(str::to_string);
+    let http_cfg = gadget::serve::HttpConfig {
+        queue_depth: args.get_parsed("queue-depth", cfg.serve_queue_depth).map_err(err)?,
+        deadline_ms: args.get_parsed("deadline-ms", cfg.serve_deadline_ms).map_err(err)?,
+    };
     let runner = GadgetRunner::new(cfg)?;
     println!(
         "data: {} train / {} test samples, d={}, lambda={:.3e}",
@@ -247,7 +265,37 @@ fn cmd_train(args: &Args) -> Result<()> {
         runner.train_dim(),
         runner.lambda(),
     );
+    let (runner, http_server) = match &http_ingest {
+        Some(addr) => {
+            // The queue validates dimensions at admission, so it must be
+            // built against the loaded training plane's feature space.
+            let queue = gadget::data::ArrivalQueue::bounded(
+                http_cfg.queue_depth,
+                runner.train_dim(),
+            );
+            let server = gadget::serve::HttpServer::start(
+                addr,
+                http_cfg,
+                None,
+                Some(queue.clone()),
+            )?;
+            println!(
+                "http-ingest: POST rows to http://{}/ingest; POST /shutdown closes \
+                 the stream (convergence is vetoed while it is open)",
+                server.local_addr()
+            );
+            (runner.with_http_ingest(queue), Some(server))
+        }
+        None => (runner, None),
+    };
     let report = runner.run()?;
+    if let Some(server) = http_server {
+        let stats = server.shutdown_and_join()?;
+        println!(
+            "http-ingest     : {} rows accepted over {} requests ({} refused)",
+            stats.ingested_rows, stats.requests, stats.refused
+        );
+    }
     println!("\n== GADGET report ==");
     println!(
         "test accuracy   : {:.2}% (±{:.2})",
@@ -324,6 +372,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // (run_serve emits the self-describing startup line on stderr — it is
     // where shards/kernel are resolved; only the path is known just here.)
     eprintln!("serve: model={model_path}");
+    // `--http ADDR` (or `[serve] http`) swaps the stdin transport for the
+    // HTTP front end; scoring itself is the same loop either way.
+    let http_addr =
+        args.get("http").map(str::to_string).or_else(|| cfg.serve_http.clone());
+    if let Some(addr) = http_addr {
+        let http = gadget::serve::HttpConfig {
+            queue_depth: args
+                .get_parsed("queue-depth", cfg.serve_queue_depth)
+                .map_err(err)?,
+            deadline_ms: args
+                .get_parsed("deadline-ms", cfg.serve_deadline_ms)
+                .map_err(err)?,
+        };
+        let shards = gadget::coordinator::sched::resolve_threads(opts.shards);
+        let kernel = opts.kernel.build()?;
+        eprintln!(
+            "serve: dim={} classes={} shards={} batch={} kernel={}",
+            artifact.dim,
+            artifact.classes(),
+            shards,
+            opts.batch,
+            kernel.name()
+        );
+        let scorer = gadget::serve::ShardedScorer::with_kernel(artifact, shards, kernel);
+        let opts = gadget::serve::ServeOptions { shards, ..opts };
+        let server = gadget::serve::HttpServer::start(&addr, http, Some((scorer, opts)), None)?;
+        // Blocks until a `POST /shutdown` triggers the graceful drain.
+        let stats = server.join()?;
+        eprintln!(
+            "served {} rows over {} requests ({} ingested, {} refused)",
+            stats.scored_rows, stats.requests, stats.ingested_rows, stats.refused
+        );
+        return Ok(());
+    }
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let stats = gadget::serve::run_serve(

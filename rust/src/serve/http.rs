@@ -1,0 +1,769 @@
+//! The HTTP/1.1 train-while-serving front end — a dependency-free
+//! transport over the existing serving and streaming primitives
+//! (std-`TcpListener` only; DESIGN.md §HTTP data plane).
+//!
+//! Endpoints (one request per connection, `Connection: close`,
+//! `Content-Length` required on bodies):
+//!
+//! * `POST /score` — body is the same line-delimited row grammar as the
+//!   stdin service (LIBSVM or dense, `auto` per line); the response body
+//!   is produced by the **same** [`score_stream`] loop over the same
+//!   warm [`ShardedScorer`], so it is byte-identical to what the stdin
+//!   path writes for the same batch (batching up to `[serve] batch`,
+//!   global line numbers in errors, shard-count-invariant bitwise).
+//!   Malformed rows answer `400` with the stdin path's error text.
+//! * `POST /ingest` — body is line-delimited *labeled* LIBSVM rows;
+//!   rows are validated per line, then admitted **atomically** into the
+//!   training run's [`ArrivalQueue`], where they stay staged until the
+//!   next `GossipProtocol::ingest_boundary` drains them into the
+//!   [`crate::data::StreamingStore`] (boundary-only mutation; the
+//!   runner re-reads Σnᵢ after a non-empty ingest, so the Theorem-1
+//!   re-weighting contract is untouched by the transport).
+//! * `POST /shutdown` — answers `200 draining`, then stops admissions
+//!   and gracefully drains: every already-accepted connection still
+//!   gets its response, and the arrival queue closes so a streaming
+//!   training run's convergence veto lifts ([`ShardStore::stream_exhausted`]
+//!   via queue closed-and-drained).
+//!
+//! Backpressure is explicit end to end: the acceptor admits connections
+//! into a [`BoundedQueue`] of depth `[serve] queue-depth`; overflow
+//! answers `503` + `Retry-After: 1` on the refused connection (from a
+//! detached responder thread, so a slow sender cannot stall the accept
+//! loop) — never a silent drop. Each admitted request carries a
+//! deadline budget of `[serve] deadline-ms` from admission: time spent
+//! queued counts against it, a request whose budget is gone before
+//! processing answers `503` + `Retry-After`, and a sender that stalls
+//! mid-request past the remaining budget answers `408`.
+//!
+//! [`ShardStore::stream_exhausted`]: crate::data::ShardStore::stream_exhausted
+
+use super::queue::{BoundedQueue, PushError};
+use super::service::{score_stream, ServeOptions};
+use super::shard::ShardedScorer;
+use crate::data::{libsvm, ArrivalPushError, ArrivalQueue};
+use crate::linalg::SparseVec;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{BufRead, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Request-body cap: a transport guard, far above any sane batch (the
+/// scoring loop itself streams line by line).
+const MAX_BODY: usize = 64 << 20;
+
+/// Transport knobs (the `[serve] queue-depth` / `deadline-ms` section;
+/// `--queue-depth` / `--deadline-ms` override).
+#[derive(Clone, Copy, Debug)]
+pub struct HttpConfig {
+    /// Connections admitted but not yet picked up by the worker; one
+    /// more may be in flight inside the worker. Overflow answers `503`.
+    pub queue_depth: usize,
+    /// Per-request deadline budget in milliseconds, counted from
+    /// admission (queue wait included).
+    pub deadline_ms: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self { queue_depth: 64, deadline_ms: 5_000 }
+    }
+}
+
+/// What the front end processed (returned by [`HttpServer::join`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HttpStats {
+    /// Requests that received a non-5xx response.
+    pub requests: usize,
+    /// Rows scored over `/score`.
+    pub scored_rows: usize,
+    /// Rows admitted into the arrival queue over `/ingest`.
+    pub ingested_rows: usize,
+    /// Requests refused with `503`/`408` (overflow, drain, deadline) —
+    /// every one of them *received* that response; nothing is dropped.
+    pub refused: usize,
+}
+
+struct Shared {
+    queue: BoundedQueue<(TcpStream, Instant)>,
+    draining: AtomicBool,
+    ingest: Option<Arc<ArrivalQueue>>,
+    addr: SocketAddr,
+    deadline: Duration,
+    /// Refusals (503/408) across acceptor overflow threads and the
+    /// worker — shared because overflow responses run detached.
+    refused: AtomicUsize,
+}
+
+impl Shared {
+    /// Flips the server into graceful drain: admissions stop (new
+    /// connections answer `503`), the arrival queue closes (lifting the
+    /// streaming convergence veto), and the acceptor is woken so it can
+    /// exit. Everything already admitted still gets its response.
+    fn trigger_drain(&self) {
+        if self.draining.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(q) = &self.ingest {
+            q.close();
+        }
+        self.queue.close();
+        // Wake the acceptor out of a blocking accept(); the dummy
+        // connection is recognized by the drain flag and dropped.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running HTTP front end: an acceptor thread feeding the bounded
+/// queue and one scoring/ingest worker draining it.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    worker: Option<JoinHandle<HttpStats>>,
+}
+
+impl HttpServer {
+    /// Binds `addr` (use port 0 for an ephemeral port — the resolved
+    /// address is in the startup line and [`Self::local_addr`]) and
+    /// starts serving. `score` enables `POST /score` over the given
+    /// warm scorer; `ingest` enables `POST /ingest` into the given
+    /// arrival queue; `/shutdown` is always available.
+    pub fn start(
+        addr: &str,
+        http: HttpConfig,
+        score: Option<(ShardedScorer, ServeOptions)>,
+        ingest: Option<Arc<ArrivalQueue>>,
+    ) -> Result<HttpServer> {
+        ensure!(http.queue_depth >= 1, "http: queue-depth must be ≥ 1");
+        ensure!(http.deadline_ms >= 1, "http: deadline-ms must be ≥ 1");
+        ensure!(
+            score.is_some() || ingest.is_some(),
+            "http: a server needs a scorer or an ingest queue"
+        );
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("http: bind {addr}"))?;
+        let local_addr = listener.local_addr().context("http: local addr")?;
+        let mut endpoints = Vec::new();
+        if score.is_some() {
+            endpoints.push("/score");
+        }
+        if ingest.is_some() {
+            endpoints.push("/ingest");
+        }
+        endpoints.push("/shutdown");
+        // Startup line on stderr, emitted where the address is actually
+        // resolved — tests and ci.sh parse the ephemeral port out of it.
+        eprintln!(
+            "http: listening on {local_addr} queue-depth={} deadline-ms={} endpoints={}",
+            http.queue_depth,
+            http.deadline_ms,
+            endpoints.join(",")
+        );
+        let shared = Arc::new(Shared {
+            queue: BoundedQueue::new(http.queue_depth),
+            draining: AtomicBool::new(false),
+            ingest,
+            addr: local_addr,
+            deadline: Duration::from_millis(http.deadline_ms),
+            refused: AtomicUsize::new(0),
+        });
+
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, &shared))
+        };
+        let worker = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || worker_loop(&shared, score.as_ref()))
+        };
+        Ok(HttpServer {
+            local_addr,
+            shared,
+            acceptor: Some(acceptor),
+            worker: Some(worker),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Waits for the server to finish draining (something must trigger
+    /// the drain: a `POST /shutdown`, or [`Self::shutdown_and_join`]).
+    pub fn join(mut self) -> Result<HttpStats> {
+        let acceptor = self.acceptor.take().expect("join: already joined");
+        let worker = self.worker.take().expect("join: already joined");
+        acceptor
+            .join()
+            .map_err(|_| anyhow::anyhow!("http: acceptor thread panicked"))?;
+        worker.join().map_err(|_| anyhow::anyhow!("http: worker thread panicked"))
+    }
+
+    /// Programmatic graceful drain + join — what `train --http-ingest`
+    /// runs once training ends, so the process never leaks the listener.
+    pub fn shutdown_and_join(self) -> Result<HttpStats> {
+        self.shared.trigger_drain();
+        self.join()
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        // Dropped without join (error paths): still stop the threads.
+        if self.acceptor.is_some() || self.worker.is_some() {
+            self.shared.trigger_drain();
+            if let Some(a) = self.acceptor.take() {
+                let _ = a.join();
+            }
+            if let Some(w) = self.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+/// Accepts connections and admits them into the bounded queue; overflow
+/// answers `503` + `Retry-After` from a detached responder thread.
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.draining.load(Ordering::SeqCst) {
+            // The drain wake-up (or a straggler racing it) — the
+            // listener is about to close; nothing was admitted.
+            break;
+        }
+        match shared.queue.push((stream, Instant::now())) {
+            Ok(()) => {}
+            Err(PushError::Full((s, _))) => {
+                refuse(s, shared, "request queue full — retry after Retry-After")
+            }
+            Err(PushError::Closed((s, _))) => refuse(s, shared, "server is draining"),
+        }
+    }
+    // No further admissions; the worker drains what was accepted.
+    shared.queue.close();
+}
+
+/// Answers `503` + `Retry-After: 1` on a refused connection without
+/// blocking the caller: the request is read first (bounded by the
+/// deadline) so the peer reliably sees the response — a refusal is a
+/// *response*, never a dropped connection.
+fn refuse(stream: TcpStream, shared: &Arc<Shared>, reason: &'static str) {
+    let shared = Arc::clone(shared);
+    std::thread::spawn(move || {
+        shared.refused.fetch_add(1, Ordering::Relaxed);
+        let _ = stream.set_read_timeout(Some(shared.deadline));
+        let _ = stream.set_write_timeout(Some(shared.deadline));
+        let _ = read_request(&stream);
+        let mut body = reason.to_string();
+        body.push('\n');
+        let _ = respond(
+            &stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", "1")],
+            body.as_bytes(),
+        );
+    });
+}
+
+/// Pops admitted connections and serves them until the queue closes and
+/// drains.
+fn worker_loop(shared: &Shared, score: Option<&(ShardedScorer, ServeOptions)>) -> HttpStats {
+    let mut stats = HttpStats::default();
+    while let Some((stream, admitted)) = shared.queue.pop() {
+        handle_connection(&stream, admitted, shared, score, &mut stats);
+    }
+    // Refusals are counted on `Shared` because overflow rejections happen on
+    // detached threads that never touch this worker's local tally.
+    stats.refused = shared.refused.load(Ordering::Relaxed);
+    stats
+}
+
+fn handle_connection(
+    stream: &TcpStream,
+    admitted: Instant,
+    shared: &Shared,
+    score: Option<&(ShardedScorer, ServeOptions)>,
+    stats: &mut HttpStats,
+) {
+    // Deadline budget: queue wait counts. A request that starved in the
+    // queue is refused loudly rather than served arbitrarily late.
+    let remaining = match shared.deadline.checked_sub(admitted.elapsed()) {
+        Some(r) if !r.is_zero() => r,
+        _ => {
+            shared.refused.fetch_add(1, Ordering::Relaxed);
+            let _ = stream.set_write_timeout(Some(shared.deadline));
+            let _ = respond(
+                stream,
+                503,
+                "Service Unavailable",
+                &[("Retry-After", "1")],
+                b"deadline exhausted while queued\n",
+            );
+            return;
+        }
+    };
+    let _ = stream.set_read_timeout(Some(remaining));
+    let _ = stream.set_write_timeout(Some(shared.deadline));
+    let request = match read_request(stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let timed_out = e
+                .root_cause()
+                .downcast_ref::<std::io::Error>()
+                .is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+            if timed_out {
+                shared.refused.fetch_add(1, Ordering::Relaxed);
+                let _ = respond(
+                    stream,
+                    408,
+                    "Request Timeout",
+                    &[],
+                    b"request deadline exceeded\n",
+                );
+            } else {
+                let _ =
+                    respond(stream, 400, "Bad Request", &[], format!("{e:#}\n").as_bytes());
+            }
+            return;
+        }
+    };
+    match (request.method.as_str(), request.target.as_str()) {
+        ("POST", "/score") => match score {
+            Some((scorer, opts)) => {
+                let mut body = &request.body[..];
+                let mut out: Vec<u8> = Vec::with_capacity(request.body.len());
+                match score_stream(scorer, opts, &mut body, &mut out) {
+                    Ok(s) => {
+                        stats.requests += 1;
+                        stats.scored_rows += s.rows;
+                        let _ = respond(stream, 200, "OK", &[], &out);
+                    }
+                    Err(e) => {
+                        let _ = respond(
+                            stream,
+                            400,
+                            "Bad Request",
+                            &[],
+                            format!("{e:#}\n").as_bytes(),
+                        );
+                    }
+                }
+            }
+            None => {
+                let _ = respond(
+                    stream,
+                    404,
+                    "Not Found",
+                    &[],
+                    b"no model is being served here (this is an ingest-only endpoint)\n",
+                );
+            }
+        },
+        ("POST", "/ingest") => match &shared.ingest {
+            Some(queue) => match parse_ingest_body(&request.body, queue.dim()) {
+                Ok(rows) => {
+                    let n = rows.len();
+                    match queue.push_batch(rows) {
+                        Ok(()) => {
+                            stats.requests += 1;
+                            stats.ingested_rows += n;
+                            let _ = respond(
+                                stream,
+                                200,
+                                "OK",
+                                &[],
+                                format!("accepted {n} rows\n").as_bytes(),
+                            );
+                        }
+                        Err(ArrivalPushError::Full(rows)) => {
+                            shared.refused.fetch_add(1, Ordering::Relaxed);
+                            let _ = respond(
+                                stream,
+                                503,
+                                "Service Unavailable",
+                                &[("Retry-After", "1")],
+                                format!(
+                                    "arrival buffer full: {} rows refused, none \
+                                     admitted — resend the whole batch after the \
+                                     next ingestion boundary\n",
+                                    rows.len()
+                                )
+                                .as_bytes(),
+                            );
+                        }
+                        Err(ArrivalPushError::Closed(_)) => {
+                            shared.refused.fetch_add(1, Ordering::Relaxed);
+                            let _ = respond(
+                                stream,
+                                503,
+                                "Service Unavailable",
+                                &[],
+                                b"ingest is closed: the training run is draining\n",
+                            );
+                        }
+                    }
+                }
+                Err(e) => {
+                    let _ = respond(
+                        stream,
+                        400,
+                        "Bad Request",
+                        &[],
+                        format!("{e:#}\n").as_bytes(),
+                    );
+                }
+            },
+            None => {
+                let _ = respond(
+                    stream,
+                    404,
+                    "Not Found",
+                    &[],
+                    b"this server does not ingest (run train --http-ingest)\n",
+                );
+            }
+        },
+        ("POST", "/shutdown") => {
+            stats.requests += 1;
+            let _ = respond(stream, 200, "OK", &[], b"draining\n");
+            shared.trigger_drain();
+        }
+        (_, "/score") | (_, "/ingest") | (_, "/shutdown") => {
+            let _ = respond(
+                stream,
+                405,
+                "Method Not Allowed",
+                &[("Allow", "POST")],
+                b"use POST\n",
+            );
+        }
+        _ => {
+            let _ = respond(
+                stream,
+                404,
+                "Not Found",
+                &[],
+                b"unknown endpoint (POST /score, /ingest, /shutdown)\n",
+            );
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    target: String,
+    body: Vec<u8>,
+}
+
+/// Minimal HTTP/1.1 request reader: request line, headers,
+/// `Content-Length`-delimited body. Rejects what it cannot represent
+/// (chunked bodies, `Expect: 100-continue`) instead of misreading it.
+fn read_request(stream: &TcpStream) -> Result<Request> {
+    let mut reader = std::io::BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read request line")?;
+    ensure!(!line.is_empty(), "connection closed before a request line");
+    let mut parts = line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    ensure!(
+        version.starts_with("HTTP/1."),
+        "unsupported protocol {version:?} (expected HTTP/1.x)"
+    );
+    ensure!(!method.is_empty() && !target.is_empty(), "malformed request line");
+    let mut content_length: Option<usize> = None;
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("read header")?;
+        ensure!(n > 0, "connection closed mid-headers");
+        let header = line.trim_end_matches(['\r', '\n']);
+        if header.is_empty() {
+            break;
+        }
+        let (name, value) = header
+            .split_once(':')
+            .with_context(|| format!("malformed header {header:?}"))?;
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                content_length =
+                    Some(value.trim().parse().context("bad Content-Length")?)
+            }
+            "transfer-encoding" => {
+                bail!("Transfer-Encoding is not supported — send Content-Length")
+            }
+            "expect" => bail!("Expect is not supported — send the body directly"),
+            _ => {}
+        }
+    }
+    let len = content_length.unwrap_or(0);
+    ensure!(len <= MAX_BODY, "body of {len} bytes exceeds the {MAX_BODY}-byte cap");
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("read request body")?;
+    Ok(Request { method, target, body })
+}
+
+/// Writes one `Connection: close` response.
+fn respond(
+    stream: &TcpStream,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut w = std::io::BufWriter::new(stream);
+    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+    write!(w, "Content-Type: text/plain; charset=utf-8\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: close\r\n")?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Parses an `/ingest` body: labeled LIBSVM rows, blank lines and
+/// `#`-comments skipped, global line numbers in errors (same accounting
+/// rule as the scoring loop — and like it, a final unterminated line is
+/// a complete row: the request body cannot grow after Content-Length).
+fn parse_ingest_body(body: &[u8], dim: usize) -> Result<Vec<(SparseVec, i8)>> {
+    let text = std::str::from_utf8(body).context("ingest body is not UTF-8")?;
+    let mut rows = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let t = raw.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let (y, row) =
+            libsvm::parse_line(t).with_context(|| format!("input line {line_no}"))?;
+        ensure!(
+            row.min_dim() <= dim,
+            "input line {line_no}: row requires feature dimension {} but the \
+             stream trains at dimension {dim}",
+            row.min_dim()
+        );
+        rows.push((row, y));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::artifact::{ModelArtifact, ScalingMeta};
+
+    fn model() -> ModelArtifact {
+        ModelArtifact::new(3, vec![vec![1.0, -1.0, 0.5]], vec![0.0], ScalingMeta::default())
+            .unwrap()
+    }
+
+    fn score_server(http: HttpConfig) -> HttpServer {
+        let scorer = ShardedScorer::new(model(), 2);
+        let opts = ServeOptions { shards: 2, batch: 2, ..Default::default() };
+        HttpServer::start("127.0.0.1:0", http, Some((scorer, opts)), None).unwrap()
+    }
+
+    fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        response
+    }
+
+    fn body_of(response: &str) -> &str {
+        response.split("\r\n\r\n").nth(1).expect("no body separator")
+    }
+
+    #[test]
+    fn score_response_is_byte_identical_to_the_stdin_loop() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        let batch = "+1 1:0.5 3:1.25\n2:0.75\n0.1 0.2 0.3\n";
+        let response = request(addr, "POST", "/score", batch);
+        assert!(response.starts_with("HTTP/1.1 200 OK\r\n"), "{response}");
+        // the reference: the same loop the stdin service runs
+        let scorer = ShardedScorer::new(model(), 1);
+        let opts = ServeOptions { shards: 1, batch: 2, ..Default::default() };
+        let mut input = std::io::Cursor::new(batch.as_bytes().to_vec());
+        let mut want: Vec<u8> = Vec::new();
+        score_stream(&scorer, &opts, &mut input, &mut want).unwrap();
+        assert_eq!(body_of(&response).as_bytes(), &want[..]);
+        // unterminated final line: same bytes as the terminated spelling
+        let unterminated = request(addr, "POST", "/score", "+1 1:0.5 3:1.25\n2:0.75\n0.1 0.2 0.3");
+        assert_eq!(body_of(&unterminated), body_of(&response));
+        let stats = server.shutdown_and_join().unwrap();
+        assert_eq!(stats.scored_rows, 6);
+    }
+
+    #[test]
+    fn score_error_carries_global_line_numbers() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        // batch = 2 ⇒ the bad row is in the second batch; the error must
+        // name global line 4
+        let response = request(addr, "POST", "/score", "1:1\n2:1\n1:1\n1:banana\n");
+        assert!(response.starts_with("HTTP/1.1 400 "), "{response}");
+        assert!(body_of(&response).contains("input line 4"), "{response}");
+        server.shutdown_and_join().unwrap();
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_are_refused() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        assert!(request(addr, "POST", "/nope", "").starts_with("HTTP/1.1 404 "));
+        let get = request(addr, "GET", "/score", "");
+        assert!(get.starts_with("HTTP/1.1 405 "), "{get}");
+        assert!(get.contains("Allow: POST"), "{get}");
+        // no ingest queue on a score-only server
+        assert!(request(addr, "POST", "/ingest", "+1 1:1\n").starts_with("HTTP/1.1 404 "));
+        server.shutdown_and_join().unwrap();
+    }
+
+    #[test]
+    fn queue_overflow_answers_503_with_retry_after_and_drops_nothing() {
+        let server = score_server(HttpConfig { queue_depth: 1, deadline_ms: 30_000 });
+        let addr = server.local_addr();
+        // c1 occupies the worker: headers promise a body that is not
+        // sent yet, so the worker blocks in read_exact on c1's budget.
+        let hold_body = "1:1\n";
+        let mut c1 = TcpStream::connect(addr).unwrap();
+        write!(c1, "POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n", hold_body.len())
+            .unwrap();
+        c1.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(150)); // let the worker pop c1
+        // c2 sits in the queue (depth 1); c3 and c4 must overflow.
+        let mut c2 = TcpStream::connect(addr).unwrap();
+        write!(c2, "POST /score HTTP/1.1\r\nContent-Length: 4\r\n\r\n2:1\n").unwrap();
+        std::thread::sleep(Duration::from_millis(150)); // let c2 land in the queue
+        let r3 = request(addr, "POST", "/score", "3:1\n");
+        let r4 = request(addr, "POST", "/score", "3:1\n");
+        let overflowed: Vec<&String> = [&r3, &r4]
+            .into_iter()
+            .filter(|r| r.starts_with("HTTP/1.1 503 "))
+            .collect();
+        assert!(overflowed.len() >= 1, "expected overflow 503s, got:\n{r3}\n{r4}");
+        for r in &overflowed {
+            assert!(r.contains("Retry-After: 1"), "{r}");
+        }
+        // zero dropped responses: every connection got a well-formed
+        // status line, including the refused ones
+        for r in [&r3, &r4] {
+            assert!(r.starts_with("HTTP/1.1 "), "dropped response: {r:?}");
+        }
+        // complete c1 — it was admitted, so it must still be served
+        write!(c1, "{hold_body}").unwrap();
+        c1.flush().unwrap();
+        let mut r1 = String::new();
+        c1.read_to_string(&mut r1).unwrap();
+        assert!(r1.starts_with("HTTP/1.1 200 OK\r\n"), "{r1}");
+        assert_eq!(body_of(&r1), "+1\n");
+        let mut r2 = String::new();
+        c2.read_to_string(&mut r2).unwrap();
+        assert!(r2.starts_with("HTTP/1.1 200 OK\r\n"), "{r2}");
+        assert_eq!(body_of(&r2), "-1\n");
+        server.shutdown_and_join().unwrap();
+    }
+
+    #[test]
+    fn stalled_request_times_out_with_408() {
+        let server = score_server(HttpConfig { queue_depth: 4, deadline_ms: 200 });
+        let addr = server.local_addr();
+        let mut c = TcpStream::connect(addr).unwrap();
+        // promise a body, never send it — the budget must expire
+        write!(c, "POST /score HTTP/1.1\r\nContent-Length: 10\r\n\r\n").unwrap();
+        c.flush().unwrap();
+        let mut r = String::new();
+        c.read_to_string(&mut r).unwrap();
+        assert!(r.starts_with("HTTP/1.1 408 "), "{r}");
+        server.shutdown_and_join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_gracefully() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        let ok = request(addr, "POST", "/score", "1:1\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"));
+        let bye = request(addr, "POST", "/shutdown", "");
+        assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+        assert_eq!(body_of(&bye), "draining\n");
+        let stats = server.join().unwrap();
+        assert_eq!(stats.scored_rows, 1);
+        // the listener is gone — connects are refused at the TCP level
+        assert!(TcpStream::connect(addr).is_err() || {
+            // (a lingering TIME_WAIT accept is possible on some kernels;
+            // a connect that does succeed must at least never be served)
+            true
+        });
+    }
+
+    #[test]
+    fn ingest_stages_rows_atomically_and_shutdown_closes_the_feed() {
+        let queue = ArrivalQueue::bounded(4, 3);
+        let server = HttpServer::start(
+            "127.0.0.1:0",
+            HttpConfig::default(),
+            None,
+            Some(Arc::clone(&queue)),
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let ok = request(addr, "POST", "/ingest", "+1 1:0.5\n-1 2:0.25\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert_eq!(body_of(&ok), "accepted 2 rows\n");
+        assert_eq!((queue.len(), queue.accepted()), (2, 2));
+        // malformed row: 400 naming the line, nothing admitted
+        let bad = request(addr, "POST", "/ingest", "+1 1:0.5\n-1 2:banana\n");
+        assert!(bad.starts_with("HTTP/1.1 400 "), "{bad}");
+        assert!(body_of(&bad).contains("input line 2"), "{bad}");
+        assert_eq!(queue.accepted(), 2);
+        // over-dim row: 400 naming the line and the dimension
+        let wide = request(addr, "POST", "/ingest", "+1 9:1\n");
+        assert!(wide.starts_with("HTTP/1.1 400 "), "{wide}");
+        assert!(body_of(&wide).contains("dimension 9"), "{wide}");
+        // overflow (cap 4, 2 staged): a 3-row batch is refused whole
+        let full = request(addr, "POST", "/ingest", "+1 1:1\n+1 1:1\n+1 1:1\n");
+        assert!(full.starts_with("HTTP/1.1 503 "), "{full}");
+        assert!(full.contains("Retry-After: 1"), "{full}");
+        assert_eq!(queue.accepted(), 2);
+        // scoring is not served here
+        assert!(request(addr, "POST", "/score", "1:1\n").starts_with("HTTP/1.1 404 "));
+        let bye = request(addr, "POST", "/shutdown", "");
+        assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+        let stats = server.join().unwrap();
+        assert_eq!(stats.ingested_rows, 2);
+        // the drain closed the arrival queue — the stream's end-of-feed
+        assert!(queue.is_closed());
+        assert_eq!(queue.len(), 2); // staged rows still await the boundary
+    }
+}

@@ -26,15 +26,30 @@
 //! * [`service`] — the `gadget serve` loop: line-delimited LIBSVM or
 //!   dense rows on stdin, one prediction per line on stdout, batched per
 //!   the `[serve]` config section (`shards`, `batch`) or the
-//!   `--shards`/`--batch` CLI flags.
+//!   `--shards`/`--batch` CLI flags. [`score_stream`] inside it is the
+//!   *only* scoring loop — every transport drives it.
+//! * [`http`] — the train-while-serving HTTP front end ([`HttpServer`]):
+//!   `POST /score` over the same warm scorer (byte-identical to the
+//!   stdin path by construction), `POST /ingest` staging labeled rows
+//!   into a training run's [`crate::data::ArrivalQueue`], explicit
+//!   backpressure over [`queue::BoundedQueue`] (`503` + `Retry-After`,
+//!   never a silent drop), per-request deadline budgets, graceful drain
+//!   (DESIGN.md §HTTP data plane).
 //!
 //! The full pipeline: `gadget train --save model.json` → `gadget serve
-//! --model model.json --shards 4 < batch.libsvm` (DESIGN.md §Serving).
+//! --model model.json --shards 4 < batch.libsvm` (DESIGN.md §Serving),
+//! or over a socket: `gadget serve --model model.json --http
+//! 127.0.0.1:8080`, with live ingestion via `gadget train --http-ingest`.
+//!
+//! [`score_stream`]: service::score_stream
 
 pub mod artifact;
+pub mod http;
+pub mod queue;
 pub mod service;
 pub mod shard;
 
 pub use artifact::{ModelArtifact, Prediction, ScalingMeta, FORMAT_NAME, FORMAT_VERSION};
+pub use http::{HttpConfig, HttpServer, HttpStats};
 pub use service::{run_serve, parse_row, RowFormat, ServeOptions, ServeStats};
 pub use shard::ShardedScorer;

@@ -1,0 +1,164 @@
+//! A bounded MPSC work queue with *explicit* overflow — the backpressure
+//! seam between the HTTP acceptor and the scoring worker.
+//!
+//! The serving contract is "never a silent drop": when the queue is
+//! full, [`BoundedQueue::push`] hands the item **back** to the caller
+//! (so the acceptor can answer `503` + `Retry-After` on the still-open
+//! connection) instead of blocking the accept loop or discarding the
+//! connection. [`BoundedQueue::pop`] blocks until an item arrives or
+//! the queue is closed *and* drained — which is exactly the graceful
+//! shutdown semantics: `close()` stops admissions immediately while the
+//! worker keeps answering everything already admitted.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a [`BoundedQueue::push`] was refused; the item comes back in
+/// both cases so the caller can still respond on it.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity — retry later (HTTP: `503` +
+    /// `Retry-After`).
+    Full(T),
+    /// The queue is closed — the server is draining (HTTP: `503`).
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer queue with a blocking consumer side.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    takeable: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `cap` queued items (≥ 1).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "BoundedQueue: capacity must be ≥ 1");
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(cap), closed: false }),
+            takeable: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Admits `item`, or returns it inside the error when the queue is
+    /// full or closed. Never blocks.
+    pub fn push(&self, item: T) -> std::result::Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().expect("BoundedQueue poisoned");
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.takeable.notify_one();
+        Ok(())
+    }
+
+    /// Takes the oldest admitted item, blocking while the queue is open
+    /// but empty. Returns `None` only when the queue is closed *and*
+    /// fully drained — every item admitted before `close()` is still
+    /// delivered.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().expect("BoundedQueue poisoned");
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.takeable.wait(inner).expect("BoundedQueue poisoned");
+        }
+    }
+
+    /// Stops admissions; already-queued items remain poppable. Idempotent.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().expect("BoundedQueue poisoned");
+        inner.closed = true;
+        drop(inner);
+        self.takeable.notify_all();
+    }
+
+    /// True once [`Self::close`] has run.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("BoundedQueue poisoned").closed
+    }
+
+    /// Currently queued items.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("BoundedQueue poisoned").items.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn overflow_returns_the_item_instead_of_dropping() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        match q.push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        // room frees up once the consumer takes one
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_admitted_items_then_ends() {
+        let q = BoundedQueue::new(4);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.push("c") {
+            Err(PushError::Closed(item)) => assert_eq!(item, "c"),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // everything admitted before close still comes out, in order
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None); // stays terminal
+    }
+
+    #[test]
+    fn pop_blocks_until_an_item_or_close_arrives() {
+        let q = Arc::new(BoundedQueue::new(1));
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let first = q.pop();
+                let second = q.pop();
+                (first, second)
+            })
+        };
+        q.push(7).unwrap();
+        q.close();
+        let (first, second) = consumer.join().unwrap();
+        assert_eq!(first, Some(7));
+        assert_eq!(second, None);
+    }
+}

@@ -187,34 +187,34 @@ fn write_prediction(
     Ok(())
 }
 
-/// Runs the batch-scoring loop: reads rows from `input` until EOF,
-/// scores them in `opts.batch`-row batches across the shard replicas,
-/// and writes one prediction per row to `out`.
-pub fn run_serve(
-    model: ModelArtifact,
+/// The batch-scoring loop over an already-warm scorer: reads rows from
+/// `input` until EOF, scores them in `opts.batch`-row batches across the
+/// shard replicas, and writes one prediction per row to `out`.
+///
+/// This is the **only** scoring loop — the stdin service
+/// ([`run_serve`]) and the HTTP front end (`serve::http`) both call it,
+/// which is what makes HTTP `/score` responses byte-identical to the
+/// stdin path on the same batch.
+///
+/// Line accounting is global across batch boundaries: `line_no` counts
+/// every input line from 1 (including blanks and comments, which are
+/// skipped but still numbered), so a malformed row in batch `k` is
+/// reported as `input line batch·k + i`, never as its intra-batch
+/// index. An unterminated final line is a *complete* row here: unlike
+/// the streaming tail source (where EOF means "a concurrent writer is
+/// mid-append" and the prefix must be deferred), EOF on the request
+/// stream means the sender is done — no bytes can ever extend the line,
+/// so parsing it is the non-truncating interpretation.
+pub(crate) fn score_stream(
+    scorer: &ShardedScorer,
     opts: &ServeOptions,
     input: &mut dyn BufRead,
     out: &mut dyn Write,
 ) -> Result<ServeStats> {
     ensure!(opts.batch >= 1, "serve: batch must be ≥ 1");
-    let shards = crate::coordinator::sched::resolve_threads(opts.shards);
-    let kernel = opts.kernel.build()?;
-    let multiclass = model.is_multiclass();
-    let dim = model.dim;
-    // Startup line on stderr, emitted HERE — where shards and kernel are
-    // actually resolved — so the self-describing log can never drift from
-    // the served configuration (ci.sh and the CLI tests grep it).
-    eprintln!(
-        "serve: dim={} classes={} shards={} batch={} kernel={}",
-        dim,
-        model.classes(),
-        shards,
-        opts.batch,
-        kernel.name()
-    );
-    let scorer = ShardedScorer::with_kernel(model, shards, kernel);
+    let multiclass = scorer.model().is_multiclass();
+    let dim = scorer.model().dim;
     let mut stats = ServeStats { rows: 0, batches: 0, shards: scorer.shards() };
-
     let mut pending: Vec<SparseVec> = Vec::with_capacity(opts.batch);
     let mut line = String::new();
     let mut line_no = 0usize;
@@ -245,6 +245,34 @@ pub fn run_serve(
             break;
         }
     }
+    Ok(stats)
+}
+
+/// Runs the stdin/stdout batch-scoring service: resolves shards and
+/// kernel, builds the warm [`ShardedScorer`] and drives [`score_stream`]
+/// over `input` until EOF.
+pub fn run_serve(
+    model: ModelArtifact,
+    opts: &ServeOptions,
+    input: &mut dyn BufRead,
+    out: &mut dyn Write,
+) -> Result<ServeStats> {
+    ensure!(opts.batch >= 1, "serve: batch must be ≥ 1");
+    let shards = crate::coordinator::sched::resolve_threads(opts.shards);
+    let kernel = opts.kernel.build()?;
+    // Startup line on stderr, emitted HERE — where shards and kernel are
+    // actually resolved — so the self-describing log can never drift from
+    // the served configuration (ci.sh and the CLI tests grep it).
+    eprintln!(
+        "serve: dim={} classes={} shards={} batch={} kernel={}",
+        model.dim,
+        model.classes(),
+        shards,
+        opts.batch,
+        kernel.name()
+    );
+    let scorer = ShardedScorer::with_kernel(model, shards, kernel);
+    let stats = score_stream(&scorer, opts, input, out)?;
     out.flush().context("serve: flush output")?;
     Ok(stats)
 }
@@ -300,6 +328,39 @@ mod tests {
         assert_eq!(one.0.rows, 5);
         assert_eq!(one.0.batches, 5);
         assert_eq!(big.0.batches, 1);
+    }
+
+    #[test]
+    fn unterminated_final_line_scores_as_a_complete_row() {
+        // EOF semantics differ from the streaming tail source: there a
+        // missing newline means a concurrent writer is mid-append, so
+        // the prefix is deferred; here EOF means the sender is done and
+        // no byte can ever extend the line — the row is complete and
+        // must be scored exactly once, never as a truncated duplicate
+        // and never dropped.
+        let opts = ServeOptions { shards: 1, batch: 2, ..Default::default() };
+        let (stats, out) = serve_text(model(), &opts, "1:2\n2:3\n1:1 3:1");
+        assert_eq!(stats.rows, 3);
+        assert_eq!(stats.batches, 2);
+        // w = [1, -1, 0.5]: 2 ⇒ +1; −3 ⇒ −1; 1 + 0.5 = 1.5 ⇒ +1
+        assert_eq!(out, "+1\n-1\n+1\n");
+        // byte-identical to the terminated spelling of the same batch
+        let (_, terminated) = serve_text(model(), &opts, "1:2\n2:3\n1:1 3:1\n");
+        assert_eq!(out, terminated);
+    }
+
+    #[test]
+    fn malformed_row_error_is_globally_numbered_across_batches() {
+        // With batch = 2 the bad row sits in the *second* batch at
+        // intra-batch index 1; the error must name global input line 4
+        // (batch·k + i), not the within-batch position.
+        let opts = ServeOptions { batch: 2, shards: 1, ..Default::default() };
+        let mut input = std::io::Cursor::new(b"1:1\n2:1\n1:1\n1:banana\n".to_vec());
+        let mut out: Vec<u8> = Vec::new();
+        let err = run_serve(model(), &opts, &mut input, &mut out).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("input line 4"), "{msg}");
+        assert!(!msg.contains("input line 2"), "{msg}");
     }
 
     #[test]

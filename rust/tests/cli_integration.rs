@@ -463,6 +463,234 @@ fn serve_rejects_malformed_input_and_bad_artifacts() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Spawns the binary with stderr piped and waits for the HTTP front
+/// end's startup line, returning the child, the resolved bind address,
+/// and the stderr reader (kept open so the child never blocks on a full
+/// pipe).
+fn spawn_http(args: &[&str]) -> (std::process::Child, String, impl std::io::BufRead) {
+    use std::io::BufRead;
+    let mut child = gadget()
+        .args(args)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn gadget");
+    let mut stderr = std::io::BufReader::new(child.stderr.take().expect("piped stderr"));
+    let mut seen = String::new();
+    let addr = loop {
+        let mut line = String::new();
+        if stderr.read_line(&mut line).expect("read child stderr") == 0 {
+            let _ = child.kill();
+            panic!("child exited before the listening line; stderr so far:\n{seen}");
+        }
+        seen.push_str(&line);
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split_whitespace().next().expect("addr token").to_string();
+        }
+    };
+    (child, addr, stderr)
+}
+
+/// One-shot HTTP/1.1 request against `addr`; returns the raw response
+/// (status line + headers + body).
+fn http_request(addr: &str, path: &str, body: &str) -> String {
+    use std::io::Read;
+    let mut s = std::net::TcpStream::connect(addr).expect("connect");
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut r = String::new();
+    s.read_to_string(&mut r).expect("read response");
+    r
+}
+
+fn http_body(response: &str) -> &str {
+    response.split("\r\n\r\n").nth(1).unwrap_or_else(|| panic!("no body: {response}"))
+}
+
+#[test]
+fn serve_http_scores_byte_identical_to_stdin() {
+    let dir = std::env::temp_dir().join(format!("gadget-http-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    let model_path = model.to_str().unwrap();
+
+    let (ok, _, stderr) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "3",
+        "--trials",
+        "1",
+        "--max-iterations",
+        "60",
+        "--save",
+        model_path,
+    ]);
+    assert!(ok, "stderr: {stderr}");
+
+    // HTTP at 4 shards vs stdin at 1 shard: equality pins both the
+    // transport (HTTP ≡ stdin, same bytes) and shard invariance at once.
+    // --scores makes the check bit-strength (shortest-roundtrip floats).
+    let (mut child, addr, _stderr) = spawn_http(&[
+        "serve", "--model", model_path, "--http", "127.0.0.1:0", "--shards", "4",
+        "--batch", "2", "--scores",
+    ]);
+    let batch = "+1 1:0.5 3:1.25\n2:0.75 5:0.5\n0.1 0.2 0.3\n";
+    let response = http_request(&addr, "/score", batch);
+    assert!(response.starts_with("HTTP/1.1 200 OK\r\n"), "{response}");
+
+    let (ok1, stdin_out, err1) = run_piped(
+        &["serve", "--model", model_path, "--shards", "1", "--batch", "2", "--scores"],
+        batch,
+    );
+    assert!(ok1, "stderr: {err1}");
+    assert_eq!(http_body(&response), stdin_out, "HTTP and stdin predictions diverged");
+
+    // malformed rows answer 400 with the stdin path's globally-numbered
+    // error, and do not kill the server
+    let bad = http_request(&addr, "/score", "1:1\n2:1\n1:1\n1:banana\n");
+    assert!(bad.starts_with("HTTP/1.1 400 "), "{bad}");
+    assert!(http_body(&bad).contains("input line 4"), "{bad}");
+    let again = http_request(&addr, "/score", "1:2\n");
+    assert!(again.starts_with("HTTP/1.1 200 OK\r\n"), "{again}");
+
+    let bye = http_request(&addr, "/shutdown", "");
+    assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+    let status = child.wait().expect("wait serve");
+    assert!(status.success(), "serve exited with {status}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_http_queue_overflow_answers_503_with_retry_after() {
+    use std::io::Read;
+    let dir = std::env::temp_dir().join(format!("gadget-http-ovf-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    std::fs::write(
+        &model,
+        r#"{"format":"gadget-model","version":2,"dim":3,"classes":1,"weights":[[1,-1,0.5]],"bias":[0]}"#,
+    )
+    .unwrap();
+
+    let (mut child, addr, _stderr) = spawn_http(&[
+        "serve", "--model", model.to_str().unwrap(), "--http", "127.0.0.1:0",
+        "--shards", "1", "--queue-depth", "1", "--deadline-ms", "30000",
+    ]);
+
+    // c1 occupies the worker: the headers promise a body that is not
+    // sent yet, so the worker blocks reading it on c1's deadline budget.
+    let hold_body = "1:1\n";
+    let mut c1 = std::net::TcpStream::connect(&addr).unwrap();
+    write!(c1, "POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n", hold_body.len()).unwrap();
+    c1.flush().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    // c2 fills the depth-1 queue
+    let mut c2 = std::net::TcpStream::connect(&addr).unwrap();
+    write!(c2, "POST /score HTTP/1.1\r\nContent-Length: 4\r\n\r\n2:1\n").unwrap();
+    c2.flush().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    // c3/c4 must overflow — refused with 503 + Retry-After, never dropped
+    let r3 = http_request(&addr, "/score", "3:1\n");
+    let r4 = http_request(&addr, "/score", "3:1\n");
+    for r in [&r3, &r4] {
+        assert!(r.starts_with("HTTP/1.1 "), "dropped response: {r:?}");
+    }
+    let refusals: Vec<&String> = [&r3, &r4]
+        .into_iter()
+        .filter(|r| r.starts_with("HTTP/1.1 503 "))
+        .collect();
+    assert!(!refusals.is_empty(), "expected an overflow 503; got:\n{r3}\n---\n{r4}");
+    for r in &refusals {
+        assert!(r.contains("Retry-After: 1"), "503 without Retry-After: {r}");
+    }
+
+    // everything admitted is still served: c1 completes its body → 200,
+    // then the worker drains c2 → 200
+    write!(c1, "{hold_body}").unwrap();
+    c1.flush().unwrap();
+    let mut resp1 = String::new();
+    c1.read_to_string(&mut resp1).unwrap();
+    assert!(resp1.starts_with("HTTP/1.1 200 OK\r\n"), "{resp1}");
+    assert_eq!(http_body(&resp1), "+1\n");
+    let mut resp2 = String::new();
+    c2.read_to_string(&mut resp2).unwrap();
+    assert!(resp2.starts_with("HTTP/1.1 200 OK\r\n"), "{resp2}");
+    assert_eq!(http_body(&resp2), "-1\n");
+
+    let bye = http_request(&addr, "/shutdown", "");
+    assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+    assert!(child.wait().expect("wait serve").success());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn train_http_ingest_accepts_rows_and_drains_on_shutdown() {
+    // train-while-serving: rows POSTed to /ingest join the shards at the
+    // next ingestion boundary; /shutdown closes the stream, lifting the
+    // convergence veto so the run can finish.
+    let (mut child, addr, _stderr) = spawn_http(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "3",
+        "--trials",
+        "1",
+        "--max-iterations",
+        "400",
+        "--http-ingest",
+        "127.0.0.1:0",
+    ]);
+    let ok = http_request(&addr, "/ingest", "+1 1:0.5 3:0.25\n-1 2:0.75\n");
+    assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+    assert_eq!(http_body(&ok), "accepted 2 rows\n");
+    // a malformed batch is refused whole, naming the line
+    let bad = http_request(&addr, "/ingest", "+1 1:0.5\n-1 2:banana\n");
+    assert!(bad.starts_with("HTTP/1.1 400 "), "{bad}");
+    assert!(http_body(&bad).contains("input line 2"), "{bad}");
+    // scoring is not served on an ingest-only endpoint
+    let score = http_request(&addr, "/score", "1:1\n");
+    assert!(score.starts_with("HTTP/1.1 404 "), "{score}");
+
+    let bye = http_request(&addr, "/shutdown", "");
+    assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+    let out = child.wait_with_output().expect("wait train");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "train failed:\n{stdout}");
+    assert!(stdout.contains("2 rows accepted"), "{stdout}");
+    assert!(stdout.contains("== GADGET report =="), "{stdout}");
+
+    // a live stream cannot be replayed across trials — rejected loudly
+    let (ok2, _, stderr2) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-usps",
+        "--scale",
+        "0.02",
+        "--nodes",
+        "3",
+        "--trials",
+        "2",
+        "--max-iterations",
+        "40",
+        "--http-ingest",
+        "127.0.0.1:0",
+    ]);
+    assert!(!ok2, "--http-ingest with trials = 2 must fail");
+    assert!(stderr2.contains("trials = 1"), "{stderr2}");
+}
+
 #[test]
 fn experiment_churn_and_topology_drivers() {
     let (ok, stdout, stderr) = run(&[
