@@ -16,7 +16,11 @@
 use gadget::config::{ExperimentConfig, SchedulerKind};
 use gadget::coordinator::sched::{Parallel, ScopedSpawn};
 use gadget::coordinator::{GadgetRunner, NativeBackend};
+use gadget::data::synthetic::{generate, DatasetSpec};
 use gadget::experiments::{table5, ExperimentOpts};
+use gadget::harness::bench;
+use gadget::linalg::{kernel, StepKind};
+use gadget::solver::{Pegasos, PegasosParams, Solver};
 use gadget::util::Json;
 
 fn env_f64(key: &str, default: f64) -> f64 {
@@ -153,6 +157,54 @@ fn main() {
         scoped_s / pooled_s.max(1e-12)
     );
 
+    // ---- step representation A/B: scaled O(nnz) vs dense O(d) -------------
+    // The same sweep `hotpath` section "step representation A/B" prints
+    // interactively, persisted here so BENCH_speedup.json tracks the
+    // dense/scaled ratio per nnz/d shape across PRs.
+    println!("\nStep representation A/B (Pegasos 256-iteration fit, batch=1, scalar kernel):");
+    let mut step_points = Vec::new();
+    for (d, nnz) in [(1024usize, 512usize), (1024, 76), (8315, 60), (47236, 76)] {
+        let spec = DatasetSpec {
+            name: format!("step-{d}"),
+            train_size: 4096,
+            test_size: 64,
+            features: d,
+            nnz_per_row: nnz,
+            noise: 0.05,
+            positive_rate: 0.5,
+            lambda: 1e-4,
+        };
+        let train = generate(&spec, 17, 0.05).train;
+        let params = PegasosParams {
+            lambda: 1e-4,
+            iterations: 256,
+            batch_size: 1,
+            project: true,
+            seed: 9,
+        };
+        let time_fit = |step: StepKind| {
+            let mut solver = Pegasos::with_options(params.clone(), kernel::scalar(), step);
+            bench(&format!("{step} d={d}"), 2, 20, || {
+                std::hint::black_box(solver.fit(&train));
+            })
+            .median_secs
+        };
+        let scaled_s = time_fit(StepKind::Scaled);
+        let dense_s = time_fit(StepKind::Dense);
+        let ratio = dense_s / scaled_s.max(1e-12);
+        println!(
+            "  d={d:<5} nnz={nnz:<3}: scaled {scaled_s:.4}s  dense {dense_s:.4}s  \
+             ({ratio:.2}x dense/scaled)"
+        );
+        step_points.push(Json::obj(vec![
+            ("d", Json::Num(d as f64)),
+            ("nnz", Json::Num(nnz as f64)),
+            ("scaled_secs", Json::Num(scaled_s)),
+            ("dense_secs", Json::Num(dense_s)),
+            ("dense_over_scaled", Json::Num(ratio)),
+        ]));
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("scheduler_threads_sweep".into())),
         (
@@ -171,6 +223,24 @@ fn main() {
         // the arithmetic backend the sweep trained on, so logs stay
         // self-describing (kernel A/B itself lives in `hotpath`)
         ("kernel", Json::Str("scalar".into())),
+        (
+            "step",
+            Json::obj(vec![
+                ("default", Json::Str("scaled".into())),
+                ("reference", Json::Str("dense".into())),
+                ("sweep", Json::Arr(step_points)),
+                (
+                    "note",
+                    Json::Str(
+                        "Pegasos 256-iteration fit, batch=1, scalar kernel; the \
+                         tracked quantity is dense_over_scaled per nnz/d ratio \
+                         (hotpath section 'step representation A/B' has the \
+                         interactive form)"
+                            .into(),
+                    ),
+                ),
+            ]),
+        ),
         ("points", Json::Arr(points)),
         (
             "dispatch_overhead",

@@ -47,6 +47,7 @@ run_advisory cargo fmt --all -- --check
 # strict. --features simd so the gated kernel-selection paths are linted
 # too (the kernel module itself compiles either way).
 run_advisory cargo clippy --all-targets --features simd -- -D warnings \
+    -W clippy::perf \
     -A clippy::needless_range_loop \
     -A clippy::too_many_arguments \
     -A clippy::manual_div_ceil \
@@ -54,6 +55,10 @@ run_advisory cargo clippy --all-targets --features simd -- -D warnings \
 
 run_hard cargo build --release
 run_hard cargo test -q
+# Bench harnesses must keep compiling even though CI never runs them (a
+# figure regeneration that fails to build is found here, not at paper
+# time).
+run_hard cargo bench --no-run
 
 # The scheduler-equivalence contract must be worker-count-invariant:
 # re-run the pool-size-dependent equivalence tests (filter: every test
@@ -95,6 +100,16 @@ run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test sto
 run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test mixer_equivalence
 run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test mixer_equivalence
 run_hard cargo test -q --test topology_generators
+
+# Step-representation seam: the scaled-iterate fast path must track the
+# dense reference within its documented bound, and the dense path's
+# scheduler invariance must hold bitwise — at the same degenerate and
+# multi-worker pool sizes as the other equivalence gates. The
+# allocation-free pin runs in release (the assertion is
+# release-gated; the debug pass above ran it as a smoke).
+run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test step_equivalence
+run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test step_equivalence
+run_hard cargo test -q --release --test alloc_regression
 
 # Kernel-layer matrix. The feature compiles identical arithmetic — it
 # only unlocks runtime selection — so the simd build re-runs just the

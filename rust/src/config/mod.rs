@@ -16,7 +16,7 @@ use crate::Result;
 use anyhow::{bail, Context};
 
 pub use crate::data::{StoreKind, StreamSchedule};
-pub use crate::linalg::KernelKind;
+pub use crate::linalg::{KernelKind, StepKind};
 
 /// Compute backend for the local Pegasos step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -139,6 +139,12 @@ pub struct ExperimentConfig {
     /// build and has its own ULP-bounded equivalence contract (see
     /// `linalg::kernel`).
     pub kernel: KernelKind,
+    /// Solver step representation (`[runtime]` section:
+    /// `step = "dense" | "scaled" | "auto"`). `scaled` is the O(nnz)
+    /// scaled-iterate fast path (`auto` resolves to it); `dense` is the
+    /// O(d) reference loop the fast path is pinned against in
+    /// `rust/tests/step_equivalence.rs` (see `linalg::scaled`).
+    pub step: StepKind,
     /// Shard replica count for the batch-inference service (`[serve]`
     /// section: `shards = N`; 0 = one per available core). Predictions
     /// are bitwise shard-count-invariant — this only moves work.
@@ -226,6 +232,7 @@ impl Default for ExperimentConfig {
             scheduler: SchedulerKind::Sequential,
             threads: 0,
             kernel: KernelKind::Scalar,
+            step: StepKind::Auto,
             serve_shards: 0,
             serve_batch: 256,
             serve_http: None,
@@ -447,6 +454,12 @@ impl ExperimentConfig {
                         .parse()
                         .map_err(|e: String| anyhow::anyhow!(e))?
                 }
+                "runtime.step" | "step" => {
+                    cfg.step = value
+                        .as_str_or(k)?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?
+                }
                 // `[serve]` section (flat spellings accepted too).
                 "serve.shards" | "shards" => cfg.serve_shards = value.as_usize_or(k)?,
                 "serve.batch" | "batch" => cfg.serve_batch = value.as_usize_or(k)?,
@@ -611,6 +624,13 @@ impl ConfigBuilder {
     /// Sets the kernel backend behind the hot loops.
     pub fn kernel(mut self, k: KernelKind) -> Self {
         self.cfg.kernel = k;
+        self
+    }
+
+    /// Sets the solver step representation (dense reference vs. scaled
+    /// fast path).
+    pub fn step(mut self, s: StepKind) -> Self {
+        self.cfg.step = s;
         self
     }
 
@@ -842,6 +862,30 @@ snapshot_every = 10
         // resolution, not here — a scalar-build must still *parse* simd
         // configs so the error can name the missing feature)
         assert!(ExperimentConfig::from_toml("[runtime]\nkernel = \"avx\"").is_err());
+    }
+
+    #[test]
+    fn step_key_round_trips() {
+        let cfg = ExperimentConfig::from_toml(
+            "dataset = \"synthetic-usps\"\n[runtime]\nstep = \"dense\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.step, StepKind::Dense);
+        // flat spelling, and the other variants, parse too
+        assert_eq!(
+            ExperimentConfig::from_toml("step = \"scaled\"").unwrap().step,
+            StepKind::Scaled
+        );
+        assert_eq!(
+            ExperimentConfig::from_toml("step = \"auto\"").unwrap().step,
+            StepKind::Auto
+        );
+        // default + builder
+        assert_eq!(ExperimentConfig::default().step, StepKind::Auto);
+        let b = ExperimentConfig::builder().step(StepKind::Dense).build().unwrap();
+        assert_eq!(b.step, StepKind::Dense);
+        // bad value rejected at parse
+        assert!(ExperimentConfig::from_toml("[runtime]\nstep = \"sparse\"").is_err());
     }
 
     #[test]

@@ -50,22 +50,40 @@ pub trait LocalBackend {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-rust sparse backend: O(batch·nnz) per step via the scaled-vector
-/// trick, O(d) only at entry/exit (densify). The scaled-vector state and
-/// the batch/violator scratch buffers persist across calls so the
+/// Per-node reusable step scratch: every buffer the local step needs
+/// across iterations, allocated lazily on first use and reused forever.
+/// This is the solver half of the allocation-free iteration loop — the
+/// dispatch half is [`crate::pool::ParallelExec::run_indexed`] — and is
+/// what the zero-allocation regression test
+/// (`rust/tests/alloc_regression.rs`) pins.
+#[derive(Debug, Default)]
+pub struct StepScratch {
+    /// Scaled-iterate state `w = s·v` (lazily sized to the weight dim).
+    sv: Option<crate::linalg::ScaledIterate>,
+    /// Pre-sampled batch indices for one local step.
+    batch: Vec<usize>,
+    /// Violator indices flagged at the current `w`.
+    violators: Vec<usize>,
+}
+
+/// Pure-rust sparse backend: O(batch·nnz) per step via the scaled-iterate
+/// trick, O(d) only at entry/exit (densify). All mutable state lives in a
+/// per-node [`StepScratch`] arena that persists across calls, so the
 /// per-iteration hot path allocates nothing (EXPERIMENTS.md §Perf).
 ///
 /// The margin dots dispatch through the backend's [`Kernel`] handle
 /// ([`Self::with_kernel`]; `Default` is the scalar reference): on the
 /// scalar backend every bit of the trajectory matches the pre-kernel-layer
 /// loops, on the SIMD backend margins near the hinge threshold may resolve
-/// differently within the kernel's documented ULP bound.
+/// differently within the kernel's documented ULP bound. The step
+/// representation ([`Self::with_options`]; `[runtime] step` / `--step`)
+/// selects between the scaled fast path and the O(d) dense reference loop,
+/// which are pinned against each other in `rust/tests/step_equivalence.rs`.
 #[derive(Debug)]
 pub struct NativeBackend {
-    sv: Option<crate::solver::ScaledVector>,
-    batch: Vec<usize>,
-    violators: Vec<usize>,
+    scratch: StepScratch,
     kernel: &'static dyn Kernel,
+    step: crate::linalg::StepKind,
 }
 
 impl Default for NativeBackend {
@@ -77,30 +95,34 @@ impl Default for NativeBackend {
 impl NativeBackend {
     /// A backend whose margin dots run on `kernel`.
     pub fn with_kernel(kernel: &'static dyn Kernel) -> Self {
-        Self { sv: None, batch: Vec::new(), violators: Vec::new(), kernel }
+        Self::with_options(kernel, crate::linalg::StepKind::Auto)
+    }
+
+    /// A backend with an explicit kernel *and* step representation.
+    pub fn with_options(kernel: &'static dyn Kernel, step: crate::linalg::StepKind) -> Self {
+        Self { scratch: StepScratch::default(), kernel, step }
     }
 
     /// The kernel backend this learner computes on.
     pub fn kernel(&self) -> &'static dyn Kernel {
         self.kernel
     }
-}
 
-impl LocalBackend for NativeBackend {
-    fn local_step(&mut self, ctx: &mut StepContext<'_>, w: &mut [f64]) -> Result<()> {
-        let sv = match &mut self.sv {
+    /// The scaled-iterate step loop (O(1) shrink, O(nnz) update).
+    fn local_step_scaled(&mut self, ctx: &mut StepContext<'_>, w: &mut [f64]) -> Result<()> {
+        let scratch = &mut self.scratch;
+        let sv = match &mut scratch.sv {
             Some(sv) if sv.dim() == w.len() => {
                 sv.load_dense(w);
                 sv
             }
             _ => {
-                self.sv = Some(crate::solver::ScaledVector::from_dense(w));
-                self.sv.as_mut().unwrap()
+                scratch.sv = Some(crate::linalg::ScaledIterate::from_dense(w));
+                scratch.sv.as_mut().unwrap()
             }
         };
         let radius = 1.0 / ctx.lambda.sqrt();
         let n = ctx.shard.len();
-        anyhow::ensure!(n > 0, "native backend: empty shard");
         for s in 0..ctx.local_steps {
             // Effective step counter: iterations are global (t), fused local
             // steps advance it fractionally past t to keep αₜ decreasing.
@@ -111,25 +133,25 @@ impl LocalBackend for NativeBackend {
             // Sample the batch (all RNG draws up front, same draw order as
             // the pre-kernel per-sample loop), then flag violators at the
             // current w in one kernel call.
-            self.batch.clear();
+            scratch.batch.clear();
             for _ in 0..ctx.batch_size {
-                self.batch.push(ctx.rng.below(n));
+                scratch.batch.push(ctx.rng.below(n));
             }
-            self.violators.clear();
+            scratch.violators.clear();
             self.kernel.hinge_subgrad_accum(
                 sv.storage(),
                 sv.scale(),
                 ctx.shard.rows,
                 ctx.shard.labels,
-                &self.batch,
-                &mut self.violators,
+                &scratch.batch,
+                &mut scratch.violators,
             );
             if shrink > 0.0 {
                 sv.scale_by(shrink);
             } else {
                 sv.set_zero();
             }
-            for &i in &self.violators {
+            for &i in &scratch.violators {
                 let (x, y) = ctx.shard.sample(i);
                 sv.add_sparse(step * y, x);
             }
@@ -137,8 +159,60 @@ impl LocalBackend for NativeBackend {
                 sv.project_to_ball(radius);
             }
         }
-        sv.to_dense_into(w);
+        sv.materialize_into(w);
         Ok(())
+    }
+
+    /// The O(d) dense reference loop: same RNG draw order and step
+    /// schedule, plain in-place dense arithmetic on `w` (no scaled state,
+    /// no materialization boundary).
+    fn local_step_dense(&mut self, ctx: &mut StepContext<'_>, w: &mut [f64]) -> Result<()> {
+        let scratch = &mut self.scratch;
+        let radius = 1.0 / ctx.lambda.sqrt();
+        let n = ctx.shard.len();
+        for s in 0..ctx.local_steps {
+            let t_eff = (ctx.t - 1) * ctx.local_steps + s + 1;
+            let alpha = 1.0 / (ctx.lambda * t_eff as f64);
+            let shrink = 1.0 - ctx.lambda * alpha; // = 1 − 1/t_eff
+            let step = alpha / ctx.batch_size as f64;
+            scratch.batch.clear();
+            for _ in 0..ctx.batch_size {
+                scratch.batch.push(ctx.rng.below(n));
+            }
+            scratch.violators.clear();
+            self.kernel.hinge_subgrad_accum(
+                w,
+                1.0,
+                ctx.shard.rows,
+                ctx.shard.labels,
+                &scratch.batch,
+                &mut scratch.violators,
+            );
+            if shrink > 0.0 {
+                crate::linalg::scale_assign(shrink, w);
+            } else {
+                w.fill(0.0);
+            }
+            for &i in &scratch.violators {
+                let (x, y) = ctx.shard.sample(i);
+                self.kernel.axpy_row(step * y, x.into(), w);
+            }
+            if ctx.project {
+                crate::linalg::project_to_ball(w, radius);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl LocalBackend for NativeBackend {
+    fn local_step(&mut self, ctx: &mut StepContext<'_>, w: &mut [f64]) -> Result<()> {
+        anyhow::ensure!(ctx.shard.len() > 0, "native backend: empty shard");
+        if self.step.is_scaled() {
+            self.local_step_scaled(ctx, w)
+        } else {
+            self.local_step_dense(ctx, w)
+        }
     }
 
     fn name(&self) -> &'static str {

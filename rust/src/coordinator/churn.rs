@@ -143,7 +143,7 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
     // `[runtime] kernel` threads through exactly like the plain runner:
     // one handle for the local-step margins and the mixing panels.
     let kernel = cfg.kernel.build()?;
-    let mut seq_backend = NativeBackend::with_kernel(kernel);
+    let mut seq_backend = NativeBackend::with_options(kernel, cfg.step);
     if cfg.scheduler == SchedulerKind::Async {
         // Churn events are keyed to the global iteration clock, which the
         // asynchronous engine does not have — make the fallback visible.
@@ -156,7 +156,7 @@ pub fn run_with_churn(cfg: &ExperimentConfig, schedule: &ChurnSchedule) -> Resul
         // Pool capped at m — more workers than nodes can never be used.
         SchedulerKind::Parallel => Box::new(
             Parallel::new(super::sched::resolve_threads(cfg.threads).min(m), || {
-                Ok(Box::new(NativeBackend::with_kernel(kernel))
+                Ok(Box::new(NativeBackend::with_options(kernel, cfg.step))
                     as Box<dyn super::backend::LocalBackend + Send>)
             })?
             .with_kernel(kernel),

@@ -367,8 +367,17 @@ impl GadgetRunner {
     /// a third implementation slot, see DESIGN.md §Kernel backends).
     fn make_backend(&self, kernel: &'static dyn Kernel) -> Result<Box<dyn LocalBackend + Send>> {
         Ok(match self.cfg.backend {
-            Backend::Native => Box::new(NativeBackend::with_kernel(kernel)),
+            Backend::Native => Box::new(NativeBackend::with_options(kernel, self.cfg.step)),
             Backend::Xla => {
+                // Same loudness for `--step`: the artifact's update loop is
+                // whatever was compiled — a log claiming step=dense must
+                // never have run the AOT path.
+                anyhow::ensure!(
+                    self.cfg.step.is_scaled(),
+                    "backend = \"xla\" supports only step = \"scaled\"/\"auto\" \
+                     (the AOT artifact's update arithmetic is fixed at compile \
+                     time; the dense reference loop is a native-path concern)"
+                );
                 // The artifact's arithmetic is compiled into the HLO —
                 // training it while the report claims kernel=simd would be
                 // the mislabeled-benchmark case the kernel layer forbids.
@@ -481,6 +490,15 @@ impl GadgetRunner {
                      (the thread-per-node engine is the randomized push-sum \
                      mass exchange itself); use the sequential or parallel \
                      scheduler for alternative mixers"
+                );
+                // The embedded learners run the scaled-iterate default; a
+                // log claiming step=dense must never have run scaled.
+                anyhow::ensure!(
+                    self.cfg.step.is_scaled(),
+                    "scheduler = \"async\" supports only step = \"scaled\"/\"auto\" \
+                     (the thread-per-node engine embeds scaled-step learners); \
+                     use the sequential or parallel scheduler for the dense \
+                     reference loop"
                 );
                 self.run_async()
             }

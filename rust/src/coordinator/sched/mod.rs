@@ -36,7 +36,7 @@ pub use protocol::{GossipProtocol, MassState, ProtocolParams};
 use crate::coordinator::backend::LocalBackend;
 use crate::coordinator::node::NodeState;
 use crate::linalg::Kernel;
-use crate::pool::{ParallelExec, Task, WorkerPool, SERIAL_EXEC};
+use crate::pool::{ParallelExec, WorkerPool, SERIAL_EXEC};
 use crate::Result;
 
 /// A per-node work item: receives the worker's backend, the node's
@@ -177,9 +177,22 @@ impl Scheduler for Sequential<'_> {
     }
 }
 
+/// A raw pointer that may cross threads. Used by the pooled scheduler's
+/// indexed dispatch, where each index derives disjoint `&mut` access
+/// from a shared base pointer (the disjointness argument lives at the
+/// dereference sites).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+// SAFETY: a SendPtr is only dereferenced under the per-index
+// disjointness invariants documented where it is used.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Collects disjoint `&mut` references to the selected nodes, in id
 /// order, without unsafe: one forward walk of the slice's `iter_mut`.
-/// Requires `validate_ids`-clean ids.
+/// Requires `validate_ids`-clean ids. (Used by the [`ScopedSpawn`]
+/// baseline; the pooled [`Parallel`] computes the same partition by
+/// index arithmetic to keep its dispatch allocation-free.)
 fn collect_node_refs<'n>(
     nodes: &'n mut [NodeState],
     ids: &[usize],
@@ -203,8 +216,11 @@ fn collect_node_refs<'n>(
 /// ([`crate::pool::WorkerPool`]) with one backend per worker. Workers
 /// spawn once here, at construction, and park between dispatches; each
 /// `for_each_node` call splits the selected id set into contiguous
-/// chunks, ships one borrowed task per chunk to the pool, and blocks
-/// until the phase completes. Since node results depend only on the
+/// chunks by index arithmetic and ships them through the pool's
+/// allocation-free indexed dispatch
+/// ([`crate::pool::ParallelExec::run_indexed`]) — at steady state an
+/// iteration's two phases allocate nothing. Since node results depend
+/// only on the
 /// node's own state (shard, RNG substream, weight vector) and the
 /// backends re-initialize their scratch from `w` on every call, the
 /// results are bitwise identical to [`Sequential`] regardless of worker
@@ -285,22 +301,34 @@ impl Scheduler for Parallel {
             return Ok(());
         }
         let Self { pool, backends, .. } = self;
-        let mut refs = collect_node_refs(nodes, ids);
-        let workers = backends.len().min(refs.len()).max(1);
-        let chunk = (refs.len() + workers - 1) / workers;
-        let tasks: Vec<Task<'_>> = backends
-            .iter_mut()
-            .zip(refs.chunks_mut(chunk))
-            .map(|(backend, slab)| {
-                Box::new(move || -> Result<()> {
-                    for (slot, node) in slab.iter_mut() {
-                        f(&mut **backend, *slot, node)?;
-                    }
-                    Ok(())
-                }) as Task<'_>
-            })
-            .collect();
-        pool.run_tasks(tasks)
+        // Same contiguous partition of the slot range as the boxed-task
+        // implementation (and as `ScopedSpawn`), computed by index
+        // arithmetic so the dispatch enqueues lightweight index jobs —
+        // no per-call `Vec` of node refs, no boxed closures. Trailing
+        // indices past the last slot clamp to an empty range.
+        let workers = backends.len().min(ids.len()).max(1);
+        let chunk = (ids.len() + workers - 1) / workers;
+        let n_slots = ids.len();
+        let nodes_ptr = SendPtr(nodes.as_mut_ptr());
+        let backends_ptr = SendPtr(backends.as_mut_ptr());
+        pool.run_indexed(workers, &move |c| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n_slots);
+            // SAFETY: index `c` exclusively owns backend `c` (indices are
+            // distinct and in range: workers ≤ backends.len()), and the
+            // nodes selected by slots [lo, hi): the slot ranges are
+            // disjoint and `validate_ids` guarantees ids are strictly
+            // increasing — all distinct and in range — so no two indices
+            // alias a node. `run_indexed` does not return until every
+            // index finished, so no access outlives the borrows the
+            // pointers were derived from.
+            let backend = unsafe { &mut *backends_ptr.0.add(c) };
+            for slot in lo..hi {
+                let node = unsafe { &mut *nodes_ptr.0.add(ids[slot]) };
+                f(&mut **backend, slot, node)?;
+            }
+            Ok(())
+        })
     }
 }
 

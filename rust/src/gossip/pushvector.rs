@@ -15,7 +15,7 @@
 use super::pushsum::count_offdiag;
 use super::GossipStats;
 use crate::linalg::Kernel;
-use crate::pool::{ParallelExec, Task, SERIAL_EXEC};
+use crate::pool::{ParallelExec, SERIAL_EXEC};
 use crate::topology::TransitionMatrix;
 
 /// Column-panel width (f64 entries) for the tiled `Bᵀ`-apply: 1024
@@ -187,9 +187,11 @@ impl PushVector {
     ///
     /// **Panel parallelism**: when `exec` offers more than one thread and
     /// `d` spans at least two [`PAR_COL_MIN`] panels, the column range is
-    /// split into contiguous chunks, one borrowed task per chunk, fanned
-    /// over `exec` (the scheduler's worker pool in the parallel runtime).
-    /// Column values are mutually independent and each keeps its
+    /// split into contiguous chunks by index arithmetic and fanned over
+    /// `exec`'s allocation-free indexed dispatch
+    /// ([`ParallelExec::run_indexed`] — the scheduler's worker pool in
+    /// the parallel runtime), so a steady-state mixing round allocates
+    /// nothing. Column values are mutually independent and each keeps its
     /// ascending-`i` accumulation, so the result is bitwise identical to
     /// the inline path for every thread count — the equivalence tests pin
     /// this.
@@ -236,25 +238,20 @@ impl PushVector {
             unsafe { bt_apply_columns(b, v, base, m, d, 0, d, kernel) };
         } else {
             let chunk = (d + tasks_n - 1) / tasks_n;
-            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(tasks_n);
-            for t in 0..tasks_n {
+            let dst = SendPtr(base);
+            exec.run_indexed(tasks_n, &move |t| {
                 let k0 = t * chunk;
                 let k1 = ((t + 1) * chunk).min(d);
-                if k0 >= k1 {
-                    break;
-                }
-                let dst = SendPtr(base);
-                tasks.push(Box::new(move || {
-                    // SAFETY: the tasks' `[k0, k1)` ranges partition
+                if k0 < k1 {
+                    // SAFETY: the indices' `[k0, k1)` ranges partition
                     // `[0, d)` — pairwise disjoint columns of `v_next` —
-                    // and `run_tasks` returns only after every task
+                    // and `run_indexed` returns only after every index
                     // finished, so the buffer outlives all writes.
                     unsafe { bt_apply_columns(b, v, dst.0, m, d, k0, k1, kernel) };
-                    Ok(())
-                }));
-            }
-            exec.run_tasks(tasks)
-                .expect("panel tasks are infallible");
+                }
+                Ok(())
+            })
+            .expect("panel apply is infallible");
         }
         for i in 0..m {
             let row = b.row(i);

@@ -109,7 +109,7 @@ pub trait Kernel: Send + Sync + std::fmt::Debug {
     ///
     /// No in-tree hot loop needs this today — the solvers carry the blend
     /// inside the O(1)-shrink scaled representation instead
-    /// (`solver::scaled`). It completes the level-1 contract for external
+    /// (`linalg::scaled`). It completes the level-1 contract for external
     /// and future consumers (the XLA implementation slot foremost) and is
     /// pinned by the equivalence suite and the hotpath bench like every
     /// other method.
@@ -158,6 +158,40 @@ pub trait Kernel: Send + Sync + std::fmt::Debug {
         src_off: usize,
     ) {
         scalar::gemv_panel(dst, coeffs, coeff_stride, rows, src, src_stride, src_off);
+    }
+
+    /// Scaled-representation dot `⟨s·v, x⟩ = s·⟨v, x⟩` — the margin dot of
+    /// the O(nnz) scaled-iterate step (`w = s·v`, see
+    /// [`crate::linalg::ScaledIterate`]). **Reduction**: built on
+    /// [`Kernel::dot_row`], so backends may differ within the dot's ULP
+    /// bound; the trailing scale multiply is a single rounding in every
+    /// backend.
+    fn dot_scaled_row(&self, x: RowRef<'_>, v: &[f64], scale: f64) -> f64 {
+        scale * self.dot_row(x, v)
+    }
+
+    /// Scaled-representation sparse update `w ← w + c·x` over `w = scale·v`
+    /// (scatter `v[i] += (c/scale)·x_i`, incrementally maintaining the
+    /// caller's `‖v‖²` cache). Element-wise: bitwise identical across
+    /// backends ([`scalar::axpy_scaled_row`] is the shared loop).
+    fn axpy_scaled_row(
+        &self,
+        c: f64,
+        x: RowRef<'_>,
+        scale: f64,
+        v: &mut [f64],
+        norm_sq_v: &mut f64,
+    ) {
+        scalar::axpy_scaled_row(c, x, scale, v, norm_sq_v);
+    }
+
+    /// The O(1) lazy regularization shrink `scale ← c·scale`; returns
+    /// `true` when the caller must fold the scale into storage (the
+    /// deferred-renormalization rule — see
+    /// [`crate::linalg::scaled::RESCALE_THRESHOLD`]). A single f64
+    /// multiply: bitwise identical across backends.
+    fn shrink(&self, scale: &mut f64, c: f64) -> bool {
+        scalar::shrink(scale, c)
     }
 
     /// The margin half of a mini-batch hinge sub-gradient step over the

@@ -125,6 +125,43 @@ pub fn axpy_sparse(a: f64, x: &SparseVec, w: &mut [f64]) {
     axpy_row(a, x.as_row(), w)
 }
 
+/// Scaled-representation dot `⟨s·v, x⟩ = s·⟨v, x⟩` — the reference
+/// reduction for [`Kernel::dot_scaled_row`]: the [`dot_row`] gather
+/// followed by one scale multiply.
+#[inline]
+pub fn dot_scaled_row(x: RowRef<'_>, v: &[f64], scale: f64) -> f64 {
+    scale * dot_row(x, v)
+}
+
+/// Scaled-representation sparse update `w ← w + c·x` over `w = scale·v`:
+/// scatters `v[i] += (c/scale)·x_i` and maintains the caller's `‖v‖²`
+/// cache incrementally (`norm_sq_v += new² − old²` per touched slot, in
+/// index order — the accumulation order is part of the reference
+/// contract, since the cache feeds the O(1) projection). Element-wise:
+/// bitwise backend-invariant.
+#[inline]
+pub fn axpy_scaled_row(c: f64, x: RowRef<'_>, scale: f64, v: &mut [f64], norm_sq_v: &mut f64) {
+    let ci = c / scale;
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        let slot = &mut v[i as usize];
+        let old = *slot;
+        let new = old + ci * xv as f64;
+        *slot = new;
+        *norm_sq_v += new * new - old * old;
+    }
+}
+
+/// The O(1) lazy regularization shrink over `w = scale·v`: `scale ← c·scale`.
+/// Returns `true` when `|scale|` has drifted below
+/// [`crate::linalg::scaled::RESCALE_THRESHOLD`] and the caller must fold
+/// the scale into storage ([`crate::linalg::ScaledIterate::rescale`])
+/// before the next update divides by it.
+#[inline]
+pub fn shrink(scale: &mut f64, c: f64) -> bool {
+    *scale *= c;
+    scale.abs() < crate::linalg::scaled::RESCALE_THRESHOLD
+}
+
 /// One destination panel of the blocked `Bᵀ`-apply (see
 /// [`Kernel::gemv_panel`] for the contract): ascending-`i` accumulation,
 /// zero coefficients skipped, the inner `k` loop a dense axpy over the
@@ -247,6 +284,52 @@ mod tests {
             &mut violators,
         );
         assert_eq!(violators, vec![1, 1]); // duplicates preserved in draw order
+    }
+
+    #[test]
+    fn scaled_ops_match_unscaled_reference() {
+        let k = ScalarKernel;
+        let x = SparseVec::new(vec![0, 2, 4], vec![1.5, -2.0, 0.25]);
+        let v = vec![0.3, 9.0, -1.1, 9.0, 4.0];
+        // dot: s·⟨v,x⟩, bit-for-bit one multiply after the reference gather
+        let want = 0.5 * dot_row(x.as_row(), &v);
+        assert_eq!(dot_scaled_row(x.as_row(), &v, 0.5).to_bits(), want.to_bits());
+        assert_eq!(k.dot_scaled_row(x.as_row(), &v, 0.5).to_bits(), want.to_bits());
+        // axpy: with scale 1 the scatter is exactly axpy_row, and the norm
+        // cache follows the documented incremental order
+        let mut a = v.clone();
+        let mut b = v.clone();
+        let mut cache = 0.0;
+        axpy_scaled_row(0.7, x.as_row(), 1.0, &mut a, &mut cache);
+        axpy_row(0.7, x.as_row(), &mut b);
+        assert_eq!(a, b);
+        let mut expect_cache = 0.0;
+        for &i in x.indices.iter() {
+            let (old, new) = (v[i as usize], a[i as usize]);
+            expect_cache += new * new - old * old;
+        }
+        assert_eq!(cache.to_bits(), expect_cache.to_bits());
+        // trait provided method shares the loop bitwise
+        let mut c = v.clone();
+        let mut cache_k = 0.0;
+        k.axpy_scaled_row(0.7, x.as_row(), 1.0, &mut c, &mut cache_k);
+        assert_eq!(c, a);
+        assert_eq!(cache_k.to_bits(), cache.to_bits());
+    }
+
+    #[test]
+    fn shrink_multiplies_and_flags_underflow() {
+        let mut s = 1.0;
+        assert!(!shrink(&mut s, 0.5));
+        assert_eq!(s, 0.5);
+        let k = ScalarKernel;
+        assert!(!k.shrink(&mut s, 0.5));
+        assert_eq!(s, 0.25);
+        let mut tiny = crate::linalg::scaled::RESCALE_THRESHOLD * 1.5;
+        assert!(shrink(&mut tiny, 0.5), "crossing the threshold must flag");
+        // the flag fires on magnitude, not sign
+        let mut neg = -(crate::linalg::scaled::RESCALE_THRESHOLD * 1.5);
+        assert!(shrink(&mut neg, 0.5));
     }
 
     #[test]

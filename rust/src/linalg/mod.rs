@@ -16,6 +16,7 @@
 
 pub mod dense;
 pub mod kernel;
+pub mod scaled;
 pub mod sparse;
 
 pub use dense::{
@@ -23,4 +24,5 @@ pub use dense::{
     scale_assign, sub_assign,
 };
 pub use kernel::{Kernel, KernelKind};
+pub use scaled::{ScaledIterate, ScaledVector, StepKind};
 pub use sparse::{RowRef, RowsView, SparseVec};

@@ -1,0 +1,368 @@
+//! Scaled-iterate representation `w = s·v` — the O(nnz) solver hot path.
+//!
+//! Pegasos/SVM-SGD multiply the whole weight vector by `(1 − λαₜ)` every
+//! step; done naively that is `O(d)` per step and dominates on the CCAT
+//! stand-in (d = 47 236, batch nnz ≈ 76). Storing `w` as a scalar `s` times
+//! a dense `v` turns the shrink into `s ← s·(1−λαₜ)` — O(1) — while sparse
+//! sub-gradient adds become `v[i] += (c/s)·x_i` — O(nnz). This is the
+//! classic trick from the SVM-SGD code and Pegasos §4; it is the single
+//! biggest native-path optimization (see EXPERIMENTS.md §Perf and
+//! DESIGN.md §Scaled-iterate step).
+//!
+//! ## Representation invariants
+//!
+//! * `w[k] ≡ scale · v[k]` for all `k`; `scale` is never `0` (a zero scale
+//!   would lose the direction — [`ScaledIterate::set_zero`] resets the
+//!   representation instead).
+//! * `norm_sq_v` caches `‖v‖²`, maintained *incrementally* by the update
+//!   loop (`norm_sq_v += new² − old²` per touched slot, in index order), so
+//!   `‖w‖² = scale²·norm_sq_v` and the Pegasos ball projection are O(1).
+//! * **Renormalization rule**: whenever `|scale|` drops below
+//!   [`RESCALE_THRESHOLD`] (`1e-120` — far above the f64 denormal range at
+//!   ~`5e-324`, far below any step factor a sane λ produces) the scale is
+//!   folded into the storage (`v ← scale·v`, `scale ← 1`). The trigger
+//!   depends only on the sequence of shrink factors, never on the data, so
+//!   it fires at the *same step index* on every backend/scheduler — see
+//!   `rust/tests/step_equivalence.rs` (renormalization-trigger
+//!   determinism).
+//! * **Materialization boundary**: gossip consensus (`Mixer::mix`),
+//!   convergence tests, and solver exit all consume a plain dense `w`, so
+//!   the representation must be materialized
+//!   ([`ScaledIterate::materialize_into`]) at those seams — mixing two
+//!   `(s, v)` pairs directly would need a common scale and would reorder
+//!   the very reductions the bitwise contract pins.
+//!
+//! The arithmetic lives in the kernel layer
+//! ([`crate::linalg::Kernel::dot_scaled_row`],
+//! [`crate::linalg::Kernel::axpy_scaled_row`],
+//! [`crate::linalg::Kernel::shrink`]) with
+//! [`crate::linalg::kernel::ScalarKernel`] as the reference; this type owns
+//! the invariants.
+
+use crate::linalg::kernel::scalar;
+
+/// Fold the scale into storage when `|scale|` drifts below this bound.
+///
+/// The solvers only ever *shrink* the scale (factors in `(0, 1)`), so
+/// without folding, thousands of steps would drive `scale` into the
+/// denormal range where `c / scale` overflows. `1e-120` leaves ~180 orders
+/// of magnitude of headroom for the `new² − old²` norm-cache products.
+pub const RESCALE_THRESHOLD: f64 = 1e-120;
+
+/// A dense vector with a multiplicative scale factor.
+#[derive(Clone, Debug)]
+pub struct ScaledIterate {
+    scale: f64,
+    v: Vec<f64>,
+    /// Cached ‖w‖² = scale²·‖v‖², maintained incrementally so projection
+    /// (which Pegasos does every step) is O(1) too.
+    norm_sq_v: f64,
+}
+
+/// Former name of [`ScaledIterate`] (pre-kernel-layer re-homing); kept so
+/// `solver::ScaledVector` call sites keep compiling.
+pub type ScaledVector = ScaledIterate;
+
+impl ScaledIterate {
+    /// Zero vector of dimension `d`.
+    pub fn zeros(d: usize) -> Self {
+        Self { scale: 1.0, v: vec![0.0; d], norm_sq_v: 0.0 }
+    }
+
+    /// Dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    /// Current scale factor.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// `‖w‖²` in O(1).
+    #[inline]
+    pub fn norm_sq(&self) -> f64 {
+        self.scale * self.scale * self.norm_sq_v
+    }
+
+    /// `⟨w, x⟩` for sparse `x` — O(nnz), on the scalar reference kernel.
+    /// Accepts `&SparseVec` or a zero-copy [`crate::linalg::RowRef`].
+    #[inline]
+    pub fn dot_sparse<'a>(&self, x: impl Into<crate::linalg::RowRef<'a>>) -> f64 {
+        scalar::dot_scaled_row(x.into(), &self.v, self.scale)
+    }
+
+    /// `⟨w, x⟩` on an explicit kernel backend — the hot-path variant the
+    /// solvers use ([`Self::dot_sparse`] ≡ this on the scalar kernel).
+    #[inline]
+    pub fn dot_sparse_k<'a>(
+        &self,
+        x: impl Into<crate::linalg::RowRef<'a>>,
+        kernel: &dyn crate::linalg::Kernel,
+    ) -> f64 {
+        kernel.dot_scaled_row(x.into(), &self.v, self.scale)
+    }
+
+    /// The raw (unscaled) dense storage `v` — what kernel-backed batch
+    /// operations (e.g. [`crate::linalg::Kernel::hinge_subgrad_accum`])
+    /// read together with [`Self::scale`].
+    #[inline]
+    pub fn storage(&self) -> &[f64] {
+        &self.v
+    }
+
+    /// `w ← c·w` — O(1). Re-densifies if the scale underflows (the
+    /// numerical hazard the SVM-SGD readme warns about) — see
+    /// [`RESCALE_THRESHOLD`].
+    #[inline]
+    pub fn scale_by(&mut self, c: f64) {
+        assert!(c != 0.0, "scale_by(0) would lose the direction; use set_zero");
+        if scalar::shrink(&mut self.scale, c) {
+            self.rescale();
+        }
+    }
+
+    /// `w ← w + c·x` for sparse `x` — O(nnz), maintaining the norm cache.
+    /// Accepts `&SparseVec` or a zero-copy [`crate::linalg::RowRef`].
+    pub fn add_sparse<'a>(&mut self, c: f64, x: impl Into<crate::linalg::RowRef<'a>>) {
+        scalar::axpy_scaled_row(c, x.into(), self.scale, &mut self.v, &mut self.norm_sq_v);
+    }
+
+    /// Projects onto the ball of radius `r`: `w ← min{1, r/‖w‖}·w` — O(1).
+    pub fn project_to_ball(&mut self, r: f64) {
+        let n = self.norm_sq().sqrt();
+        if n > r && n > 0.0 {
+            self.scale_by(r / n);
+        }
+    }
+
+    /// Sets to zero, resetting the scale.
+    pub fn set_zero(&mut self) {
+        self.scale = 1.0;
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.norm_sq_v = 0.0;
+    }
+
+    /// Folds the scale into the storage (`scale = 1` afterwards).
+    pub fn rescale(&mut self) {
+        if self.scale != 1.0 {
+            for x in self.v.iter_mut() {
+                *x *= self.scale;
+            }
+            self.norm_sq_v *= self.scale * self.scale;
+            self.scale = 1.0;
+        }
+    }
+
+    /// Materializes `w` as a plain dense vector.
+    pub fn to_dense(&self) -> Vec<f64> {
+        self.v.iter().map(|&x| x * self.scale).collect()
+    }
+
+    /// Writes `w` into an existing slice — the allocation-free
+    /// materialization at solver exit and gossip boundaries (consensus
+    /// mixing consumes plain dense vectors; see the module docs).
+    pub fn materialize_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.v.len(), "materialize_into: dim mismatch");
+        for (o, &x) in out.iter_mut().zip(&self.v) {
+            *o = x * self.scale;
+        }
+    }
+
+    /// Former name of [`Self::materialize_into`].
+    #[inline]
+    pub fn to_dense_into(&self, out: &mut [f64]) {
+        self.materialize_into(out);
+    }
+
+    /// Loads from a dense vector.
+    pub fn from_dense(w: &[f64]) -> Self {
+        Self { scale: 1.0, v: w.to_vec(), norm_sq_v: crate::linalg::l2_norm_sq(w) }
+    }
+
+    /// Reloads from a dense slice in place, reusing the storage
+    /// (allocation-free counterpart of [`Self::from_dense`]).
+    pub fn load_dense(&mut self, w: &[f64]) {
+        assert_eq!(w.len(), self.v.len(), "load_dense: dim mismatch");
+        self.v.copy_from_slice(w);
+        self.scale = 1.0;
+        self.norm_sq_v = crate::linalg::l2_norm_sq(w);
+    }
+}
+
+/// The configured solver step representation (`[runtime] step` / `--step`).
+///
+/// Mirrors [`crate::linalg::KernelKind`]: `scaled` is the tuned O(nnz)
+/// default, `dense` is the plain-`Vec<f64>` O(d) textbook loop kept as the
+/// independent cross-check reference (`rust/tests/step_equivalence.rs` pins
+/// the two within a documented ULP bound), and `auto` resolves to `scaled`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StepKind {
+    /// Plain dense weights: O(d) shrink + O(d)-norm bookkeeping per step.
+    /// The independently-written reference the scaled path is pinned
+    /// against.
+    Dense,
+    /// Scaled-iterate `w = s·v`: O(1) shrink, O(nnz) update.
+    Scaled,
+    /// Resolves to `scaled` — there is no configuration where the dense
+    /// path is faster, so auto never picks it.
+    #[default]
+    Auto,
+}
+
+impl std::str::FromStr for StepKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "dense" => Ok(Self::Dense),
+            "scaled" => Ok(Self::Scaled),
+            "auto" => Ok(Self::Auto),
+            other => Err(format!("unknown step {other:?} (dense | scaled | auto)")),
+        }
+    }
+}
+
+impl std::fmt::Display for StepKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Dense => "dense",
+            Self::Scaled => "scaled",
+            Self::Auto => "auto",
+        })
+    }
+}
+
+impl StepKind {
+    /// Resolves `auto`; the result is always `Dense` or `Scaled`.
+    pub fn resolve(self) -> Self {
+        match self {
+            Self::Auto => Self::Scaled,
+            other => other,
+        }
+    }
+
+    /// True when the resolved choice is the scaled-iterate fast path.
+    pub fn is_scaled(self) -> bool {
+        self.resolve() == Self::Scaled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SparseVec;
+
+    #[test]
+    fn matches_naive_sequence() {
+        // Interleave scales and sparse adds; compare against a plain vector.
+        let mut sv = ScaledIterate::zeros(6);
+        let mut naive = vec![0.0f64; 6];
+        let x1 = SparseVec::new(vec![0, 3], vec![1.0, -2.0]);
+        let x2 = SparseVec::new(vec![1, 3, 5], vec![0.5, 0.5, 4.0]);
+        let ops: Vec<(f64, Option<&SparseVec>)> =
+            vec![(1.0, Some(&x1)), (0.9, None), (-0.5, Some(&x2)), (0.99, None), (2.0, Some(&x1))];
+        for (c, x) in ops {
+            match x {
+                Some(x) => {
+                    sv.add_sparse(c, x);
+                    x.axpy_into(c, &mut naive);
+                }
+                None => {
+                    sv.scale_by(c);
+                    crate::linalg::scale_assign(c, &mut naive);
+                }
+            }
+        }
+        let dense = sv.to_dense();
+        for i in 0..6 {
+            assert!((dense[i] - naive[i]).abs() < 1e-12, "slot {i}");
+        }
+        assert!((sv.norm_sq() - crate::linalg::l2_norm_sq(&naive)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_respects_scale() {
+        let mut sv = ScaledIterate::from_dense(&[1.0, 2.0, 0.0]);
+        sv.scale_by(0.5);
+        let x = SparseVec::new(vec![0, 1], vec![2.0, 1.0]);
+        assert!((sv.dot_sparse(&x) - (0.5 * (2.0 + 2.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projection_caps_norm() {
+        let mut sv = ScaledIterate::from_dense(&[3.0, 4.0]);
+        sv.project_to_ball(2.5);
+        assert!((sv.norm_sq().sqrt() - 2.5).abs() < 1e-12);
+        // inside the ball: unchanged
+        let before = sv.to_dense();
+        sv.project_to_ball(10.0);
+        assert_eq!(sv.to_dense(), before);
+    }
+
+    #[test]
+    fn underflow_triggers_rescale() {
+        let mut sv = ScaledIterate::from_dense(&[1.0]);
+        for _ in 0..5000 {
+            sv.scale_by(0.9);
+        }
+        // value underflows to ~0 but the representation stays finite
+        assert!(sv.scale().abs() >= 1e-130);
+        assert!(sv.to_dense()[0].is_finite());
+    }
+
+    #[test]
+    fn set_zero_resets() {
+        let mut sv = ScaledIterate::from_dense(&[1.0, -2.0]);
+        sv.scale_by(0.5);
+        sv.set_zero();
+        assert_eq!(sv.to_dense(), vec![0.0, 0.0]);
+        assert_eq!(sv.norm_sq(), 0.0);
+        assert_eq!(sv.scale(), 1.0);
+    }
+
+    #[test]
+    fn rescale_is_identity_on_values() {
+        let mut sv = ScaledIterate::from_dense(&[2.0, 3.0]);
+        sv.scale_by(0.25);
+        let before = sv.to_dense();
+        sv.rescale();
+        assert_eq!(sv.scale(), 1.0);
+        for (a, b) in sv.to_dense().iter().zip(&before) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn materialize_into_matches_to_dense() {
+        let mut sv = ScaledIterate::from_dense(&[1.0, -2.0, 3.0]);
+        sv.scale_by(0.125);
+        sv.add_sparse(0.5, &SparseVec::new(vec![1], vec![4.0]));
+        let dense = sv.to_dense();
+        let mut out = vec![9.0; 3];
+        sv.materialize_into(&mut out);
+        assert_eq!(out, dense);
+        // the legacy name is the same operation
+        let mut out2 = vec![7.0; 3];
+        sv.to_dense_into(&mut out2);
+        assert_eq!(out2, dense);
+    }
+
+    #[test]
+    fn step_kind_parse_display_resolve() {
+        assert_eq!("dense".parse::<StepKind>().unwrap(), StepKind::Dense);
+        assert_eq!("scaled".parse::<StepKind>().unwrap(), StepKind::Scaled);
+        assert_eq!("auto".parse::<StepKind>().unwrap(), StepKind::Auto);
+        assert!("sparse".parse::<StepKind>().is_err());
+        assert_eq!(StepKind::Dense.to_string(), "dense");
+        assert_eq!(StepKind::Scaled.to_string(), "scaled");
+        assert_eq!(StepKind::Auto.to_string(), "auto");
+        assert_eq!(StepKind::default(), StepKind::Auto);
+        assert_eq!(StepKind::Auto.resolve(), StepKind::Scaled);
+        assert_eq!(StepKind::Dense.resolve(), StepKind::Dense);
+        assert!(StepKind::Auto.is_scaled());
+        assert!(!StepKind::Dense.is_scaled());
+    }
+}

@@ -75,6 +75,9 @@ fn print_help() {
          \x20              --scheduler sequential|parallel|async --threads N\n\
          \x20              --link-latency N --link-drop F (async network scenarios)\n\
          \x20              --kernel scalar|simd|auto (simd needs --features simd)\n\
+         \x20              --step dense|scaled|auto (solver step representation;\n\
+         \x20              auto = the O(nnz) scaled fast path, dense = the O(d)\n\
+         \x20              reference loop)\n\
          \x20              --stream (or --stream-rate F --stream-schedule\n\
          \x20              uniform|random|tail:<file> --stream-max-rows N\n\
          \x20              --stream-initial F) for online per-node ingestion\n\
@@ -97,7 +100,8 @@ fn print_help() {
          \x20              byte-identical to the stdin path — --queue-depth N\n\
          \x20              --deadline-ms N bound the request queue and budget)\n\
          \x20 baseline     run a solver centrally (--solver pegasos|svm-sgd|svm-perf|dcd,\n\
-         \x20              --kernel scalar|simd|auto, same dataset options)\n\
+         \x20              --kernel scalar|simd|auto --step dense|scaled|auto,\n\
+         \x20              same dataset options)\n\
          \x20 experiment   regenerate paper artifacts: table3 | table4 | table5 | figures |\n\
          \x20              mixing | bound | rounds | topology | churn  (--scale F --nodes N --trials N\n\
          \x20              --only a,b,... --out DIR --max-iterations N)\n\
@@ -145,6 +149,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.threads = args.get_parsed("threads", cfg.threads).map_err(err)?;
     if let Some(k) = args.get("kernel") {
         cfg.kernel = k.parse().map_err(|e: String| anyhow::anyhow!("--kernel: {e}"))?;
+    }
+    if let Some(s) = args.get("step") {
+        cfg.step = s.parse().map_err(|e: String| anyhow::anyhow!("--step: {e}"))?;
     }
     if let Some(s) = args.get("store") {
         cfg.store = s.parse().map_err(|e: String| anyhow::anyhow!("--store: {e}"))?;
@@ -201,7 +208,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     // and live HTTP ingestion
     let streaming = cfg.streaming_enabled() || args.get("http-ingest").is_some();
     println!(
-        "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} kernel={} trials={}",
+        "GADGET: dataset={} scale={} nodes={} topology={} backend={:?} scheduler={} kernel={} step={} trials={}",
         cfg.dataset,
         cfg.scale,
         cfg.nodes,
@@ -209,6 +216,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.backend,
         cfg.scheduler,
         cfg.kernel,
+        cfg.step,
         cfg.trials
     );
     // Echo the resolved consensus scenario: the trial-0 overlay (seeded
@@ -430,11 +438,12 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     // trains the baselines straight off the mapped artifact.
     let train = runner.train_view();
     let test = runner.test_data();
-    // `--kernel` reaches the centralized baselines too, so kernel A/B
-    // numbers can be taken on the exact solvers the tables use.
+    // `--kernel` / `--step` reach the centralized baselines too, so kernel
+    // and step A/B numbers can be taken on the exact solvers the tables
+    // use.
     let kernel = cfg.kernel.build()?;
     let mut solver: Box<dyn Solver> = match which.as_str() {
-        "pegasos" => Box::new(gadget::solver::Pegasos::with_kernel(
+        "pegasos" => Box::new(gadget::solver::Pegasos::with_options(
             gadget::solver::PegasosParams {
                 lambda,
                 iterations: experiments::table3::centralized_iterations(runner.train_len()),
@@ -443,10 +452,12 @@ fn cmd_baseline(args: &Args) -> Result<()> {
                 seed: cfg.seed,
             },
             kernel,
+            cfg.step,
         )),
-        "svm-sgd" => Box::new(gadget::solver::SvmSgd::with_kernel(
+        "svm-sgd" => Box::new(gadget::solver::SvmSgd::with_options(
             gadget::solver::SvmSgdParams { lambda, epochs: 10, seed: cfg.seed },
             kernel,
+            cfg.step,
         )),
         "svm-perf" => {
             // The cutting-plane solver runs on the scalar reference loops;

@@ -48,6 +48,22 @@
 //! inference service's `serve::ShardedScorer` batch fan-out) are
 //! executor-agnostic; results must be — and are — bitwise identical
 //! either way.
+//!
+//! ## Indexed dispatch
+//!
+//! [`ParallelExec::run_indexed`] is the allocation-free sibling of
+//! `run_tasks`: instead of a `Vec` of boxed closures the caller passes
+//! one shared `Fn(usize)` plus a count, and the pool enqueues
+//! lightweight index jobs (a fat pointer and a `usize`) into its
+//! retained-capacity queue against a pool-owned reusable latch. A
+//! steady-state indexed dispatch therefore performs **zero heap
+//! allocations** — the property `rust/tests/alloc_regression.rs` pins
+//! for the iteration hot path. Indexed dispatches are serialized by an
+//! internal mutex (the pool owns exactly one reusable latch); tasks
+//! running under `run_tasks` may call `run_indexed` (the fanned-out
+//! trial → mixing-round nesting), but an *indexed* job must never
+//! dispatch `run_indexed` on its own pool — it would block on the latch
+//! it is itself counted in.
 
 use crate::Result;
 use std::collections::VecDeque;
@@ -61,6 +77,11 @@ pub type Task<'env> = Box<dyn FnOnce() -> Result<()> + Send + 'env>;
 
 /// A [`Task`] after lifetime erasure (queue representation).
 type ErasedTask = Box<dyn FnOnce() -> Result<()> + Send + 'static>;
+
+/// The shared work function of one `run_indexed` dispatch, after the same
+/// lifetime erasure (every index job of the dispatch borrows this one
+/// function — nothing per-job is boxed).
+type IndexedFn = &'static (dyn Fn(usize) -> Result<()> + Sync);
 
 /// Object-safe executor for a batch of disjoint tasks.
 ///
@@ -76,6 +97,30 @@ pub trait ParallelExec: Sync {
     /// Runs all tasks to completion; first task error (or panic,
     /// converted) wins.
     fn run_tasks<'env>(&self, tasks: Vec<Task<'env>>) -> Result<()>;
+
+    /// Runs `f(0), f(1), …, f(count-1)`, each exactly once, to
+    /// completion; first error (or panic, converted) wins — the same
+    /// contract as [`Self::run_tasks`], in a dispatch shape that lets
+    /// the pool executor stay allocation-free at steady state.
+    ///
+    /// The default (inline, in order) serves [`SerialExec`] and keeps
+    /// the trait's bitwise-equivalence promise trivially.
+    fn run_indexed(&self, count: usize, f: &(dyn Fn(usize) -> Result<()> + Sync)) -> Result<()> {
+        // Run the whole range even after an error — identical semantics
+        // to the pool, which cannot recall already-queued index jobs.
+        let mut first_error = None;
+        for i in 0..count {
+            if let Err(e) = f(i) {
+                if first_error.is_none() {
+                    first_error = Some(e);
+                }
+            }
+        }
+        match first_error {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
 }
 
 /// Inline executor: runs every task on the calling thread, in order.
@@ -120,10 +165,40 @@ struct ScopeProgress {
     first_error: Option<anyhow::Error>,
 }
 
-/// One queued task plus the latch it reports to.
+/// What a queued job executes.
+enum Work {
+    /// A boxed one-shot closure (`run_tasks`).
+    Boxed(ErasedTask),
+    /// One index of a shared work function (`run_indexed`) — a fat
+    /// pointer plus an index, nothing heap-owned.
+    Indexed { f: IndexedFn, index: usize },
+}
+
+/// How a queued job reaches the latch it reports to.
+enum ScopeRef {
+    /// A `run_tasks` scope, allocated per call and shared via `Arc`.
+    Owned(Arc<ScopeState>),
+    /// The pool-owned reusable `run_indexed` scope. The borrow is
+    /// `'static` by the same erasure argument as the tasks themselves:
+    /// the dispatch that created this job does not return until the
+    /// latch counts it finished, and the latch's storage (a `Box` inside
+    /// [`WorkerPool`]) outlives every dispatch.
+    Borrowed(&'static ScopeState),
+}
+
+impl ScopeRef {
+    fn state(&self) -> &ScopeState {
+        match self {
+            ScopeRef::Owned(scope) => scope,
+            ScopeRef::Borrowed(scope) => scope,
+        }
+    }
+}
+
+/// One queued unit of work plus the latch it reports to.
 struct Job {
-    task: ErasedTask,
-    scope: Arc<ScopeState>,
+    work: Work,
+    scope: ScopeRef,
 }
 
 /// State shared between the pool handle and its workers.
@@ -150,8 +225,11 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// (captures dropped) by the call or its unwind before the latch is
 /// decremented — the soundness invariant of the lifetime erasure.
 fn run_job(job: Job) {
-    let Job { task, scope } = job;
-    let outcome = match catch_unwind(AssertUnwindSafe(move || task())) {
+    let Job { work, scope } = job;
+    let outcome = match catch_unwind(AssertUnwindSafe(move || match work {
+        Work::Boxed(task) => task(),
+        Work::Indexed { f, index } => f(index),
+    })) {
         Ok(Ok(())) => None,
         Ok(Err(e)) => Some(e),
         Err(payload) => Some(anyhow::anyhow!(
@@ -159,6 +237,7 @@ fn run_job(job: Job) {
             panic_message(payload.as_ref())
         )),
     };
+    let scope = scope.state();
     let mut p = lock(&scope.progress);
     if let Some(e) = outcome {
         if p.first_error.is_none() {
@@ -207,6 +286,14 @@ fn worker_loop(shared: &Shared) {
 pub struct WorkerPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    /// The reusable `run_indexed` latch. Boxed so its address is stable
+    /// for the lifetime of the pool (jobs hold `&'static` borrows of it;
+    /// see [`ScopeRef::Borrowed`]), reset under `dispatch` per call —
+    /// this is what makes an indexed dispatch allocation-free.
+    indexed_scope: Box<ScopeState>,
+    /// Serializes `run_indexed` calls: the pool owns exactly one
+    /// reusable latch, so only one indexed dispatch may be in flight.
+    dispatch: Mutex<()>,
 }
 
 impl WorkerPool {
@@ -228,7 +315,11 @@ impl WorkerPool {
                     .expect("pool: failed to spawn worker thread")
             })
             .collect();
-        Self { shared, workers }
+        let indexed_scope = Box::new(ScopeState {
+            progress: Mutex::new(ScopeProgress { remaining: 0, first_error: None }),
+            done: Condvar::new(),
+        });
+        Self { shared, workers, indexed_scope, dispatch: Mutex::new(()) }
     }
 }
 
@@ -255,7 +346,10 @@ impl ParallelExec for WorkerPool {
                 // the task — dropping its captures — before decrementing
                 // the latch. No `'env` borrow survives this call.
                 let task = unsafe { std::mem::transmute::<Task<'env>, ErasedTask>(task) };
-                q.jobs.push_back(Job { task, scope: Arc::clone(&scope) });
+                q.jobs.push_back(Job {
+                    work: Work::Boxed(task),
+                    scope: ScopeRef::Owned(Arc::clone(&scope)),
+                });
             }
             self.shared.available.notify_all();
         }
@@ -270,6 +364,63 @@ impl ParallelExec for WorkerPool {
             }
         }
         // Whatever is left of this scope is running on workers; wait.
+        let mut p = lock(&scope.progress);
+        while p.remaining > 0 {
+            p = scope.done.wait(p).unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+        match p.first_error.take() {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn run_indexed(&self, count: usize, f: &(dyn Fn(usize) -> Result<()> + Sync)) -> Result<()> {
+        if count == 0 {
+            return Ok(());
+        }
+        // One indexed dispatch at a time: the pool owns a single reusable
+        // latch. The guard is held for the entire call, so `run_tasks`
+        // tasks may nest `run_indexed` (they queue up here and proceed
+        // when the current dispatch finishes) — but an indexed job must
+        // never call `run_indexed` on its own pool: it would block on the
+        // latch it is itself counted in (module docs, §Indexed dispatch).
+        let _dispatch = lock(&self.dispatch);
+        let scope: &ScopeState = &self.indexed_scope;
+        {
+            let mut p = lock(&scope.progress);
+            debug_assert_eq!(p.remaining, 0, "indexed latch reused while in flight");
+            p.remaining = count;
+            p.first_error = None;
+        }
+        // SAFETY: same erasure argument as `run_tasks` — this call does
+        // not return before the latch counts every index job finished,
+        // and `run_job` finishes its use of `f` before decrementing, so
+        // no borrow of `f`'s captures survives this call. The scope
+        // borrow is sound because the latch `Box` lives as long as the
+        // pool and the dispatch mutex keeps reuse exclusive.
+        let f = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) -> Result<()> + Sync), IndexedFn>(f)
+        };
+        let scope_static =
+            unsafe { std::mem::transmute::<&ScopeState, &'static ScopeState>(scope) };
+        {
+            let mut q = lock(&self.shared.queue);
+            for index in 0..count {
+                q.jobs.push_back(Job {
+                    work: Work::Indexed { f, index },
+                    scope: ScopeRef::Borrowed(scope_static),
+                });
+            }
+            self.shared.available.notify_all();
+        }
+        // Help-run LIFO, exactly as in `run_tasks`.
+        loop {
+            let job = lock(&self.shared.queue).jobs.pop_back();
+            match job {
+                Some(job) => run_job(job),
+                None => break,
+            }
+        }
         let mut p = lock(&scope.progress);
         while p.remaining > 0 {
             p = scope.done.wait(p).unwrap_or_else(|poisoned| poisoned.into_inner());
@@ -427,6 +578,131 @@ mod tests {
     fn empty_dispatch_is_a_noop() {
         let pool = WorkerPool::new(2);
         pool.run_tasks(Vec::new()).unwrap();
+    }
+
+    #[test]
+    fn run_indexed_covers_every_index_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_indexed(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}, threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_indexed_error_is_returned_after_range_completes() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let err = pool
+            .run_indexed(8, &|i| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                if i == 3 {
+                    anyhow::bail!("index {i} failed");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("index 3 failed"), "{err}");
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn run_indexed_panic_becomes_error_and_pool_stays_usable() {
+        let pool = WorkerPool::new(2);
+        let err = pool
+            .run_indexed(3, &|i| {
+                if i == 1 {
+                    panic!("deliberate indexed panic");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("deliberate indexed panic"), "{err}");
+        // The reusable latch must be clean for the next dispatch.
+        let hits = AtomicUsize::new(0);
+        pool.run_indexed(16, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn run_indexed_nested_under_run_tasks() {
+        // The trial → mixing-round shape: boxed tasks on the pool each
+        // dispatch an indexed batch on the same pool. The dispatch mutex
+        // serializes them; help-running keeps every caller live even at
+        // pool size 1.
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits = AtomicUsize::new(0);
+            let outer: Vec<Task<'_>> = (0..6)
+                .map(|_| {
+                    let pool = &pool;
+                    let hits = &hits;
+                    Box::new(move || {
+                        pool.run_indexed(5, &|_| {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                            Ok(())
+                        })
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run_tasks(outer).unwrap();
+            assert_eq!(hits.load(Ordering::SeqCst), 30, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_indexed_writes_disjoint_stack_slices() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0usize; 10];
+        let base = data.as_mut_ptr() as usize;
+        pool.run_indexed(4, &|c| {
+            let lo = c * 3;
+            let hi = (lo + 3).min(10);
+            // SAFETY: each index owns the disjoint range [lo, hi).
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut((base as *mut usize).add(lo), hi - lo)
+            };
+            for x in chunk.iter_mut() {
+                *x = c + 1;
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(data, vec![1, 1, 1, 2, 2, 2, 3, 3, 3, 4]);
+    }
+
+    #[test]
+    fn run_indexed_empty_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run_indexed(0, &|_| anyhow::bail!("never called")).unwrap();
+        SERIAL_EXEC.run_indexed(0, &|_| anyhow::bail!("never called")).unwrap();
+    }
+
+    #[test]
+    fn serial_run_indexed_matches_pool_semantics() {
+        let hits = AtomicUsize::new(0);
+        let err = SERIAL_EXEC
+            .run_indexed(4, &|i| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                if i == 1 {
+                    anyhow::bail!("boom");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
     }
 
     #[test]

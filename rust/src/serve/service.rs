@@ -216,6 +216,10 @@ pub(crate) fn score_stream(
     let dim = scorer.model().dim;
     let mut stats = ServeStats { rows: 0, batches: 0, shards: scorer.shards() };
     let mut pending: Vec<SparseVec> = Vec::with_capacity(opts.batch);
+    // One output buffer reused across batches: after the first full batch
+    // the warm scoring path performs no per-batch allocation (see
+    // `ShardedScorer::score_batch_into`).
+    let mut predictions: Vec<super::artifact::Prediction> = Vec::with_capacity(opts.batch);
     let mut line = String::new();
     let mut line_no = 0usize;
     loop {
@@ -233,7 +237,7 @@ pub(crate) fn score_stream(
         }
         let eof = n == 0;
         if pending.len() == opts.batch || (eof && !pending.is_empty()) {
-            let predictions = scorer.score_batch(&pending)?;
+            scorer.score_batch_into(&pending, &mut predictions)?;
             for pred in &predictions {
                 write_prediction(out, pred, multiclass, opts.emit_scores)?;
             }

@@ -21,9 +21,16 @@
 
 use super::artifact::{ModelArtifact, Prediction};
 use crate::linalg::{Kernel, SparseVec};
-use crate::pool::{ParallelExec, Task, WorkerPool, SERIAL_EXEC};
+use crate::pool::{ParallelExec, WorkerPool, SERIAL_EXEC};
 use crate::Result;
 use anyhow::ensure;
+
+/// `Send`/`Sync` wrapper for shipping the output base pointer into shard
+/// tasks. The wrapper proves nothing — soundness comes from the tasks'
+/// pairwise-disjoint row ranges (see [`ShardedScorer::score_batch_into`]).
+struct SendPtr(*mut Prediction);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 /// A batch scorer fanning row chunks across `shards` pool workers, all
 /// scoring one shared warm model.
@@ -84,12 +91,31 @@ impl ShardedScorer {
 
     /// Scores `rows`, one [`Prediction`] per row in input order.
     ///
+    /// Allocates the output vector; the serve loop's warm path is
+    /// [`Self::score_batch_into`], which reuses one.
+    pub fn score_batch(&self, rows: &[SparseVec]) -> Result<Vec<Prediction>> {
+        let mut out = Vec::new();
+        self.score_batch_into(rows, &mut out)?;
+        Ok(out)
+    }
+
+    /// Scores `rows` into the reusable `out` buffer (cleared and resized
+    /// to `rows.len()`), one [`Prediction`] per row in input order.
+    ///
     /// Rows are validated against the model dimension up front (errors
     /// name the offending row index), then split into one contiguous
-    /// chunk per shard and dispatched; each task writes its disjoint
-    /// output slice. Empty batches return an empty vector without
-    /// touching the pool.
-    pub fn score_batch(&self, rows: &[SparseVec]) -> Result<Vec<Prediction>> {
+    /// chunk per shard by index arithmetic and fanned over the pool's
+    /// allocation-free indexed dispatch
+    /// ([`ParallelExec::run_indexed`]); each index writes its disjoint
+    /// slice of `out`. With a caller-retained buffer the warm serve path
+    /// performs no per-batch heap allocation once `out`'s capacity has
+    /// grown to the largest batch seen. Empty batches clear `out`
+    /// without touching the pool.
+    pub fn score_batch_into(
+        &self,
+        rows: &[SparseVec],
+        out: &mut Vec<Prediction>,
+    ) -> Result<()> {
         let dim = self.model.dim;
         for (i, row) in rows.iter().enumerate() {
             ensure!(
@@ -98,25 +124,29 @@ impl ShardedScorer {
                 row.min_dim() - 1
             );
         }
-        let mut out = vec![Prediction::default(); rows.len()];
+        out.clear();
+        out.resize(rows.len(), Prediction::default());
         if rows.is_empty() {
-            return Ok(out);
+            return Ok(());
         }
         let model = &self.model;
         let kernel = self.kernel;
-        let chunk = (rows.len() + self.shards - 1) / self.shards;
-        let tasks: Vec<Task<'_>> = rows
-            .chunks(chunk)
-            .zip(out.chunks_mut(chunk))
-            .map(|(row_chunk, out_chunk)| {
-                Box::new(move || -> Result<()> {
-                    model.predict_batch_with(kernel, row_chunk, out_chunk);
-                    Ok(())
-                }) as Task<'_>
-            })
-            .collect();
-        self.exec().run_tasks(tasks)?;
-        Ok(out)
+        let n = rows.len();
+        let chunk = (n + self.shards - 1) / self.shards;
+        let tasks_n = (n + chunk - 1) / chunk;
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        self.exec().run_indexed(tasks_n, &move |c| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            // SAFETY: the indices' `[lo, hi)` ranges partition `[0, n)`
+            // — pairwise disjoint slices of `out` — and `run_indexed`
+            // returns only after every index finished, so the buffer
+            // outlives all writes.
+            let out_chunk =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
+            model.predict_batch_with(kernel, &rows[lo..hi], out_chunk);
+            Ok(())
+        })
     }
 }
 
@@ -211,6 +241,26 @@ mod tests {
             assert_eq!(x.label, y.label);
             assert!((x.score - y.score).abs() <= 1e-9 * (1.0 + x.score.abs()));
         }
+    }
+
+    #[test]
+    fn score_batch_into_reuses_buffer_and_matches() {
+        // The warm serve path: one caller-retained buffer across batches
+        // of varying size must give exactly score_batch's results, and
+        // shrink/regrow correctly (stale tail entries cleared).
+        let scorer = ShardedScorer::new(model(5), 3);
+        let mut out = Vec::new();
+        for n in [9usize, 64, 3, 0, 17] {
+            let batch = rows(n, 5);
+            scorer.score_batch_into(&batch, &mut out).unwrap();
+            assert_eq!(out, scorer.score_batch(&batch).unwrap(), "n={n}");
+            assert_eq!(out.len(), n);
+        }
+        // once capacity covers the largest batch, reuse never reallocates
+        let cap = out.capacity();
+        assert!(cap >= 64);
+        scorer.score_batch_into(&rows(64, 5), &mut out).unwrap();
+        assert_eq!(out.capacity(), cap);
     }
 
     #[test]

@@ -18,16 +18,19 @@
 pub mod dcd;
 pub mod multiclass;
 pub mod pegasos;
-pub mod scaled;
 pub mod svm_perf;
 pub mod svm_sgd;
 
 pub use dcd::DualCoordinateDescent;
 pub use multiclass::{MulticlassDataset, MulticlassModel};
 pub use pegasos::{Pegasos, PegasosParams};
-pub use scaled::ScaledVector;
 pub use svm_perf::{SvmPerf, SvmPerfParams};
 pub use svm_sgd::{SvmSgd, SvmSgdParams};
+
+// The scaled-iterate representation moved to `linalg::scaled` (it is a
+// linear-algebra primitive behind the kernel seam, not a solver); the old
+// `solver::ScaledVector` path keeps working.
+pub use crate::linalg::scaled::{ScaledIterate, ScaledVector, StepKind};
 
 use crate::data::{Dataset, ShardView};
 

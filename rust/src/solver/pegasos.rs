@@ -10,10 +10,13 @@
 //! 3. `αₜ = 1/(λt)`; `w ← (1 − λαₜ)·w + (αₜ/k)·Σ_{A_t⁺} y·x`;
 //! 4. optionally project onto the ball of radius `1/√λ`.
 //!
-//! The shrink uses the O(1) scaled representation ([`super::scaled`]), so a
-//! step costs `O(k·nnz)` independent of `d`.
+//! By default the shrink uses the O(1) scaled representation
+//! ([`crate::linalg::scaled`]), so a step costs `O(k·nnz)` independent of
+//! `d`; `[runtime] step = "dense"` / [`Pegasos::with_options`] selects the
+//! plain O(d) loop instead — the independently-written reference the scaled
+//! fast path is pinned against (`rust/tests/step_equivalence.rs`).
 
-use super::{LinearModel, ScaledVector, Solver};
+use super::{LinearModel, ScaledVector, Solver, StepKind};
 use crate::data::ShardView;
 use crate::rng::Rng;
 
@@ -45,17 +48,29 @@ pub struct Pegasos {
     pub params: PegasosParams,
     /// Kernel backend for the margin dots (scalar reference by default).
     kernel: &'static dyn crate::linalg::Kernel,
+    /// Step representation (`auto` resolves to the scaled fast path).
+    step: StepKind,
 }
 
 impl Pegasos {
     /// Creates a solver with the given parameters (scalar kernel).
     pub fn new(params: PegasosParams) -> Self {
-        Self { params, kernel: crate::linalg::kernel::scalar() }
+        Self { params, kernel: crate::linalg::kernel::scalar(), step: StepKind::Auto }
     }
 
     /// Creates a solver whose margin dots run on `kernel`.
     pub fn with_kernel(params: PegasosParams, kernel: &'static dyn crate::linalg::Kernel) -> Self {
-        Self { params, kernel }
+        Self { params, kernel, step: StepKind::Auto }
+    }
+
+    /// Creates a solver with an explicit kernel backend *and* step
+    /// representation (`[runtime] step` / `--step` plumb through here).
+    pub fn with_options(
+        params: PegasosParams,
+        kernel: &'static dyn crate::linalg::Kernel,
+        step: StepKind,
+    ) -> Self {
+        Self { params, kernel, step }
     }
 
     /// Runs `fit` but also invokes `snapshot(t, w)` every `every` steps —
@@ -72,6 +87,9 @@ impl Pegasos {
         assert!(p.lambda > 0.0, "Pegasos: lambda must be positive");
         assert!(p.batch_size >= 1, "Pegasos: batch size must be ≥ 1");
         assert!(!ds.is_empty(), "Pegasos: empty dataset");
+        if !self.step.is_scaled() {
+            return self.fit_dense(ds, every, snapshot);
+        }
         let mut rng = Rng::new(p.seed);
         let mut w = ScaledVector::zeros(ds.dim);
         let radius = 1.0 / p.lambda.sqrt();
@@ -131,6 +149,75 @@ impl Pegasos {
             }
         }
         LinearModel { w: w.to_dense() }
+    }
+
+    /// The O(d) dense reference loop: a plain `Vec<f64>` carries the
+    /// weights, the regularization shrink multiplies every coordinate and
+    /// the projection recomputes `‖w‖` from scratch each step. Batch
+    /// sampling draws in exactly the same RNG order as the scaled path, so
+    /// the two trajectories differ only by the representation's rounding
+    /// (pinned in `rust/tests/step_equivalence.rs`).
+    fn fit_dense<F: FnMut(usize, &[f64])>(
+        &self,
+        ds: ShardView<'_>,
+        every: usize,
+        mut snapshot: F,
+    ) -> LinearModel {
+        let p = &self.params;
+        let mut rng = Rng::new(p.seed);
+        let mut w = vec![0.0f64; ds.dim];
+        let radius = 1.0 / p.lambda.sqrt();
+        let mut batch_idx: Vec<usize> = Vec::with_capacity(p.batch_size);
+        let mut violators: Vec<usize> = Vec::with_capacity(p.batch_size);
+
+        for t in 1..=p.iterations {
+            let alpha = 1.0 / (p.lambda * t as f64);
+            let shrink = 1.0 - p.lambda * alpha; // = 1 - 1/t
+            let step = alpha / p.batch_size as f64;
+            if p.batch_size == 1 {
+                let i = rng.below(ds.len());
+                let (x, y) = ds.sample(i);
+                let margin = y * self.kernel.dot_row(x.into(), &w);
+                if shrink != 0.0 {
+                    crate::linalg::scale_assign(shrink, &mut w);
+                } else {
+                    w.fill(0.0); // t = 1: (1 - 1/t) = 0
+                }
+                if margin < 1.0 {
+                    self.kernel.axpy_row(step * y, x.into(), &mut w);
+                }
+            } else {
+                batch_idx.clear();
+                for _ in 0..p.batch_size {
+                    batch_idx.push(rng.below(ds.len()));
+                }
+                violators.clear();
+                self.kernel.hinge_subgrad_accum(
+                    &w,
+                    1.0,
+                    ds.rows,
+                    ds.labels,
+                    &batch_idx,
+                    &mut violators,
+                );
+                if shrink != 0.0 {
+                    crate::linalg::scale_assign(shrink, &mut w);
+                } else {
+                    w.fill(0.0);
+                }
+                for &i in &violators {
+                    let (x, y) = ds.sample(i);
+                    self.kernel.axpy_row(step * y, x.into(), &mut w);
+                }
+            }
+            if p.project {
+                crate::linalg::project_to_ball(&mut w, radius);
+            }
+            if every > 0 && t % every == 0 {
+                snapshot(t, &w);
+            }
+        }
+        LinearModel { w }
     }
 }
 
@@ -208,6 +295,26 @@ mod tests {
         let a = Pegasos::new(params(500)).fit(&train);
         let b = Pegasos::new(params(500)).fit(&train);
         assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn dense_reference_learns_and_tracks_scaled() {
+        let (train, test) = easy_problem(8);
+        let kernel = crate::linalg::kernel::scalar();
+        let mut dense =
+            Pegasos::with_options(params(20_000), kernel, crate::linalg::StepKind::Dense);
+        let md = dense.fit(&train);
+        assert!(accuracy(&md, &test) > 0.9);
+        let md2 = dense.fit(&train);
+        assert_eq!(md.w, md2.w, "dense path must be deterministic");
+        // short horizon: representations agree to rounding (the full
+        // adversarial pin lives in rust/tests/step_equivalence.rs)
+        let mut a = Pegasos::with_options(params(200), kernel, crate::linalg::StepKind::Dense);
+        let mut b = Pegasos::with_options(params(200), kernel, crate::linalg::StepKind::Scaled);
+        let (wa, wb) = (a.fit(&train).w, b.fit(&train).w);
+        for (x, y) in wa.iter().zip(&wb) {
+            assert!((x - y).abs() <= 1e-10 * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! * samples are visited in epoch order over a shuffled permutation rather
 //!   than i.i.d. draws.
 
-use super::{LinearModel, ScaledVector, Solver};
+use super::{LinearModel, ScaledVector, Solver, StepKind};
 use crate::data::ShardView;
 use crate::rng::Rng;
 
@@ -37,17 +37,29 @@ pub struct SvmSgd {
     pub params: SvmSgdParams,
     /// Kernel backend for the margin dots (scalar reference by default).
     kernel: &'static dyn crate::linalg::Kernel,
+    /// Step representation (`auto` resolves to the scaled fast path).
+    step: StepKind,
 }
 
 impl SvmSgd {
     /// Creates a solver with the given parameters (scalar kernel).
     pub fn new(params: SvmSgdParams) -> Self {
-        Self { params, kernel: crate::linalg::kernel::scalar() }
+        Self { params, kernel: crate::linalg::kernel::scalar(), step: StepKind::Auto }
     }
 
     /// Creates a solver whose margin dots run on `kernel`.
     pub fn with_kernel(params: SvmSgdParams, kernel: &'static dyn crate::linalg::Kernel) -> Self {
-        Self { params, kernel }
+        Self { params, kernel, step: StepKind::Auto }
+    }
+
+    /// Creates a solver with an explicit kernel backend *and* step
+    /// representation (`[runtime] step` / `--step` plumb through here).
+    pub fn with_options(
+        params: SvmSgdParams,
+        kernel: &'static dyn crate::linalg::Kernel,
+        step: StepKind,
+    ) -> Self {
+        Self { params, kernel, step }
     }
 
     /// Bottou's skip-ahead heuristic for `t₀`: pick it so the initial step
@@ -66,13 +78,10 @@ impl SvmSgd {
     }
 }
 
-impl Solver for SvmSgd {
-    fn fit_view(&mut self, ds: ShardView<'_>) -> LinearModel {
+impl SvmSgd {
+    /// The scaled-iterate epoch loop (O(1) shrink, O(nnz) update).
+    fn fit_scaled(&self, ds: ShardView<'_>, t0: f64, rng: &mut Rng) -> LinearModel {
         let p = &self.params;
-        assert!(p.lambda > 0.0, "SvmSgd: lambda must be positive");
-        assert!(!ds.is_empty(), "SvmSgd: empty dataset");
-        let mut rng = Rng::new(p.seed);
-        let t0 = self.calibrate_t0(ds, &mut rng);
         let mut w = ScaledVector::zeros(ds.dim);
         let mut order: Vec<usize> = (0..ds.len()).collect();
         let mut t = 0.0f64;
@@ -97,6 +106,50 @@ impl Solver for SvmSgd {
             }
         }
         LinearModel { w: w.to_dense() }
+    }
+
+    /// The O(d) dense reference loop — same shuffles, same step schedule, a
+    /// plain `Vec<f64>` instead of the scaled representation (pinned
+    /// against [`Self::fit_scaled`] in `rust/tests/step_equivalence.rs`).
+    fn fit_dense(&self, ds: ShardView<'_>, t0: f64, rng: &mut Rng) -> LinearModel {
+        let p = &self.params;
+        let mut w = vec![0.0f64; ds.dim];
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        let mut t = 0.0f64;
+        for _ in 0..p.epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let eta = 1.0 / (p.lambda * (t + t0));
+                let (x, y) = ds.sample(i);
+                let margin = y * self.kernel.dot_row(x.into(), &w);
+                let shrink = 1.0 - eta * p.lambda;
+                if shrink > 0.0 {
+                    crate::linalg::scale_assign(shrink, &mut w);
+                } else {
+                    w.fill(0.0);
+                }
+                if margin < 1.0 {
+                    self.kernel.axpy_row(eta * y, x.into(), &mut w);
+                }
+                t += 1.0;
+            }
+        }
+        LinearModel { w }
+    }
+}
+
+impl Solver for SvmSgd {
+    fn fit_view(&mut self, ds: ShardView<'_>) -> LinearModel {
+        let p = &self.params;
+        assert!(p.lambda > 0.0, "SvmSgd: lambda must be positive");
+        assert!(!ds.is_empty(), "SvmSgd: empty dataset");
+        let mut rng = Rng::new(p.seed);
+        let t0 = self.calibrate_t0(ds, &mut rng);
+        if self.step.is_scaled() {
+            self.fit_scaled(ds, t0, &mut rng)
+        } else {
+            self.fit_dense(ds, t0, &mut rng)
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -136,6 +189,19 @@ mod tests {
         let m1 = SvmSgd::new(SvmSgdParams { lambda: 1e-3, epochs: 3, seed: 5 }).fit(&train);
         let m2 = SvmSgd::new(SvmSgdParams { lambda: 1e-3, epochs: 3, seed: 5 }).fit(&train);
         assert_eq!(m1.w, m2.w);
+    }
+
+    #[test]
+    fn dense_reference_tracks_scaled() {
+        let (train, _) = easy_problem(25);
+        let kernel = crate::linalg::kernel::scalar();
+        let p = SvmSgdParams { lambda: 1e-3, epochs: 2, seed: 4 };
+        let md =
+            SvmSgd::with_options(p.clone(), kernel, crate::linalg::StepKind::Dense).fit(&train);
+        let ms = SvmSgd::with_options(p, kernel, crate::linalg::StepKind::Scaled).fit(&train);
+        for (a, b) in md.w.iter().zip(&ms.w) {
+            assert!((a - b).abs() <= 1e-10 * (1.0 + a.abs().max(b.abs())), "{a} vs {b}");
+        }
     }
 
     #[test]

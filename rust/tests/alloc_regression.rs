@@ -1,0 +1,181 @@
+//! Steady-state allocation pin for the Parallel-scheduler hot path.
+//!
+//! The iteration loop is allocation-free once warm: indexed pool dispatch
+//! (`ParallelExec::run_indexed`) enqueues plain `{fn, index}` jobs into a
+//! retained-capacity queue, the scaled-step solver scratch
+//! (`coordinator::backend::StepScratch`) and the mixer's mass buffers are
+//! built once and reused, and node state (`w`, `w_prev`, RNG) never
+//! reallocates. This test drives the exact per-iteration sequence of
+//! `GadgetRunner::run_trial` — local-step fan-out, mixer consensus with
+//! the pool as panel executor, estimate/convergence fan-out — under a
+//! counting global allocator and pins the steady-state allocation count
+//! per iteration to **zero**.
+//!
+//! The hard assertion is release-only (`cargo test --release`; `ci.sh`
+//! runs it via the release test pass): debug builds share the allocation
+//! behavior but we keep the gate conservative so unoptimized std
+//! internals can never flake the tier-1 debug run. The measurement takes
+//! the *minimum* over several windows, so a one-off allocation from the
+//! test harness' own threads (stdout capture etc.) cannot produce a
+//! false positive — a true per-iteration allocation shows up in every
+//! window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use gadget::coordinator::sched::{GossipProtocol, ProtocolParams, Scheduler};
+use gadget::coordinator::{NodeState, Parallel};
+use gadget::data::synthetic::{generate, DatasetSpec};
+use gadget::data::{Dataset, ShardStore, StaticStore};
+use gadget::gossip::{Mixer, PushSumMixer};
+use gadget::rng::Rng;
+use gadget::topology::stochastic::WeightScheme;
+use gadget::topology::{Graph, TransitionMatrix};
+
+/// Forwards to the system allocator, counting every allocation
+/// (`alloc`/`alloc_zeroed`/`realloc`) from **all** threads — pool workers
+/// included, which is the point: a per-iteration allocation on a worker
+/// is just as much a regression as one on the caller.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn train_set() -> Dataset {
+    let spec = DatasetSpec {
+        name: "alloc-pin".into(),
+        train_size: 240,
+        test_size: 32,
+        features: 64,
+        nnz_per_row: 10,
+        noise: 0.05,
+        positive_rate: 0.5,
+        lambda: 1e-3,
+    };
+    generate(&spec, 41, 1.0).train
+}
+
+/// One GADGET iteration, exactly the `run_trial` sequence: (a)–(f) local
+/// steps fanned over the pool, (g) push-sum mixing with the pool as panel
+/// executor, (g)-consume/(h)/ε per node.
+fn iteration(
+    sched: &mut Parallel,
+    protocol: &GossipProtocol,
+    store: &StaticStore,
+    nodes: &mut [NodeState],
+    ids: &[usize],
+    mixer: &mut PushSumMixer,
+    sizes: &[f64],
+    t: usize,
+) {
+    let store_ref: &dyn ShardStore = store;
+    sched
+        .for_each_node(nodes, ids, &|backend, _slot, node| {
+            protocol.local_step(backend, store_ref.shard(node.id), node, t)
+        })
+        .unwrap();
+    mixer.mix(
+        &mut nodes.iter().map(|n| n.w.as_slice()),
+        sizes,
+        sched.panel_exec(),
+        sched.kernel(),
+    );
+    let mixer_ref: &dyn Mixer = mixer;
+    sched
+        .for_each_node(nodes, ids, &|_backend, slot, node| {
+            protocol.apply_estimate(mixer_ref, slot, node);
+            protocol.check_convergence(node);
+            Ok(())
+        })
+        .unwrap();
+}
+
+#[test]
+fn parallel_hot_path_is_allocation_free_at_steady_state() {
+    let train = train_set();
+    let m = 4usize;
+    let d = train.dim;
+    let seed = 9u64;
+
+    let store = StaticStore::split(&train, m, seed).unwrap();
+    let mut sizes = vec![0.0f64; m];
+    store.sizes_into(&mut sizes);
+    let mut nodes: Vec<NodeState> = (0..m)
+        .map(|id| NodeState::new(id, Dataset::default(), d, Rng::new(seed ^ id as u64)))
+        .collect();
+    let ids: Vec<usize> = (0..m).collect();
+    let protocol = GossipProtocol::new(ProtocolParams {
+        lambda: 1e-3,
+        batch_size: 2,
+        local_steps: 1,
+        project_local: true,
+        project_consensus: true,
+        epsilon: 1e-12, // never trips on this short run — the check still executes
+    });
+    let b = TransitionMatrix::from_graph(&Graph::complete(m), WeightScheme::MetropolisHastings);
+    let mut mixer = PushSumMixer::new(b, 4, d, &sizes);
+    let mut sched = Parallel::native(2);
+
+    // Warm-up: first iterations build the per-backend solver scratch, the
+    // mixer mass buffers, node `w_prev`, and grow the pool queue to its
+    // peak depth. All of that is one-time.
+    let mut t = 1usize;
+    for _ in 0..6 {
+        iteration(&mut sched, &protocol, &store, &mut nodes, &ids, &mut mixer, &sizes, t);
+        t += 1;
+    }
+
+    const WINDOWS: usize = 3;
+    const ITERS_PER_WINDOW: usize = 20;
+    let mut min_window_allocs = usize::MAX;
+    for _ in 0..WINDOWS {
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        for _ in 0..ITERS_PER_WINDOW {
+            iteration(&mut sched, &protocol, &store, &mut nodes, &ids, &mut mixer, &sizes, t);
+            t += 1;
+        }
+        let delta = ALLOCATIONS.load(Ordering::SeqCst) - before;
+        min_window_allocs = min_window_allocs.min(delta);
+    }
+
+    // Sanity on the run itself: weights moved and stayed finite.
+    for node in &nodes {
+        assert!(node.w.iter().all(|x| x.is_finite()));
+        assert!(node.w.iter().any(|&x| x != 0.0), "node {} never trained", node.id);
+    }
+
+    #[cfg(not(debug_assertions))]
+    assert_eq!(
+        min_window_allocs, 0,
+        "steady-state Parallel iteration allocated ({min_window_allocs} allocations \
+         over the best {ITERS_PER_WINDOW}-iteration window)"
+    );
+    #[cfg(debug_assertions)]
+    eprintln!(
+        "alloc_regression (debug, not asserted): best window = {min_window_allocs} \
+         allocations / {ITERS_PER_WINDOW} iterations"
+    );
+}
