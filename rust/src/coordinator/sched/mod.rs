@@ -184,9 +184,13 @@ impl Scheduler for Sequential<'_> {
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
 // SAFETY: a SendPtr is only dereferenced under the per-index
-// disjointness invariants documented where it is used.
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
+// disjointness invariants documented where it is used. The `T: Send`
+// bound is load-bearing on both impls: sharing the wrapper hands each
+// thread exclusive (`&mut`) access to disjoint `T`s, which is a Send
+// transfer — an unbounded impl would launder non-Send data (e.g. `Rc`
+// internals) across pool threads.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Collects disjoint `&mut` references to the selected nodes, in id
 /// order, without unsafe: one forward walk of the slice's `iter_mut`.

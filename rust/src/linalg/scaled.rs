@@ -17,6 +17,9 @@
 //! * `norm_sq_v` caches `‖v‖²`, maintained *incrementally* by the update
 //!   loop (`norm_sq_v += new² − old²` per touched slot, in index order), so
 //!   `‖w‖² = scale²·norm_sq_v` and the Pegasos ball projection are O(1).
+//!   The cache is clamped at zero after each update: cancellation drift
+//!   could otherwise push it slightly negative, turning `norm_sq().sqrt()`
+//!   into NaN and silently disabling projection.
 //! * **Renormalization rule**: whenever `|scale|` drops below
 //!   [`RESCALE_THRESHOLD`] (`1e-120` — far above the f64 denormal range at
 //!   ~`5e-324`, far below any step factor a sane λ produces) the scale is
@@ -128,6 +131,14 @@ impl ScaledIterate {
     /// Accepts `&SparseVec` or a zero-copy [`crate::linalg::RowRef`].
     pub fn add_sparse<'a>(&mut self, c: f64, x: impl Into<crate::linalg::RowRef<'a>>) {
         scalar::axpy_scaled_row(c, x.into(), self.scale, &mut self.v, &mut self.norm_sq_v);
+        // ‖v‖² is a sum of squares, but the incremental `new² − old²`
+        // maintenance can cancel it slightly negative over long runs —
+        // which would make norm_sq().sqrt() NaN and silently disable
+        // project_to_ball (`NaN > r` is false) for the rest of training.
+        // This is the only operation that can push the cache below zero.
+        if self.norm_sq_v < 0.0 {
+            self.norm_sq_v = 0.0;
+        }
     }
 
     /// Projects onto the ball of radius `r`: `w ← min{1, r/‖w‖}·w` — O(1).
@@ -348,6 +359,21 @@ mod tests {
         let mut out2 = vec![7.0; 3];
         sv.to_dense_into(&mut out2);
         assert_eq!(out2, dense);
+    }
+
+    #[test]
+    fn norm_cache_clamps_negative_drift() {
+        // Simulate the cancellation hazard directly: a cache driven
+        // slightly negative must not survive the next update — a negative
+        // cache makes norm_sq().sqrt() NaN, and `NaN > r` being false
+        // would silently disable project_to_ball for the rest of training.
+        let mut sv = ScaledIterate::zeros(2);
+        sv.norm_sq_v = -1e-300;
+        sv.add_sparse(0.0, &SparseVec::new(vec![0], vec![0.0]));
+        assert_eq!(sv.norm_sq_v, 0.0);
+        assert!(!sv.norm_sq().sqrt().is_nan());
+        sv.project_to_ball(1.0);
+        assert!(sv.to_dense().iter().all(|x| x.is_finite()));
     }
 
     #[test]

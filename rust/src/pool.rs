@@ -55,15 +55,17 @@
 //! `run_tasks`: instead of a `Vec` of boxed closures the caller passes
 //! one shared `Fn(usize)` plus a count, and the pool enqueues
 //! lightweight index jobs (a fat pointer and a `usize`) into its
-//! retained-capacity queue against a pool-owned reusable latch. A
-//! steady-state indexed dispatch therefore performs **zero heap
-//! allocations** — the property `rust/tests/alloc_regression.rs` pins
-//! for the iteration hot path. Indexed dispatches are serialized by an
-//! internal mutex (the pool owns exactly one reusable latch); tasks
-//! running under `run_tasks` may call `run_indexed` (the fanned-out
-//! trial → mixing-round nesting), but an *indexed* job must never
-//! dispatch `run_indexed` on its own pool — it would block on the latch
-//! it is itself counted in.
+//! retained-capacity queue. Every dispatch — boxed or indexed — checks
+//! a completion latch out of a pool-owned freelist and recycles it when
+//! its scope completes, so a steady-state indexed dispatch performs
+//! **zero heap allocations** (cloning the recycled latch's `Arc` per
+//! job is a refcount bump) — the property
+//! `rust/tests/alloc_regression.rs` pins for the iteration hot path.
+//! Because each dispatch owns its own latch and no pool-wide lock is
+//! held while help-running, dispatches nest freely in every combination
+//! (boxed-under-boxed, indexed-under-boxed, indexed-under-indexed) and
+//! concurrent dispatches from unrelated threads never serialize behind
+//! one another.
 
 use crate::Result;
 use std::collections::VecDeque;
@@ -174,31 +176,12 @@ enum Work {
     Indexed { f: IndexedFn, index: usize },
 }
 
-/// How a queued job reaches the latch it reports to.
-enum ScopeRef {
-    /// A `run_tasks` scope, allocated per call and shared via `Arc`.
-    Owned(Arc<ScopeState>),
-    /// The pool-owned reusable `run_indexed` scope. The borrow is
-    /// `'static` by the same erasure argument as the tasks themselves:
-    /// the dispatch that created this job does not return until the
-    /// latch counts it finished, and the latch's storage (a `Box` inside
-    /// [`WorkerPool`]) outlives every dispatch.
-    Borrowed(&'static ScopeState),
-}
-
-impl ScopeRef {
-    fn state(&self) -> &ScopeState {
-        match self {
-            ScopeRef::Owned(scope) => scope,
-            ScopeRef::Borrowed(scope) => scope,
-        }
-    }
-}
-
-/// One queued unit of work plus the latch it reports to.
+/// One queued unit of work plus the latch it reports to. The `Arc` clone
+/// each job carries is a refcount bump, not an allocation — latches are
+/// recycled through the pool's freelist (see [`WorkerPool::latches`]).
 struct Job {
     work: Work,
-    scope: ScopeRef,
+    scope: Arc<ScopeState>,
 }
 
 /// State shared between the pool handle and its workers.
@@ -237,7 +220,6 @@ fn run_job(job: Job) {
             panic_message(payload.as_ref())
         )),
     };
-    let scope = scope.state();
     let mut p = lock(&scope.progress);
     if let Some(e) = outcome {
         if p.first_error.is_none() {
@@ -286,14 +268,14 @@ fn worker_loop(shared: &Shared) {
 pub struct WorkerPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
-    /// The reusable `run_indexed` latch. Boxed so its address is stable
-    /// for the lifetime of the pool (jobs hold `&'static` borrows of it;
-    /// see [`ScopeRef::Borrowed`]), reset under `dispatch` per call —
-    /// this is what makes an indexed dispatch allocation-free.
-    indexed_scope: Box<ScopeState>,
-    /// Serializes `run_indexed` calls: the pool owns exactly one
-    /// reusable latch, so only one indexed dispatch may be in flight.
-    dispatch: Mutex<()>,
+    /// Freelist of recycled completion latches. Every dispatch checks
+    /// one out (allocating only when the list is empty — warm-up, or
+    /// deeper dispatch concurrency than ever seen before) and returns
+    /// it on completion, so steady-state dispatch is allocation-free:
+    /// the `Arc::clone` per enqueued job is a refcount bump and the
+    /// `Vec` retains its capacity. No pool-wide lock is ever held
+    /// across job execution, so dispatches nest and interleave freely.
+    latches: Mutex<Vec<Arc<ScopeState>>>,
 }
 
 impl WorkerPool {
@@ -315,11 +297,66 @@ impl WorkerPool {
                     .expect("pool: failed to spawn worker thread")
             })
             .collect();
-        let indexed_scope = Box::new(ScopeState {
-            progress: Mutex::new(ScopeProgress { remaining: 0, first_error: None }),
-            done: Condvar::new(),
+        Self { shared, workers, latches: Mutex::new(Vec::new()) }
+    }
+
+    /// Checks a completion latch out of the freelist (allocating only
+    /// when it is empty), armed for `n` jobs.
+    fn checkout_latch(&self, n: usize) -> Arc<ScopeState> {
+        let scope = lock(&self.latches).pop().unwrap_or_else(|| {
+            Arc::new(ScopeState {
+                progress: Mutex::new(ScopeProgress { remaining: 0, first_error: None }),
+                done: Condvar::new(),
+            })
         });
-        Self { shared, workers, indexed_scope, dispatch: Mutex::new(()) }
+        {
+            let mut p = lock(&scope.progress);
+            debug_assert_eq!(p.remaining, 0, "recycled latch still in flight");
+            p.remaining = n;
+            p.first_error = None;
+        }
+        scope
+    }
+
+    /// Help-runs queued jobs until this scope's work is done, blocks on
+    /// the latch for the in-flight remainder, recycles the latch, and
+    /// returns the scope's outcome.
+    ///
+    /// The help loop pops LIFO (most-recently enqueued first, so a
+    /// nested dispatch services its own freshly-queued sub-jobs before
+    /// stealing unrelated work) and exits as soon as this scope's
+    /// `remaining` hits zero — it never keeps draining other scopes'
+    /// jobs after its own work is finished (their dispatchers and the
+    /// workers make that progress), so a dispatch cannot be held
+    /// hostage by a long foreign task enqueued after its own jobs.
+    fn finish_scope(&self, scope: Arc<ScopeState>) -> Result<()> {
+        loop {
+            if lock(&scope.progress).remaining == 0 {
+                break;
+            }
+            let job = lock(&self.shared.queue).jobs.pop_back();
+            match job {
+                Some(job) => run_job(job),
+                None => break,
+            }
+        }
+        // Whatever is left of this scope is running on other threads;
+        // wait for the latch.
+        let mut p = lock(&scope.progress);
+        while p.remaining > 0 {
+            p = scope.done.wait(p).unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+        let outcome = match p.first_error.take() {
+            None => Ok(()),
+            Some(e) => Err(e),
+        };
+        drop(p);
+        // Recycle: `remaining == 0` means every job of this scope has
+        // reported. A worker that just reported may still hold a dying
+        // `Arc` clone, but it never touches the scope again, so the
+        // latch is safe to re-arm immediately.
+        lock(&self.latches).push(scope);
+        outcome
     }
 }
 
@@ -333,10 +370,7 @@ impl ParallelExec for WorkerPool {
         if n == 0 {
             return Ok(());
         }
-        let scope = Arc::new(ScopeState {
-            progress: Mutex::new(ScopeProgress { remaining: n, first_error: None }),
-            done: Condvar::new(),
-        });
+        let scope = self.checkout_latch(n);
         {
             let mut q = lock(&self.shared.queue);
             for task in tasks {
@@ -348,87 +382,39 @@ impl ParallelExec for WorkerPool {
                 let task = unsafe { std::mem::transmute::<Task<'env>, ErasedTask>(task) };
                 q.jobs.push_back(Job {
                     work: Work::Boxed(task),
-                    scope: ScopeRef::Owned(Arc::clone(&scope)),
+                    scope: Arc::clone(&scope),
                 });
             }
             self.shared.available.notify_all();
         }
-        // Help-run instead of idling: drain LIFO so a nested dispatch
-        // (a pool task calling run_tasks) services its own freshly-queued
-        // sub-tasks first — and progress never requires a free worker.
-        loop {
-            let job = lock(&self.shared.queue).jobs.pop_back();
-            match job {
-                Some(job) => run_job(job),
-                None => break,
-            }
-        }
-        // Whatever is left of this scope is running on workers; wait.
-        let mut p = lock(&scope.progress);
-        while p.remaining > 0 {
-            p = scope.done.wait(p).unwrap_or_else(|poisoned| poisoned.into_inner());
-        }
-        match p.first_error.take() {
-            None => Ok(()),
-            Some(e) => Err(e),
-        }
+        // Help-run instead of idling (progress never requires a free
+        // worker), then block on the latch for the in-flight remainder.
+        self.finish_scope(scope)
     }
 
     fn run_indexed(&self, count: usize, f: &(dyn Fn(usize) -> Result<()> + Sync)) -> Result<()> {
         if count == 0 {
             return Ok(());
         }
-        // One indexed dispatch at a time: the pool owns a single reusable
-        // latch. The guard is held for the entire call, so `run_tasks`
-        // tasks may nest `run_indexed` (they queue up here and proceed
-        // when the current dispatch finishes) — but an indexed job must
-        // never call `run_indexed` on its own pool: it would block on the
-        // latch it is itself counted in (module docs, §Indexed dispatch).
-        let _dispatch = lock(&self.dispatch);
-        let scope: &ScopeState = &self.indexed_scope;
-        {
-            let mut p = lock(&scope.progress);
-            debug_assert_eq!(p.remaining, 0, "indexed latch reused while in flight");
-            p.remaining = count;
-            p.first_error = None;
-        }
+        let scope = self.checkout_latch(count);
         // SAFETY: same erasure argument as `run_tasks` — this call does
         // not return before the latch counts every index job finished,
         // and `run_job` finishes its use of `f` before decrementing, so
-        // no borrow of `f`'s captures survives this call. The scope
-        // borrow is sound because the latch `Box` lives as long as the
-        // pool and the dispatch mutex keeps reuse exclusive.
+        // no borrow of `f`'s captures survives this call.
         let f = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) -> Result<()> + Sync), IndexedFn>(f)
         };
-        let scope_static =
-            unsafe { std::mem::transmute::<&ScopeState, &'static ScopeState>(scope) };
         {
             let mut q = lock(&self.shared.queue);
             for index in 0..count {
                 q.jobs.push_back(Job {
                     work: Work::Indexed { f, index },
-                    scope: ScopeRef::Borrowed(scope_static),
+                    scope: Arc::clone(&scope),
                 });
             }
             self.shared.available.notify_all();
         }
-        // Help-run LIFO, exactly as in `run_tasks`.
-        loop {
-            let job = lock(&self.shared.queue).jobs.pop_back();
-            match job {
-                Some(job) => run_job(job),
-                None => break,
-            }
-        }
-        let mut p = lock(&scope.progress);
-        while p.remaining > 0 {
-            p = scope.done.wait(p).unwrap_or_else(|poisoned| poisoned.into_inner());
-        }
-        match p.first_error.take() {
-            None => Ok(()),
-            Some(e) => Err(e),
-        }
+        self.finish_scope(scope)
     }
 }
 
@@ -638,9 +624,12 @@ mod tests {
     #[test]
     fn run_indexed_nested_under_run_tasks() {
         // The trial → mixing-round shape: boxed tasks on the pool each
-        // dispatch an indexed batch on the same pool. The dispatch mutex
-        // serializes them; help-running keeps every caller live even at
-        // pool size 1.
+        // dispatch an indexed batch on the same pool, concurrently (each
+        // checks its own latch out of the freelist); help-running keeps
+        // every caller live even at pool size 1. This also exercises the
+        // reentrancy the old single-latch design deadlocked on: a
+        // dispatcher's help loop popping a sibling boxed task that
+        // itself calls run_indexed.
         for threads in [1usize, 2, 4] {
             let pool = WorkerPool::new(threads);
             let hits = AtomicUsize::new(0);
@@ -659,6 +648,45 @@ mod tests {
             pool.run_tasks(outer).unwrap();
             assert_eq!(hits.load(Ordering::SeqCst), 30, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn run_indexed_nested_under_run_indexed() {
+        // Per-dispatch latches make indexed-under-indexed nesting legal
+        // (the single-latch design forbade it: an indexed job dispatching
+        // run_indexed would have blocked on the latch it was counted in).
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits = AtomicUsize::new(0);
+            pool.run_indexed(6, &|_| {
+                pool.run_indexed(5, &|_| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                })
+            })
+            .unwrap();
+            assert_eq!(hits.load(Ordering::SeqCst), 30, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn concurrent_run_indexed_from_multiple_threads() {
+        // Indexed dispatches from unrelated threads no longer serialize
+        // behind a pool-wide mutex; each runs under its own latch.
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    pool.run_indexed(25, &|_| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                        Ok(())
+                    })
+                    .unwrap();
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
     }
 
     #[test]

@@ -201,25 +201,42 @@ impl ModelArtifact {
         rows: &[SparseVec],
         out: &mut [Prediction],
     ) {
-        assert_eq!(rows.len(), out.len(), "predict_batch_with: length mismatch");
+        let mut margins = Vec::new();
+        self.predict_batch_scratch(kernel, rows, out, &mut margins);
+    }
+
+    /// [`Self::predict_batch_with`] with a caller-retained margins scratch
+    /// buffer (cleared and resized per call, capacity reused) — the warm
+    /// serve path's allocation-free variant: [`super::ShardedScorer`]
+    /// keeps one scratch cell per shard slot, so once each cell has grown
+    /// to its largest chunk, batch scoring allocates nothing.
+    ///
+    /// # Panics
+    /// Panics if `rows.len() != out.len()`.
+    pub fn predict_batch_scratch(
+        &self,
+        kernel: &'static dyn Kernel,
+        rows: &[SparseVec],
+        out: &mut [Prediction],
+        margins: &mut Vec<f64>,
+    ) {
+        assert_eq!(rows.len(), out.len(), "predict_batch_scratch: length mismatch");
         let n = rows.len();
         if n == 0 {
             return;
         }
-        // One margins allocation per *chunk* (not per row), amortized over
-        // the whole batched sweep — the shard tasks that call this are
-        // transient per-request closures, so there is no longer-lived home
-        // for the scratch without adding per-shard mutable state.
         if !self.is_multiclass() {
-            let mut margins = vec![0.0f64; n];
-            kernel.score_rows(&self.weights[0], self.bias[0], rows, &mut margins);
-            for (o, &score) in out.iter_mut().zip(&margins) {
+            margins.clear();
+            margins.resize(n, 0.0);
+            kernel.score_rows(&self.weights[0], self.bias[0], rows, margins);
+            for (o, &score) in out.iter_mut().zip(margins.iter()) {
                 *o = Prediction { label: if score >= 0.0 { 1 } else { -1 }, score };
             }
             return;
         }
         let k = self.classes();
-        let mut margins = vec![0.0f64; k * n];
+        margins.clear();
+        margins.resize(k * n, 0.0);
         for (c, (w, &b)) in self.weights.iter().zip(&self.bias).enumerate() {
             kernel.score_rows(w, b, rows, &mut margins[c * n..(c + 1) * n]);
         }

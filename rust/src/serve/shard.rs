@@ -24,6 +24,7 @@ use crate::linalg::{Kernel, SparseVec};
 use crate::pool::{ParallelExec, WorkerPool, SERIAL_EXEC};
 use crate::Result;
 use anyhow::ensure;
+use std::sync::Mutex;
 
 /// `Send`/`Sync` wrapper for shipping the output base pointer into shard
 /// tasks. The wrapper proves nothing — soundness comes from the tasks'
@@ -44,6 +45,14 @@ pub struct ShardedScorer {
     pool: Option<WorkerPool>,
     /// The kernel backend every shard task's margin dots run on.
     kernel: &'static dyn Kernel,
+    /// Per-shard margins scratch, one cell per shard slot, reused across
+    /// batches — once each cell has grown to its largest chunk, the warm
+    /// serve path performs no per-batch allocation. Mutex-guarded so
+    /// [`Self::score_batch_into`] stays `&self`: chunk `c` of one
+    /// dispatch is run by exactly one thread, so the lock is uncontended
+    /// within a batch; a hypothetical concurrent batch on the same
+    /// scorer blocks briefly on the cell instead of racing.
+    scratch: Vec<Mutex<Vec<f64>>>,
 }
 
 impl ShardedScorer {
@@ -63,7 +72,8 @@ impl ShardedScorer {
     ) -> Self {
         let shards = shards.max(1);
         let pool = if shards > 1 { Some(WorkerPool::new(shards)) } else { None };
-        Self { model, shards, pool, kernel }
+        let scratch = (0..shards).map(|_| Mutex::new(Vec::new())).collect();
+        Self { model, shards, pool, kernel, scratch }
     }
 
     /// Shard count.
@@ -107,10 +117,11 @@ impl ShardedScorer {
     /// chunk per shard by index arithmetic and fanned over the pool's
     /// allocation-free indexed dispatch
     /// ([`ParallelExec::run_indexed`]); each index writes its disjoint
-    /// slice of `out`. With a caller-retained buffer the warm serve path
-    /// performs no per-batch heap allocation once `out`'s capacity has
-    /// grown to the largest batch seen. Empty batches clear `out`
-    /// without touching the pool.
+    /// slice of `out` and scores through its own reusable per-shard
+    /// margins scratch cell. With a caller-retained buffer the warm
+    /// serve path performs no per-batch heap allocation once `out`'s
+    /// capacity and each scratch cell have grown to the largest batch
+    /// seen. Empty batches clear `out` without touching the pool.
     pub fn score_batch_into(
         &self,
         rows: &[SparseVec],
@@ -131,6 +142,7 @@ impl ShardedScorer {
         }
         let model = &self.model;
         let kernel = self.kernel;
+        let scratch = &self.scratch;
         let n = rows.len();
         let chunk = (n + self.shards - 1) / self.shards;
         let tasks_n = (n + chunk - 1) / chunk;
@@ -144,7 +156,11 @@ impl ShardedScorer {
             // outlives all writes.
             let out_chunk =
                 unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
-            model.predict_batch_with(kernel, &rows[lo..hi], out_chunk);
+            // `tasks_n = ceil(n / chunk) ≤ shards`, so index `c` always
+            // has a scratch cell.
+            let mut margins =
+                scratch[c].lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            model.predict_batch_scratch(kernel, &rows[lo..hi], out_chunk, &mut margins);
             Ok(())
         })
     }
@@ -261,6 +277,32 @@ mod tests {
         assert!(cap >= 64);
         scorer.score_batch_into(&rows(64, 5), &mut out).unwrap();
         assert_eq!(out.capacity(), cap);
+    }
+
+    #[test]
+    fn multiclass_scratch_reuse_matches_per_row_predict() {
+        // The k·n margins scratch path, across growing and shrinking
+        // batch sizes on one scorer (per-shard scratch cells resized and
+        // reused between batches), must reproduce the per-row `predict`
+        // loop bitwise on the scalar backend.
+        let dim = 6;
+        let weights: Vec<Vec<f64>> = (0..3)
+            .map(|c| (0..dim).map(|j| (c as f64 + 1.0) * 0.3 - j as f64 * 0.1).collect())
+            .collect();
+        let model =
+            ModelArtifact::new(dim, weights, vec![0.1, -0.2, 0.0], ScalingMeta::default())
+                .unwrap();
+        let scorer = ShardedScorer::new(model, 3);
+        let mut out = Vec::new();
+        for n in [11usize, 40, 5] {
+            let batch = rows(n, dim);
+            scorer.score_batch_into(&batch, &mut out).unwrap();
+            for (g, r) in out.iter().zip(&batch) {
+                let p = scorer.model().predict(r);
+                assert_eq!(g.label, p.label, "n={n}");
+                assert_eq!(g.score.to_bits(), p.score.to_bits(), "n={n}");
+            }
+        }
     }
 
     #[test]
