@@ -3,16 +3,25 @@
 //! number the transport adds (connection setup, request parsing, the
 //! bounded admission queue) is isolated from the scoring math itself.
 //!
-//! One client, one request per connection (the server's own contract:
-//! `Connection: close`), `GADGET_BENCH_SERVE_ROWS` rows per request.
-//! Closed-loop: the next request is not sent until the previous
-//! response is fully read, so queue-wait never contaminates the
+//! Four modes, A/B along both serving-plane axes:
+//!
+//! * `workers=1 keepalive=false` — one fresh connection per request,
+//!   the pre-keep-alive contract. Pays connect + TIME_WAIT per request.
+//! * `workers=1 keepalive=true`  — one persistent connection, framed
+//!   reads. The per-request delta vs the row above is the connection
+//!   setup cost the keep-alive plane removes.
+//! * `workers=2|4 keepalive=true` — `workers` concurrent closed-loop
+//!   clients against a server with that many request executors; the
+//!   throughput ratio vs `workers=1` is the executor scaling curve.
+//!
+//! Closed-loop: each client sends its next request only after fully
+//! reading the previous response, so queue-wait never contaminates the
 //! percentiles — this measures the per-request service path, not
 //! saturation behaviour (overflow/503 semantics are pinned by tests,
-//! not timed here).
+//! not timed here). `GADGET_BENCH_SERVE_ROWS` rows per request.
 //!
-//! Output: `BENCH_serve_latency.json` — p50/p95/p99 round-trip, the
-//! in-process floor at the same batch size, and rows/sec throughput.
+//! Output: `BENCH_serve_latency.json` — per-mode p50/p95/p99 round-trip
+//! and rows/sec, plus the in-process floor at the same batch size.
 
 use gadget::serve::{
     parse_row, HttpConfig, HttpServer, ModelArtifact, RowFormat, ScalingMeta, ServeOptions,
@@ -33,7 +42,7 @@ const DIM: usize = 256;
 /// and dispatch, not training, so the weights only need to be fixed.
 fn artifact() -> ModelArtifact {
     let w: Vec<f64> = (0..DIM).map(|j| ((j * 37 % 19) as f64 - 9.0) / 16.0).collect();
-    ModelArtifact::new(DIM, vec![w], vec![0.0], ScalingMeta::default())
+    ModelArtifact::new(DIM, vec![w], vec![0.0], ScalingMeta::default()).expect("bench artifact")
 }
 
 /// One request body: `rows` LIBSVM lines, 8 features each, strictly
@@ -55,19 +64,113 @@ fn score_body(rows: usize) -> String {
     body
 }
 
-/// One closed-loop round trip: connect, POST `/score`, drain the
-/// response (the server closes the connection after it).
+/// One closed-loop round trip on a fresh connection: connect, POST
+/// `/score` with `Connection: close`, drain the response to EOF.
 fn round_trip(addr: &str, body: &str) -> String {
     let mut stream = TcpStream::connect(addr).expect("connect");
     write!(
         stream,
-        "POST /score HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /score HTTP/1.1\r\nHost: bench\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .expect("send");
     let mut response = String::new();
     stream.read_to_string(&mut response).expect("response");
     response
+}
+
+/// Reads exactly one `Content-Length`-framed response off a keep-alive
+/// connection into `buf`; returns its total length. Fixed buffer — the
+/// keep-alive measurement loop stays allocation-free on the client too.
+fn read_framed(stream: &mut TcpStream, buf: &mut [u8]) -> usize {
+    let mut got = 0usize;
+    let head_end = loop {
+        if let Some(p) = buf[..got].windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = stream.read(&mut buf[got..]).expect("read head");
+        assert!(n > 0, "peer closed mid-response");
+        got += n;
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).expect("utf8 head");
+    let body_len: usize = head
+        .split("\r\n")
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .expect("Content-Length");
+    let total = head_end + body_len;
+    while got < total {
+        let n = stream.read(&mut buf[got..total]).expect("read body");
+        assert!(n > 0, "peer closed mid-body");
+        got += n;
+    }
+    total
+}
+
+/// Runs one mode: `clients` concurrent closed-loop clients, `per_client`
+/// timed requests each. Returns (ascending samples, wall seconds, one
+/// response body for cross-mode identity checks).
+fn run_mode(
+    addr: &str,
+    body: &str,
+    clients: usize,
+    per_client: usize,
+    keepalive: bool,
+) -> (Vec<f64>, f64, String) {
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.to_string();
+            let body = body.to_string();
+            std::thread::spawn(move || {
+                let mut samples = Vec::with_capacity(per_client);
+                let mut sample_body = String::new();
+                if keepalive {
+                    let mut stream = TcpStream::connect(&addr).expect("connect");
+                    let req = format!(
+                        "POST /score HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+                        body.len()
+                    )
+                    .into_bytes();
+                    let mut buf = vec![0u8; 1 << 20];
+                    for _ in 0..per_client {
+                        let t = Instant::now();
+                        stream.write_all(&req).expect("send");
+                        let n = read_framed(&mut stream, &mut buf);
+                        samples.push(t.elapsed().as_secs_f64());
+                        assert!(buf.starts_with(b"HTTP/1.1 200 "), "bad keep-alive response");
+                        let head_end =
+                            buf[..n].windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+                        sample_body = String::from_utf8_lossy(&buf[head_end..n]).into_owned();
+                    }
+                } else {
+                    for _ in 0..per_client {
+                        let t = Instant::now();
+                        let response = round_trip(&addr, &body);
+                        samples.push(t.elapsed().as_secs_f64());
+                        assert!(response.starts_with("HTTP/1.1 200 "), "bad response: {response}");
+                        sample_body = response
+                            .split_once("\r\n\r\n")
+                            .map(|(_, b)| b.to_string())
+                            .unwrap_or_default();
+                    }
+                }
+                (samples, sample_body)
+            })
+        })
+        .collect();
+    let mut all = Vec::with_capacity(clients * per_client);
+    let mut sample_body = String::new();
+    for h in handles {
+        let (samples, b) = h.join().expect("client thread");
+        all.extend(samples);
+        sample_body = b;
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (all, wall_secs, sample_body)
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample.
@@ -82,7 +185,7 @@ fn main() {
     let shards = env_f64("GADGET_BENCH_SERVE_SHARDS", 4.0) as usize;
     println!(
         "Serve latency bench: {requests} requests x {rows_per} rows, dim {DIM}, \
-         {shards} shard replicas (closed-loop, one client)"
+         {shards} shard replicas (closed-loop)"
     );
 
     let body = score_body(rows_per);
@@ -104,50 +207,72 @@ fn main() {
         floor.push(t.elapsed().as_secs_f64());
     }
     floor.sort_by(|a, b| a.partial_cmp(b).unwrap());
-
-    // ---- HTTP round trip -------------------------------------------------
-    let http = HttpConfig { queue_depth: 64, deadline_ms: 30_000 };
-    let server = HttpServer::start(
-        "127.0.0.1:0",
-        http,
-        Some((ShardedScorer::new(artifact(), shards), opts)),
-        None,
-    )
-    .expect("server");
-    let addr = server.local_addr().to_string();
-    for _ in 0..20 {
-        let warm = round_trip(&addr, &body);
-        assert!(warm.starts_with("HTTP/1.1 200 "), "warmup response: {warm}");
-    }
-    let mut rtt = Vec::with_capacity(requests);
-    let wall = Instant::now();
-    for _ in 0..requests {
-        let t = Instant::now();
-        let response = round_trip(&addr, &body);
-        rtt.push(t.elapsed().as_secs_f64());
-        assert!(response.starts_with("HTTP/1.1 200 "), "bad response: {response}");
-    }
-    let wall_secs = wall.elapsed().as_secs_f64();
-    let stats = server.shutdown_and_join().expect("drain");
-    assert_eq!(
-        stats.scored_rows,
-        (requests + 20) * rows_per,
-        "every admitted row must be scored exactly once"
-    );
-    rtt.sort_by(|a, b| a.partial_cmp(b).unwrap());
-
     let (f50, f99) = (percentile(&floor, 50.0), percentile(&floor, 99.0));
-    let (p50, p95, p99) =
-        (percentile(&rtt, 50.0), percentile(&rtt, 95.0), percentile(&rtt, 99.0));
-    let rows_per_sec = (requests * rows_per) as f64 / wall_secs.max(1e-12);
     println!("  in-process floor  : p50 {:.1}us  p99 {:.1}us", 1e6 * f50, 1e6 * f99);
+
+    // ---- HTTP A/B: close vs keep-alive, worker sweep ---------------------
+    const WARMUP: usize = 20;
+    let modes: [(usize, bool); 4] = [(1, false), (1, true), (2, true), (4, true)];
+    let mut mode_docs = Vec::new();
+    let mut reference_body: Option<String> = None;
+    let mut ka1_p50 = f64::NAN;
+    for (workers, keepalive) in modes {
+        let server = HttpServer::start(
+            "127.0.0.1:0",
+            HttpConfig { queue_depth: 64, deadline_ms: 30_000, workers },
+            Some((ShardedScorer::new(artifact(), shards), opts.clone())),
+            None,
+        )
+        .expect("server");
+        let addr = server.local_addr().to_string();
+        for _ in 0..WARMUP {
+            let warm = round_trip(&addr, &body);
+            assert!(warm.starts_with("HTTP/1.1 200 "), "warmup response: {warm}");
+        }
+        let clients = if keepalive { workers } else { 1 };
+        let per_client = (requests / clients).max(1);
+        let (samples, wall_secs, sample_body) =
+            run_mode(&addr, &body, clients, per_client, keepalive);
+        let stats = server.shutdown_and_join().expect("drain");
+        assert_eq!(
+            stats.scored_rows,
+            (WARMUP + clients * per_client) * rows_per,
+            "every admitted row must be scored exactly once"
+        );
+        // responses are byte-identical across every mode — same pin the
+        // tests enforce, checked here so the A/B compares equal work
+        match &reference_body {
+            None => reference_body = Some(sample_body),
+            Some(r) => assert_eq!(r, &sample_body, "mode responses diverged"),
+        }
+        let (p50, p95, p99) =
+            (percentile(&samples, 50.0), percentile(&samples, 95.0), percentile(&samples, 99.0));
+        let rows_per_sec = (clients * per_client * rows_per) as f64 / wall_secs.max(1e-12);
+        if workers == 1 && keepalive {
+            ka1_p50 = p50;
+        }
+        println!(
+            "  workers={workers} keepalive={keepalive}: p50 {:.1}us  p95 {:.1}us  p99 {:.1}us  \
+             ({rows_per_sec:.0} rows/sec, {clients} client(s))",
+            1e6 * p50,
+            1e6 * p95,
+            1e6 * p99
+        );
+        mode_docs.push(Json::obj(vec![
+            ("workers", Json::Num(workers as f64)),
+            ("keepalive", Json::Bool(keepalive)),
+            ("clients", Json::Num(clients as f64)),
+            ("requests", Json::Num((clients * per_client) as f64)),
+            ("p50_secs", Json::Num(p50)),
+            ("p95_secs", Json::Num(p95)),
+            ("p99_secs", Json::Num(p99)),
+            ("rows_per_sec", Json::Num(rows_per_sec)),
+        ]));
+    }
     println!(
-        "  http round trip   : p50 {:.1}us  p95 {:.1}us  p99 {:.1}us",
-        1e6 * p50,
-        1e6 * p95,
-        1e6 * p99
+        "  transport overhead (keep-alive, workers=1): p50 {:.1}us",
+        1e6 * (ka1_p50 - f50)
     );
-    println!("  transport overhead: p50 {:.1}us  ({rows_per_sec:.0} rows/sec)", 1e6 * (p50 - f50));
 
     let doc = Json::obj(vec![
         ("bench", Json::Str("serve_latency".into())),
@@ -155,14 +280,14 @@ fn main() {
             "note",
             Json::Str(
                 "written by `cargo bench --bench serve_latency`; closed-loop \
-                 single-client POST /score round trips vs the in-process \
-                 score_batch floor at the same batch size (EXPERIMENTS.md, \
+                 POST /score round trips vs the in-process score_batch floor \
+                 at the same batch size, A/B over Connection: close vs \
+                 keep-alive and a 1/2/4 worker sweep (EXPERIMENTS.md, \
                  Serving latency section)"
                     .into(),
             ),
         ),
         ("dim", Json::Num(DIM as f64)),
-        ("requests", Json::Num(requests as f64)),
         ("rows_per_request", Json::Num(rows_per as f64)),
         ("shards", Json::Num(shards as f64)),
         ("queue_depth", Json::Num(64.0)),
@@ -170,16 +295,8 @@ fn main() {
             "in_process",
             Json::obj(vec![("p50_secs", Json::Num(f50)), ("p99_secs", Json::Num(f99))]),
         ),
-        (
-            "http",
-            Json::obj(vec![
-                ("p50_secs", Json::Num(p50)),
-                ("p95_secs", Json::Num(p95)),
-                ("p99_secs", Json::Num(p99)),
-                ("rows_per_sec", Json::Num(rows_per_sec)),
-            ]),
-        ),
-        ("transport_overhead_p50_secs", Json::Num(p50 - f50)),
+        ("http", Json::Arr(mode_docs)),
+        ("transport_overhead_p50_secs", Json::Num(ka1_p50 - f50)),
     ]);
     gadget::experiments::write_output(
         std::path::Path::new("BENCH_serve_latency.json"),

@@ -105,8 +105,10 @@ run_hard cargo test -q --test topology_generators
 # dense reference within its documented bound, and the dense path's
 # scheduler invariance must hold bitwise — at the same degenerate and
 # multi-worker pool sizes as the other equivalence gates. The
-# allocation-free pin runs in release (the assertion is
-# release-gated; the debug pass above ran it as a smoke).
+# allocation-free pins (the Parallel iteration loop AND the warm
+# keep-alive /score request — both in tests/alloc_regression.rs) run in
+# release (the assertions are release-gated; the debug pass above ran
+# them as a smoke).
 run_hard env GADGET_POOL_THREADS=1 GADGET_KERNEL=scalar cargo test -q --test step_equivalence
 run_hard env GADGET_POOL_THREADS=4 GADGET_KERNEL=scalar cargo test -q --test step_equivalence
 run_hard cargo test -q --release --test alloc_regression
@@ -218,13 +220,14 @@ topology_smoke() (
 run_hard topology_smoke
 
 # HTTP smoke: the socket front end must answer POST /score with exactly
-# the bytes the stdin loop writes for the same batch — at a degenerate
-# (1) and a multi-worker (4) shard pool, mirroring the other
-# pool-size-invariance gates — and `train --http-ingest` must accept a
-# mid-run POST /ingest batch, drain on POST /shutdown, and report the
-# accepted rows. Raw HTTP/1.1 over bash's /dev/tcp: no client tooling
-# assumed; the ephemeral port comes from the unbuffered stderr startup
-# line (`http: listening on ADDR ...`).
+# the bytes the stdin loop writes for the same batch — across shard
+# pools (1, 4) AND worker executor counts (1, 4), mirroring the other
+# pool-size-invariance gates — two keep-alive requests down one
+# connection must byte-match two fresh close-mode connections, and
+# `train --http-ingest` must accept a mid-run POST /ingest batch, drain
+# on POST /shutdown, and report the accepted rows. Raw HTTP/1.1 over
+# bash's /dev/tcp: no client tooling assumed; the ephemeral port comes
+# from the unbuffered stderr startup line (`http: listening on ...`).
 http_smoke() (
     set -e
     tmp="$(mktemp -d)"
@@ -241,12 +244,26 @@ http_smoke() (
         return 1
     }
     post() { # PORT PATH BODY_FILE -> full response on stdout
+        # Connection: close — this client reads to EOF, and HTTP/1.1
+        # keep-alive is the server default now
         exec 3<>"/dev/tcp/127.0.0.1/$1"
-        printf 'POST %s HTTP/1.1\r\nHost: ci\r\nContent-Length: %s\r\n\r\n' \
+        printf 'POST %s HTTP/1.1\r\nHost: ci\r\nConnection: close\r\nContent-Length: %s\r\n\r\n' \
             "$2" "$(wc -c < "$3")" >&3
         cat "$3" >&3
         cat <&3
         exec 3<&-
+    }
+    read_framed() { # reads one Content-Length-framed body from fd 3 into $1
+        local len="" line
+        while IFS= read -r line <&3; do
+            line="${line%$'\r'}"
+            [ -z "$line" ] && break
+            case "$line" in
+                [Cc]ontent-[Ll]ength:*) len="$(echo "${line#*:}" | tr -d ' ')" ;;
+            esac
+        done
+        [ -n "$len" ] || { echo "keep-alive response without Content-Length" >&2; return 1; }
+        dd ibs=1 count="$len" status=none <&3 > "$1"
     }
     ./target/release/gadget train --dataset synthetic-usps --scale 0.02 \
         --nodes 3 --trials 1 --max-iterations 60 --save "$tmp/model.json"
@@ -254,18 +271,34 @@ http_smoke() (
     : > "$tmp/empty"
     ./target/release/gadget serve --model "$tmp/model.json" --shards 1 --scores \
         < "$tmp/batch.libsvm" > "$tmp/stdin.txt"
-    for shards in 1 4; do
+    for cfg in "1 1" "4 1" "4 4"; do # "SHARDS WORKERS"
+        shards="${cfg% *}"; workers="${cfg#* }"
+        tag="s${shards}w${workers}"
         ./target/release/gadget serve --model "$tmp/model.json" \
-            --http 127.0.0.1:0 --shards "$shards" --scores \
-            2> "$tmp/serve$shards.err" &
+            --http 127.0.0.1:0 --shards "$shards" --workers "$workers" --scores \
+            2> "$tmp/serve$tag.err" &
         srv=$!
-        port="$(await_listen "$tmp/serve$shards.err")"; port="${port##*:}"
-        post "$port" /score "$tmp/batch.libsvm" > "$tmp/resp$shards.txt"
-        head -1 "$tmp/resp$shards.txt" | grep -q '200'
+        port="$(await_listen "$tmp/serve$tag.err")"; port="${port##*:}"
+        post "$port" /score "$tmp/batch.libsvm" > "$tmp/resp$tag.txt"
+        head -1 "$tmp/resp$tag.txt" | grep -q '200'
         # body = everything after the blank separator line, byte-equal
         # to the stdin path (scores included: textual == bitwise)
-        awk 'body{print} /^\r?$/{body=1}' "$tmp/resp$shards.txt" > "$tmp/http$shards.txt"
-        diff "$tmp/stdin.txt" "$tmp/http$shards.txt"
+        awk 'body{print} /^\r?$/{body=1}' "$tmp/resp$tag.txt" > "$tmp/http$tag.txt"
+        diff "$tmp/stdin.txt" "$tmp/http$tag.txt"
+        # keep-alive: two requests down ONE connection, framed reads —
+        # each body byte-equal to the fresh-connection (and stdin) bytes
+        exec 3<>"/dev/tcp/127.0.0.1/$port"
+        for i in 1 2; do
+            printf 'POST /score HTTP/1.1\r\nHost: ci\r\nContent-Length: %s\r\n\r\n' \
+                "$(wc -c < "$tmp/batch.libsvm")" >&3
+            cat "$tmp/batch.libsvm" >&3
+            IFS= read -r status <&3
+            case "$status" in *" 200 "*) ;; *) echo "keep-alive status: $status" >&2; exit 1 ;; esac
+            read_framed "$tmp/ka$i.txt"
+        done
+        exec 3<&-
+        diff "$tmp/ka1.txt" "$tmp/stdin.txt"
+        diff "$tmp/ka2.txt" "$tmp/stdin.txt"
         post "$port" /shutdown "$tmp/empty" | head -1 | grep -q '200'
         wait "$srv"
     done

@@ -166,6 +166,11 @@ pub struct ExperimentConfig {
     /// section: `deadline-ms = N`, ≥ 1), counted from admission — time
     /// spent queued counts against it.
     pub serve_deadline_ms: u64,
+    /// HTTP worker threads serving admitted connections concurrently
+    /// (`[serve]` section: `workers = N`; 0 = auto: the scorer's shard
+    /// count, or 1 on an ingest-only server). Responses are bitwise
+    /// worker-count-invariant — this only moves work.
+    pub serve_workers: usize,
     /// Streaming ingestion rate in rows per GADGET iteration, network
     /// wide (`[stream]` section: `rate = F`). `0` (the default) disables
     /// streaming — the classic load-once/partition-once static path.
@@ -238,6 +243,7 @@ impl Default for ExperimentConfig {
             serve_http: None,
             serve_queue_depth: 64,
             serve_deadline_ms: 5_000,
+            serve_workers: 0,
             stream_rate: 0.0,
             stream_schedule: StreamSchedule::Uniform,
             stream_max_rows: 0,
@@ -470,6 +476,7 @@ impl ExperimentConfig {
                 "serve.deadline-ms" | "serve.deadline_ms" | "deadline-ms" | "deadline_ms" => {
                     cfg.serve_deadline_ms = value.as_usize_or(k)? as u64
                 }
+                "serve.workers" | "workers" => cfg.serve_workers = value.as_usize_or(k)?,
                 // `[stream]` section (flat spellings accepted too).
                 "stream.rate" | "rate" => cfg.stream_rate = value.as_f64_or(k)?,
                 "stream.schedule" | "schedule" => {
@@ -661,6 +668,12 @@ impl ConfigBuilder {
     /// Sets the per-HTTP-request deadline budget in milliseconds.
     pub fn serve_deadline_ms(mut self, ms: u64) -> Self {
         self.cfg.serve_deadline_ms = ms;
+        self
+    }
+
+    /// Sets the HTTP worker thread count (0 = auto: shard count).
+    pub fn serve_workers(mut self, n: usize) -> Self {
+        self.cfg.serve_workers = n;
         self
     }
 
@@ -1072,31 +1085,37 @@ snapshot_every = 10
     #[test]
     fn serve_http_section_round_trips() {
         let cfg = ExperimentConfig::from_toml(
-            "[serve]\nhttp = \"127.0.0.1:8080\"\nqueue-depth = 8\ndeadline-ms = 250\n",
+            "[serve]\nhttp = \"127.0.0.1:8080\"\nqueue-depth = 8\ndeadline-ms = 250\nworkers = 4\n",
         )
         .unwrap();
         assert_eq!(cfg.serve_http.as_deref(), Some("127.0.0.1:8080"));
         assert_eq!(cfg.serve_queue_depth, 8);
         assert_eq!(cfg.serve_deadline_ms, 250);
+        assert_eq!(cfg.serve_workers, 4);
         // flat and underscore spellings accepted too
-        let flat =
-            ExperimentConfig::from_toml("http = \"0.0.0.0:0\"\nqueue_depth = 2\ndeadline_ms = 9")
-                .unwrap();
+        let flat = ExperimentConfig::from_toml(
+            "http = \"0.0.0.0:0\"\nqueue_depth = 2\ndeadline_ms = 9\nworkers = 1",
+        )
+        .unwrap();
         assert_eq!(flat.serve_http.as_deref(), Some("0.0.0.0:0"));
         assert_eq!((flat.serve_queue_depth, flat.serve_deadline_ms), (2, 9));
-        // defaults: stdin serving, depth 64, 5 s budget
+        assert_eq!(flat.serve_workers, 1);
+        // defaults: stdin serving, depth 64, 5 s budget, auto workers
         let d = ExperimentConfig::default();
         assert_eq!(d.serve_http, None);
         assert_eq!((d.serve_queue_depth, d.serve_deadline_ms), (64, 5_000));
+        assert_eq!(d.serve_workers, 0);
         // builder setters
         let b = ExperimentConfig::builder()
             .serve_http("127.0.0.1:0")
             .serve_queue_depth(3)
             .serve_deadline_ms(77)
+            .serve_workers(2)
             .build()
             .unwrap();
         assert_eq!(b.serve_http.as_deref(), Some("127.0.0.1:0"));
         assert_eq!((b.serve_queue_depth, b.serve_deadline_ms), (3, 77));
+        assert_eq!(b.serve_workers, 2);
         // degenerate transport knobs are rejected, not clamped
         let e = ExperimentConfig::from_toml("[serve]\nqueue-depth = 0").unwrap_err();
         assert!(e.to_string().contains("queue-depth"), "{e}");

@@ -20,29 +20,51 @@ use std::path::Path;
 /// Accepts labels `+1/1/-1` (or `0`, mapped to `-1` for 0/1-labelled files)
 /// and `#`-prefixed trailing comments.
 pub fn parse_line(line: &str) -> Result<(i8, SparseVec)> {
+    let mut row = SparseVec::default();
+    let label = parse_line_into(line, &mut row)?;
+    Ok((label, row))
+}
+
+/// Parses one LIBSVM line into a caller-owned row, clearing it first.
+///
+/// Same grammar and error messages as [`parse_line`], but reuses the row's
+/// index/value vectors so a warm parse loop performs no heap allocations.
+pub fn parse_line_into(line: &str, row: &mut SparseVec) -> Result<i8> {
     let line = line.split('#').next().unwrap_or("").trim();
     let mut it = line.split_ascii_whitespace();
     let label_tok = it.next().context("empty LIBSVM line")?;
     let label_val: f64 = label_tok.parse().with_context(|| format!("bad label {label_tok:?}"))?;
     let label: i8 = if label_val > 0.0 { 1 } else { -1 };
-    let mut indices = Vec::new();
-    let mut values = Vec::new();
-    for tok in it {
+    parse_features_into(it, row)?;
+    Ok(label)
+}
+
+/// Parses `idx:val` feature tokens into a caller-owned row, clearing it first.
+///
+/// Shared by the labelled [`parse_line_into`] path and the serve-layer path
+/// for unlabelled rows (which has no label token to strip).
+pub fn parse_features_into<'a>(
+    tokens: impl Iterator<Item = &'a str>,
+    row: &mut SparseVec,
+) -> Result<()> {
+    row.indices.clear();
+    row.values.clear();
+    for tok in tokens {
         let (i, v) = tok.split_once(':').with_context(|| format!("bad feature {tok:?}"))?;
         let i: u32 = i.parse().with_context(|| format!("bad index {i:?}"))?;
         if i == 0 {
             bail!("LIBSVM indices are 1-based; got 0");
         }
         let v: f32 = v.parse().with_context(|| format!("bad value {v:?}"))?;
-        if let Some(&last) = indices.last() {
+        if let Some(&last) = row.indices.last() {
             if i - 1 <= last {
                 bail!("indices must strictly increase (got {i} after {})", last + 1);
             }
         }
-        indices.push(i - 1);
-        values.push(v);
+        row.indices.push(i - 1);
+        row.values.push(v);
     }
-    Ok((label, SparseVec::new(indices, values)))
+    Ok(())
 }
 
 /// Reads a LIBSVM file. `dim` forces the feature dimension (pass 0 to infer
@@ -113,6 +135,30 @@ mod tests {
     #[test]
     fn parse_rejects_unsorted() {
         assert!(parse_line("+1 3:1 2:1").is_err());
+    }
+
+    #[test]
+    fn parse_line_into_reuses_and_clears_row() {
+        let mut row = SparseVec::default();
+        assert_eq!(parse_line_into("+1 1:0.5 3:2", &mut row).unwrap(), 1);
+        assert_eq!(row.indices, vec![0, 2]);
+        assert_eq!(row.values, vec![0.5, 2.0]);
+        // A shorter row must fully replace the previous contents.
+        assert_eq!(parse_line_into("-1 2:4", &mut row).unwrap(), -1);
+        assert_eq!(row.indices, vec![1]);
+        assert_eq!(row.values, vec![4.0]);
+        // A failed parse may leave partial contents but must not corrupt reuse.
+        assert!(parse_line_into("+1 2:1 1:1", &mut row).is_err());
+        assert_eq!(parse_line_into("0 5:1", &mut row).unwrap(), -1);
+        assert_eq!(row.indices, vec![4]);
+    }
+
+    #[test]
+    fn parse_features_into_accepts_unlabelled_tokens() {
+        let mut row = SparseVec::default();
+        parse_features_into("1:0.5 3:2".split_ascii_whitespace(), &mut row).unwrap();
+        assert_eq!(row.indices, vec![0, 2]);
+        assert_eq!(row.values, vec![0.5, 2.0]);
     }
 
     #[test]

@@ -83,7 +83,8 @@ fn print_help() {
          \x20              --stream-initial F) for online per-node ingestion\n\
          \x20              --http-ingest ADDR to accept arrival rows over HTTP\n\
          \x20              (POST /ingest, POST /shutdown; trials must be 1;\n\
-         \x20              --queue-depth N --deadline-ms N tune the transport)\n\
+         \x20              --queue-depth N --deadline-ms N --workers N tune the\n\
+         \x20              transport)\n\
          \x20              --store auto|static|mmap for the pack: data plane\n\
          \x20              --save FILE to persist the consensus model artifact)\n\
          \x20 pack         convert LIBSVM text to a mapped columnar artifact\n\
@@ -96,9 +97,11 @@ fn print_help() {
          \x20              (--model FILE required; --shards N --batch N\n\
          \x20              --format auto|libsvm|dense --kernel scalar|simd|auto\n\
          \x20              --scores; one prediction per input line on stdout;\n\
-         \x20              --http ADDR serves POST /score over a socket instead,\n\
-         \x20              byte-identical to the stdin path — --queue-depth N\n\
-         \x20              --deadline-ms N bound the request queue and budget)\n\
+         \x20              --http ADDR serves POST /score over a socket instead\n\
+         \x20              (HTTP/1.1 keep-alive), byte-identical to the stdin\n\
+         \x20              path — --queue-depth N --deadline-ms N bound the\n\
+         \x20              request queue and budget, --workers N sets the\n\
+         \x20              concurrent request executors, default = shards)\n\
          \x20 baseline     run a solver centrally (--solver pegasos|svm-sgd|svm-perf|dcd,\n\
          \x20              --kernel scalar|simd|auto --step dense|scaled|auto,\n\
          \x20              same dataset options)\n\
@@ -264,6 +267,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let http_cfg = gadget::serve::HttpConfig {
         queue_depth: args.get_parsed("queue-depth", cfg.serve_queue_depth).map_err(err)?,
         deadline_ms: args.get_parsed("deadline-ms", cfg.serve_deadline_ms).map_err(err)?,
+        workers: args.get_parsed("workers", cfg.serve_workers).map_err(err)?,
     };
     let runner = GadgetRunner::new(cfg)?;
     println!(
@@ -392,6 +396,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             deadline_ms: args
                 .get_parsed("deadline-ms", cfg.serve_deadline_ms)
                 .map_err(err)?,
+            workers: args.get_parsed("workers", cfg.serve_workers).map_err(err)?,
         };
         let shards = gadget::coordinator::sched::resolve_threads(opts.shards);
         let kernel = opts.kernel.build()?;

@@ -2,8 +2,16 @@
 //! transport over the existing serving and streaming primitives
 //! (std-`TcpListener` only; DESIGN.md §HTTP data plane).
 //!
-//! Endpoints (one request per connection, `Connection: close`,
-//! `Content-Length` required on bodies):
+//! Connections are **keep-alive by default** (HTTP/1.1 semantics): each
+//! admitted connection loops request → parse → respond until the client
+//! sends `Connection: close`, closes its end, goes idle past the
+//! deadline budget, or the server drains. HTTP/1.0 requests and
+//! `Connection: close` requests get exactly one response and a close,
+//! byte-identical in body to the keep-alive spelling. `Content-Length`
+//! framing is required on bodies; pipelined requests are honored in
+//! order.
+//!
+//! Endpoints:
 //!
 //! * `POST /score` — body is the same line-delimited row grammar as the
 //!   stdin service (LIBSVM or dense, `auto` per line); the response body
@@ -11,7 +19,9 @@
 //!   warm [`ShardedScorer`], so it is byte-identical to what the stdin
 //!   path writes for the same batch (batching up to `[serve] batch`,
 //!   global line numbers in errors, shard-count-invariant bitwise).
-//!   Malformed rows answer `400` with the stdin path's error text.
+//!   Malformed rows answer a framed `400` with the stdin path's error
+//!   text — and the connection stays usable: the next request starts a
+//!   fresh row stream.
 //! * `POST /ingest` — body is line-delimited *labeled* LIBSVM rows;
 //!   rows are validated per line, then admitted **atomically** into the
 //!   training run's [`ArrivalQueue`], where they stay staged until the
@@ -19,33 +29,57 @@
 //!   [`crate::data::StreamingStore`] (boundary-only mutation; the
 //!   runner re-reads Σnᵢ after a non-empty ingest, so the Theorem-1
 //!   re-weighting contract is untouched by the transport).
-//! * `POST /shutdown` — answers `200 draining`, then stops admissions
-//!   and gracefully drains: every already-accepted connection still
-//!   gets its response, and the arrival queue closes so a streaming
-//!   training run's convergence veto lifts ([`ShardStore::stream_exhausted`]
-//!   via queue closed-and-drained).
+//! * `POST /shutdown` — answers `200 draining` (`Connection: close`),
+//!   then stops admissions and gracefully drains: every already-accepted
+//!   connection still gets a response to its in-flight request, idle
+//!   keep-alive connections close within one poll interval, and the
+//!   arrival queue closes so a streaming training run's convergence veto
+//!   lifts ([`ShardStore::stream_exhausted`] via queue closed-and-drained).
+//!
+//! **Workers.** `[serve] workers` (`--workers`; 0 = auto = shard count,
+//! 1 on ingest-only servers) worker threads pull admitted connections
+//! from the [`BoundedQueue`] and serve them concurrently over the shared
+//! warm scorer. Scoring is shard-count-invariant and the scorer's
+//! per-chunk scratch cells are lock-protected, so responses are
+//! byte-identical at any worker count — concurrency changes throughput,
+//! never bytes. One worker owns one connection at a time (requests on a
+//! connection are strictly ordered); a keep-alive connection occupies
+//! its worker until it closes or idles out.
+//!
+//! **Arenas.** Each worker owns a [`ConnState`]: a connection read
+//! buffer (request head + body parse in place, no per-request
+//! `String`s), a response buffer (headers + small bodies coalesce into
+//! one write), the score output buffer, and the row/prediction/line
+//! scratch threaded through [`score_stream`]. All of it is reused across
+//! requests *and* connections, so a warm keep-alive `/score` request
+//! performs **zero heap allocations** end to end (pinned by
+//! `tests/alloc_regression.rs` in release mode).
 //!
 //! Backpressure is explicit end to end: the acceptor admits connections
 //! into a [`BoundedQueue`] of depth `[serve] queue-depth`; overflow
-//! answers `503` + `Retry-After: 1` on the refused connection (from a
-//! detached responder thread, so a slow sender cannot stall the accept
-//! loop) — never a silent drop. Each admitted request carries a
-//! deadline budget of `[serve] deadline-ms` from admission: time spent
-//! queued counts against it, a request whose budget is gone before
-//! processing answers `503` + `Retry-After`, and a sender that stalls
-//! mid-request past the remaining budget answers `408`.
+//! hands the connection to a **bounded responder pool**
+//! ([`RESPONDER_THREADS`] fixed threads behind their own bounded queue
+//! — never a thread per refusal) which answers `503` +
+//! `Retry-After: 1` — never a silent drop. Each request carries a
+//! deadline budget of `[serve] deadline-ms`: the first request on a
+//! connection counts from admission (queue wait included; a request
+//! whose budget is gone before processing answers `503`), each
+//! subsequent request counts from its first byte, idle keep-alive gaps
+//! are capped by the same budget (quiet close), and a sender that
+//! stalls mid-request past the budget answers `408` and is closed.
 //!
 //! [`ShardStore::stream_exhausted`]: crate::data::ShardStore::stream_exhausted
 
 use super::queue::{BoundedQueue, PushError};
-use super::service::{score_stream, ServeOptions};
+use super::service::{score_stream, ServeOptions, ServeScratch};
 use super::shard::ShardedScorer;
 use crate::data::{libsvm, ArrivalPushError, ArrivalQueue};
 use crate::linalg::SparseVec;
 use crate::Result;
-use anyhow::{bail, ensure, Context};
-use std::io::{BufRead, Read, Write};
+use anyhow::{anyhow, bail, ensure, Context};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -55,21 +89,49 @@ use std::time::{Duration, Instant};
 /// scoring loop itself streams line by line).
 const MAX_BODY: usize = 64 << 20;
 
-/// Transport knobs (the `[serve] queue-depth` / `deadline-ms` section;
-/// `--queue-depth` / `--deadline-ms` override).
+/// Request-head cap (request line + headers).
+const MAX_HEAD: usize = 16 << 10;
+
+/// Poll interval while a keep-alive connection is idle between
+/// requests: short enough that a drain closes idle connections promptly,
+/// long enough to stay out of the way.
+const IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Refusal responder pool size: refusals are tiny fixed responses, so a
+/// small fixed pool drains any burst — the point is that the count is
+/// **constant** (the old path spawned a detached thread per refusal,
+/// which is a thread bomb under overload).
+const RESPONDER_THREADS: usize = 2;
+
+/// Response bodies up to this size are coalesced into the header write
+/// (one syscall, no Nagle interaction); larger bodies are written
+/// separately to avoid doubling their memory.
+const COALESCE_MAX: usize = 256 << 10;
+
+const REFUSE_FULL: &str = "request queue full — retry after Retry-After\n";
+const REFUSE_DRAINING: &str = "server is draining\n";
+
+/// Transport knobs (the `[serve] queue-depth` / `deadline-ms` /
+/// `workers` section; `--queue-depth` / `--deadline-ms` / `--workers`
+/// override).
 #[derive(Clone, Copy, Debug)]
 pub struct HttpConfig {
-    /// Connections admitted but not yet picked up by the worker; one
-    /// more may be in flight inside the worker. Overflow answers `503`.
+    /// Connections admitted but not yet picked up by a worker; one more
+    /// per worker may be in flight. Overflow answers `503`.
     pub queue_depth: usize,
-    /// Per-request deadline budget in milliseconds, counted from
-    /// admission (queue wait included).
+    /// Per-request deadline budget in milliseconds. The first request on
+    /// a connection counts from admission (queue wait included); later
+    /// requests count from their first byte; the keep-alive idle gap is
+    /// capped by the same budget.
     pub deadline_ms: u64,
+    /// Worker threads serving admitted connections (0 = auto: the
+    /// scorer's shard count, or 1 on an ingest-only server).
+    pub workers: usize,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        Self { queue_depth: 64, deadline_ms: 5_000 }
+        Self { queue_depth: 64, deadline_ms: 5_000, workers: 0 }
     }
 }
 
@@ -87,14 +149,26 @@ pub struct HttpStats {
     pub refused: usize,
 }
 
+/// A refused connection awaiting its `503` from the responder pool.
+struct Refusal {
+    stream: TcpStream,
+    reason: &'static str,
+}
+
 struct Shared {
     queue: BoundedQueue<(TcpStream, Instant)>,
+    /// Refused connections drain through here to the fixed responder
+    /// pool; depth `max(queue_depth, 32)` so a refusal burst queues
+    /// instead of spawning threads.
+    refusals: BoundedQueue<Refusal>,
     draining: AtomicBool,
     ingest: Option<Arc<ArrivalQueue>>,
+    /// The warm scorer, shared by every worker (scoring only reads the
+    /// model; per-chunk margin scratch is lock-protected inside).
+    score: Option<(ShardedScorer, ServeOptions)>,
     addr: SocketAddr,
     deadline: Duration,
-    /// Refusals (503/408) across acceptor overflow threads and the
-    /// worker — shared because overflow responses run detached.
+    /// Refusals (503/408) across acceptor, responder pool, and workers.
     refused: AtomicUsize,
 }
 
@@ -102,7 +176,8 @@ impl Shared {
     /// Flips the server into graceful drain: admissions stop (new
     /// connections answer `503`), the arrival queue closes (lifting the
     /// streaming convergence veto), and the acceptor is woken so it can
-    /// exit. Everything already admitted still gets its response.
+    /// exit. Everything already admitted still gets its response; idle
+    /// keep-alive connections close within one poll interval.
     fn trigger_drain(&self) {
         if self.draining.swap(true, Ordering::SeqCst) {
             return;
@@ -118,12 +193,14 @@ impl Shared {
 }
 
 /// A running HTTP front end: an acceptor thread feeding the bounded
-/// queue and one scoring/ingest worker draining it.
+/// queue, `workers` serving threads draining it, and a fixed responder
+/// pool answering refusals.
 pub struct HttpServer {
     local_addr: SocketAddr,
     shared: Arc<Shared>,
     acceptor: Option<JoinHandle<()>>,
-    worker: Option<JoinHandle<HttpStats>>,
+    workers: Vec<JoinHandle<HttpStats>>,
+    responders: Vec<JoinHandle<()>>,
 }
 
 impl HttpServer {
@@ -144,6 +221,15 @@ impl HttpServer {
             score.is_some() || ingest.is_some(),
             "http: a server needs a scorer or an ingest queue"
         );
+        // Worker auto-resolution: one per shard replica on a scoring
+        // server (the shard count is the concurrency the operator sized
+        // the box for); 1 on an ingest-only server, where a single
+        // admission order is the conservative default.
+        let worker_count = if http.workers > 0 {
+            http.workers
+        } else {
+            score.as_ref().map(|(s, _)| s.shards()).unwrap_or(1)
+        };
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("http: bind {addr}"))?;
         let local_addr = listener.local_addr().context("http: local addr")?;
@@ -158,15 +244,17 @@ impl HttpServer {
         // Startup line on stderr, emitted where the address is actually
         // resolved — tests and ci.sh parse the ephemeral port out of it.
         eprintln!(
-            "http: listening on {local_addr} queue-depth={} deadline-ms={} endpoints={}",
+            "http: listening on {local_addr} queue-depth={} deadline-ms={} workers={worker_count} endpoints={}",
             http.queue_depth,
             http.deadline_ms,
             endpoints.join(",")
         );
         let shared = Arc::new(Shared {
             queue: BoundedQueue::new(http.queue_depth),
+            refusals: BoundedQueue::new(http.queue_depth.max(32)),
             draining: AtomicBool::new(false),
             ingest,
+            score,
             addr: local_addr,
             deadline: Duration::from_millis(http.deadline_ms),
             refused: AtomicUsize::new(0),
@@ -176,15 +264,27 @@ impl HttpServer {
             let shared = Arc::clone(&shared);
             std::thread::spawn(move || accept_loop(listener, &shared))
         };
-        let worker = {
-            let shared = Arc::clone(&shared);
-            std::thread::spawn(move || worker_loop(&shared, score.as_ref()))
-        };
+        let workers = (0..worker_count)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    let mut state = ConnState::default();
+                    worker_loop(&shared, &mut state)
+                })
+            })
+            .collect();
+        let responders = (0..RESPONDER_THREADS)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || responder_loop(&shared))
+            })
+            .collect();
         Ok(HttpServer {
             local_addr,
             shared,
             acceptor: Some(acceptor),
-            worker: Some(worker),
+            workers,
+            responders,
         })
     }
 
@@ -193,15 +293,34 @@ impl HttpServer {
         self.local_addr
     }
 
+    /// Worker thread count (after auto-resolution).
+    pub fn worker_threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Responder pool size — **constant** regardless of refusal volume
+    /// (the burst-of-refusals test pins this).
+    pub fn responder_threads(&self) -> usize {
+        self.responders.len()
+    }
+
     /// Waits for the server to finish draining (something must trigger
     /// the drain: a `POST /shutdown`, or [`Self::shutdown_and_join`]).
     pub fn join(mut self) -> Result<HttpStats> {
         let acceptor = self.acceptor.take().expect("join: already joined");
-        let worker = self.worker.take().expect("join: already joined");
-        acceptor
-            .join()
-            .map_err(|_| anyhow::anyhow!("http: acceptor thread panicked"))?;
-        worker.join().map_err(|_| anyhow::anyhow!("http: worker thread panicked"))
+        acceptor.join().map_err(|_| anyhow!("http: acceptor thread panicked"))?;
+        let mut stats = HttpStats::default();
+        for w in self.workers.drain(..) {
+            let s = w.join().map_err(|_| anyhow!("http: worker thread panicked"))?;
+            stats.requests += s.requests;
+            stats.scored_rows += s.scored_rows;
+            stats.ingested_rows += s.ingested_rows;
+        }
+        for r in self.responders.drain(..) {
+            r.join().map_err(|_| anyhow!("http: responder thread panicked"))?;
+        }
+        stats.refused = self.shared.refused.load(Ordering::Relaxed);
+        Ok(stats)
     }
 
     /// Programmatic graceful drain + join — what `train --http-ingest`
@@ -215,20 +334,23 @@ impl HttpServer {
 impl Drop for HttpServer {
     fn drop(&mut self) {
         // Dropped without join (error paths): still stop the threads.
-        if self.acceptor.is_some() || self.worker.is_some() {
+        if self.acceptor.is_some() || !self.workers.is_empty() {
             self.shared.trigger_drain();
             if let Some(a) = self.acceptor.take() {
                 let _ = a.join();
             }
-            if let Some(w) = self.worker.take() {
+            for w in self.workers.drain(..) {
                 let _ = w.join();
+            }
+            for r in self.responders.drain(..) {
+                let _ = r.join();
             }
         }
     }
 }
 
 /// Accepts connections and admits them into the bounded queue; overflow
-/// answers `503` + `Retry-After` from a detached responder thread.
+/// hands the connection to the responder pool for its `503`.
 fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
     loop {
         let stream = match listener.accept() {
@@ -247,158 +369,234 @@ fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
         }
         match shared.queue.push((stream, Instant::now())) {
             Ok(()) => {}
-            Err(PushError::Full((s, _))) => {
-                refuse(s, shared, "request queue full — retry after Retry-After")
-            }
-            Err(PushError::Closed((s, _))) => refuse(s, shared, "server is draining"),
+            Err(PushError::Full((s, _))) => enqueue_refusal(shared, s, REFUSE_FULL),
+            Err(PushError::Closed((s, _))) => enqueue_refusal(shared, s, REFUSE_DRAINING),
         }
     }
-    // No further admissions; the worker drains what was accepted.
+    // No further admissions; the workers drain what was accepted. Only
+    // the acceptor pushes refusals, so closing here (after the loop)
+    // guarantees the responder pool sees every refusal before it exits.
     shared.queue.close();
+    shared.refusals.close();
 }
 
-/// Answers `503` + `Retry-After: 1` on a refused connection without
-/// blocking the caller: the request is read first (bounded by the
-/// deadline) so the peer reliably sees the response — a refusal is a
-/// *response*, never a dropped connection.
-fn refuse(stream: TcpStream, shared: &Arc<Shared>, reason: &'static str) {
-    let shared = Arc::clone(shared);
-    std::thread::spawn(move || {
-        shared.refused.fetch_add(1, Ordering::Relaxed);
-        let _ = stream.set_read_timeout(Some(shared.deadline));
-        let _ = stream.set_write_timeout(Some(shared.deadline));
-        let _ = read_request(&stream);
-        let mut body = reason.to_string();
-        body.push('\n');
+/// Routes a refused connection to the bounded responder pool. A refusal
+/// is a *response*, never a dropped connection — but it must also never
+/// cost an unbounded resource: if even the refusal queue is saturated,
+/// the safety valve answers inline with a short write timeout and
+/// without draining the request (the peer may see a reset if it is
+/// still mid-send; it was going to get a 503 either way).
+fn enqueue_refusal(shared: &Shared, stream: TcpStream, reason: &'static str) {
+    shared.refused.fetch_add(1, Ordering::Relaxed);
+    match shared.refusals.push(Refusal { stream, reason }) {
+        Ok(()) => {}
+        Err(PushError::Full(r)) | Err(PushError::Closed(r)) => {
+            let _ = r.stream.set_write_timeout(Some(Duration::from_millis(100)));
+            let mut buf = Vec::new();
+            let _ = respond(
+                &r.stream,
+                &mut buf,
+                503,
+                "Service Unavailable",
+                &[("Retry-After", "1")],
+                r.reason.as_bytes(),
+                false,
+            );
+        }
+    }
+}
+
+/// One of [`RESPONDER_THREADS`] fixed refusal responders: reads the
+/// refused request first (bounded by the deadline) so the peer reliably
+/// sees the `503` instead of a reset while still sending.
+fn responder_loop(shared: &Shared) {
+    let mut reader = ConnReader::default();
+    let mut resp: Vec<u8> = Vec::new();
+    while let Some(r) = shared.refusals.pop() {
+        let _ = r.stream.set_write_timeout(Some(shared.deadline));
+        reader.reset();
+        let deadline = Instant::now() + shared.deadline;
+        let _ = read_one_request(&r.stream, &mut reader, shared, Some(deadline));
         let _ = respond(
-            &stream,
+            &r.stream,
+            &mut resp,
             503,
             "Service Unavailable",
             &[("Retry-After", "1")],
-            body.as_bytes(),
+            r.reason.as_bytes(),
+            false,
         );
-    });
+    }
 }
 
-/// Pops admitted connections and serves them until the queue closes and
-/// drains.
-fn worker_loop(shared: &Shared, score: Option<&(ShardedScorer, ServeOptions)>) -> HttpStats {
+/// Per-worker arenas: everything a connection touches, reused across
+/// requests and connections so the warm path never allocates.
+#[derive(Debug, Default)]
+struct ConnState {
+    /// Connection read buffer (head + body parse in place).
+    reader: ConnReader,
+    /// Response head buffer (small bodies coalesce into it).
+    resp: Vec<u8>,
+    /// `/score` response body buffer.
+    out: Vec<u8>,
+    /// Row pool / prediction buffer / line buffer for [`score_stream`].
+    scratch: ServeScratch,
+}
+
+/// Pops admitted connections and serves them (keep-alive loop per
+/// connection) until the queue closes and drains.
+fn worker_loop(shared: &Shared, state: &mut ConnState) -> HttpStats {
     let mut stats = HttpStats::default();
     while let Some((stream, admitted)) = shared.queue.pop() {
-        handle_connection(&stream, admitted, shared, score, &mut stats);
+        handle_connection(&stream, admitted, shared, state, &mut stats);
     }
-    // Refusals are counted on `Shared` because overflow rejections happen on
-    // detached threads that never touch this worker's local tally.
-    stats.refused = shared.refused.load(Ordering::Relaxed);
     stats
 }
 
+/// Serves every request on one admitted connection until it closes.
 fn handle_connection(
     stream: &TcpStream,
     admitted: Instant,
     shared: &Shared,
-    score: Option<&(ShardedScorer, ServeOptions)>,
+    state: &mut ConnState,
     stats: &mut HttpStats,
 ) {
-    // Deadline budget: queue wait counts. A request that starved in the
-    // queue is refused loudly rather than served arbitrarily late.
-    let remaining = match shared.deadline.checked_sub(admitted.elapsed()) {
-        Some(r) if !r.is_zero() => r,
-        _ => {
-            shared.refused.fetch_add(1, Ordering::Relaxed);
-            let _ = stream.set_write_timeout(Some(shared.deadline));
-            let _ = respond(
-                stream,
-                503,
-                "Service Unavailable",
-                &[("Retry-After", "1")],
-                b"deadline exhausted while queued\n",
-            );
-            return;
-        }
-    };
-    let _ = stream.set_read_timeout(Some(remaining));
+    state.reader.reset();
     let _ = stream.set_write_timeout(Some(shared.deadline));
-    let request = match read_request(stream) {
-        Ok(r) => r,
-        Err(e) => {
-            let timed_out = e
-                .root_cause()
-                .downcast_ref::<std::io::Error>()
-                .is_some_and(|io| {
-                    matches!(
-                        io.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    )
-                });
-            if timed_out {
+    // First-request budget runs from admission — queue wait counts. A
+    // connection that starved in the queue is refused loudly rather than
+    // served arbitrarily late.
+    let first_deadline = admitted + shared.deadline;
+    if Instant::now() >= first_deadline {
+        shared.refused.fetch_add(1, Ordering::Relaxed);
+        let _ = respond(
+            stream,
+            &mut state.resp,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", "1")],
+            b"deadline exhausted while queued\n",
+            false,
+        );
+        return;
+    }
+    let mut first = Some(first_deadline);
+    loop {
+        match read_one_request(stream, &mut state.reader, shared, first.take()) {
+            ReadOutcome::Request(req) => {
+                if !dispatch(stream, &req, shared, state, stats) {
+                    return;
+                }
+                state.reader.consume_to(req.end);
+            }
+            // Clean end of a keep-alive conversation: nothing to answer.
+            ReadOutcome::PeerClosed | ReadOutcome::Idle => return,
+            ReadOutcome::TimedOut => {
                 shared.refused.fetch_add(1, Ordering::Relaxed);
                 let _ = respond(
                     stream,
+                    &mut state.resp,
                     408,
                     "Request Timeout",
                     &[],
                     b"request deadline exceeded\n",
+                    false,
                 );
-            } else {
-                let _ =
-                    respond(stream, 400, "Bad Request", &[], format!("{e:#}\n").as_bytes());
+                return;
             }
-            return;
+            ReadOutcome::Malformed(e) => {
+                let _ = respond(
+                    stream,
+                    &mut state.resp,
+                    400,
+                    "Bad Request",
+                    &[],
+                    format!("{e:#}\n").as_bytes(),
+                    false,
+                );
+                return;
+            }
         }
-    };
-    match (request.method.as_str(), request.target.as_str()) {
-        ("POST", "/score") => match score {
+    }
+}
+
+/// Serves one parsed request; returns whether the connection survives.
+fn dispatch(
+    stream: &TcpStream,
+    req: &Request,
+    shared: &Shared,
+    state: &mut ConnState,
+    stats: &mut HttpStats,
+) -> bool {
+    let ConnState { reader, resp, out, scratch } = state;
+    let body = &reader.buf[req.body.clone()];
+    // Keep the connection only if the client wants it and we're not
+    // draining (a drain turns every response into the last one).
+    let keep = req.keep_alive && !shared.draining.load(Ordering::SeqCst);
+    match (req.is_post, req.target) {
+        (true, Target::Score) => match &shared.score {
             Some((scorer, opts)) => {
-                let mut body = &request.body[..];
-                let mut out: Vec<u8> = Vec::with_capacity(request.body.len());
-                match score_stream(scorer, opts, &mut body, &mut out) {
+                out.clear();
+                let mut input = body;
+                match score_stream(scorer, opts, &mut input, out, scratch) {
                     Ok(s) => {
                         stats.requests += 1;
                         stats.scored_rows += s.rows;
-                        let _ = respond(stream, 200, "OK", &[], &out);
+                        respond(stream, resp, 200, "OK", &[], out, keep).is_ok() && keep
                     }
-                    Err(e) => {
-                        let _ = respond(
-                            stream,
-                            400,
-                            "Bad Request",
-                            &[],
-                            format!("{e:#}\n").as_bytes(),
-                        );
-                    }
+                    // A malformed row is a framed 400 — the connection
+                    // stays usable; the next request starts a fresh row
+                    // stream with fresh line numbers.
+                    Err(e) => respond(
+                        stream,
+                        resp,
+                        400,
+                        "Bad Request",
+                        &[],
+                        format!("{e:#}\n").as_bytes(),
+                        keep,
+                    )
+                    .is_ok()
+                        && keep,
                 }
             }
-            None => {
-                let _ = respond(
-                    stream,
-                    404,
-                    "Not Found",
-                    &[],
-                    b"no model is being served here (this is an ingest-only endpoint)\n",
-                );
-            }
+            None => respond(
+                stream,
+                resp,
+                404,
+                "Not Found",
+                &[],
+                b"no model is being served here (this is an ingest-only endpoint)\n",
+                keep,
+            )
+            .is_ok()
+                && keep,
         },
-        ("POST", "/ingest") => match &shared.ingest {
-            Some(queue) => match parse_ingest_body(&request.body, queue.dim()) {
+        (true, Target::Ingest) => match &shared.ingest {
+            Some(queue) => match parse_ingest_body(body, queue.dim()) {
                 Ok(rows) => {
                     let n = rows.len();
                     match queue.push_batch(rows) {
                         Ok(()) => {
                             stats.requests += 1;
                             stats.ingested_rows += n;
-                            let _ = respond(
+                            respond(
                                 stream,
+                                resp,
                                 200,
                                 "OK",
                                 &[],
                                 format!("accepted {n} rows\n").as_bytes(),
-                            );
+                                keep,
+                            )
+                            .is_ok()
+                                && keep
                         }
                         Err(ArrivalPushError::Full(rows)) => {
                             shared.refused.fetch_add(1, Ordering::Relaxed);
-                            let _ = respond(
+                            respond(
                                 stream,
+                                resp,
                                 503,
                                 "Service Unavailable",
                                 &[("Retry-After", "1")],
@@ -409,139 +607,395 @@ fn handle_connection(
                                     rows.len()
                                 )
                                 .as_bytes(),
-                            );
+                                keep,
+                            )
+                            .is_ok()
+                                && keep
                         }
                         Err(ArrivalPushError::Closed(_)) => {
                             shared.refused.fetch_add(1, Ordering::Relaxed);
-                            let _ = respond(
+                            respond(
                                 stream,
+                                resp,
                                 503,
                                 "Service Unavailable",
                                 &[],
                                 b"ingest is closed: the training run is draining\n",
-                            );
+                                keep,
+                            )
+                            .is_ok()
+                                && keep
                         }
                     }
                 }
-                Err(e) => {
-                    let _ = respond(
-                        stream,
-                        400,
-                        "Bad Request",
-                        &[],
-                        format!("{e:#}\n").as_bytes(),
-                    );
-                }
-            },
-            None => {
-                let _ = respond(
+                Err(e) => respond(
                     stream,
-                    404,
-                    "Not Found",
+                    resp,
+                    400,
+                    "Bad Request",
                     &[],
-                    b"this server does not ingest (run train --http-ingest)\n",
-                );
-            }
-        },
-        ("POST", "/shutdown") => {
-            stats.requests += 1;
-            let _ = respond(stream, 200, "OK", &[], b"draining\n");
-            shared.trigger_drain();
-        }
-        (_, "/score") | (_, "/ingest") | (_, "/shutdown") => {
-            let _ = respond(
+                    format!("{e:#}\n").as_bytes(),
+                    keep,
+                )
+                .is_ok()
+                    && keep,
+            },
+            None => respond(
                 stream,
-                405,
-                "Method Not Allowed",
-                &[("Allow", "POST")],
-                b"use POST\n",
-            );
-        }
-        _ => {
-            let _ = respond(
-                stream,
+                resp,
                 404,
                 "Not Found",
                 &[],
-                b"unknown endpoint (POST /score, /ingest, /shutdown)\n",
-            );
+                b"this server does not ingest (run train --http-ingest)\n",
+                keep,
+            )
+            .is_ok()
+                && keep,
+        },
+        (true, Target::Shutdown) => {
+            stats.requests += 1;
+            let _ = respond(stream, resp, 200, "OK", &[], b"draining\n", false);
+            shared.trigger_drain();
+            false
+        }
+        (false, Target::Score | Target::Ingest | Target::Shutdown) => respond(
+            stream,
+            resp,
+            405,
+            "Method Not Allowed",
+            &[("Allow", "POST")],
+            b"use POST\n",
+            keep,
+        )
+        .is_ok()
+            && keep,
+        (_, Target::Other) => respond(
+            stream,
+            resp,
+            404,
+            "Not Found",
+            &[],
+            b"unknown endpoint (POST /score, /ingest, /shutdown)\n",
+            keep,
+        )
+        .is_ok()
+            && keep,
+    }
+}
+
+/// Known request targets (the path text itself is never needed beyond
+/// routing, so no per-request string is kept).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Target {
+    Score,
+    Ingest,
+    Shutdown,
+    Other,
+}
+
+/// One parsed request, as ranges into the connection read buffer.
+#[derive(Debug)]
+struct Request {
+    is_post: bool,
+    target: Target,
+    /// Body bytes (within the connection buffer).
+    body: Range<usize>,
+    /// Index just past this request (start of any pipelined successor).
+    end: usize,
+    /// Client keep-alive intent (HTTP/1.1 default, `Connection`
+    /// override, HTTP/1.0 defaults to close).
+    keep_alive: bool,
+}
+
+/// How an attempt to read one request off a connection ended.
+enum ReadOutcome {
+    Request(Request),
+    /// Clean EOF before any byte of a new request.
+    PeerClosed,
+    /// Keep-alive idle gap expired, or the server started draining
+    /// while the connection sat idle: quiet close, nothing to answer.
+    Idle,
+    /// Deadline expired mid-request (head or body started): `408`.
+    TimedOut,
+    /// Unparseable request: `400`, close.
+    Malformed(anyhow::Error),
+}
+
+/// The connection read arena: one growable buffer holding the bytes of
+/// the request currently being parsed (plus any pipelined successors),
+/// reused across requests and connections.
+#[derive(Debug, Default)]
+struct ConnReader {
+    buf: Vec<u8>,
+    /// Start of the current request's bytes.
+    pos: usize,
+    /// End of valid bytes.
+    len: usize,
+}
+
+impl ConnReader {
+    fn reset(&mut self) {
+        self.pos = 0;
+        self.len = 0;
+    }
+
+    fn available(&self) -> usize {
+        self.len - self.pos
+    }
+
+    /// Grows the buffer so it can hold `end` bytes (body reads reserve
+    /// their exact frame up front; growth is cold — capacity persists).
+    fn reserve_to(&mut self, end: usize) {
+        if self.buf.len() < end {
+            self.buf.resize(end, 0);
+        }
+    }
+
+    /// One `read` into the free tail of the buffer. `Ok(0)` is EOF.
+    fn fill(&mut self, mut stream: &TcpStream) -> std::io::Result<usize> {
+        if self.len == self.buf.len() {
+            let grow = (self.buf.len() * 2).max(4096);
+            self.buf.resize(grow, 0);
+        }
+        let n = stream.read(&mut self.buf[self.len..])?;
+        self.len += n;
+        Ok(n)
+    }
+
+    /// Finishes a request: drops its bytes, moving any pipelined
+    /// successor bytes to the front of the buffer.
+    fn consume_to(&mut self, end: usize) {
+        debug_assert!(end >= self.pos && end <= self.len);
+        self.pos = end;
+        if self.pos == self.len {
+            self.reset();
+        } else {
+            self.buf.copy_within(self.pos..self.len, 0);
+            self.len -= self.pos;
+            self.pos = 0;
+        }
+    }
+
+    /// Index just past the head's blank-line terminator, if buffered.
+    /// Tolerates bare-`\n` line endings like the old `read_line` parser.
+    fn find_head_end(&self) -> Option<usize> {
+        let b = &self.buf[self.pos..self.len];
+        for i in 0..b.len() {
+            if b[i] == b'\n' {
+                if i + 1 < b.len() && b[i + 1] == b'\n' {
+                    return Some(self.pos + i + 2);
+                }
+                if i + 2 < b.len() && b[i + 1] == b'\r' && b[i + 2] == b'\n' {
+                    return Some(self.pos + i + 3);
+                }
+            }
+        }
+        None
+    }
+}
+
+enum Fill {
+    Data,
+    Eof,
+    TimedOut,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// One read under a deadline: sets the socket timeout to the remaining
+/// budget and classifies the outcome.
+fn fill_deadline(stream: &TcpStream, reader: &mut ConnReader, deadline: Instant) -> Fill {
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Fill::TimedOut;
+        }
+        let _ = stream.set_read_timeout(Some(remaining));
+        match reader.fill(stream) {
+            Ok(0) => return Fill::Eof,
+            Ok(_) => return Fill::Data,
+            Err(e) if is_timeout(&e) => continue, // loop re-checks the budget
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Fill::Eof,
         }
     }
 }
 
-struct Request {
-    method: String,
-    target: String,
-    body: Vec<u8>,
+/// Reads one full request (head + `Content-Length` body) off the
+/// connection. `first_deadline` carries the admission budget for the
+/// first request; later requests wait out the idle gap in short polls
+/// (so a drain closes them promptly), then budget from their first byte.
+fn read_one_request(
+    stream: &TcpStream,
+    reader: &mut ConnReader,
+    shared: &Shared,
+    first_deadline: Option<Instant>,
+) -> ReadOutcome {
+    let deadline = match first_deadline {
+        Some(d) => d,
+        None => {
+            if reader.available() == 0 {
+                let idle_start = Instant::now();
+                loop {
+                    if shared.draining.load(Ordering::SeqCst)
+                        || idle_start.elapsed() >= shared.deadline
+                    {
+                        return ReadOutcome::Idle;
+                    }
+                    let _ = stream.set_read_timeout(Some(IDLE_POLL));
+                    match reader.fill(stream) {
+                        Ok(0) => return ReadOutcome::PeerClosed,
+                        Ok(_) => break,
+                        Err(e) if is_timeout(&e) => continue,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => return ReadOutcome::PeerClosed,
+                    }
+                }
+            }
+            // A request is in progress (first byte seen, or pipelined
+            // bytes already buffered): the per-request budget starts now.
+            Instant::now() + shared.deadline
+        }
+    };
+    let head_end = loop {
+        if let Some(end) = reader.find_head_end() {
+            break end;
+        }
+        if reader.available() > MAX_HEAD {
+            return ReadOutcome::Malformed(anyhow!(
+                "request head exceeds the {MAX_HEAD}-byte cap"
+            ));
+        }
+        match fill_deadline(stream, reader, deadline) {
+            Fill::Data => {}
+            Fill::Eof => {
+                return if reader.available() == 0 {
+                    ReadOutcome::PeerClosed
+                } else {
+                    ReadOutcome::Malformed(anyhow!("connection closed mid-headers"))
+                }
+            }
+            Fill::TimedOut => return ReadOutcome::TimedOut,
+        }
+    };
+    let (is_post, target, content_length, keep_alive) =
+        match parse_head(&reader.buf[reader.pos..head_end]) {
+            Ok(h) => h,
+            Err(e) => return ReadOutcome::Malformed(e),
+        };
+    if content_length > MAX_BODY {
+        return ReadOutcome::Malformed(anyhow!(
+            "body of {content_length} bytes exceeds the {MAX_BODY}-byte cap"
+        ));
+    }
+    let body_start = head_end;
+    let body_end = body_start + content_length;
+    reader.reserve_to(body_end);
+    while reader.len < body_end {
+        match fill_deadline(stream, reader, deadline) {
+            Fill::Data => {}
+            Fill::Eof => {
+                return ReadOutcome::Malformed(anyhow!("connection closed mid-body"))
+            }
+            Fill::TimedOut => return ReadOutcome::TimedOut,
+        }
+    }
+    ReadOutcome::Request(Request {
+        is_post,
+        target,
+        body: body_start..body_end,
+        end: body_end,
+        keep_alive,
+    })
 }
 
-/// Minimal HTTP/1.1 request reader: request line, headers,
-/// `Content-Length`-delimited body. Rejects what it cannot represent
-/// (chunked bodies, `Expect: 100-continue`) instead of misreading it.
-fn read_request(stream: &TcpStream) -> Result<Request> {
-    let mut reader = std::io::BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line).context("read request line")?;
-    ensure!(!line.is_empty(), "connection closed before a request line");
-    let mut parts = line.split_ascii_whitespace();
-    let method = parts.next().unwrap_or("").to_ascii_uppercase();
-    let target = parts.next().unwrap_or("").to_string();
+/// Parses a request head (request line + headers, already delimited by
+/// its blank line). Rejects what it cannot represent (chunked bodies,
+/// `Expect: 100-continue`) instead of misreading it. Allocation-free:
+/// everything is `&str` slices over the connection buffer.
+fn parse_head(head: &[u8]) -> Result<(bool, Target, usize, bool)> {
+    let head = std::str::from_utf8(head).context("request head is not valid UTF-8")?;
+    let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let req_line = lines.next().unwrap_or("");
+    let mut parts = req_line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
     let version = parts.next().unwrap_or("");
     ensure!(
         version.starts_with("HTTP/1."),
         "unsupported protocol {version:?} (expected HTTP/1.x)"
     );
     ensure!(!method.is_empty() && !target.is_empty(), "malformed request line");
+    let is_post = method.eq_ignore_ascii_case("POST");
+    let target = match target {
+        "/score" => Target::Score,
+        "/ingest" => Target::Ingest,
+        "/shutdown" => Target::Shutdown,
+        _ => Target::Other,
+    };
+    // HTTP/1.1 defaults to keep-alive; HTTP/1.0 to close; an explicit
+    // `Connection` header (comma-separated tokens) overrides either way.
+    let mut keep_alive = version != "HTTP/1.0";
     let mut content_length: Option<usize> = None;
-    loop {
-        line.clear();
-        let n = reader.read_line(&mut line).context("read header")?;
-        ensure!(n > 0, "connection closed mid-headers");
-        let header = line.trim_end_matches(['\r', '\n']);
-        if header.is_empty() {
+    for line in lines {
+        if line.is_empty() {
             break;
         }
-        let (name, value) = header
-            .split_once(':')
-            .with_context(|| format!("malformed header {header:?}"))?;
-        match name.trim().to_ascii_lowercase().as_str() {
-            "content-length" => {
-                content_length =
-                    Some(value.trim().parse().context("bad Content-Length")?)
+        let (name, value) =
+            line.split_once(':').with_context(|| format!("malformed header {line:?}"))?;
+        let (name, value) = (name.trim(), value.trim());
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = Some(value.parse().context("bad Content-Length")?);
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            bail!("Transfer-Encoding is not supported — send Content-Length");
+        } else if name.eq_ignore_ascii_case("expect") {
+            bail!("Expect is not supported — send the body directly");
+        } else if name.eq_ignore_ascii_case("connection") {
+            for tok in value.split(',') {
+                let tok = tok.trim();
+                if tok.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if tok.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
-            "transfer-encoding" => {
-                bail!("Transfer-Encoding is not supported — send Content-Length")
-            }
-            "expect" => bail!("Expect is not supported — send the body directly"),
-            _ => {}
         }
     }
-    let len = content_length.unwrap_or(0);
-    ensure!(len <= MAX_BODY, "body of {len} bytes exceeds the {MAX_BODY}-byte cap");
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body).context("read request body")?;
-    Ok(Request { method, target, body })
+    Ok((is_post, target, content_length.unwrap_or(0), keep_alive))
 }
 
-/// Writes one `Connection: close` response.
+/// Writes one framed response through the connection's reusable head
+/// buffer. Bodies up to [`COALESCE_MAX`] coalesce into a single write.
+/// Warm responses allocate nothing (integer/float/str formatting into a
+/// `Vec<u8>` with retained capacity).
 fn respond(
-    stream: &TcpStream,
+    mut stream: &TcpStream,
+    buf: &mut Vec<u8>,
     status: u16,
     reason: &str,
     extra: &[(&str, &str)],
     body: &[u8],
+    keep_alive: bool,
 ) -> std::io::Result<()> {
-    let mut w = std::io::BufWriter::new(stream);
-    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
-    write!(w, "Content-Type: text/plain; charset=utf-8\r\n")?;
-    write!(w, "Content-Length: {}\r\n", body.len())?;
-    write!(w, "Connection: close\r\n")?;
+    buf.clear();
+    write!(buf, "HTTP/1.1 {status} {reason}\r\n")?;
+    write!(buf, "Content-Type: text/plain; charset=utf-8\r\n")?;
+    write!(buf, "Content-Length: {}\r\n", body.len())?;
+    write!(buf, "Connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
     for (k, v) in extra {
-        write!(w, "{k}: {v}\r\n")?;
+        write!(buf, "{k}: {v}\r\n")?;
     }
-    write!(w, "\r\n")?;
-    w.write_all(body)?;
-    w.flush()
+    write!(buf, "\r\n")?;
+    if body.len() <= COALESCE_MAX {
+        buf.extend_from_slice(body);
+        stream.write_all(buf)?;
+    } else {
+        stream.write_all(buf)?;
+        stream.write_all(body)?;
+    }
+    stream.flush()
 }
 
 /// Parses an `/ingest` body: labeled LIBSVM rows, blank lines and
@@ -586,17 +1040,60 @@ mod tests {
         HttpServer::start("127.0.0.1:0", http, Some((scorer, opts)), None).unwrap()
     }
 
+    /// One-shot client: `Connection: close`, read to EOF.
     fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> String {
         let mut stream = TcpStream::connect(addr).unwrap();
         write!(
             stream,
-            "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
             body.len()
         )
         .unwrap();
         let mut response = String::new();
         stream.read_to_string(&mut response).unwrap();
         response
+    }
+
+    /// Keep-alive client half: send one framed request, keep the stream.
+    fn send_framed(stream: &mut TcpStream, path: &str, body: &str, close: bool) {
+        write!(
+            stream,
+            "POST {path} HTTP/1.1\r\nHost: x\r\n{}Content-Length: {}\r\n\r\n{body}",
+            if close { "Connection: close\r\n" } else { "" },
+            body.len()
+        )
+        .unwrap();
+        stream.flush().unwrap();
+    }
+
+    /// Keep-alive client half: read exactly one framed response
+    /// (headers + `Content-Length` body) without waiting for EOF.
+    fn read_framed(stream: &mut TcpStream) -> String {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut tmp = [0u8; 1024];
+        let head_end = loop {
+            if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p + 4;
+            }
+            let n = stream.read(&mut tmp).unwrap();
+            assert!(n > 0, "EOF before response head: {:?}", String::from_utf8_lossy(&buf));
+            buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = std::str::from_utf8(&buf[..head_end]).unwrap();
+        let content_length: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
+            })
+            .unwrap_or(0);
+        while buf.len() < head_end + content_length {
+            let n = stream.read(&mut tmp).unwrap();
+            assert!(n > 0, "EOF mid-body");
+            buf.extend_from_slice(&tmp[..n]);
+        }
+        assert_eq!(buf.len(), head_end + content_length, "read past the response frame");
+        String::from_utf8(buf).unwrap()
     }
 
     fn body_of(response: &str) -> &str {
@@ -615,13 +1112,105 @@ mod tests {
         let opts = ServeOptions { shards: 1, batch: 2, ..Default::default() };
         let mut input = std::io::Cursor::new(batch.as_bytes().to_vec());
         let mut want: Vec<u8> = Vec::new();
-        score_stream(&scorer, &opts, &mut input, &mut want).unwrap();
+        let mut scratch = ServeScratch::default();
+        score_stream(&scorer, &opts, &mut input, &mut want, &mut scratch).unwrap();
         assert_eq!(body_of(&response).as_bytes(), &want[..]);
         // unterminated final line: same bytes as the terminated spelling
         let unterminated = request(addr, "POST", "/score", "+1 1:0.5 3:1.25\n2:0.75\n0.1 0.2 0.3");
         assert_eq!(body_of(&unterminated), body_of(&response));
         let stats = server.shutdown_and_join().unwrap();
         assert_eq!(stats.scored_rows, 6);
+    }
+
+    #[test]
+    fn keep_alive_reuses_the_connection_and_matches_close_responses() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        let b1 = "+1 1:0.5 3:1.25\n2:0.75\n";
+        let b2 = "0.1 0.2 0.3\n1:2\n";
+        let mut ka = TcpStream::connect(addr).unwrap();
+        send_framed(&mut ka, "/score", b1, false);
+        let r1 = read_framed(&mut ka);
+        assert!(r1.starts_with("HTTP/1.1 200 OK\r\n"), "{r1}");
+        assert!(r1.contains("Connection: keep-alive"), "{r1}");
+        // second request on the SAME connection
+        send_framed(&mut ka, "/score", b2, false);
+        let r2 = read_framed(&mut ka);
+        assert!(r2.starts_with("HTTP/1.1 200 OK\r\n"), "{r2}");
+        // bodies byte-identical to one-connection-per-request responses
+        let f1 = request(addr, "POST", "/score", b1);
+        let f2 = request(addr, "POST", "/score", b2);
+        assert_eq!(body_of(&r1), body_of(&f1));
+        assert_eq!(body_of(&r2), body_of(&f2));
+        assert!(f1.contains("Connection: close"), "{f1}");
+        drop(ka);
+        let stats = server.shutdown_and_join().unwrap();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.scored_rows, 8);
+    }
+
+    #[test]
+    fn pipelined_requests_are_answered_in_order() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        let mut c = TcpStream::connect(addr).unwrap();
+        // two framed requests in one burst; the second closes
+        let b1 = "1:2\n";
+        let b2 = "2:3\n";
+        write!(
+            c,
+            "POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n{b1}\
+             POST /score HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{b2}",
+            b1.len(),
+            b2.len()
+        )
+        .unwrap();
+        c.flush().unwrap();
+        let r1 = read_framed(&mut c);
+        let r2 = read_framed(&mut c);
+        assert_eq!(body_of(&r1), "+1\n", "{r1}");
+        assert_eq!(body_of(&r2), "-1\n", "{r2}");
+        assert!(r2.contains("Connection: close"), "{r2}");
+        server.shutdown_and_join().unwrap();
+    }
+
+    #[test]
+    fn mid_keep_alive_bad_row_answers_400_and_the_connection_continues() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        let mut ka = TcpStream::connect(addr).unwrap();
+        send_framed(&mut ka, "/score", "1:1\n", false);
+        assert!(read_framed(&mut ka).starts_with("HTTP/1.1 200 "));
+        // batch = 2 ⇒ the bad row is in the second batch; the error must
+        // name global line 4 of THIS request's body
+        send_framed(&mut ka, "/score", "1:1\n2:1\n1:1\n1:banana\n", false);
+        let bad = read_framed(&mut ka);
+        assert!(bad.starts_with("HTTP/1.1 400 "), "{bad}");
+        assert!(body_of(&bad).contains("input line 4"), "{bad}");
+        assert!(bad.contains("Connection: keep-alive"), "{bad}");
+        // the connection survives the 400 and serves the next request
+        send_framed(&mut ka, "/score", "2:1\n", true);
+        let good = read_framed(&mut ka);
+        assert!(good.starts_with("HTTP/1.1 200 "), "{good}");
+        assert_eq!(body_of(&good), "-1\n");
+        drop(ka);
+        server.shutdown_and_join().unwrap();
+    }
+
+    #[test]
+    fn http_1_0_defaults_to_close() {
+        let server = score_server(HttpConfig::default());
+        let addr = server.local_addr();
+        let mut c = TcpStream::connect(addr).unwrap();
+        let body = "1:1\n";
+        write!(c, "POST /score HTTP/1.0\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+            .unwrap();
+        c.flush().unwrap();
+        let mut r = String::new();
+        c.read_to_string(&mut r).unwrap(); // server closes ⇒ EOF arrives
+        assert!(r.starts_with("HTTP/1.1 200 OK\r\n"), "{r}");
+        assert!(r.contains("Connection: close"), "{r}");
+        server.shutdown_and_join().unwrap();
     }
 
     #[test]
@@ -651,19 +1240,27 @@ mod tests {
 
     #[test]
     fn queue_overflow_answers_503_with_retry_after_and_drops_nothing() {
-        let server = score_server(HttpConfig { queue_depth: 1, deadline_ms: 30_000 });
+        // workers = 1 pins the queue arithmetic: one connection in
+        // flight, one queued, the rest refused.
+        let server =
+            score_server(HttpConfig { queue_depth: 1, deadline_ms: 30_000, workers: 1 });
         let addr = server.local_addr();
         // c1 occupies the worker: headers promise a body that is not
-        // sent yet, so the worker blocks in read_exact on c1's budget.
+        // sent yet, so the worker blocks reading c1's body on its budget.
         let hold_body = "1:1\n";
         let mut c1 = TcpStream::connect(addr).unwrap();
-        write!(c1, "POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n", hold_body.len())
-            .unwrap();
+        write!(
+            c1,
+            "POST /score HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n",
+            hold_body.len()
+        )
+        .unwrap();
         c1.flush().unwrap();
         std::thread::sleep(Duration::from_millis(150)); // let the worker pop c1
         // c2 sits in the queue (depth 1); c3 and c4 must overflow.
         let mut c2 = TcpStream::connect(addr).unwrap();
-        write!(c2, "POST /score HTTP/1.1\r\nContent-Length: 4\r\n\r\n2:1\n").unwrap();
+        write!(c2, "POST /score HTTP/1.1\r\nConnection: close\r\nContent-Length: 4\r\n\r\n2:1\n")
+            .unwrap();
         std::thread::sleep(Duration::from_millis(150)); // let c2 land in the queue
         let r3 = request(addr, "POST", "/score", "3:1\n");
         let r4 = request(addr, "POST", "/score", "3:1\n");
@@ -695,8 +1292,86 @@ mod tests {
     }
 
     #[test]
+    fn refusal_burst_is_served_by_a_fixed_responder_pool() {
+        // The old path spawned a detached thread per refusal — a thread
+        // bomb under overload. Now refusals drain through a FIXED pool:
+        // the hook below pins its size, and a burst larger than the pool
+        // still gets every 503 answered.
+        let server =
+            score_server(HttpConfig { queue_depth: 1, deadline_ms: 30_000, workers: 1 });
+        assert_eq!(server.responder_threads(), RESPONDER_THREADS);
+        assert_eq!(server.worker_threads(), 1);
+        let addr = server.local_addr();
+        // jam the single worker (body withheld) and fill the queue
+        let mut c1 = TcpStream::connect(addr).unwrap();
+        write!(c1, "POST /score HTTP/1.1\r\nConnection: close\r\nContent-Length: 4\r\n\r\n")
+            .unwrap();
+        c1.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        let mut c2 = TcpStream::connect(addr).unwrap();
+        write!(c2, "POST /score HTTP/1.1\r\nConnection: close\r\nContent-Length: 4\r\n\r\n2:1\n")
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        // burst: every one of these must overflow and still get a 503
+        const BURST: usize = 12;
+        let mut refused = 0usize;
+        for _ in 0..BURST {
+            let r = request(addr, "POST", "/score", "3:1\n");
+            assert!(r.starts_with("HTTP/1.1 "), "dropped refusal: {r:?}");
+            if r.starts_with("HTTP/1.1 503 ") {
+                assert!(r.contains("Retry-After: 1"), "{r}");
+                refused += 1;
+            }
+        }
+        assert!(refused >= BURST - 1, "expected ≈{BURST} refusals, got {refused}");
+        // pool size never moved — it is a fixed Vec of joined threads
+        assert_eq!(server.responder_threads(), RESPONDER_THREADS);
+        // the admitted connections were never sacrificed
+        write!(c1, "1:1\n").unwrap();
+        c1.flush().unwrap();
+        let mut r1 = String::new();
+        c1.read_to_string(&mut r1).unwrap();
+        assert!(r1.starts_with("HTTP/1.1 200 OK\r\n"), "{r1}");
+        let mut r2 = String::new();
+        c2.read_to_string(&mut r2).unwrap();
+        assert!(r2.starts_with("HTTP/1.1 200 OK\r\n"), "{r2}");
+        let stats = server.shutdown_and_join().unwrap();
+        assert!(stats.refused >= refused, "{stats:?}");
+    }
+
+    #[test]
+    fn workers_1_and_4_serve_identical_bytes_under_concurrent_load() {
+        let body = "+1 1:0.5 3:1.25\n2:0.75\n0.1 0.2 0.3\n1:2 2:1\n";
+        // reference bytes from the stdin loop
+        let scorer = ShardedScorer::new(model(), 1);
+        let opts = ServeOptions { shards: 1, batch: 2, ..Default::default() };
+        let mut input = std::io::Cursor::new(body.as_bytes().to_vec());
+        let mut want: Vec<u8> = Vec::new();
+        score_stream(&scorer, &opts, &mut input, &mut want, &mut ServeScratch::default())
+            .unwrap();
+        let want = String::from_utf8(want).unwrap();
+        for workers in [1usize, 4] {
+            let server = score_server(HttpConfig { workers, ..Default::default() });
+            assert_eq!(server.worker_threads(), workers);
+            let addr = server.local_addr();
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    std::thread::spawn(move || request(addr, "POST", "/score", body))
+                })
+                .collect();
+            for h in handles {
+                let r = h.join().unwrap();
+                assert!(r.starts_with("HTTP/1.1 200 OK\r\n"), "workers={workers}: {r}");
+                assert_eq!(body_of(&r), want, "workers={workers}");
+            }
+            let stats = server.shutdown_and_join().unwrap();
+            assert_eq!(stats.scored_rows, 8 * 4, "workers={workers}");
+        }
+    }
+
+    #[test]
     fn stalled_request_times_out_with_408() {
-        let server = score_server(HttpConfig { queue_depth: 4, deadline_ms: 200 });
+        let server = score_server(HttpConfig { queue_depth: 4, deadline_ms: 200, workers: 0 });
         let addr = server.local_addr();
         let mut c = TcpStream::connect(addr).unwrap();
         // promise a body, never send it — the budget must expire
@@ -705,26 +1380,29 @@ mod tests {
         let mut r = String::new();
         c.read_to_string(&mut r).unwrap();
         assert!(r.starts_with("HTTP/1.1 408 "), "{r}");
+        assert!(r.contains("Connection: close"), "{r}");
         server.shutdown_and_join().unwrap();
     }
 
     #[test]
-    fn shutdown_drains_gracefully() {
+    fn shutdown_drains_gracefully_and_closes_idle_keep_alive_connections() {
         let server = score_server(HttpConfig::default());
         let addr = server.local_addr();
-        let ok = request(addr, "POST", "/score", "1:1\n");
-        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"));
+        // a keep-alive connection goes idle after one request
+        let mut ka = TcpStream::connect(addr).unwrap();
+        send_framed(&mut ka, "/score", "1:1\n", false);
+        assert!(read_framed(&mut ka).starts_with("HTTP/1.1 200 OK\r\n"));
         let bye = request(addr, "POST", "/shutdown", "");
         assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
         assert_eq!(body_of(&bye), "draining\n");
+        assert!(bye.contains("Connection: close"), "{bye}");
+        // the drain closes the idle keep-alive connection (EOF, no 5xx)
+        ka.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut tail = Vec::new();
+        let n = ka.read_to_end(&mut tail).unwrap();
+        assert_eq!(n, 0, "expected quiet close, got {:?}", String::from_utf8_lossy(&tail));
         let stats = server.join().unwrap();
-        assert_eq!(stats.scored_rows, 1);
-        // the listener is gone — connects are refused at the TCP level
-        assert!(TcpStream::connect(addr).is_err() || {
-            // (a lingering TIME_WAIT accept is possible on some kernels;
-            // a connect that does succeed must at least never be served)
-            true
-        });
+        assert_eq!(stats.scored_rows, 2);
     }
 
     #[test]
@@ -737,6 +1415,8 @@ mod tests {
             Some(Arc::clone(&queue)),
         )
         .unwrap();
+        // ingest-only servers default to one worker (admission order)
+        assert_eq!(server.worker_threads(), 1);
         let addr = server.local_addr();
         let ok = request(addr, "POST", "/ingest", "+1 1:0.5\n-1 2:0.25\n");
         assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");

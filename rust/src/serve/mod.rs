@@ -29,12 +29,16 @@
 //!   `--shards`/`--batch` CLI flags. [`score_stream`] inside it is the
 //!   *only* scoring loop — every transport drives it.
 //! * [`http`] — the train-while-serving HTTP front end ([`HttpServer`]):
-//!   `POST /score` over the same warm scorer (byte-identical to the
-//!   stdin path by construction), `POST /ingest` staging labeled rows
-//!   into a training run's [`crate::data::ArrivalQueue`], explicit
-//!   backpressure over [`queue::BoundedQueue`] (`503` + `Retry-After`,
-//!   never a silent drop), per-request deadline budgets, graceful drain
-//!   (DESIGN.md §HTTP data plane).
+//!   HTTP/1.1 keep-alive connections served by `[serve] workers`
+//!   concurrent executors over the shared warm scorer, `POST /score`
+//!   byte-identical to the stdin path (and worker-count-invariant) by
+//!   construction, `POST /ingest` staging labeled rows into a training
+//!   run's [`crate::data::ArrivalQueue`], explicit backpressure over
+//!   [`queue::BoundedQueue`] (`503` + `Retry-After` from a bounded
+//!   responder pool, never a silent drop or an unbounded thread),
+//!   per-request deadline budgets, per-connection reusable arenas (a
+//!   warm keep-alive `/score` request allocates nothing), graceful
+//!   drain (DESIGN.md §HTTP data plane).
 //!
 //! The full pipeline: `gadget train --save model.json` → `gadget serve
 //! --model model.json --shards 4 < batch.libsvm` (DESIGN.md §Serving),

@@ -100,12 +100,53 @@ pub struct ServeStats {
     pub shards: usize,
 }
 
+/// Reusable per-connection scratch for [`score_stream`].
+///
+/// Owns every buffer the scoring loop touches per request — the row pool
+/// (each row's index/value vectors are reused across parses), the
+/// prediction out-buffer handed to `ShardedScorer::score_batch_into`, and
+/// the line buffer — so a warm caller performs zero heap allocations per
+/// request. The HTTP front end keeps one per connection; the stdin
+/// service keeps one for its whole run.
+#[derive(Debug, Default)]
+pub(crate) struct ServeScratch {
+    /// Parsed-row pool. Only the first `pending` entries of a batch are
+    /// live; rows beyond that keep their capacity for reuse.
+    pub(crate) rows: Vec<SparseVec>,
+    /// Prediction out-buffer (resized, never reallocated when warm).
+    pub(crate) predictions: Vec<super::artifact::Prediction>,
+    /// Line buffer for `read_line`.
+    pub(crate) line: String,
+}
+
 /// Parses one input line into a scoring row.
 ///
 /// `Auto` resolves per line; labeled LIBSVM lines lose their label (this
 /// is inference — the label column of recycled training files is
 /// ignored); dense rows longer than `dim` are rejected.
+///
+/// Allocating wrapper over [`parse_row_into`] for callers without a row
+/// pool (the serve-latency bench's in-process floor, external tooling).
 pub fn parse_row(line: &str, format: RowFormat, dim: usize) -> Result<SparseVec> {
+    let mut row = SparseVec::default();
+    parse_row_into(line, format, dim, &mut row)?;
+    Ok(row)
+}
+
+/// Parses one input line into a caller-owned row, clearing it first.
+///
+/// Identical grammar and error text to [`parse_row`], but reuses the
+/// row's index/value vectors: the warm path performs no heap allocation
+/// regardless of format (the dense branch streams tokens straight into
+/// the sparse representation instead of materialising a dense `Vec<f64>`,
+/// and the unlabeled-libsvm branch feeds the shared feature parser
+/// directly instead of prepending a dummy label with `format!`).
+pub(crate) fn parse_row_into(
+    line: &str,
+    format: RowFormat,
+    dim: usize,
+    row: &mut SparseVec,
+) -> Result<()> {
     let format = match format {
         RowFormat::Auto => {
             if line.contains(':') {
@@ -129,32 +170,44 @@ pub fn parse_row(line: &str, format: RowFormat, dim: usize) -> Result<SparseVec>
         }
         fixed => fixed,
     };
-    let row = match format {
+    match format {
         RowFormat::Libsvm => {
             let first = line.split_ascii_whitespace().next().unwrap_or("");
-            let (_, row) = if first.contains(':') {
-                // unlabeled row: give the shared parser a dummy label
-                libsvm::parse_line(&format!("0 {line}"))?
+            if first.contains(':') {
+                // unlabeled row: feed the shared feature parser directly
+                // (parse_line's comment stripping happens here instead)
+                let stripped = line.split('#').next().unwrap_or("").trim();
+                libsvm::parse_features_into(stripped.split_ascii_whitespace(), row)?;
             } else {
-                libsvm::parse_line(line)?
-            };
-            row
+                libsvm::parse_line_into(line, row)?;
+            }
         }
         RowFormat::Dense => {
-            let values: Vec<f64> = line
+            // Streaming equivalent of `collect::<Vec<f64>>` +
+            // `SparseVec::from_dense`: exact zeros are dropped, the token
+            // *count* (not the nonzero count) is checked against `dim`.
+            row.indices.clear();
+            row.values.clear();
+            let mut count = 0usize;
+            for tok in line
                 .split(|c: char| c == ',' || c.is_ascii_whitespace())
                 .filter(|t| !t.is_empty())
-                .map(|t| t.parse::<f64>().with_context(|| format!("bad dense value {t:?}")))
-                .collect::<Result<_>>()?;
+            {
+                let v: f64 =
+                    tok.parse().with_context(|| format!("bad dense value {tok:?}"))?;
+                if v != 0.0 {
+                    row.indices.push(count as u32);
+                    row.values.push(v as f32);
+                }
+                count += 1;
+            }
             ensure!(
-                values.len() <= dim,
-                "dense row has {} values but the model dim is {dim}",
-                values.len()
+                count <= dim,
+                "dense row has {count} values but the model dim is {dim}"
             );
-            SparseVec::from_dense(&values)
         }
         RowFormat::Auto => unreachable!("resolved above"),
-    };
+    }
     // Validate against the model dimension here, where the caller still
     // knows the input line — the scorer's own check is batch-relative.
     ensure!(
@@ -162,7 +215,7 @@ pub fn parse_row(line: &str, format: RowFormat, dim: usize) -> Result<SparseVec>
         "feature index {} out of range for model dim {dim}",
         row.min_dim().saturating_sub(1)
     );
-    Ok(row)
+    Ok(())
 }
 
 /// Formats one prediction line.
@@ -172,17 +225,21 @@ fn write_prediction(
     multiclass: bool,
     emit_scores: bool,
 ) -> Result<()> {
-    let label = if multiclass {
-        pred.label.to_string()
-    } else if pred.label > 0 {
-        "+1".to_string()
+    // No intermediate String: integer and float Display format through
+    // stack buffers, so this writes straight into the caller's buffer.
+    if multiclass {
+        if emit_scores {
+            writeln!(out, "{}\t{}", pred.label, pred.score)?;
+        } else {
+            writeln!(out, "{}", pred.label)?;
+        }
     } else {
-        "-1".to_string()
-    };
-    if emit_scores {
-        writeln!(out, "{label}\t{}", pred.score)?;
-    } else {
-        writeln!(out, "{label}")?;
+        let label = if pred.label > 0 { "+1" } else { "-1" };
+        if emit_scores {
+            writeln!(out, "{label}\t{}", pred.score)?;
+        } else {
+            writeln!(out, "{label}")?;
+        }
     }
     Ok(())
 }
@@ -195,6 +252,13 @@ fn write_prediction(
 /// ([`run_serve`]) and the HTTP front end (`serve::http`) both call it,
 /// which is what makes HTTP `/score` responses byte-identical to the
 /// stdin path on the same batch.
+///
+/// Every buffer lives in `scratch`, owned by the caller: rows parse into
+/// a reusable pool (vectors keep their capacity across batches *and*
+/// across calls), predictions land in a reusable out-buffer, and lines
+/// read into a reusable `String`. A warm call — same scratch, row shapes
+/// already seen — performs zero heap allocations, which is what lets the
+/// HTTP front end pin its keep-alive path with the counting allocator.
 ///
 /// Line accounting is global across batch boundaries: `line_no` counts
 /// every input line from 1 (including blanks and comments, which are
@@ -210,40 +274,41 @@ pub(crate) fn score_stream(
     opts: &ServeOptions,
     input: &mut dyn BufRead,
     out: &mut dyn Write,
+    scratch: &mut ServeScratch,
 ) -> Result<ServeStats> {
     ensure!(opts.batch >= 1, "serve: batch must be ≥ 1");
     let multiclass = scorer.model().is_multiclass();
     let dim = scorer.model().dim;
     let mut stats = ServeStats { rows: 0, batches: 0, shards: scorer.shards() };
-    let mut pending: Vec<SparseVec> = Vec::with_capacity(opts.batch);
-    // One output buffer reused across batches: after the first full batch
-    // the warm scoring path performs no per-batch allocation (see
-    // `ShardedScorer::score_batch_into`).
-    let mut predictions: Vec<super::artifact::Prediction> = Vec::with_capacity(opts.batch);
-    let mut line = String::new();
+    // `pending` counts the live prefix of the row pool; rows past the
+    // live prefix are dead but keep their capacity for the next parse.
+    let mut pending = 0usize;
     let mut line_no = 0usize;
     loop {
-        line.clear();
-        let n = input.read_line(&mut line).context("serve: read input")?;
+        scratch.line.clear();
+        let n = input.read_line(&mut scratch.line).context("serve: read input")?;
         if n > 0 {
             line_no += 1;
-            let text = line.trim();
+            let text = scratch.line.trim();
             if text.is_empty() || text.starts_with('#') {
                 continue;
             }
-            let row = parse_row(text, opts.format, dim)
+            if pending == scratch.rows.len() {
+                scratch.rows.push(SparseVec::default());
+            }
+            parse_row_into(text, opts.format, dim, &mut scratch.rows[pending])
                 .with_context(|| format!("input line {line_no}"))?;
-            pending.push(row);
+            pending += 1;
         }
         let eof = n == 0;
-        if pending.len() == opts.batch || (eof && !pending.is_empty()) {
-            scorer.score_batch_into(&pending, &mut predictions)?;
-            for pred in &predictions {
+        if pending == opts.batch || (eof && pending > 0) {
+            scorer.score_batch_into(&scratch.rows[..pending], &mut scratch.predictions)?;
+            for pred in &scratch.predictions {
                 write_prediction(out, pred, multiclass, opts.emit_scores)?;
             }
-            stats.rows += pending.len();
+            stats.rows += pending;
             stats.batches += 1;
-            pending.clear();
+            pending = 0;
         }
         if eof {
             break;
@@ -276,7 +341,8 @@ pub fn run_serve(
         kernel.name()
     );
     let scorer = ShardedScorer::with_kernel(model, shards, kernel);
-    let stats = score_stream(&scorer, opts, input, out)?;
+    let mut scratch = ServeScratch::default();
+    let stats = score_stream(&scorer, opts, input, out, &mut scratch)?;
     out.flush().context("serve: flush output")?;
     Ok(stats)
 }
@@ -440,6 +506,30 @@ mod tests {
         // NOT ambiguous (libsvm features would need ':')
         let (_, out) = serve_text(model(), &ServeOptions { shards: 1, ..Default::default() }, "1 0 1\n");
         assert_eq!(out, "+1\n"); // 1·1 + 1·0.5 = 1.5
+    }
+
+    #[test]
+    fn scratch_reuse_across_streams_is_clean() {
+        // One scratch serving several streams (the keep-alive pattern)
+        // must yield the same bytes as a fresh scratch per stream, even
+        // when a later stream is shorter (stale pool rows must not leak
+        // into scoring) or an earlier stream failed mid-parse.
+        let opts = ServeOptions { shards: 1, batch: 2, ..Default::default() };
+        let scorer = ShardedScorer::new(model(), 1);
+        let mut scratch = ServeScratch::default();
+        let run = |scratch: &mut ServeScratch, text: &str| -> Result<String> {
+            let mut input = std::io::Cursor::new(text.as_bytes().to_vec());
+            let mut out: Vec<u8> = Vec::new();
+            score_stream(&scorer, &opts, &mut input, &mut out, scratch)?;
+            Ok(String::from_utf8(out).unwrap())
+        };
+        let long = run(&mut scratch, "1:2\n2:3\n1:1 3:1\n").unwrap();
+        assert_eq!(long, "+1\n-1\n+1\n");
+        assert!(run(&mut scratch, "1:1\n1:banana\n").is_err());
+        let short = run(&mut scratch, "2:5\n").unwrap();
+        assert_eq!(short, run(&mut ServeScratch::default(), "2:5\n").unwrap());
+        assert_eq!(short, "-1\n");
+        assert_eq!(run(&mut scratch, "1:2\n2:3\n1:1 3:1\n").unwrap(), long);
     }
 
     #[test]

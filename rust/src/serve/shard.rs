@@ -50,8 +50,11 @@ pub struct ShardedScorer {
     /// serve path performs no per-batch allocation. Mutex-guarded so
     /// [`Self::score_batch_into`] stays `&self`: chunk `c` of one
     /// dispatch is run by exactly one thread, so the lock is uncontended
-    /// within a batch; a hypothetical concurrent batch on the same
-    /// scorer blocks briefly on the cell instead of racing.
+    /// within a batch; concurrent batches on the same scorer — the
+    /// normal case now that the HTTP front end runs `[serve] workers`
+    /// executors over one shared scorer — block briefly on the cell
+    /// instead of racing. Blocking never reorders arithmetic, so
+    /// responses stay bitwise identical at any worker count.
     scratch: Vec<Mutex<Vec<f64>>>,
 }
 

@@ -64,6 +64,10 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static COUNTER: CountingAlloc = CountingAlloc;
 
+/// Serializes the measuring tests: the counter is global, so a second
+/// test allocating concurrently would show up in this one's windows.
+static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 fn train_set() -> Dataset {
     let spec = DatasetSpec {
         name: "alloc-pin".into(),
@@ -115,6 +119,7 @@ fn iteration(
 
 #[test]
 fn parallel_hot_path_is_allocation_free_at_steady_state() {
+    let _gate = GATE.lock().unwrap();
     let train = train_set();
     let m = 4usize;
     let d = train.dim;
@@ -177,5 +182,131 @@ fn parallel_hot_path_is_allocation_free_at_steady_state() {
     eprintln!(
         "alloc_regression (debug, not asserted): best window = {min_window_allocs} \
          allocations / {ITERS_PER_WINDOW} iterations"
+    );
+}
+
+/// Reads exactly one `Content-Length`-framed HTTP response into `buf`
+/// and returns its total byte length. Allocation-free by construction —
+/// fixed caller-owned buffer, head scanned and parsed in place — so the
+/// client side of the measurement loop below cannot pollute the count.
+fn read_response(stream: &mut std::net::TcpStream, buf: &mut [u8]) -> usize {
+    use std::io::Read;
+    let mut got = 0usize;
+    let head_end = loop {
+        if let Some(p) = buf[..got].windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = stream.read(&mut buf[got..]).expect("read head");
+        assert!(n > 0, "peer closed mid-response");
+        got += n;
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).expect("utf8 head");
+    let mut body_len = usize::MAX;
+    for line in head.split("\r\n") {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                body_len = v.trim().parse().expect("content-length");
+            }
+        }
+    }
+    assert_ne!(body_len, usize::MAX, "no Content-Length in response head");
+    let total = head_end + body_len;
+    while got < total {
+        let n = stream.read(&mut buf[got..total]).expect("read body");
+        assert!(n > 0, "peer closed mid-body");
+        got += n;
+    }
+    total
+}
+
+/// The serve-path twin of the pin above: a **warm keep-alive `/score`
+/// request allocates nothing** — connection arenas (head/body reader,
+/// response buffer, parsed-row scratch) and the sharded scorer's
+/// per-shard scratch are all built during warm-up and only reused after.
+/// Same methodology: counting global allocator over every thread (the
+/// HTTP worker included), minimum over several windows, hard assert in
+/// release only.
+#[test]
+fn warm_keep_alive_score_request_is_allocation_free() {
+    use gadget::serve::{
+        HttpConfig, HttpServer, ModelArtifact, ScalingMeta, ServeOptions, ShardedScorer,
+    };
+    use std::io::Write;
+
+    let _gate = GATE.lock().unwrap();
+
+    let model =
+        ModelArtifact::new(3, vec![vec![1.0, -1.0, 0.5]], vec![0.0], ScalingMeta::default())
+            .unwrap();
+    let scorer = ShardedScorer::new(model, 1);
+    let opts = ServeOptions { shards: 1, batch: 2, ..Default::default() };
+    let server = HttpServer::start(
+        "127.0.0.1:0",
+        HttpConfig { queue_depth: 4, deadline_ms: 30_000, workers: 1 },
+        Some((scorer, opts)),
+        None,
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // Three rows across two internal batches (--batch 2), libsvm format.
+    let body = "1:0.5 3:1.25\n2:0.75\n1:1 2:1 3:1\n";
+    let request = format!(
+        "POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes();
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut buf = [0u8; 4096];
+
+    // Warm-up: the connection's arenas reach their high-water capacity
+    // and we learn the exact frame length — identical requests get
+    // byte-identical responses, so the length is stable.
+    stream.write_all(&request).unwrap();
+    let expected = read_response(&mut stream, &mut buf);
+    assert!(
+        buf.starts_with(b"HTTP/1.1 200 OK\r\n"),
+        "{:?}",
+        String::from_utf8_lossy(&buf[..expected])
+    );
+    let first: Vec<u8> = buf[..expected].to_vec();
+    for _ in 0..8 {
+        stream.write_all(&request).unwrap();
+        let n = read_response(&mut stream, &mut buf);
+        assert_eq!(&buf[..n], &first[..], "warm responses diverged");
+    }
+
+    const WINDOWS: usize = 3;
+    const REQS_PER_WINDOW: usize = 16;
+    let mut min_window_allocs = usize::MAX;
+    for _ in 0..WINDOWS {
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        for _ in 0..REQS_PER_WINDOW {
+            stream.write_all(&request).unwrap();
+            let n = read_response(&mut stream, &mut buf);
+            assert_eq!(n, expected);
+        }
+        let delta = ALLOCATIONS.load(Ordering::SeqCst) - before;
+        min_window_allocs = min_window_allocs.min(delta);
+    }
+    // The last measured response is still byte-identical to the first.
+    assert_eq!(&buf[..expected], &first[..], "steady-state response drifted");
+
+    drop(stream);
+    let stats = server.shutdown_and_join().unwrap();
+    assert_eq!(stats.scored_rows, 3 * (1 + 8 + WINDOWS * REQS_PER_WINDOW));
+
+    #[cfg(not(debug_assertions))]
+    assert_eq!(
+        min_window_allocs, 0,
+        "warm keep-alive /score allocated ({min_window_allocs} allocations over the \
+         best {REQS_PER_WINDOW}-request window)"
+    );
+    #[cfg(debug_assertions)]
+    eprintln!(
+        "serve alloc_regression (debug, not asserted): best window = {min_window_allocs} \
+         allocations / {REQS_PER_WINDOW} requests"
     );
 }

@@ -493,19 +493,57 @@ fn spawn_http(args: &[&str]) -> (std::process::Child, String, impl std::io::BufR
 }
 
 /// One-shot HTTP/1.1 request against `addr`; returns the raw response
-/// (status line + headers + body).
+/// (status line + headers + body). Sends `Connection: close` so the
+/// read-to-EOF below terminates — keep-alive is the 1.1 default now.
 fn http_request(addr: &str, path: &str, body: &str) -> String {
     use std::io::Read;
     let mut s = std::net::TcpStream::connect(addr).expect("connect");
     write!(
         s,
-        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .unwrap();
     let mut r = String::new();
     s.read_to_string(&mut r).expect("read response");
     r
+}
+
+/// Writes one keep-alive request on an already-open connection.
+fn send_keep_alive(s: &mut std::net::TcpStream, path: &str, body: &str) {
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    s.flush().unwrap();
+}
+
+/// Reads exactly one `Content-Length`-framed response off a keep-alive
+/// connection and returns (status line, body).
+fn read_framed(s: &mut std::net::TcpStream) -> (String, String) {
+    use std::io::Read;
+    let mut raw = Vec::new();
+    let mut byte = [0u8; 1];
+    // read the head byte-by-byte so we never consume the next response
+    while !raw.ends_with(b"\r\n\r\n") {
+        let n = s.read(&mut byte).expect("read head");
+        assert!(n > 0, "peer closed mid-head: {:?}", String::from_utf8_lossy(&raw));
+        raw.push(byte[0]);
+    }
+    let head = String::from_utf8(raw).expect("utf8 head");
+    let status = head.lines().next().expect("status line").to_string();
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .unwrap_or_else(|| panic!("no Content-Length in {head:?}"));
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).expect("read body");
+    (status, String::from_utf8(body).expect("utf8 body"))
 }
 
 fn http_body(response: &str) -> &str {
@@ -581,21 +619,29 @@ fn serve_http_queue_overflow_answers_503_with_retry_after() {
     )
     .unwrap();
 
+    // --workers 1 pins the single-executor queue arithmetic this test
+    // relies on (auto would resolve to the shard count).
     let (mut child, addr, _stderr) = spawn_http(&[
         "serve", "--model", model.to_str().unwrap(), "--http", "127.0.0.1:0",
         "--shards", "1", "--queue-depth", "1", "--deadline-ms", "30000",
+        "--workers", "1",
     ]);
 
     // c1 occupies the worker: the headers promise a body that is not
     // sent yet, so the worker blocks reading it on c1's deadline budget.
     let hold_body = "1:1\n";
     let mut c1 = std::net::TcpStream::connect(&addr).unwrap();
-    write!(c1, "POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n", hold_body.len()).unwrap();
+    write!(
+        c1,
+        "POST /score HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n",
+        hold_body.len()
+    )
+    .unwrap();
     c1.flush().unwrap();
     std::thread::sleep(std::time::Duration::from_millis(200));
     // c2 fills the depth-1 queue
     let mut c2 = std::net::TcpStream::connect(&addr).unwrap();
-    write!(c2, "POST /score HTTP/1.1\r\nContent-Length: 4\r\n\r\n2:1\n").unwrap();
+    write!(c2, "POST /score HTTP/1.1\r\nConnection: close\r\nContent-Length: 4\r\n\r\n2:1\n").unwrap();
     c2.flush().unwrap();
     std::thread::sleep(std::time::Duration::from_millis(200));
     // c3/c4 must overflow — refused with 503 + Retry-After, never dropped
@@ -629,6 +675,156 @@ fn serve_http_queue_overflow_answers_503_with_retry_after() {
     let bye = http_request(&addr, "/shutdown", "");
     assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
     assert!(child.wait().expect("wait serve").success());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_http_keep_alive_matches_close_and_stdin() {
+    let dir = std::env::temp_dir().join(format!("gadget-http-ka-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    std::fs::write(
+        &model,
+        r#"{"format":"gadget-model","version":2,"dim":3,"classes":1,"weights":[[1,-1,0.5]],"bias":[0]}"#,
+    )
+    .unwrap();
+    let model_path = model.to_str().unwrap();
+
+    let (mut child, addr, _stderr) = spawn_http(&[
+        "serve", "--model", model_path, "--http", "127.0.0.1:0", "--shards", "2",
+        "--batch", "2", "--scores",
+    ]);
+    let batches = ["1:1\n2:0.5\n", "1:-2 3:4\n", "2:1 3:-1\n1:0.25\n"];
+
+    // three requests down one keep-alive connection
+    let mut ka = std::net::TcpStream::connect(&addr).unwrap();
+    let mut ka_bodies = Vec::new();
+    for b in &batches {
+        send_keep_alive(&mut ka, "/score", b);
+        let (status, body) = read_framed(&mut ka);
+        assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+        ka_bodies.push(body);
+    }
+    drop(ka);
+
+    // keep-alive ≡ one fresh `Connection: close` request per batch
+    for (b, ka_body) in batches.iter().zip(&ka_bodies) {
+        let r = http_request(&addr, "/score", b);
+        assert!(r.starts_with("HTTP/1.1 200 OK\r\n"), "{r}");
+        assert_eq!(http_body(&r), ka_body, "keep-alive and close responses diverged");
+    }
+
+    // keep-alive ≡ the stdin loop over the concatenated row stream
+    // (--scores makes this bit-strength: shortest-roundtrip floats)
+    let all: String = batches.concat();
+    let (ok, stdin_out, err) = run_piped(
+        &["serve", "--model", model_path, "--shards", "1", "--batch", "2", "--scores"],
+        &all,
+    );
+    assert!(ok, "stderr: {err}");
+    assert_eq!(ka_bodies.concat(), stdin_out, "keep-alive and stdin predictions diverged");
+
+    let bye = http_request(&addr, "/shutdown", "");
+    assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+    assert!(child.wait().expect("wait serve").success());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_http_mid_keep_alive_malformed_row_recovers() {
+    let dir = std::env::temp_dir().join(format!("gadget-http-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    std::fs::write(
+        &model,
+        r#"{"format":"gadget-model","version":2,"dim":3,"classes":1,"weights":[[1,-1,0.5]],"bias":[0]}"#,
+    )
+    .unwrap();
+
+    let (mut child, addr, _stderr) = spawn_http(&[
+        "serve", "--model", model.to_str().unwrap(), "--http", "127.0.0.1:0",
+        "--shards", "1", "--batch", "2",
+    ]);
+
+    let mut c = std::net::TcpStream::connect(&addr).unwrap();
+    send_keep_alive(&mut c, "/score", "1:1\n");
+    let (s1, b1) = read_framed(&mut c);
+    assert!(s1.starts_with("HTTP/1.1 200"), "{s1}");
+    assert_eq!(b1, "+1\n");
+
+    // line 4 sits in the second internal batch (--batch 2): the error
+    // must carry the request-global line number, not the batch-local one
+    send_keep_alive(&mut c, "/score", "1:1\n2:1\n1:1\n1:banana\n");
+    let (s2, b2) = read_framed(&mut c);
+    assert!(s2.starts_with("HTTP/1.1 400"), "{s2}");
+    assert!(b2.contains("input line 4"), "{b2}");
+
+    // a row-level 400 does not poison the connection
+    send_keep_alive(&mut c, "/score", "2:1\n");
+    let (s3, b3) = read_framed(&mut c);
+    assert!(s3.starts_with("HTTP/1.1 200"), "{s3}");
+    assert_eq!(b3, "-1\n");
+    drop(c);
+
+    let bye = http_request(&addr, "/shutdown", "");
+    assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+    assert!(child.wait().expect("wait serve").success());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_http_workers_invariant_under_concurrent_load() {
+    let dir = std::env::temp_dir().join(format!("gadget-http-wrk-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    std::fs::write(
+        &model,
+        r#"{"format":"gadget-model","version":2,"dim":3,"classes":1,"weights":[[1,-1,0.5]],"bias":[0]}"#,
+    )
+    .unwrap();
+    let model_path = model.to_str().unwrap().to_string();
+
+    let rows: Vec<String> =
+        (0..8).map(|i| format!("1:0.{} 3:-0.{}\n", i + 1, 8 - i)).collect();
+    // stdin-loop reference scores for every row, one line each
+    let reference: Vec<String> = {
+        let all: String = rows.concat();
+        let (ok, out, err) = run_piped(
+            &["serve", "--model", &model_path, "--shards", "1", "--scores"],
+            &all,
+        );
+        assert!(ok, "stderr: {err}");
+        out.lines().map(|l| format!("{l}\n")).collect()
+    };
+    assert_eq!(reference.len(), rows.len());
+
+    for workers in ["1", "4"] {
+        let (mut child, addr, _stderr) = spawn_http(&[
+            "serve", "--model", &model_path, "--http", "127.0.0.1:0", "--shards", "2",
+            "--workers", workers, "--scores",
+        ]);
+        let handles: Vec<_> = rows
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, row)| {
+                let addr = addr.clone();
+                std::thread::spawn(move || (i, http_request(&addr, "/score", &row)))
+            })
+            .collect();
+        for h in handles {
+            let (i, resp) = h.join().expect("client thread");
+            assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "workers={workers}: {resp}");
+            assert_eq!(
+                http_body(&resp),
+                reference[i],
+                "workers={workers} diverged from the stdin loop on row {i}"
+            );
+        }
+        let bye = http_request(&addr, "/shutdown", "");
+        assert!(bye.starts_with("HTTP/1.1 200 OK\r\n"), "{bye}");
+        assert!(child.wait().expect("wait serve").success());
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 
